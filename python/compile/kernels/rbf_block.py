@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: fused RBF kernel tile.
+
+Computes `K[I, J] = exp(-sigma * ||x_i - x_j||^2)` for row blocks of the
+data matrix without materializing the distance matrix in HBM: the row
+norms, the MXU cross-term matmul, and the VPU exp are fused in one
+VMEM-resident tile. This is the production form of Algorithm 2's
+"observe only these kernel entries" oracle — the coordinator's
+TiledKernelOracle pads requests to this tile shape.
+
+Grid: (bi/BI, bj/BJ); the feature dimension D stays resident (padded to
+a multiple of 8 lanes). VMEM per step = BI*D + BJ*D + BI*BJ floats —
+with BI=BJ=128 and D≤512 that is ≤ 0.6 MiB.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BI = 128
+BJ = 128
+
+
+def _kernel(xi_ref, xj_ref, sig_ref, o_ref):
+    xi = xi_ref[...]  # (BI, D)
+    xj = xj_ref[...]  # (BJ, D)
+    ni = jnp.sum(xi * xi, axis=1, keepdims=True)      # (BI, 1)
+    nj = jnp.sum(xj * xj, axis=1, keepdims=True).T    # (1, BJ)
+    cross = jnp.dot(xi, xj.T, preferred_element_type=jnp.float32)
+    d2 = jnp.maximum(ni + nj - 2.0 * cross, 0.0)
+    o_ref[...] = jnp.exp(-sig_ref[0, 0] * d2)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rbf_block(xi, xj, sigma, interpret=True):
+    """xi (bi×d), xj (bj×d), sigma (1×1) → K (bi×bj). bi/bj must be tile
+    multiples (the AOT wrapper and the Rust batcher pad)."""
+    bi, d = xi.shape
+    bj, d2 = xj.shape
+    assert d == d2, f"feature dims differ: {xi.shape} vs {xj.shape}"
+    assert bi % BI == 0 and bj % BJ == 0, f"pad to ({BI},{BJ}) tiles first"
+    grid = (bi // BI, bj // BJ)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BI, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((BJ, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BI, BJ), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bi, bj), jnp.float32),
+        interpret=interpret,
+    )(xi, xj, sigma)
+
+
+def rbf_block_padded(xi, xj, sigma, interpret=True):
+    """Pad-to-tile wrapper for ragged block sizes."""
+    bi, _ = xi.shape
+    bj, _ = xj.shape
+    pi = -bi % BI
+    pj = -bj % BJ
+    xip = jnp.pad(xi, ((0, pi), (0, 0)))
+    xjp = jnp.pad(xj, ((0, pj), (0, 0)))
+    out = rbf_block(xip, xjp, sigma, interpret=interpret)
+    return out[:bi, :bj]

@@ -1,0 +1,54 @@
+"""Pure-jnp reference oracle for every L1 Pallas kernel.
+
+These are the ground truth the pytest suite compares the kernels against
+(`assert_allclose`), and they double as readable specifications.
+"""
+
+import jax.numpy as jnp
+
+
+def sketch_matmul_ref(s, a):
+    """S · A — the sketch-apply product."""
+    return jnp.dot(s, a, preferred_element_type=jnp.float32)
+
+
+def rbf_block_ref(xi, xj, sigma):
+    """RBF kernel tile: K[i, j] = exp(-sigma * ||xi_i - xj_j||^2).
+
+    sigma arrives as a (1, 1) array so the AOT graph signature is
+    all-matrix (simplifies the Rust boundary).
+    """
+    ni = jnp.sum(xi * xi, axis=1, keepdims=True)        # (bi, 1)
+    nj = jnp.sum(xj * xj, axis=1, keepdims=True).T      # (1, bj)
+    cross = jnp.dot(xi, xj.T, preferred_element_type=jnp.float32)
+    d2 = jnp.maximum(ni + nj - 2.0 * cross, 0.0)
+    return jnp.exp(-sigma[0, 0] * d2)
+
+
+def twoside_sketch_ref(sc, a_l, sr):
+    """(S_C · A_L) · S_Rᵀ — fused two-sided sketch of a column block."""
+    left = jnp.dot(sc, a_l, preferred_element_type=jnp.float32)
+    return jnp.dot(left, sr.T, preferred_element_type=jnp.float32)
+
+
+def stream_update_ref(a_l, omega_t, psi, sc, sr):
+    """Algorithm 3 steps 6-8 for one column block.
+
+    Returns (C_delta, R_block, M_delta):
+      C_delta = A_L · Ω̃_slice          (m × c)
+      R_block = Ψ̃ · A_L                (r × L)
+      M_delta = (S_C · A_L) · S_Rᵀ      (s_c × s_r)
+    """
+    c_delta = jnp.dot(a_l, omega_t, preferred_element_type=jnp.float32)
+    r_block = jnp.dot(psi, a_l, preferred_element_type=jnp.float32)
+    m_delta = twoside_sketch_ref(sc, a_l, sr)
+    return c_delta, r_block, m_delta
+
+
+def gmr_solve_ref(sc_c, a_tilde, r_sr, ridge=1e-6):
+    """Sketched GMR closed form (Eqn. 3.3) via ridge-stabilized normal
+    equations: X̃ = (S_C C)† Ã (R S_Rᵀ)†."""
+    gc = sc_c.T @ sc_c + ridge * jnp.eye(sc_c.shape[1], dtype=sc_c.dtype)
+    left = jnp.linalg.solve(gc, sc_c.T @ a_tilde)            # c × s_r
+    gr = r_sr @ r_sr.T + ridge * jnp.eye(r_sr.shape[0], dtype=r_sr.dtype)
+    return jnp.linalg.solve(gr.T, (left @ r_sr.T).T).T       # c × r

@@ -1,0 +1,80 @@
+"""L1 Pallas kernel: tiled sketch-apply matmul `S · A`.
+
+The sketch-apply product is the hot spot of every algorithm in the paper
+(T_sketch in Table 2). On TPU the CountSketch/OSNAP scatter formulation is
+hostile to the MXU, so the hardware adaptation (DESIGN.md
+§Hardware-Adaptation) materializes the sketch operator densely per tile
+and rides the 128x128 systolic array instead — `S` arrives as a dense
+(s × m) operand.
+
+BlockSpec schedule: grid over (s/BS, n/BN, m/BM); each step loads an
+(BS × BM) tile of S and an (BM × BN) tile of A into VMEM and accumulates
+into the (BS × BN) output tile. VMEM footprint = 3 tiles = 3·128·128·4 B
+= 192 KiB ≪ 16 MiB, leaving room for double buffering.
+
+interpret=True everywhere: the CPU PJRT client cannot run Mosaic
+custom-calls; real-TPU performance is *estimated* in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped tiles.
+BS = 128  # rows of S per tile
+BM = 128  # contraction tile
+BN = 128  # cols of A per tile
+
+
+def _kernel(s_ref, a_ref, o_ref):
+    """One grid step: o += s_tile @ a_tile (accumulate over the k grid)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        s_ref[...], a_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sketch_matmul(s, a, interpret=True):
+    """S (s×m) @ A (m×n) with a Pallas grid. Shapes must tile evenly —
+    the AOT wrapper pads; the pytest suite exercises ragged shapes via
+    hypothesis against the padded call."""
+    sm, m = s.shape
+    m2, n = a.shape
+    assert m == m2, f"inner dim mismatch: {s.shape} @ {a.shape}"
+    assert sm % BS == 0 and m % BM == 0 and n % BN == 0, (
+        f"shapes must be multiples of ({BS},{BM},{BN}); pad first: {s.shape} @ {a.shape}"
+    )
+    grid = (sm // BS, n // BN, m // BM)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BS, BM), lambda i, j, k: (i, k)),
+            pl.BlockSpec((BM, BN), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((BS, BN), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((sm, n), jnp.float32),
+        interpret=interpret,
+    )(s, a)
+
+
+def sketch_matmul_padded(s, a, interpret=True):
+    """Pad-to-tile wrapper for arbitrary shapes (used by tests and the
+    generic L2 graphs)."""
+    sm, m = s.shape
+    _, n = a.shape
+    pm = -sm % BS
+    pk = -m % BM
+    pn = -n % BN
+    sp = jnp.pad(s, ((0, pm), (0, pk)))
+    ap = jnp.pad(a, ((0, pk), (0, pn)))
+    out = sketch_matmul(sp, ap, interpret=interpret)
+    return out[:sm, :n]

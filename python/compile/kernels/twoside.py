@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: fused two-sided sketch `(S_C · A_L) · S_Rᵀ`.
+
+The M-accumulator update of Algorithm 3 (step 8). Fusing the two matmuls
+keeps the intermediate `S_C · A_L` tile in VMEM instead of round-tripping
+through HBM — the intermediate is (s_c × L), usually the largest tensor
+in the update.
+
+Grid: (s_c/BI, s_r/BJ, L/BK); each step computes
+`o[i, j] += (sc_tile @ al_tile) @ sr_tileᵀ` with the (BI × BK)
+intermediate held in registers/VMEM. The contraction over the m
+dimension (rows of A_L) stays whole per tile: A_L blocks are thin
+(m ≤ 2048 rows per stream tile), so a full column strip of A_L fits in
+VMEM alongside the operands (≤ 2048·128·4 B = 1 MiB).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BI = 128  # s_c tile
+BJ = 128  # s_r tile
+BK = 128  # L (block-column) tile
+
+
+def _kernel(sc_ref, al_ref, sr_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (BI × m) @ (m × BK) -> intermediate in VMEM, then @ (BK × BJ).
+    left = jnp.dot(sc_ref[...], al_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] += jnp.dot(left, sr_ref[...].T, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def twoside_sketch(sc, a_l, sr, interpret=True):
+    """sc (s_c×m), a_l (m×L), sr (s_r×L) → (s_c×s_r)."""
+    s_c, m = sc.shape
+    m2, ll = a_l.shape
+    s_r, ll2 = sr.shape
+    assert m == m2 and ll == ll2, f"shape mismatch: {sc.shape}, {a_l.shape}, {sr.shape}"
+    assert s_c % BI == 0 and s_r % BJ == 0 and ll % BK == 0, "pad to tiles first"
+    grid = (s_c // BI, s_r // BJ, ll // BK)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BI, m), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((m, BK), lambda i, j, k: (0, k)),
+            pl.BlockSpec((BJ, BK), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((BI, BJ), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((s_c, s_r), jnp.float32),
+        interpret=interpret,
+    )(sc, a_l, sr)
+
+
+def twoside_sketch_padded(sc, a_l, sr, interpret=True):
+    """Pad-to-tile wrapper."""
+    s_c, m = sc.shape
+    _, ll = a_l.shape
+    s_r, _ = sr.shape
+    pi = -s_c % BI
+    pj = -s_r % BJ
+    pk = -ll % BK
+    scp = jnp.pad(sc, ((0, pi), (0, 0)))
+    alp = jnp.pad(a_l, ((0, 0), (0, pk)))
+    srp = jnp.pad(sr, ((0, pj), (0, pk)))
+    out = twoside_sketch(scp, alp, srp, interpret=interpret)
+    return out[:s_c, :s_r]

@@ -1,0 +1,84 @@
+"""L2: JAX compute graphs for the Fast-GMR system, calling the L1 Pallas
+kernels. These are the functions `aot.py` lowers to HLO-text artifacts;
+they never run at request time.
+
+Graphs
+------
+* ``stream_update`` — Algorithm 3 steps 6–8 for one column block.
+* ``gmr_solve`` — the sketched GMR closed form (Eqn. 3.3) via
+  Cholesky-based normal equations (`lax.linalg` ops lower to first-class
+  HLO when lowered for the TPU platform — see aot.py).
+* ``sketch_block`` — generic sketch-apply `S · A`.
+* ``rbf`` — RBF kernel tile (Algorithm 2's entry oracle).
+
+All graphs return tuples (lowered with return_tuple=True; the Rust engine
+unpacks with `to_tuple`).
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.rbf_block import rbf_block_padded
+from .kernels.sketch_matmul import sketch_matmul_padded
+from .kernels.twoside import twoside_sketch_padded
+
+
+def sketch_block(s, a):
+    """`S · A` through the L1 tiled-matmul kernel."""
+    return (sketch_matmul_padded(s, a),)
+
+
+def rbf(xi, xj, sigma):
+    """RBF kernel tile through the L1 fused kernel."""
+    return (rbf_block_padded(xi, xj, sigma),)
+
+
+def twoside(sc, a_l, sr):
+    """Fused `(S_C · A_L) · S_Rᵀ` through the L1 kernel."""
+    return (twoside_sketch_padded(sc, a_l, sr),)
+
+
+def stream_update(a_l, omega_t, psi, sc, sr):
+    """One streaming update of Algorithm 3 (steps 6–8).
+
+    a_l     : (m, L)   column block of A
+    omega_t : (L, c)   slice of Ω̃ for these columns
+    psi     : (r, m)   dense Ψ̃ (hardware adaptation: OSNAP scatter →
+                        dense MXU matmul, DESIGN.md §Hardware-Adaptation)
+    sc      : (s_c, m) dense S_C
+    sr      : (s_r, L) slice of S_R for these columns
+
+    Returns (C_delta, R_block, M_delta):
+      C_delta = A_L · Ω̃_slice, R_block = Ψ̃ · A_L,
+      M_delta = (S_C · A_L) · S_Rᵀ.
+    """
+    c_delta = sketch_matmul_padded(a_l, omega_t)
+    r_block = sketch_matmul_padded(psi, a_l)
+    m_delta = twoside_sketch_padded(sc, a_l, sr)
+    return (c_delta, r_block, m_delta)
+
+
+def _chol_solve_spd(g, b, ridge):
+    """Solve (g + ridge·I) x = b via Cholesky (HLO-native ops only)."""
+    n = g.shape[0]
+    l = lax.linalg.cholesky(g + ridge * jnp.eye(n, dtype=g.dtype))
+    y = lax.linalg.triangular_solve(l, b, left_side=True, lower=True)
+    return lax.linalg.triangular_solve(l, y, left_side=True, lower=True, transpose_a=True)
+
+
+def gmr_solve(sc_c, a_tilde, r_sr):
+    """Sketched GMR solve (Algorithm 1 step 4):
+    X̃ = (S_C C)† Ã (R S_Rᵀ)† via ridge-stabilized normal equations.
+
+    sc_c    : (s_c, c)
+    a_tilde : (s_c, s_r)
+    r_sr    : (r, s_r)
+    → X̃     : (c, r)
+    """
+    ridge = jnp.asarray(1e-6, dtype=sc_c.dtype)
+    gc = sc_c.T @ sc_c  # (c, c)
+    left = _chol_solve_spd(gc, sc_c.T @ a_tilde, ridge)  # (c, s_r)
+    gr = r_sr @ r_sr.T  # (r, r)
+    # X̃ᵀ = (gr)⁻¹ (r_sr · leftᵀ)
+    xt = _chol_solve_spd(gr, r_sr @ left.T, ridge)  # (r, c)
+    return (xt.T,)

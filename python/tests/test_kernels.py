@@ -1,0 +1,151 @@
+"""L1 kernel correctness: every Pallas kernel vs the pure-jnp oracle.
+
+hypothesis sweeps shapes (including ragged, tile-straddling ones) and
+value scales; assert_allclose against ref.py is the core correctness
+signal for the compute layer.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.rbf_block import rbf_block, rbf_block_padded
+from compile.kernels.sketch_matmul import sketch_matmul, sketch_matmul_padded
+from compile.kernels.twoside import twoside_sketch, twoside_sketch_padded
+
+RNG = np.random.default_rng(42)
+
+
+def randn(*shape, scale=1.0):
+    return (RNG.standard_normal(shape) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------- sketch
+
+
+class TestSketchMatmul:
+    def test_exact_tile_shape(self):
+        s, a = randn(128, 128), randn(128, 128)
+        assert_allclose(sketch_matmul(s, a), ref.sketch_matmul_ref(s, a), rtol=1e-4, atol=1e-3)
+
+    def test_multi_tile_grid(self):
+        s, a = randn(256, 384), randn(384, 256)
+        assert_allclose(sketch_matmul(s, a), ref.sketch_matmul_ref(s, a), rtol=1e-4, atol=1e-3)
+
+    def test_rejects_ragged_without_padding(self):
+        with pytest.raises(AssertionError):
+            sketch_matmul(randn(100, 128), randn(128, 128))
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        sm=st.integers(1, 140),
+        m=st.integers(1, 140),
+        n=st.integers(1, 140),
+        scale=st.sampled_from([1e-3, 1.0, 1e3]),
+    )
+    def test_padded_matches_ref_hypothesis(self, sm, m, n, scale):
+        s, a = randn(sm, m, scale=scale), randn(m, n, scale=scale)
+        got = sketch_matmul_padded(s, a)
+        assert got.shape == (sm, n)
+        assert_allclose(got, ref.sketch_matmul_ref(s, a), rtol=1e-3, atol=1e-4 * scale * scale)
+
+    def test_zero_input(self):
+        s = np.zeros((128, 128), np.float32)
+        a = randn(128, 128)
+        assert np.all(np.asarray(sketch_matmul(s, a)) == 0.0)
+
+
+# ------------------------------------------------------------------ rbf
+
+
+class TestRbfBlock:
+    def test_exact_tile(self):
+        xi, xj = randn(128, 64), randn(128, 64)
+        sig = np.array([[0.5]], np.float32)
+        assert_allclose(rbf_block(xi, xj, sig), ref.rbf_block_ref(xi, xj, sig), rtol=1e-5)
+
+    def test_diagonal_is_one(self):
+        x = randn(128, 32)
+        sig = np.array([[0.7]], np.float32)
+        k = np.asarray(rbf_block(x, x, sig))
+        assert_allclose(np.diag(k), np.ones(128), atol=1e-3)
+
+    def test_values_in_unit_interval(self):
+        xi, xj = randn(128, 16, scale=3.0), randn(128, 16, scale=3.0)
+        sig = np.array([[0.2]], np.float32)
+        k = np.asarray(rbf_block(xi, xj, sig))
+        assert np.all(k >= 0.0) and np.all(k <= 1.0 + 1e-6)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        bi=st.integers(1, 150),
+        bj=st.integers(1, 150),
+        d=st.integers(1, 70),
+        sigma=st.floats(0.01, 5.0),
+    )
+    def test_padded_matches_ref_hypothesis(self, bi, bj, d, sigma):
+        xi, xj = randn(bi, d), randn(bj, d)
+        sig = np.array([[sigma]], np.float32)
+        got = rbf_block_padded(xi, xj, sig)
+        assert got.shape == (bi, bj)
+        assert_allclose(got, ref.rbf_block_ref(xi, xj, sig), rtol=1e-4, atol=1e-6)
+
+    def test_symmetry_when_blocks_equal(self):
+        x = randn(130, 24)
+        sig = np.array([[0.3]], np.float32)
+        k = np.asarray(rbf_block_padded(x, x, sig))
+        assert_allclose(k, k.T, atol=1e-6)
+
+
+# -------------------------------------------------------------- twoside
+
+
+class TestTwosideSketch:
+    def test_exact_tile(self):
+        sc, al, sr = randn(128, 200), randn(200, 128), randn(128, 128)
+        assert_allclose(
+            twoside_sketch(sc, al, sr), ref.twoside_sketch_ref(sc, al, sr), rtol=1e-4
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        s_c=st.integers(1, 140),
+        m=st.integers(1, 100),
+        L=st.integers(1, 140),
+        s_r=st.integers(1, 140),
+    )
+    def test_padded_matches_ref_hypothesis(self, s_c, m, L, s_r):
+        sc, al, sr = randn(s_c, m), randn(m, L), randn(s_r, L)
+        got = twoside_sketch_padded(sc, al, sr)
+        assert got.shape == (s_c, s_r)
+        assert_allclose(got, ref.twoside_sketch_ref(sc, al, sr), rtol=1e-3, atol=1e-4)
+
+    def test_accumulation_over_k_grid(self):
+        # L spanning multiple BK tiles exercises the accumulate-into-o path.
+        sc, al, sr = randn(128, 64), randn(64, 384), randn(128, 384)
+        assert_allclose(
+            twoside_sketch(sc, al, sr), ref.twoside_sketch_ref(sc, al, sr), rtol=1e-3, atol=1e-3
+        )
+
+
+# ---------------------------------------------------- dtype stability
+
+
+@pytest.mark.parametrize("scale", [1e-4, 1.0, 1e4])
+def test_kernels_stable_across_scales(scale):
+    s, a = randn(130, 70, scale=scale), randn(70, 90, scale=scale)
+    got = np.asarray(sketch_matmul_padded(s, a))
+    want = np.asarray(ref.sketch_matmul_ref(s, a))
+    assert np.isfinite(got).all()
+    assert_allclose(got, want, rtol=1e-3, atol=1e-5 * scale * scale)
+
+
+def test_outputs_are_f32():
+    s, a = randn(10, 10), randn(10, 10)
+    assert sketch_matmul_padded(s, a).dtype == jnp.float32
+    sig = np.array([[0.5]], np.float32)
+    assert rbf_block_padded(randn(5, 4), randn(6, 4), sig).dtype == jnp.float32

@@ -1,0 +1,110 @@
+"""L2 graph tests: shapes, numerics vs the oracle, and lowering checks
+(the artifacts must contain no custom-calls — the property that makes
+them loadable by xla_extension 0.5.1)."""
+
+import numpy as np
+from numpy.testing import assert_allclose
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.kernels import ref
+
+RNG = np.random.default_rng(7)
+
+
+def randn(*shape):
+    return RNG.standard_normal(shape).astype(np.float32)
+
+
+class TestStreamUpdate:
+    def test_matches_ref(self):
+        a_l, om_t = randn(96, 40), randn(40, 24)
+        psi, sc, sr = randn(16, 96), randn(48, 96), randn(48, 40)
+        got = model.stream_update(a_l, om_t, psi, sc, sr)
+        want = ref.stream_update_ref(a_l, om_t, psi, sc, sr)
+        for g, w in zip(got, want):
+            assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-3, atol=1e-4)
+
+    def test_linearity_in_block(self):
+        # The update must be linear in A_L (the streaming-accumulation
+        # correctness property: sum of block updates == full update).
+        shapes = dict(a=(64, 32), om=(32, 8), psi=(8, 64), sc=(24, 64), sr=(24, 32))
+        a1, a2 = randn(*shapes["a"]), randn(*shapes["a"])
+        om, psi = randn(*shapes["om"]), randn(*shapes["psi"])
+        sc, sr = randn(*shapes["sc"]), randn(*shapes["sr"])
+        out1 = model.stream_update(a1, om, psi, sc, sr)
+        out2 = model.stream_update(a2, om, psi, sc, sr)
+        out_sum = model.stream_update(a1 + a2, om, psi, sc, sr)
+        for x1, x2, xs in zip(out1, out2, out_sum):
+            assert_allclose(np.asarray(x1) + np.asarray(x2), np.asarray(xs), rtol=1e-3, atol=1e-4)
+
+
+class TestGmrSolve:
+    def test_matches_ref_solver(self):
+        sc_c, a_t, r_sr = randn(80, 12), randn(80, 60), randn(10, 60)
+        (got,) = model.gmr_solve(sc_c, a_t, r_sr)
+        want = ref.gmr_solve_ref(sc_c, a_t, r_sr)
+        assert got.shape == (12, 10)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-4)
+
+    def test_solves_consistent_system_exactly(self):
+        # When Ã = (S_C C) X (R S_Rᵀ) exactly, the solve must recover X.
+        sc_c, r_sr = randn(64, 8), randn(6, 48)
+        x_true = randn(8, 6)
+        a_t = sc_c @ x_true @ r_sr
+        (got,) = model.gmr_solve(sc_c, a_t, r_sr)
+        assert_allclose(np.asarray(got), x_true, rtol=1e-2, atol=1e-3)
+
+
+class TestLowering:
+    def test_all_artifacts_lower_without_custom_calls(self):
+        for name, fn, shapes in aot.registry():
+            specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+            text = aot.to_hlo_text(jax.jit(fn).trace(*specs))
+            assert "custom-call" not in text, f"{name} contains custom-calls"
+            assert "ENTRY" in text
+
+    def test_registry_shapes_consistent(self):
+        # Executing each registry function on its declared shapes works and
+        # yields 2-D f32 outputs (what the manifest records).
+        for name, fn, shapes in aot.registry():
+            inputs = [randn(*s) if s != (1, 1) else np.array([[0.4]], np.float32) for s in shapes]
+            outs = fn(*inputs)
+            assert isinstance(outs, tuple), name
+            for o in outs:
+                assert np.asarray(o).ndim == 2, name
+                assert np.asarray(o).dtype == np.float32, name
+
+
+class TestGoldenLayout:
+    def test_build_writes_manifest_and_goldens(self, tmp_path):
+        # Build a reduced artifact set into a temp dir and validate layout.
+        import os
+
+        full = aot.registry
+        try:
+            aot.registry = lambda: [
+                ("sketch_16x16x16", model.sketch_block, [(16, 16), (16, 16)]),
+                ("rbf_8x8x4", model.rbf, [(8, 4), (8, 4), (1, 1)]),
+            ]
+            aot.build(str(tmp_path), check=True)
+        finally:
+            aot.registry = full
+        manifest = (tmp_path / "manifest.txt").read_text()
+        assert "graph sketch_16x16x16" in manifest
+        assert "graph rbf_8x8x4" in manifest
+        for line in manifest.splitlines():
+            if not line.startswith("graph"):
+                continue
+            parts = dict(kv.split("=") for kv in line.split()[2:])
+            assert os.path.exists(tmp_path / parts["file"])
+            golden = tmp_path / parts["golden"]
+            assert golden.exists()
+            # Golden length = 4 bytes * (sum inputs + sum outputs).
+            def size(spec):
+                return sum(int(a) * int(b) for a, b in (s.split("x") for s in spec.split(",")))
+
+            expected = 4 * (size(parts["inputs"]) + size(parts["outputs"]))
+            assert golden.stat().st_size == expected

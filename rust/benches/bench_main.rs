@@ -1,0 +1,7 @@
+//! Custom bench harness (`harness = false`): regenerates every table and
+//! figure of the paper. See `fastgmr::bench` for targets and profiles.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    fastgmr::bench::bench_main(&args);
+}

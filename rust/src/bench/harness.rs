@@ -1,0 +1,107 @@
+//! Bench harness utilities: profiles, timers, table rendering, result
+//! persistence.
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// Workload scale.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Profile {
+    /// Shrunk sizes that finish in seconds (CI / iteration).
+    Quick,
+    /// Paper-scale sizes (minutes on the 1-core container).
+    Full,
+}
+
+/// Context passed to every bench target: collects output lines and writes
+/// them to `results/<name>.txt` at the end.
+pub struct BenchCtx {
+    pub name: &'static str,
+    pub profile: Profile,
+    out: String,
+}
+
+impl BenchCtx {
+    pub fn new(name: &'static str, profile: Profile) -> Self {
+        let mut ctx = Self { name, profile, out: String::new() };
+        ctx.line(&format!("=== {} ({:?} profile) ===", name, profile));
+        ctx
+    }
+
+    /// Emit a line to stdout and the result buffer.
+    pub fn line(&mut self, s: &str) {
+        println!("{s}");
+        self.out.push_str(s);
+        self.out.push('\n');
+    }
+
+    /// Emit a formatted table: header + rows of equal arity.
+    pub fn table(&mut self, header: &[&str], rows: &[Vec<String>]) {
+        let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+        for row in rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        let mut line = String::new();
+        for (h, w) in header.iter().zip(&widths) {
+            let _ = write!(line, "{h:>w$}  ", w = w);
+        }
+        self.line(line.trim_end());
+        for row in rows {
+            let mut line = String::new();
+            for (cell, w) in row.iter().zip(&widths) {
+                let _ = write!(line, "{cell:>w$}  ", w = w);
+            }
+            self.line(line.trim_end());
+        }
+    }
+
+    /// Time a closure (single shot — workloads here are seconds-scale).
+    pub fn time<T>(&mut self, label: &str, f: impl FnOnce() -> T) -> (T, f64) {
+        let start = Instant::now();
+        let out = f();
+        let secs = start.elapsed().as_secs_f64();
+        self.line(&format!("  [{label}: {secs:.3}s]"));
+        (out, secs)
+    }
+
+    /// Median-of-n timing for microbenchmarks.
+    pub fn time_n(&mut self, label: &str, n: usize, mut f: impl FnMut()) -> f64 {
+        let mut samples = Vec::with_capacity(n);
+        for _ in 0..n {
+            let start = Instant::now();
+            f();
+            samples.push(start.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = samples[n / 2];
+        self.line(&format!("  {label}: median {:.6}s over {n} runs", med));
+        med
+    }
+
+    /// Flush results to disk.
+    pub fn finish(mut self, total: std::time::Duration) {
+        self.line(&format!("=== {} done in {:.1}s ===\n", self.name, total.as_secs_f64()));
+        let path = format!("results/{}.txt", self.name);
+        if let Err(e) = std::fs::write(&path, &self.out) {
+            eprintln!("could not write {path}: {e}");
+        }
+    }
+}
+
+/// Format helper: fixed 4-decimal float.
+pub fn f4(x: f64) -> String {
+    format!("{x:.4}")
+}
+
+/// Format helper: engineering seconds.
+pub fn secs(x: f64) -> String {
+    if x < 1e-3 {
+        format!("{:.1}µs", x * 1e6)
+    } else if x < 1.0 {
+        format!("{:.2}ms", x * 1e3)
+    } else {
+        format!("{x:.2}s")
+    }
+}

@@ -1,0 +1,64 @@
+//! Benchmark harness — regenerates every table and figure of the paper's
+//! evaluation (Section 6) plus the §Perf microbenchmarks.
+//!
+//! Run through `cargo bench` (custom harness):
+//!
+//! ```text
+//! cargo bench                      # everything, quick profile
+//! cargo bench -- fig1              # one target
+//! cargo bench -- fig2 --full       # paper-scale sizes
+//! cargo bench -- list              # show targets
+//! ```
+//!
+//! Output goes to stdout and `results/<target>.txt`. The paper mapping
+//! for each target is documented in DESIGN.md §5; the expected *shapes*
+//! (who wins, by what factor, where crossovers fall) are asserted in the
+//! end-to-end tests and recorded in EXPERIMENTS.md.
+
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod harness;
+pub mod perf;
+pub mod tables;
+
+pub use harness::{BenchCtx, Profile};
+
+/// All bench targets in run order.
+pub fn targets() -> Vec<(&'static str, fn(&mut BenchCtx))> {
+    vec![
+        ("table1", tables::table1 as fn(&mut BenchCtx)),
+        ("table2", tables::table2),
+        ("table3", tables::table3),
+        ("table4", tables::table4),
+        ("table5", tables::table5),
+        ("table6", tables::table6),
+        ("fig1", fig1::run),
+        ("fig2", fig2::run),
+        ("table7", fig2::run_table7),
+        ("fig3", fig3::run),
+        ("perf", perf::run),
+    ]
+}
+
+/// Entry point used by `rust/benches/bench_main.rs`.
+pub fn bench_main(args: &[String]) {
+    let profile = if args.iter().any(|a| a == "--full") { Profile::Full } else { Profile::Quick };
+    let wanted: Vec<&String> = args.iter().filter(|a| !a.starts_with("--")).collect();
+    if wanted.iter().any(|a| a.as_str() == "list") {
+        for (name, _) in targets() {
+            println!("{name}");
+        }
+        return;
+    }
+    std::fs::create_dir_all("results").ok();
+    for (name, f) in targets() {
+        if !wanted.is_empty() && !wanted.iter().any(|w| w.as_str() == name) {
+            continue;
+        }
+        let mut ctx = BenchCtx::new(name, profile);
+        let start = std::time::Instant::now();
+        f(&mut ctx);
+        ctx.finish(start.elapsed());
+    }
+}

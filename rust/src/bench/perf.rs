@@ -1,0 +1,190 @@
+//! §Perf microbenchmarks: per-layer hot-path throughput, the backend
+//! comparison (CPU vs PJRT artifacts), the coordinator overhead, and the
+//! headline exact-vs-fast GMR wall-clock ratio.
+
+use super::harness::{BenchCtx, Profile};
+use crate::compute::{Backend, CpuBackend, PjrtBackend};
+use crate::coordinator::{PipelineConfig, StreamPipeline};
+use crate::gmr::{solve_exact, solve_fast, FastGmrConfig, Input};
+use crate::linalg::{matmul, matmul_a_bt, matmul_at_b, Mat};
+use crate::rng::rng;
+use crate::sketch::{Sketch, SketchKind};
+use crate::svdstream::fast::{fast_sp_svd_with, FastSpSvdSketches};
+use crate::svdstream::source::DenseColumnStream;
+use crate::svdstream::FastSpSvdConfig;
+use std::sync::Arc;
+
+pub fn run(ctx: &mut BenchCtx) {
+    matmul_roofline(ctx);
+    sketch_throughput(ctx);
+    headline_speedup(ctx);
+    pipeline_overhead(ctx);
+    backend_compare(ctx);
+}
+
+/// L3 hot path #1: the blocked matmul vs its theoretical single-core
+/// roofline.
+fn matmul_roofline(ctx: &mut BenchCtx) {
+    ctx.line("\n-- matmul (f64, single core) --");
+    let dims: &[usize] = match ctx.profile {
+        Profile::Quick => &[256, 512, 1024],
+        Profile::Full => &[256, 512, 1024, 2048],
+    };
+    let mut r = rng(1);
+    for &d in dims {
+        let a = Mat::randn(d, d, &mut r);
+        let b = Mat::randn(d, d, &mut r);
+        let reps = if d <= 512 { 5 } else { 3 };
+        let t = ctx.time_n(&format!("matmul {d}x{d}x{d}"), reps, || {
+            std::hint::black_box(matmul(&a, &b));
+        });
+        let gflops = 2.0 * (d as f64).powi(3) / t / 1e9;
+        ctx.line(&format!("    => {gflops:.2} GFLOP/s"));
+        let t2 = ctx.time_n(&format!("matmul_at_b {d}"), reps, || {
+            std::hint::black_box(matmul_at_b(&a, &b));
+        });
+        ctx.line(&format!("    => {:.2} GFLOP/s", 2.0 * (d as f64).powi(3) / t2 / 1e9));
+        let t3 = ctx.time_n(&format!("matmul_a_bt {d}"), reps, || {
+            std::hint::black_box(matmul_a_bt(&a, &b));
+        });
+        ctx.line(&format!("    => {:.2} GFLOP/s", 2.0 * (d as f64).powi(3) / t3 / 1e9));
+    }
+}
+
+/// L3 hot path #2: sketch application throughput per family.
+fn sketch_throughput(ctx: &mut BenchCtx) {
+    ctx.line("\n-- sketch apply (dense input) --");
+    let (m, n) = match ctx.profile {
+        Profile::Quick => (4096, 512),
+        Profile::Full => (16384, 1024),
+    };
+    let s = 256;
+    let mut r = rng(2);
+    let a = Mat::randn(m, n, &mut r);
+    let bytes = (m * n * 8) as f64;
+    for kind in [SketchKind::Count, SketchKind::Osnap, SketchKind::Uniform, SketchKind::Srht, SketchKind::Gaussian] {
+        let sk = Sketch::draw(kind, s, m, None, &mut r);
+        let t = ctx.time_n(&format!("{} {m}x{n} -> {s}", kind.name()), 3, || {
+            std::hint::black_box(sk.apply_left(&a));
+        });
+        ctx.line(&format!("    => {:.2} GB/s input scan", bytes / t / 1e9));
+    }
+
+    ctx.line("\n-- sketch apply (sparse input, O(nnz) path) --");
+    let sp = crate::data::synth_sparse(m, 4 * n, 0.002, 20, &mut r);
+    let nnz = sp.nnz();
+    for kind in [SketchKind::Count, SketchKind::Osnap] {
+        let sk = Sketch::draw(kind, s, m, None, &mut r);
+        let t = ctx.time_n(&format!("{} csr nnz={nnz}", kind.name()), 3, || {
+            std::hint::black_box(sk.apply_left_csr(&sp));
+        });
+        ctx.line(&format!("    => {:.1} Mnnz/s", nnz as f64 / t / 1e6));
+    }
+}
+
+/// The headline claim: Fast GMR beats exact GMR wall-clock at equal-ish
+/// quality once the matrix is large.
+fn headline_speedup(ctx: &mut BenchCtx) {
+    ctx.line("\n-- exact vs fast GMR wall clock --");
+    let (m, n) = match ctx.profile {
+        Profile::Quick => (2000, 1600),
+        Profile::Full => (6000, 5000),
+    };
+    let mut r = rng(3);
+    let a = crate::data::synth_dense(m, n, 60, crate::data::SpectrumKind::Exponential { base: 0.92 }, 0.02, &mut r);
+    let g_c = Mat::randn(n, 20, &mut r);
+    let c = matmul(&a, &g_c);
+    let g_r = Mat::randn(20, m, &mut r);
+    let rr = matmul(&g_r, &a);
+    let (exact, t_exact) = ctx.time("exact", || solve_exact(Input::Dense(&a), &c, &rr));
+    let cfg = FastGmrConfig::count(160, 160);
+    let mut rt = rng(4);
+    let (sol, t_fast) = ctx.time("fast (count, a=8)", || solve_fast(Input::Dense(&a), &c, &rr, &cfg, &mut rt));
+    let regret = crate::gmr::relative_regret(Input::Dense(&a), &c, &rr, &sol.x, &exact.x);
+    ctx.line(&format!(
+        "  speedup {:.1}x at error ratio {:.4} ({m}x{n}, c=r=20)",
+        t_exact / t_fast,
+        regret
+    ));
+}
+
+/// Coordinator overhead: concurrent pipeline vs the direct single-thread
+/// loop on the same workload (target: <5% overhead at 1 worker).
+fn pipeline_overhead(ctx: &mut BenchCtx) {
+    ctx.line("\n-- pipeline overhead --");
+    let (m, n) = match ctx.profile {
+        Profile::Quick => (1024, 2048),
+        Profile::Full => (2048, 8192),
+    };
+    let mut r = rng(5);
+    let a = crate::data::synth_dense(m, n, 30, crate::data::SpectrumKind::Exponential { base: 0.9 }, 0.02, &mut r);
+    let cfg = FastSpSvdConfig::paper(10, 4, SketchKind::Gaussian);
+    let sketches = FastSpSvdSketches::draw(&cfg, m, n, &mut r);
+
+    let t_direct = ctx.time_n("direct loop", 3, || {
+        let mut s = DenseColumnStream::new(&a, 256);
+        std::hint::black_box(fast_sp_svd_with(&mut s, &cfg, &sketches));
+    });
+    let pipeline = StreamPipeline::new(PipelineConfig { workers: 1, queue_depth: 4 });
+    let t_pipe = ctx.time_n("pipeline (1 worker)", 3, || {
+        let mut s = DenseColumnStream::new(&a, 256);
+        std::hint::black_box(pipeline.run(&mut s, &cfg, &sketches).unwrap());
+    });
+    ctx.line(&format!("  overhead: {:+.1}%", (t_pipe / t_direct - 1.0) * 100.0));
+    ctx.line(&format!("  throughput: {:.1} cols/s, {:.2} MB/s", n as f64 / t_pipe, (m * n * 8) as f64 / t_pipe / 1e6));
+}
+
+/// CPU backend vs PJRT artifacts on the fixed-tile hot ops.
+fn backend_compare(ctx: &mut BenchCtx) {
+    ctx.line("\n-- compute backends (CPU rust vs PJRT artifacts) --");
+    let Ok(engine) = crate::runtime::Engine::new("artifacts") else {
+        ctx.line("  artifacts/ not built — skipping (run `make artifacts`)");
+        return;
+    };
+    let engine = Arc::new(engine);
+    let pjrt = PjrtBackend::new(engine);
+    let cpu = CpuBackend;
+    let mut r = rng(6);
+
+    // sketch_apply at the exact artifact tile (no padding overhead).
+    let s = Mat::randn(256, 2048, &mut r);
+    let a = Mat::randn(2048, 512, &mut r);
+    let flops = 2.0 * 256.0 * 2048.0 * 512.0;
+    let t_cpu = ctx.time_n("cpu sketch 256x2048x512", 5, || {
+        std::hint::black_box(cpu.sketch_apply(&s, &a).unwrap());
+    });
+    let t_pjrt = ctx.time_n("pjrt sketch 256x2048x512", 5, || {
+        std::hint::black_box(pjrt.sketch_apply(&s, &a).unwrap());
+    });
+    ctx.line(&format!(
+        "    cpu {:.2} GF/s, pjrt {:.2} GF/s ({:.2}x)",
+        flops / t_cpu / 1e9,
+        flops / t_pjrt / 1e9,
+        t_cpu / t_pjrt
+    ));
+
+    // rbf tile.
+    let xi = Mat::randn(256, 128, &mut r);
+    let xj = Mat::randn(256, 128, &mut r);
+    let t_cpu = ctx.time_n("cpu rbf 256x256x128", 5, || {
+        std::hint::black_box(cpu.rbf_block(&xi, &xj, 0.3).unwrap());
+    });
+    let t_pjrt = ctx.time_n("pjrt rbf 256x256x128", 5, || {
+        std::hint::black_box(pjrt.rbf_block(&xi, &xj, 0.3).unwrap());
+    });
+    ctx.line(&format!("    rbf speed ratio cpu/pjrt: {:.2}x", t_cpu / t_pjrt));
+
+    // stream_update at the artifact tile.
+    let a_l = Mat::randn(2048, 512, &mut r);
+    let om = Mat::randn(512, 64, &mut r);
+    let psi = Mat::randn(64, 2048, &mut r);
+    let sc = Mat::randn(192, 2048, &mut r);
+    let sr = Mat::randn(192, 512, &mut r);
+    let t_cpu = ctx.time_n("cpu stream_update", 3, || {
+        std::hint::black_box(cpu.stream_update(&a_l, &om, &psi, &sc, &sr).unwrap());
+    });
+    let t_pjrt = ctx.time_n("pjrt stream_update", 3, || {
+        std::hint::black_box(pjrt.stream_update(&a_l, &om, &psi, &sc, &sr).unwrap());
+    });
+    ctx.line(&format!("    stream_update speed ratio cpu/pjrt: {:.2}x", t_cpu / t_pjrt));
+}

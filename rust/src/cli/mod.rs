@@ -1,0 +1,177 @@
+//! Command-line interface for the `fastgmr` launcher.
+//!
+//! Hand-rolled argument parsing (no clap in the offline vendor set).
+//!
+//! ```text
+//! fastgmr info                         # platform + artifact inventory
+//! fastgmr verify                       # run artifact golden self-checks
+//! fastgmr bench <target> [--full]     # regenerate a paper table/figure
+//! fastgmr pipeline [--config f.toml]  # run the streaming SVD service
+//! fastgmr serve [--jobs N]            # demo the approximation router
+//! ```
+
+use crate::config::Config;
+use crate::coordinator::{jobs::MatrixPayload, ApproxJob, PipelineConfig, Router, StreamPipeline};
+use crate::data::{synth_dense, SpectrumKind};
+use crate::linalg::Mat;
+use crate::rng::rng;
+use crate::sketch::SketchKind;
+use crate::svdstream::fast::FastSpSvdSketches;
+use crate::svdstream::source::DenseColumnStream;
+use crate::svdstream::FastSpSvdConfig;
+
+const USAGE: &str = "\
+fastgmr — Fast Generalized Matrix Regression (paper reproduction)
+
+USAGE:
+  fastgmr info                       platform + artifact inventory
+  fastgmr verify                     artifact golden self-checks
+  fastgmr bench <target|all> [--full]  regenerate paper tables/figures
+  fastgmr pipeline [--config FILE]   run the streaming SP-SVD pipeline
+  fastgmr serve [--jobs N]           demo the approximation-job router
+  fastgmr help                       this message
+
+Bench targets: table1..table7, fig1, fig2, fig3, perf (see DESIGN.md §5).";
+
+/// Main dispatch (called from `rust/src/main.rs`).
+pub fn main_entry() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "info" => info(),
+        "verify" => verify(),
+        "bench" => {
+            let rest: Vec<String> = args[1..]
+                .iter()
+                .map(|a| if a == "all" { String::new() } else { a.clone() })
+                .filter(|a| !a.is_empty())
+                .collect();
+            crate::bench::bench_main(&rest);
+            Ok(())
+        }
+        "pipeline" => pipeline(&args[1..]),
+        "serve" => serve(&args[1..]),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command `{other}`\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn info() -> anyhow::Result<()> {
+    match crate::runtime::Engine::new("artifacts") {
+        Ok(engine) => {
+            println!("platform: {}", engine.platform());
+            println!("artifacts ({}):", engine.manifest().len());
+            for name in engine.manifest().names() {
+                let e = engine.manifest().get(name)?;
+                let ins: Vec<String> = e.input_shapes.iter().map(|(r, c)| format!("{r}x{c}")).collect();
+                println!("  {name}: inputs [{}]", ins.join(", "));
+            }
+        }
+        Err(e) => println!("no artifacts: {e}"),
+    }
+    Ok(())
+}
+
+fn verify() -> anyhow::Result<()> {
+    let engine = crate::runtime::Engine::new("artifacts")?;
+    let results = engine.verify_goldens()?;
+    let mut worst = 0.0f64;
+    for (name, err) in &results {
+        println!("{name}: max rel err {err:.2e}");
+        worst = worst.max(*err);
+    }
+    if worst > 2e-3 {
+        anyhow::bail!("golden verification failed (worst {worst:.2e})");
+    }
+    println!("all {} artifacts verified", results.len());
+    Ok(())
+}
+
+fn flag_value<'a>(args: &'a [String], flag: &str) -> Option<&'a str> {
+    args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1)).map(String::as_str)
+}
+
+fn pipeline(args: &[String]) -> anyhow::Result<()> {
+    let cfg = match flag_value(args, "--config") {
+        Some(path) => Config::load(path)?,
+        None => Config::default(),
+    };
+    let m = cfg.int_or("pipeline", "rows", 2048) as usize;
+    let n = cfg.int_or("pipeline", "cols", 4096) as usize;
+    let block = cfg.int_or("pipeline", "block", 512) as usize;
+    let workers = cfg.int_or("pipeline", "workers", 1) as usize;
+    let depth = cfg.int_or("pipeline", "queue_depth", 4) as usize;
+    let k = cfg.int_or("svd", "k", 10) as usize;
+    let mult = cfg.int_or("svd", "mult", 4) as usize;
+    let kind = SketchKind::parse(cfg.str_or("svd", "sketch", "gaussian"))
+        .ok_or_else(|| anyhow::anyhow!("bad sketch kind"))?;
+    let seed = cfg.int_or("pipeline", "seed", 0) as u64;
+
+    println!("pipeline: {m}x{n}, block={block}, workers={workers}, depth={depth}, k={k}, mult={mult}");
+    let mut r = rng(seed);
+    let a = synth_dense(m, n, 3 * k, SpectrumKind::Exponential { base: 0.85 }, 0.02, &mut r);
+    let svd_cfg = FastSpSvdConfig::paper(k, mult, kind);
+    let sketches = FastSpSvdSketches::draw(&svd_cfg, m, n, &mut r);
+    let pipeline = StreamPipeline::new(PipelineConfig { workers, queue_depth: depth });
+    let start = std::time::Instant::now();
+    let mut stream = DenseColumnStream::new(&a, block);
+    let res = pipeline.run(&mut stream, &svd_cfg, &sketches)?;
+    let secs = start.elapsed().as_secs_f64();
+
+    let mut r2 = rng(seed + 1);
+    let ak = crate::svdstream::ak_error(crate::gmr::Input::Dense(&a), k, 6, &mut r2);
+    let ratio = crate::svdstream::error_ratio(&a, &res, ak);
+    println!("blocks={} time={secs:.2}s throughput={:.1} cols/s", res.blocks, n as f64 / secs);
+    println!("error ratio vs ‖A−A_k‖: {ratio:.4}");
+    println!("{}", pipeline.metrics.report());
+    Ok(())
+}
+
+fn serve(args: &[String]) -> anyhow::Result<()> {
+    let jobs: usize = flag_value(args, "--jobs").and_then(|v| v.parse().ok()).unwrap_or(8);
+    let router = Router::new(2);
+    let mut r = rng(42);
+    let mut handles = Vec::new();
+    println!("submitting {jobs} mixed jobs…");
+    for seed in 0..jobs as u64 {
+        let a = synth_dense(300, 240, 20, SpectrumKind::Exponential { base: 0.9 }, 0.02, &mut r);
+        match seed % 3 {
+            0 => {
+                let g_c = Mat::randn(240, 10, &mut r);
+                let c = crate::linalg::matmul(&a, &g_c);
+                let g_r = Mat::randn(10, 300, &mut r);
+                let rr = crate::linalg::matmul(&g_r, &a);
+                handles.push(router.submit(ApproxJob::Gmr {
+                    a: MatrixPayload::Dense(a),
+                    c,
+                    r: rr,
+                    cfg: crate::gmr::FastGmrConfig::gaussian(80, 80),
+                    seed,
+                }));
+            }
+            1 => {
+                let x = Mat::randn(400, 8, &mut r);
+                handles.push(router.submit(ApproxJob::SpsdKernel { x, sigma: 0.4, c: 12, s: 60, seed }));
+            }
+            _ => handles.push(router.submit(ApproxJob::StreamSvd {
+                a: MatrixPayload::Dense(a),
+                cfg: FastSpSvdConfig::paper(5, 4, SketchKind::Gaussian),
+                block: 64,
+                seed,
+            })),
+        }
+    }
+    for (i, h) in handles.into_iter().enumerate() {
+        let res = h.wait().map_err(|e| anyhow::anyhow!("{e}"))?;
+        println!("job {i}: {} done", res.kind());
+    }
+    println!("\n{}", router.metrics.report());
+    router.shutdown();
+    Ok(())
+}

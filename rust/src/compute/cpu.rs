@@ -1,0 +1,52 @@
+//! Pure-Rust compute backend (reference + fallback).
+
+use super::Backend;
+use crate::error::Result;
+use crate::linalg::{matmul, matmul_a_bt, Mat};
+
+/// Backend backed by the crate's own linalg substrate.
+pub struct CpuBackend;
+
+impl Backend for CpuBackend {
+    fn name(&self) -> &'static str {
+        "cpu"
+    }
+
+    fn sketch_apply(&self, s: &Mat, a: &Mat) -> Result<Mat> {
+        Ok(matmul(s, a))
+    }
+
+    fn rbf_block(&self, xi: &Mat, xj: &Mat, sigma: f64) -> Result<Mat> {
+        let ni = xi.row_norms_sq();
+        let nj = xj.row_norms_sq();
+        let cross = matmul_a_bt(xi, xj);
+        let mut out = Mat::zeros(xi.rows(), xj.rows());
+        for i in 0..xi.rows() {
+            let crow = cross.row(i);
+            let orow = out.row_mut(i);
+            for j in 0..xj.rows() {
+                let d2 = (ni[i] + nj[j] - 2.0 * crow[j]).max(0.0);
+                orow[j] = (-sigma * d2).exp();
+            }
+        }
+        Ok(out)
+    }
+
+    fn twoside_sketch(&self, sc: &Mat, a_l: &Mat, sr: &Mat) -> Result<Mat> {
+        Ok(matmul_a_bt(&matmul(sc, a_l), sr))
+    }
+
+    fn stream_update(
+        &self,
+        a_l: &Mat,
+        omega_t: &Mat,
+        psi: &Mat,
+        sc: &Mat,
+        sr: &Mat,
+    ) -> Result<(Mat, Mat, Mat)> {
+        let c_delta = matmul(a_l, omega_t);
+        let r_block = matmul(psi, a_l);
+        let m_delta = matmul_a_bt(&matmul(sc, a_l), sr);
+        Ok((c_delta, r_block, m_delta))
+    }
+}

@@ -1,0 +1,94 @@
+//! Compute backends.
+//!
+//! Two interchangeable implementations of the fixed-shape hot-path
+//! operations sit behind [`Backend`]:
+//!
+//! * [`CpuBackend`] — pure Rust (the linalg substrate); arbitrary shapes,
+//!   input-sparsity-aware upstream.
+//! * [`PjrtBackend`] — executes the AOT JAX/Pallas artifacts through the
+//!   PJRT runtime; fixed tile shapes with zero-padding at the edges
+//!   (padding is exact for these linear/elementwise ops).
+//!
+//! The coordinator picks a backend at startup; examples/benches compare
+//! the two for both numerics (they must agree) and throughput.
+
+mod cpu;
+mod pjrt;
+
+pub use cpu::CpuBackend;
+pub use pjrt::PjrtBackend;
+
+use crate::error::Result;
+use crate::linalg::Mat;
+
+/// Fixed-shape hot-path operations.
+///
+/// Not `Send`/`Sync`: the PJRT client is single-threaded by construction
+/// (the `xla` crate wraps an `Rc` handle), so each coordinator thread
+/// owns its backend instance; the CPU backend is trivially cloneable.
+pub trait Backend {
+    /// Human-readable name for logs/metrics.
+    fn name(&self) -> &'static str;
+
+    /// Dense product `S · A` (the sketch-apply hot spot).
+    fn sketch_apply(&self, s: &Mat, a: &Mat) -> Result<Mat>;
+
+    /// RBF kernel block: `K[I,J] = exp(−σ‖x_i − x_j‖²)` from row blocks
+    /// `xi` (bi×d) and `xj` (bj×d).
+    fn rbf_block(&self, xi: &Mat, xj: &Mat, sigma: f64) -> Result<Mat>;
+
+    /// Two-sided sketch of a column block: `(S_C · A_L) · S_Rᵀ`.
+    fn twoside_sketch(&self, sc: &Mat, a_l: &Mat, sr: &Mat) -> Result<Mat>;
+
+    /// Streaming SP-SVD block update (Algorithm 3 steps 6–8), returning
+    /// (C_delta, R_block, M_delta) for the coordinator to accumulate:
+    /// C_delta = A_L·Ωᵀ, R_block = Ψ·A_L, M_delta = (S_C A_L) S_Rᵀ.
+    fn stream_update(&self, a_l: &Mat, omega_t: &Mat, psi: &Mat, sc: &Mat, sr: &Mat)
+        -> Result<(Mat, Mat, Mat)>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, matmul_a_bt, Mat};
+    use crate::rng::rng;
+    use crate::testing::assert_close;
+
+    #[test]
+    fn cpu_backend_matches_reference() {
+        let be = CpuBackend;
+        let mut r = rng(1);
+        let s = Mat::randn(8, 20, &mut r);
+        let a = Mat::randn(20, 12, &mut r);
+        let got = be.sketch_apply(&s, &a).unwrap();
+        assert_close(&got, &matmul(&s, &a), 1e-12, "sketch_apply");
+
+        let xi = Mat::randn(6, 4, &mut r);
+        let xj = Mat::randn(5, 4, &mut r);
+        let k = be.rbf_block(&xi, &xj, 0.3).unwrap();
+        for i in 0..6 {
+            for j in 0..5 {
+                let mut d2 = 0.0;
+                for t in 0..4 {
+                    let d = xi[(i, t)] - xj[(j, t)];
+                    d2 += d * d;
+                }
+                assert!((k[(i, j)] - (-0.3 * d2).exp()).abs() < 1e-12);
+            }
+        }
+
+        let sc = Mat::randn(7, 20, &mut r);
+        let sr = Mat::randn(9, 12, &mut r);
+        let al = Mat::randn(20, 12, &mut r);
+        let two = be.twoside_sketch(&sc, &al, &sr).unwrap();
+        let want = matmul_a_bt(&matmul(&sc, &al), &sr);
+        assert_close(&two, &want, 1e-12, "twoside");
+
+        let om_t = Mat::randn(12, 5, &mut r); // Ωᵀ slice: L x c
+        let psi = Mat::randn(4, 20, &mut r);
+        let (c_d, r_b, m_d) = be.stream_update(&al, &om_t, &psi, &sc, &sr).unwrap();
+        assert_close(&c_d, &matmul(&al, &om_t), 1e-12, "stream C");
+        assert_close(&r_b, &matmul(&psi, &al), 1e-12, "stream R");
+        assert_close(&m_d, &want, 1e-12, "stream M");
+    }
+}

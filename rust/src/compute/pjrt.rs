@@ -1,0 +1,131 @@
+//! PJRT compute backend — runs the AOT JAX/Pallas artifacts.
+//!
+//! Artifacts have fixed shapes (PJRT requires static shapes); this
+//! backend pads inputs with zeros up to the artifact tile and trims the
+//! outputs. Padding is exact for every op here: they are linear in A (or,
+//! for `rbf_block`, the padded rows are simply discarded).
+//!
+//! Artifact naming convention (see `python/compile/aot.py`):
+//! `sketch_SxMxN`, `rbf_BIxBJxD`, `twoside_SCxMxLxSR`,
+//! `stream_MxLxCxRxSCxSR` — the manifest carries the shapes, so this
+//! backend just looks for a tile big enough and pads.
+
+use super::Backend;
+use crate::error::{FgError, Result};
+use crate::linalg::Mat;
+use crate::runtime::Engine;
+use std::sync::Arc;
+
+/// Backend that dispatches to AOT artifacts through the PJRT engine.
+pub struct PjrtBackend {
+    engine: Arc<Engine>,
+}
+
+impl PjrtBackend {
+    pub fn new(engine: Arc<Engine>) -> Self {
+        Self { engine }
+    }
+
+    /// Find an artifact whose name starts with `prefix` and whose input
+    /// shapes (given by the first input) can contain (r, c).
+    fn find_tile(&self, prefix: &str, need: &[(usize, usize)]) -> Result<String> {
+        let mut best: Option<(String, usize)> = None;
+        'outer: for name in self.engine.manifest().names() {
+            if !name.starts_with(prefix) {
+                continue;
+            }
+            let entry = self.engine.manifest().get(name)?;
+            if entry.input_shapes.len() != need.len() {
+                continue;
+            }
+            let mut area = 0usize;
+            for (&(ar, ac), &(nr, nc)) in entry.input_shapes.iter().zip(need) {
+                if ar < nr || ac < nc {
+                    continue 'outer;
+                }
+                area += ar * ac;
+            }
+            if best.as_ref().map(|(_, a)| area < *a).unwrap_or(true) {
+                best = Some((name.to_string(), area));
+            }
+        }
+        best.map(|(n, _)| n).ok_or_else(|| FgError::ArtifactMissing {
+            name: format!("{prefix}* covering {need:?}"),
+            dir: self.engine.manifest().dir.display().to_string(),
+        })
+    }
+
+    fn pad_to(mat: &Mat, r: usize, c: usize) -> Mat {
+        if mat.shape() == (r, c) {
+            return mat.clone();
+        }
+        let mut out = Mat::zeros(r, c);
+        out.set_block(0, 0, mat);
+        out
+    }
+
+    fn run_padded(&self, name: &str, inputs: &[&Mat], trim: &[(usize, usize)]) -> Result<Vec<Mat>> {
+        let graph = self.engine.load(name)?;
+        let padded: Vec<Mat> = inputs
+            .iter()
+            .zip(&graph.entry.input_shapes)
+            .map(|(m, &(r, c))| Self::pad_to(m, r, c))
+            .collect();
+        let refs: Vec<&Mat> = padded.iter().collect();
+        let outs = graph.run(&refs)?;
+        Ok(outs
+            .into_iter()
+            .zip(trim)
+            .map(|(o, &(r, c))| if o.shape() == (r, c) { o } else { o.slice(0, r, 0, c) })
+            .collect())
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn sketch_apply(&self, s: &Mat, a: &Mat) -> Result<Mat> {
+        let name = self.find_tile("sketch", &[s.shape(), a.shape()])?;
+        let mut out = self.run_padded(&name, &[s, a], &[(s.rows(), a.cols())])?;
+        Ok(out.remove(0))
+    }
+
+    fn rbf_block(&self, xi: &Mat, xj: &Mat, sigma: f64) -> Result<Mat> {
+        let name = self.find_tile("rbf", &[xi.shape(), xj.shape(), (1, 1)])?;
+        let sig = Mat::from_vec(1, 1, vec![sigma]);
+        let mut out = self.run_padded(&name, &[xi, xj, &sig], &[(xi.rows(), xj.rows())])?;
+        Ok(out.remove(0))
+    }
+
+    fn twoside_sketch(&self, sc: &Mat, a_l: &Mat, sr: &Mat) -> Result<Mat> {
+        let name = self.find_tile("twoside", &[sc.shape(), a_l.shape(), sr.shape()])?;
+        let mut out = self.run_padded(&name, &[sc, a_l, sr], &[(sc.rows(), sr.rows())])?;
+        Ok(out.remove(0))
+    }
+
+    fn stream_update(
+        &self,
+        a_l: &Mat,
+        omega_t: &Mat,
+        psi: &Mat,
+        sc: &Mat,
+        sr: &Mat,
+    ) -> Result<(Mat, Mat, Mat)> {
+        let name = self.find_tile(
+            "stream",
+            &[a_l.shape(), omega_t.shape(), psi.shape(), sc.shape(), sr.shape()],
+        )?;
+        let trims = [
+            (a_l.rows(), omega_t.cols()),
+            (psi.rows(), a_l.cols()),
+            (sc.rows(), sr.rows()),
+        ];
+        let mut out = self.run_padded(&name, &[a_l, omega_t, psi, sc, sr], &trims)?;
+        let m_delta = out.remove(2);
+        let r_block = out.remove(1);
+        let c_delta = out.remove(0);
+        Ok((c_delta, r_block, m_delta))
+    }
+}

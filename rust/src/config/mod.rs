@@ -1,0 +1,211 @@
+//! Minimal TOML-subset configuration parser (the offline image vendors no
+//! TOML crate). Supports what the launcher needs: `[section]` headers,
+//! `key = value` with string/int/float/bool values, `#` comments.
+//!
+//! ```toml
+//! [pipeline]
+//! block = 1024
+//! workers = 1
+//!
+//! [svd]
+//! k = 10
+//! sketch = "gaussian"
+//! ```
+
+use crate::error::{FgError, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A parsed config value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed configuration: section → key → value. Keys outside any section
+/// land in the "" section.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Config {
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') || line.len() < 3 {
+                    return Err(FgError::Config(format!("line {}: malformed section header", lineno + 1)));
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| {
+                FgError::Config(format!("line {}: expected `key = value`", lineno + 1))
+            })?;
+            let key = line[..eq].trim().to_string();
+            let val = parse_value(line[eq + 1..].trim())
+                .ok_or_else(|| FgError::Config(format!("line {}: bad value", lineno + 1)))?;
+            cfg.sections.entry(section.clone()).or_default().insert(key, val);
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    /// Look up `section.key`.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    /// Integer with default.
+    pub fn int_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    /// Float with default.
+    pub fn float_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(Value::as_float).unwrap_or(default)
+    }
+
+    /// String with default.
+    pub fn str_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    /// Bool with default.
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    /// Section names.
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(String::as_str)
+    }
+
+    /// Set a value programmatically (CLI overrides).
+    pub fn set(&mut self, section: &str, key: &str, value: Value) {
+        self.sections.entry(section.to_string()).or_default().insert(key.to_string(), value);
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(tok: &str) -> Option<Value> {
+    if tok.starts_with('"') && tok.ends_with('"') && tok.len() >= 2 {
+        return Some(Value::Str(tok[1..tok.len() - 1].to_string()));
+    }
+    match tok {
+        "true" => return Some(Value::Bool(true)),
+        "false" => return Some(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = tok.parse::<i64>() {
+        return Some(Value::Int(i));
+    }
+    if let Ok(f) = tok.parse::<f64>() {
+        return Some(Value::Float(f));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_values() {
+        let cfg = Config::parse(
+            r#"
+# top comment
+global_key = 7
+[pipeline]
+block = 1024           # inline comment
+workers = 2
+ratio = 0.5
+name = "fast # gmr"
+enabled = true
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.int_or("", "global_key", 0), 7);
+        assert_eq!(cfg.int_or("pipeline", "block", 0), 1024);
+        assert_eq!(cfg.int_or("pipeline", "workers", 0), 2);
+        assert_eq!(cfg.float_or("pipeline", "ratio", 0.0), 0.5);
+        assert_eq!(cfg.str_or("pipeline", "name", ""), "fast # gmr");
+        assert!(cfg.bool_or("pipeline", "enabled", false));
+        // Defaults.
+        assert_eq!(cfg.int_or("pipeline", "missing", 9), 9);
+        assert_eq!(cfg.str_or("nosec", "x", "d"), "d");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Config::parse("[unclosed").is_err());
+        assert!(Config::parse("novalue").is_err());
+        assert!(Config::parse("k = @@@").is_err());
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut cfg = Config::parse("[a]\nx = 1\n").unwrap();
+        cfg.set("a", "x", Value::Int(5));
+        assert_eq!(cfg.int_or("a", "x", 0), 5);
+    }
+}

@@ -1,0 +1,105 @@
+//! Approximation jobs — the unit of work the router schedules.
+
+use crate::gmr::FastGmrConfig;
+use crate::linalg::Mat;
+use crate::sketch::SketchKind;
+use crate::sparse::Csr;
+use crate::svdstream::FastSpSvdConfig;
+
+/// Matrix payload a job carries (owned — jobs cross threads).
+pub enum MatrixPayload {
+    Dense(Mat),
+    Sparse(Csr),
+}
+
+impl MatrixPayload {
+    pub fn rows(&self) -> usize {
+        match self {
+            MatrixPayload::Dense(a) => a.rows(),
+            MatrixPayload::Sparse(a) => a.rows(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            MatrixPayload::Dense(a) => a.cols(),
+            MatrixPayload::Sparse(a) => a.cols(),
+        }
+    }
+
+    pub fn as_input(&self) -> crate::gmr::Input<'_> {
+        match self {
+            MatrixPayload::Dense(a) => crate::gmr::Input::Dense(a),
+            MatrixPayload::Sparse(a) => crate::gmr::Input::Sparse(a),
+        }
+    }
+}
+
+/// A job submitted to the [`super::Router`].
+pub enum ApproxJob {
+    /// Fast GMR (Algorithm 1): approximate `min_X ‖A − C X R‖`.
+    Gmr { a: MatrixPayload, c: Mat, r: Mat, cfg: FastGmrConfig, seed: u64 },
+    /// Faster SPSD (Algorithm 2) on an RBF kernel of the given points.
+    SpsdKernel { x: Mat, sigma: f64, c: usize, s: usize, seed: u64 },
+    /// Fast single-pass SVD (Algorithm 3) over an owned matrix streamed
+    /// in `block`-column chunks.
+    StreamSvd { a: MatrixPayload, cfg: FastSpSvdConfig, block: usize, seed: u64 },
+    /// Exact GMR baseline (for comparisons through the same service).
+    GmrExact { a: MatrixPayload, c: Mat, r: Mat },
+}
+
+impl ApproxJob {
+    /// Job kind tag (metrics/routing).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ApproxJob::Gmr { .. } => "gmr",
+            ApproxJob::SpsdKernel { .. } => "spsd",
+            ApproxJob::StreamSvd { .. } => "svd",
+            ApproxJob::GmrExact { .. } => "gmr_exact",
+        }
+    }
+
+    /// Rough FLOP weight used by the router's load-aware dispatch.
+    pub fn weight(&self) -> u64 {
+        match self {
+            ApproxJob::Gmr { a, cfg, .. } => (a.rows() + a.cols()) as u64 * (cfg.s_c + cfg.s_r) as u64,
+            ApproxJob::SpsdKernel { x, c, s, .. } => x.rows() as u64 * (*c as u64) + (*s as u64).pow(2),
+            ApproxJob::StreamSvd { a, cfg, .. } => {
+                (a.rows() + a.cols()) as u64 * (cfg.c + cfg.r + cfg.s_c) as u64
+            }
+            ApproxJob::GmrExact { a, c, r } => {
+                a.rows() as u64 * a.cols() as u64 * (c.cols() + r.rows()) as u64
+            }
+        }
+    }
+}
+
+/// Result of a completed job.
+pub enum JobResult {
+    /// GMR core matrix X̃ (c×r) plus the sketch sizes used.
+    Gmr { x: Mat },
+    /// SPSD factors: sampled column indices, C, PSD core; plus observed
+    /// kernel-entry count.
+    Spsd { idx: Vec<usize>, c: Mat, x: Mat, entries_observed: u64 },
+    /// SVD factors.
+    Svd { u: Mat, sigma: Vec<f64>, v: Mat },
+}
+
+impl JobResult {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            JobResult::Gmr { .. } => "gmr",
+            JobResult::Spsd { .. } => "spsd",
+            JobResult::Svd { .. } => "svd",
+        }
+    }
+}
+
+/// Sketch family a service config maps to per payload type (dense →
+/// Gaussian, sparse → CountSketch, the §6 convention).
+pub fn default_kind_for(payload: &MatrixPayload) -> SketchKind {
+    match payload {
+        MatrixPayload::Dense(_) => SketchKind::Gaussian,
+        MatrixPayload::Sparse(_) => SketchKind::Count,
+    }
+}

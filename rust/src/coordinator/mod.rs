@@ -1,0 +1,25 @@
+//! Layer-3 coordinator: the streaming orchestrator and approximation-job
+//! service that wrap the paper's algorithms into a deployable system.
+//!
+//! * [`pipeline`] — concurrent single-pass pipeline for Algorithm 3:
+//!   reader thread → bounded channel (backpressure) → sketch workers →
+//!   accumulator fold. Numerically identical to the single-threaded
+//!   reference in [`crate::svdstream`] (tested).
+//! * [`router`] — a job service: clients submit [`jobs::ApproxJob`]s,
+//!   worker threads execute them against a [`crate::compute::Backend`].
+//! * [`batcher`] — tiles kernel-entry requests into fixed-shape
+//!   `rbf_block` executions (the Algorithm 2 entry oracle, production
+//!   form) with per-tile padding and entry accounting.
+
+pub mod batcher;
+pub mod jobs;
+pub mod pipeline;
+pub mod router;
+
+pub use batcher::TiledKernelOracle;
+pub use jobs::{ApproxJob, JobResult};
+pub use pipeline::{PipelineConfig, StreamPipeline};
+pub use router::{JobHandle, Router};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,163 @@
+//! Concurrent single-pass SVD pipeline (Algorithm 3 as a streaming
+//! system).
+//!
+//! ```text
+//! reader ──(bounded channel: backpressure)──▶ worker₀ ─┐
+//!                                            worker₁ ─┼─▶ fold ─▶ finalize
+//!                                            …        ─┘
+//! ```
+//!
+//! * The reader owns the [`ColumnStream`] and never buffers more than
+//!   `queue_depth` blocks — O((m+n)·sketch) memory total, the paper's
+//!   single-pass guarantee.
+//! * Workers hold private accumulators (C, M) and write disjoint column
+//!   ranges of R; the fold step sums worker accumulators. All updates
+//!   commute, so the result is independent of scheduling (tested against
+//!   the single-threaded reference).
+
+use crate::error::{FgError, Result};
+use crate::linalg::Mat;
+use crate::metrics::Metrics;
+use crate::svdstream::fast::{accumulate_block, finalize, FastSpSvdConfig, FastSpSvdSketches};
+use crate::svdstream::source::ColumnStream;
+use crate::svdstream::SpSvdResult;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+
+/// Pipeline tuning knobs.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    /// Worker threads (1 is optimal on a 1-core container; kept
+    /// configurable for larger machines).
+    pub workers: usize,
+    /// Bounded-queue depth between reader and workers (backpressure).
+    pub queue_depth: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self { workers: 1, queue_depth: 4 }
+    }
+}
+
+/// The streaming pipeline.
+pub struct StreamPipeline {
+    cfg: PipelineConfig,
+    pub metrics: Arc<Metrics>,
+}
+
+struct WorkerState {
+    c_acc: Mat,
+    r_acc: Mat,
+    m_acc: Mat,
+    blocks: usize,
+}
+
+impl StreamPipeline {
+    pub fn new(cfg: PipelineConfig) -> Self {
+        assert!(cfg.workers >= 1 && cfg.queue_depth >= 1);
+        Self { cfg, metrics: Arc::new(Metrics::new()) }
+    }
+
+    /// Run Algorithm 3 over the stream with pre-drawn sketches.
+    ///
+    /// The stream is consumed exactly once; blocks are moved through the
+    /// bounded channel and dropped after their worker processes them.
+    pub fn run(
+        &self,
+        stream: &mut dyn ColumnStream,
+        cfg: &FastSpSvdConfig,
+        sketches: &FastSpSvdSketches,
+    ) -> Result<SpSvdResult> {
+        let (m, n) = (stream.rows(), stream.cols());
+        let workers = self.cfg.workers;
+        let (tx, rx) = mpsc::sync_channel::<(usize, Mat)>(self.cfg.queue_depth);
+        let rx = Arc::new(std::sync::Mutex::new(rx));
+        let processed = Arc::new(AtomicUsize::new(0));
+        let max_inflight = Arc::new(AtomicUsize::new(0));
+        let inflight = Arc::new(AtomicUsize::new(0));
+
+        let states: Vec<WorkerState> = std::thread::scope(|scope| -> Result<Vec<WorkerState>> {
+            let mut handles = Vec::with_capacity(workers);
+            for _ in 0..workers {
+                let rx = rx.clone();
+                let processed = processed.clone();
+                let inflight = inflight.clone();
+                let metrics = self.metrics.clone();
+                handles.push(scope.spawn(move || {
+                    let mut st = WorkerState {
+                        c_acc: Mat::zeros(m, cfg.c),
+                        r_acc: Mat::zeros(cfg.r, n),
+                        m_acc: Mat::zeros(cfg.s_c, cfg.s_r),
+                        blocks: 0,
+                    };
+                    loop {
+                        let msg = rx.lock().unwrap().recv();
+                        let Ok((col_start, block)) = msg else { break };
+                        inflight.fetch_sub(1, Ordering::Relaxed);
+                        let c1 = col_start + block.cols();
+                        metrics.time("pipeline.block_update", || {
+                            accumulate_block(
+                                &block,
+                                col_start,
+                                c1,
+                                sketches,
+                                &mut st.c_acc,
+                                &mut st.r_acc,
+                                &mut st.m_acc,
+                            );
+                        });
+                        st.blocks += 1;
+                        processed.fetch_add(1, Ordering::Relaxed);
+                        metrics.add("pipeline.blocks", 1);
+                        metrics.add("pipeline.cols", block.cols() as u64);
+                    }
+                    st
+                }));
+            }
+
+            // Reader loop (current thread): owns the stream, applies
+            // backpressure via the bounded channel.
+            let mut sent = 0usize;
+            while let Some(block) = stream.next_block() {
+                let depth = inflight.fetch_add(1, Ordering::Relaxed) + 1;
+                max_inflight.fetch_max(depth, Ordering::Relaxed);
+                tx.send((block.col_start, block.data))
+                    .map_err(|_| FgError::Coordinator("workers exited early".into()))?;
+                sent += 1;
+            }
+            drop(tx);
+            self.metrics.add("pipeline.blocks_sent", sent as u64);
+
+            let mut states = Vec::with_capacity(workers);
+            for h in handles {
+                states.push(h.join().map_err(|_| FgError::Coordinator("worker panicked".into()))?);
+            }
+            Ok(states)
+        })?;
+
+        self.metrics.add("pipeline.max_queue_depth", max_inflight.load(Ordering::Relaxed) as u64);
+
+        // Fold worker accumulators (all updates commute).
+        let mut c_acc = Mat::zeros(m, cfg.c);
+        let mut r_acc = Mat::zeros(cfg.r, n);
+        let mut m_acc = Mat::zeros(cfg.s_c, cfg.s_r);
+        let mut blocks = 0usize;
+        for st in states {
+            c_acc += &st.c_acc;
+            r_acc += &st.r_acc;
+            m_acc += &st.m_acc;
+            blocks += st.blocks;
+        }
+        debug_assert_eq!(blocks, processed.load(Ordering::Relaxed));
+
+        let (u, sigma, v) =
+            self.metrics.time("pipeline.finalize", || finalize(cfg, sketches, &c_acc, &r_acc, &m_acc));
+        Ok(SpSvdResult { u, sigma, v, blocks })
+    }
+
+    /// Maximum queue depth observed in the last run (backpressure bound).
+    pub fn max_queue_depth(&self) -> u64 {
+        self.metrics.get("pipeline.max_queue_depth")
+    }
+}

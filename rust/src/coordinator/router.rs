@@ -1,0 +1,135 @@
+//! Job router: a small multi-worker service executing [`ApproxJob`]s.
+//!
+//! Jobs are submitted from any thread; each returns a [`JobHandle`] whose
+//! `wait()` blocks for the result. Workers pull from a shared queue
+//! (work-stealing by contention — single consumer lock on the receiver),
+//! run the algorithm, and report per-kind latency into [`Metrics`].
+
+use super::jobs::{ApproxJob, JobResult, MatrixPayload};
+use crate::error::{FgError, Result};
+use crate::metrics::Metrics;
+use crate::rng::rng;
+use crate::spsd::{CountingOracle, RbfOracle};
+use crate::svdstream::source::{CsrColumnStream, DenseColumnStream};
+use std::sync::{mpsc, Arc, Mutex};
+
+/// Handle to a submitted job.
+pub struct JobHandle {
+    rx: mpsc::Receiver<Result<JobResult>>,
+}
+
+impl JobHandle {
+    /// Block until the job completes.
+    pub fn wait(self) -> Result<JobResult> {
+        self.rx
+            .recv()
+            .map_err(|_| FgError::Coordinator("router shut down before job completed".into()))?
+    }
+}
+
+type QueueItem = (ApproxJob, mpsc::Sender<Result<JobResult>>);
+
+/// The router service.
+pub struct Router {
+    tx: Option<mpsc::Sender<QueueItem>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Router {
+    /// Spawn `workers` executor threads.
+    pub fn new(workers: usize) -> Self {
+        assert!(workers >= 1);
+        let (tx, rx) = mpsc::channel::<QueueItem>();
+        let rx = Arc::new(Mutex::new(rx));
+        let metrics = Arc::new(Metrics::new());
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let rx = rx.clone();
+            let metrics = metrics.clone();
+            handles.push(std::thread::spawn(move || loop {
+                let item = rx.lock().unwrap().recv();
+                let Ok((job, reply)) = item else { break };
+                let kind = job.kind();
+                metrics.add(&format!("router.{kind}.submitted"), 1);
+                let result = metrics.time(&format!("router.{kind}.latency"), || execute(job));
+                metrics.add(&format!("router.{kind}.completed"), 1);
+                let _ = reply.send(result);
+            }));
+        }
+        Self { tx: Some(tx), workers: handles, metrics }
+    }
+
+    /// Submit a job; returns immediately.
+    pub fn submit(&self, job: ApproxJob) -> JobHandle {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .expect("router already shut down")
+            .send((job, reply_tx))
+            .expect("router workers exited");
+        JobHandle { rx: reply_rx }
+    }
+
+    /// Drain and join workers.
+    pub fn shutdown(mut self) {
+        self.tx.take();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.tx.take();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Execute one job (the worker body).
+fn execute(job: ApproxJob) -> Result<JobResult> {
+    match job {
+        ApproxJob::Gmr { a, c, r, cfg, seed } => {
+            let mut rr = rng(seed);
+            let sol = crate::gmr::solve_fast(a.as_input(), &c, &r, &cfg, &mut rr);
+            Ok(JobResult::Gmr { x: sol.x })
+        }
+        ApproxJob::GmrExact { a, c, r } => {
+            let sol = crate::gmr::solve_exact(a.as_input(), &c, &r);
+            Ok(JobResult::Gmr { x: sol.x })
+        }
+        ApproxJob::SpsdKernel { x, sigma, c, s, seed } => {
+            let mut rr = rng(seed);
+            let oracle = RbfOracle::new(&x, sigma);
+            let counting = CountingOracle::new(&oracle);
+            let sol = crate::spsd::faster_spsd(
+                &counting,
+                &crate::spsd::FasterSpsdConfig { c, s },
+                &mut rr,
+            );
+            Ok(JobResult::Spsd {
+                idx: sol.idx,
+                c: sol.c,
+                x: sol.x,
+                entries_observed: counting.observed(),
+            })
+        }
+        ApproxJob::StreamSvd { a, cfg, block, seed } => {
+            let mut rr = rng(seed);
+            let res = match &a {
+                MatrixPayload::Dense(m) => {
+                    let mut stream = DenseColumnStream::new(m, block);
+                    crate::svdstream::fast_sp_svd(&mut stream, &cfg, &mut rr)
+                }
+                MatrixPayload::Sparse(m) => {
+                    let mut stream = CsrColumnStream::new(m, block);
+                    crate::svdstream::fast_sp_svd(&mut stream, &cfg, &mut rr)
+                }
+            };
+            Ok(JobResult::Svd { u: res.u, sigma: res.sigma, v: res.v })
+        }
+    }
+}

@@ -1,0 +1,204 @@
+//! Coordinator tests: pipeline invariants, router behaviour, batcher
+//! accounting.
+
+use super::*;
+use crate::compute::CpuBackend;
+use crate::coordinator::jobs::MatrixPayload;
+use crate::linalg::Mat;
+use crate::rng::rng;
+use crate::sketch::SketchKind;
+use crate::spsd::{DenseKernelOracle, KernelOracle, RbfOracle};
+use crate::svdstream::fast::{fast_sp_svd_with, FastSpSvdSketches};
+use crate::svdstream::source::DenseColumnStream;
+use crate::svdstream::FastSpSvdConfig;
+use crate::testing::assert_close;
+
+fn test_matrix(m: usize, n: usize, seed: u64) -> Mat {
+    let mut r = rng(seed);
+    crate::data::synth_dense(m, n, 20, crate::data::SpectrumKind::Exponential { base: 0.8 }, 0.05, &mut r)
+}
+
+/// The concurrent pipeline must produce exactly the single-threaded
+/// reference result given the same sketches (all updates commute).
+#[test]
+fn pipeline_matches_reference() {
+    let a = test_matrix(120, 100, 1);
+    let cfg = FastSpSvdConfig::paper(5, 4, SketchKind::Gaussian);
+    let mut r = rng(2);
+    let sketches = FastSpSvdSketches::draw(&cfg, 120, 100, &mut r);
+
+    let mut ref_stream = DenseColumnStream::new(&a, 16);
+    let reference = fast_sp_svd_with(&mut ref_stream, &cfg, &sketches);
+
+    for workers in [1usize, 3] {
+        let pipeline = StreamPipeline::new(PipelineConfig { workers, queue_depth: 2 });
+        let mut stream = DenseColumnStream::new(&a, 16);
+        let result = pipeline.run(&mut stream, &cfg, &sketches).unwrap();
+        assert_close(&result.u, &reference.u, 1e-8, &format!("U ({workers} workers)"));
+        assert_close(&result.v, &reference.v, 1e-8, &format!("V ({workers} workers)"));
+        for (a_, b_) in result.sigma.iter().zip(&reference.sigma) {
+            assert!((a_ - b_).abs() < 1e-8);
+        }
+        assert_eq!(result.blocks, reference.blocks);
+    }
+}
+
+/// Every block is processed exactly once and backpressure bounds the
+/// in-flight queue depth.
+#[test]
+fn pipeline_processes_each_block_once_with_bounded_queue() {
+    let a = test_matrix(60, 90, 3);
+    let cfg = FastSpSvdConfig::paper(4, 3, SketchKind::Gaussian);
+    let mut r = rng(4);
+    let sketches = FastSpSvdSketches::draw(&cfg, 60, 90, &mut r);
+    let depth = 3;
+    let pipeline = StreamPipeline::new(PipelineConfig { workers: 2, queue_depth: depth });
+    let mut stream = DenseColumnStream::new(&a, 8);
+    let result = pipeline.run(&mut stream, &cfg, &sketches).unwrap();
+    let expected_blocks = (90 + 7) / 8;
+    assert_eq!(result.blocks, expected_blocks);
+    assert_eq!(pipeline.metrics.get("pipeline.blocks"), expected_blocks as u64);
+    assert_eq!(pipeline.metrics.get("pipeline.blocks_sent"), expected_blocks as u64);
+    assert_eq!(pipeline.metrics.get("pipeline.cols"), 90);
+    // Bounded channel: sender blocks at `depth` queued + workers' in-hand.
+    assert!(
+        pipeline.max_queue_depth() <= (depth + 2 + 1) as u64,
+        "queue depth {} exceeded bound",
+        pipeline.max_queue_depth()
+    );
+}
+
+#[test]
+fn router_executes_all_job_kinds() {
+    let router = Router::new(2);
+    let a = test_matrix(80, 60, 5);
+    let mut r = rng(6);
+    let g_c = Mat::randn(60, 6, &mut r);
+    let c = crate::linalg::matmul(&a, &g_c);
+    let g_r = Mat::randn(5, 80, &mut r);
+    let rr = crate::linalg::matmul(&g_r, &a);
+
+    let h1 = router.submit(ApproxJob::Gmr {
+        a: MatrixPayload::Dense(a.clone()),
+        c: c.clone(),
+        r: rr.clone(),
+        cfg: crate::gmr::FastGmrConfig::gaussian(48, 40),
+        seed: 7,
+    });
+    let h2 = router.submit(ApproxJob::GmrExact {
+        a: MatrixPayload::Dense(a.clone()),
+        c: c.clone(),
+        r: rr.clone(),
+    });
+    let x_pts = Mat::randn(100, 6, &mut r);
+    let h3 = router.submit(ApproxJob::SpsdKernel { x: x_pts, sigma: 0.4, c: 8, s: 40, seed: 8 });
+    let h4 = router.submit(ApproxJob::StreamSvd {
+        a: MatrixPayload::Dense(a.clone()),
+        cfg: FastSpSvdConfig::paper(4, 3, SketchKind::Gaussian),
+        block: 16,
+        seed: 9,
+    });
+
+    match h1.wait().unwrap() {
+        JobResult::Gmr { x } => assert_eq!(x.shape(), (6, 5)),
+        _ => panic!("wrong result kind"),
+    }
+    match h2.wait().unwrap() {
+        JobResult::Gmr { x } => assert_eq!(x.shape(), (6, 5)),
+        _ => panic!("wrong result kind"),
+    }
+    match h3.wait().unwrap() {
+        JobResult::Spsd { idx, c, x, entries_observed } => {
+            assert_eq!(idx.len(), 8);
+            assert_eq!(c.shape(), (100, 8));
+            assert_eq!(x.shape(), (8, 8));
+            assert_eq!(entries_observed, 100 * 8 + 40 * 40);
+        }
+        _ => panic!("wrong result kind"),
+    }
+    match h4.wait().unwrap() {
+        JobResult::Svd { u, sigma, v } => {
+            assert_eq!(u.rows(), 80);
+            assert_eq!(v.rows(), 60);
+            assert!(!sigma.is_empty());
+        }
+        _ => panic!("wrong result kind"),
+    }
+    assert_eq!(router.metrics.get("router.gmr.completed"), 1);
+    assert_eq!(router.metrics.get("router.spsd.completed"), 1);
+    assert_eq!(router.metrics.get("router.svd.completed"), 1);
+    router.shutdown();
+}
+
+#[test]
+fn router_many_concurrent_jobs() {
+    let router = Router::new(3);
+    let mut handles = Vec::new();
+    for seed in 0..12u64 {
+        let a = test_matrix(40, 30, 100 + seed);
+        let mut r = rng(seed);
+        let g_c = Mat::randn(30, 4, &mut r);
+        let c = crate::linalg::matmul(&a, &g_c);
+        let g_r = Mat::randn(3, 40, &mut r);
+        let rr = crate::linalg::matmul(&g_r, &a);
+        handles.push(router.submit(ApproxJob::Gmr {
+            a: MatrixPayload::Dense(a),
+            c,
+            r: rr,
+            cfg: crate::gmr::FastGmrConfig::gaussian(24, 24),
+            seed,
+        }));
+    }
+    for h in handles {
+        assert!(matches!(h.wait().unwrap(), JobResult::Gmr { .. }));
+    }
+    assert_eq!(router.metrics.get("router.gmr.completed"), 12);
+}
+
+#[test]
+fn tiled_oracle_matches_plain_and_counts() {
+    let mut r = rng(10);
+    let x = Mat::randn(50, 5, &mut r);
+    let backend = CpuBackend;
+    let tiled = TiledKernelOracle::new(&x, 0.5, &backend, 16);
+    let plain = RbfOracle::new(&x, 0.5);
+    let rows: Vec<usize> = (0..37).collect();
+    let cols: Vec<usize> = (5..45).collect();
+    let got = tiled.block(&rows, &cols);
+    let want = plain.block(&rows, &cols);
+    assert_close(&got, &want, 1e-12, "tiled oracle");
+    assert_eq!(tiled.entries_requested(), (37 * 40) as u64);
+    // ceil(37/16) * ceil(40/16) tiles.
+    assert_eq!(tiled.tiles_executed(), 3 * 3);
+}
+
+#[test]
+fn tiled_oracle_drives_algorithm2() {
+    let mut r = rng(11);
+    let x = crate::data::synth_clustered(150, 8, 6, 0.4, &mut r);
+    let backend = CpuBackend;
+    let tiled = TiledKernelOracle::new(&x, 0.5, &backend, 32);
+    let sol = crate::spsd::faster_spsd(&tiled, &crate::spsd::FasterSpsdConfig { c: 10, s: 50 }, &mut r);
+    assert_eq!(sol.x.shape(), (10, 10));
+    assert_eq!(tiled.entries_requested(), (150 * 10 + 50 * 50) as u64);
+    // Against the dense oracle the result must agree given the same rng.
+    let k = crate::data::rbf_kernel(&x, 0.5);
+    let dense = DenseKernelOracle { k: &k };
+    let mut r2 = rng(11);
+    // Reconstruct the same draw sequence: synth_clustered + faster_spsd
+    // consumed from r; replay by re-deriving.
+    let _ = crate::data::synth_clustered(150, 8, 6, 0.4, &mut r2);
+    let sol2 = crate::spsd::faster_spsd(&dense, &crate::spsd::FasterSpsdConfig { c: 10, s: 50 }, &mut r2);
+    assert_close(&sol.x, &sol2.x, 1e-9, "tiled vs dense oracle end-to-end");
+}
+
+#[test]
+fn payload_helpers() {
+    let a = test_matrix(10, 8, 12);
+    let p = MatrixPayload::Dense(a);
+    assert_eq!(p.rows(), 10);
+    assert_eq!(p.cols(), 8);
+    assert_eq!(jobs::default_kind_for(&p).name(), "gaussian");
+    let sp = MatrixPayload::Sparse(crate::sparse::Csr::from_triplets(4, 4, vec![]));
+    assert_eq!(jobs::default_kind_for(&sp).name(), "count");
+}

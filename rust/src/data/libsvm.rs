@@ -1,0 +1,80 @@
+//! LIBSVM sparse-format reader (`label idx:val idx:val ...`, 1-based
+//! indices). Used when real dataset files are dropped into `data/`;
+//! otherwise the synthetic generators stand in.
+
+use crate::error::{FgError, Result};
+use crate::linalg::Mat;
+use crate::sparse::{Csr, Triplet};
+use std::io::BufRead;
+
+/// Parsed LIBSVM file.
+pub struct LibsvmData {
+    pub labels: Vec<f64>,
+    pub features: SparseFeatures,
+}
+
+/// Row-major sparse feature holder with truncation helpers.
+pub struct SparseFeatures {
+    pub rows: usize,
+    pub cols: usize,
+    pub trips: Vec<Triplet>,
+}
+
+impl SparseFeatures {
+    /// First `m` rows / `n` cols as CSR.
+    pub fn truncated(&self, m: usize, n: usize) -> Csr {
+        let trips: Vec<Triplet> = self
+            .trips
+            .iter()
+            .filter(|t| t.row < m && t.col < n)
+            .copied()
+            .collect();
+        Csr::from_triplets(m.min(self.rows), n.min(self.cols), trips)
+    }
+
+    /// Dense truncation.
+    pub fn to_dense_truncated(&self, m: usize, n: usize) -> Mat {
+        self.truncated(m, n).to_dense()
+    }
+}
+
+/// Parse a LIBSVM file.
+pub fn load_libsvm(path: &str) -> Result<LibsvmData> {
+    let file = std::fs::File::open(path)?;
+    let reader = std::io::BufReader::new(file);
+    let mut labels = Vec::new();
+    let mut trips = Vec::new();
+    let mut max_col = 0usize;
+    for (row, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let label: f64 = parts
+            .next()
+            .ok_or_else(|| FgError::Data(format!("{path}:{}: empty line", row + 1)))?
+            .parse()
+            .map_err(|_| FgError::Data(format!("{path}:{}: bad label", row + 1)))?;
+        labels.push(label);
+        for tok in parts {
+            let colon = tok
+                .find(':')
+                .ok_or_else(|| FgError::Data(format!("{path}:{}: expected idx:val", row + 1)))?;
+            let idx: usize = tok[..colon]
+                .parse()
+                .map_err(|_| FgError::Data(format!("{path}:{}: bad index", row + 1)))?;
+            let val: f64 = tok[colon + 1..]
+                .parse()
+                .map_err(|_| FgError::Data(format!("{path}:{}: bad value", row + 1)))?;
+            if idx == 0 {
+                return Err(FgError::Data(format!("{path}:{}: LIBSVM indices are 1-based", row + 1)));
+            }
+            max_col = max_col.max(idx);
+            trips.push(Triplet { row: labels.len() - 1, col: idx - 1, val });
+        }
+    }
+    let rows = labels.len();
+    Ok(LibsvmData { labels, features: SparseFeatures { rows, cols: max_col, trips } })
+}

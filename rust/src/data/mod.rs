@@ -1,0 +1,16 @@
+//! Data substrate: synthetic generators matched to the paper's datasets
+//! (Tables 5–6), a LIBSVM-format reader for real files when present, and
+//! RBF-kernel construction with the paper's η-based σ calibration.
+
+pub mod datasets;
+mod libsvm;
+mod rbf;
+pub mod synth;
+
+pub use datasets::{kernel_registry, matrix_registry, Dataset, DatasetSpec, KernelSpec};
+pub use libsvm::{load_libsvm, LibsvmData};
+pub use rbf::{calibrate_sigma, eta_for_sigma, rbf_kernel};
+pub use synth::{synth_clustered, synth_dense, synth_sparse, SpectrumKind};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,82 @@
+//! RBF kernels and the paper's σ calibration.
+//!
+//! §6.2: `K_ij = exp(−σ‖x_i − x_j‖²)`; σ is chosen so that
+//! `η = ‖K_k‖²_F / ‖K‖²_F = Σ_{i≤k} λ_i² / Σ_i λ_i²` (k = 15) matches the
+//! per-dataset values of Table 6.
+
+use crate::linalg::{matmul_a_bt, svd_randomized, Mat};
+use crate::rng::Pcg64;
+
+/// Materialize the full RBF kernel (benches/tests; O(n²d)).
+pub fn rbf_kernel(x: &Mat, sigma: f64) -> Mat {
+    let n = x.rows();
+    let norms = x.row_norms_sq();
+    let mut k = Mat::zeros(n, n);
+    const B: usize = 256;
+    for i0 in (0..n).step_by(B) {
+        let i1 = (i0 + B).min(n);
+        let xi = x.slice(i0, i1, 0, x.cols());
+        let cross = matmul_a_bt(&xi, x); // (i1-i0) x n
+        for (oi, i) in (i0..i1).enumerate() {
+            let crow = cross.row(oi);
+            let krow = k.row_mut(i);
+            for j in 0..n {
+                let d2 = (norms[i] + norms[j] - 2.0 * crow[j]).max(0.0);
+                krow[j] = (-sigma * d2).exp();
+            }
+        }
+    }
+    k
+}
+
+/// Estimate η(σ) = ‖K_k‖²_F/‖K‖²_F on a row subsample (kernels of
+/// subsampled point sets have near-identical spectral mass fractions).
+pub fn eta_for_sigma(x: &Mat, sigma: f64, k: usize, rng: &mut Pcg64) -> f64 {
+    let n_sub = x.rows().min(600);
+    let idx = rng.sample_without_replacement(x.rows(), n_sub);
+    let xs = x.select_rows(&idx);
+    let kmat = rbf_kernel(&xs, sigma);
+    let svd = svd_randomized(&kmat, k, 10, 4, rng);
+    let top: f64 = svd.s.iter().map(|s| s * s).sum();
+    top / kmat.fro_norm_sq()
+}
+
+/// Bisection on log σ to hit the target η at rank k (the paper's Table 6
+/// calibration). Monotone: larger σ → more local kernel → flatter
+/// spectrum → smaller η.
+pub fn calibrate_sigma(x: &Mat, k: usize, eta_target: f64, rng: &mut Pcg64) -> f64 {
+    // Normalize by the mean pairwise distance scale first.
+    let scale = {
+        let n_sub = x.rows().min(200);
+        let idx = rng.sample_without_replacement(x.rows(), n_sub);
+        let xs = x.select_rows(&idx);
+        let norms = xs.row_norms_sq();
+        let cross = matmul_a_bt(&xs, &xs);
+        let mut acc = 0.0;
+        let mut cnt = 0.0;
+        for i in 0..n_sub {
+            for j in 0..n_sub {
+                if i != j {
+                    acc += (norms[i] + norms[j] - 2.0 * cross[(i, j)]).max(0.0);
+                    cnt += 1.0;
+                }
+            }
+        }
+        (acc / cnt).max(1e-12)
+    };
+    let mut lo = 0.01 / scale; // very global → η ~ 1
+    let mut hi = 100.0 / scale; // very local → η ~ k/n
+    for _ in 0..24 {
+        let mid = (lo * hi).sqrt();
+        let eta = eta_for_sigma(x, mid, k, rng);
+        if eta > eta_target {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+        if (hi / lo) < 1.02 {
+            break;
+        }
+    }
+    (lo * hi).sqrt()
+}

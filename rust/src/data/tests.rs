@@ -1,0 +1,140 @@
+//! Data-substrate tests.
+
+use super::*;
+use crate::linalg::{svd_randomized, Mat};
+use crate::rng::rng;
+
+#[test]
+fn synth_dense_has_target_spectrum() {
+    let mut r = rng(1);
+    let a = synth_dense(200, 150, 30, SpectrumKind::Exponential { base: 0.8 }, 0.0, &mut r);
+    let svd = svd_randomized(&a, 10, 10, 6, &mut r);
+    for i in 0..10 {
+        let want = 0.8f64.powi(i as i32);
+        let rel = (svd.s[i] - want).abs() / want;
+        assert!(rel < 0.05, "sigma_{i}: got {} want {want}", svd.s[i]);
+    }
+}
+
+#[test]
+fn synth_dense_noise_raises_tail() {
+    let mut r = rng(2);
+    let clean = synth_dense(100, 80, 10, SpectrumKind::PowerLaw { alpha: 1.0 }, 0.0, &mut r);
+    let mut r2 = rng(2);
+    let noisy = synth_dense(100, 80, 10, SpectrumKind::PowerLaw { alpha: 1.0 }, 0.5, &mut r2);
+    assert!(noisy.fro_norm() > clean.fro_norm());
+}
+
+#[test]
+fn synth_sparse_hits_density() {
+    let mut r = rng(3);
+    let a = synth_sparse(500, 400, 0.01, 10, &mut r);
+    let d = a.density();
+    assert!((d - 0.01).abs() < 0.002, "density {d}");
+    assert_eq!(a.shape(), (500, 400));
+}
+
+#[test]
+fn registries_are_complete() {
+    let mats = matrix_registry();
+    assert_eq!(mats.len(), 6);
+    let names: Vec<&str> = mats.iter().map(|d| d.name).collect();
+    assert_eq!(names, ["gisette", "mnist", "svhn", "rcv1", "real-sim", "news20"]);
+    // Dense trio then sparse trio, as in Table 5.
+    assert!(mats[..3].iter().all(|d| d.density.is_none()));
+    assert!(mats[3..].iter().all(|d| d.density.is_some()));
+
+    let kernels = kernel_registry();
+    assert_eq!(kernels.len(), 6);
+    assert!(kernels.iter().all(|k| k.eta > 0.6 && k.eta < 1.0));
+}
+
+#[test]
+fn small_dataset_loads() {
+    let mut r = rng(4);
+    // Shrink a spec for test speed.
+    let spec = DatasetSpec {
+        name: "test-dense",
+        paper_shape: (100, 80),
+        run_shape: (100, 80),
+        density: None,
+        spectrum: SpectrumKind::Exponential { base: 0.9 },
+    };
+    match spec.load(&mut r) {
+        super::datasets::Dataset::Dense(a) => assert_eq!(a.shape(), (100, 80)),
+        _ => panic!("expected dense"),
+    }
+    let spec_sp = DatasetSpec {
+        name: "test-sparse",
+        paper_shape: (100, 80),
+        run_shape: (100, 80),
+        density: Some(0.05),
+        spectrum: SpectrumKind::PowerLaw { alpha: 1.0 },
+    };
+    match spec_sp.load(&mut r) {
+        super::datasets::Dataset::Sparse(a) => {
+            assert_eq!(a.shape(), (100, 80));
+            assert!(a.nnz() > 0);
+        }
+        _ => panic!("expected sparse"),
+    }
+}
+
+#[test]
+fn rbf_kernel_is_valid() {
+    let mut r = rng(5);
+    let x = Mat::randn(50, 6, &mut r);
+    let k = rbf_kernel(&x, 0.3);
+    assert_eq!(k.shape(), (50, 50));
+    for i in 0..50 {
+        assert!((k[(i, i)] - 1.0).abs() < 1e-12, "diagonal must be 1");
+        for j in 0..50 {
+            assert!(k[(i, j)] > 0.0 && k[(i, j)] <= 1.0 + 1e-12);
+            assert!((k[(i, j)] - k[(j, i)]).abs() < 1e-12, "symmetry");
+        }
+    }
+    // PSD check via eigenvalues.
+    let e = crate::linalg::eigh(&k);
+    assert!(e.values.iter().all(|&w| w > -1e-8), "RBF kernel must be PSD");
+}
+
+#[test]
+fn sigma_calibration_hits_eta() {
+    let mut r = rng(6);
+    let x = super::synth::synth_clustered(400, 20, 8, 0.4, &mut r);
+    let target = 0.85;
+    let sigma = calibrate_sigma(&x, 15, target, &mut r);
+    let eta = eta_for_sigma(&x, sigma, 15, &mut r);
+    assert!((eta - target).abs() < 0.08, "eta {eta} target {target} (sigma {sigma})");
+    // Monotonicity: bigger σ → smaller η.
+    let eta_hi = eta_for_sigma(&x, sigma * 8.0, 15, &mut r);
+    assert!(eta_hi < eta, "eta not monotone: {eta_hi} !< {eta}");
+}
+
+#[test]
+fn libsvm_roundtrip() {
+    let path = "/tmp/fastgmr_test.libsvm";
+    std::fs::write(path, "1 1:0.5 3:2.0\n-1 2:1.5\n1 1:1.0 4:-0.25\n").unwrap();
+    let d = load_libsvm(path).unwrap();
+    assert_eq!(d.labels, vec![1.0, -1.0, 1.0]);
+    assert_eq!(d.features.rows, 3);
+    assert_eq!(d.features.cols, 4);
+    let dense = d.features.to_dense_truncated(3, 4);
+    assert_eq!(dense[(0, 0)], 0.5);
+    assert_eq!(dense[(0, 2)], 2.0);
+    assert_eq!(dense[(1, 1)], 1.5);
+    assert_eq!(dense[(2, 3)], -0.25);
+    // Truncation.
+    let small = d.features.truncated(2, 2);
+    assert_eq!(small.shape(), (2, 2));
+    assert_eq!(small.nnz(), 2);
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn libsvm_rejects_zero_index() {
+    let path = "/tmp/fastgmr_test_bad.libsvm";
+    std::fs::write(path, "1 0:0.5\n").unwrap();
+    assert!(load_libsvm(path).is_err());
+    std::fs::remove_file(path).ok();
+}

@@ -1,0 +1,40 @@
+//! Library-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by the fastgmr library.
+#[derive(Error, Debug)]
+pub enum FgError {
+    #[error("matrix is not positive definite (pivot {pivot}, value {value})")]
+    NotPositiveDefinite { pivot: usize, value: f64 },
+
+    #[error("shape mismatch: {context} (expected {expected}, got {got})")]
+    ShapeMismatch { context: String, expected: String, got: String },
+
+    #[error("artifact `{name}` not found under {dir} — run `make artifacts`")]
+    ArtifactMissing { name: String, dir: String },
+
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("data error: {0}")]
+    Data(String),
+
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for FgError {
+    fn from(e: xla::Error) -> Self {
+        FgError::Runtime(e.to_string())
+    }
+}
+
+/// Library result alias.
+pub type Result<T> = std::result::Result<T, FgError>;

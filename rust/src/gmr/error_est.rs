@@ -1,0 +1,31 @@
+//! Sketched residual estimation — the §6.1 evaluation trick:
+//! `‖S_1 (A − C X̃ R) S_2‖_F = (1±ε) ‖A − C X̃ R‖_F` for count-sketch
+//! `S_1, S_2` with `s = O(ε⁻²)`, so large sparse residuals can be
+//! estimated without densifying `A − C X̃ R`.
+
+use super::Input;
+use crate::linalg::{matmul, Mat};
+use crate::rng::Pcg64;
+use crate::sketch::{Sketch, SketchKind};
+
+/// `(1±ε)`-estimate of `‖A‖_F` via two count sketches of size `s`.
+pub fn sketched_fro_norm(a: Input<'_>, s: usize, rng: &mut Pcg64) -> f64 {
+    let s1 = Sketch::draw(SketchKind::Count, s, a.rows(), None, rng);
+    let s2 = Sketch::draw(SketchKind::Count, s, a.cols(), None, rng);
+    let left = a.sketch_left(&s1);
+    s2.apply_right(&left).fro_norm()
+}
+
+/// `(1±ε)`-estimate of the GMR residual `‖A − C X R‖_F` using count
+/// sketches on both sides; never materializes `C X R` at full size.
+pub fn estimate_residual(a: Input<'_>, c: &Mat, x: &Mat, r: &Mat, s: usize, rng: &mut Pcg64) -> f64 {
+    let s1 = Sketch::draw(SketchKind::Count, s, a.rows(), None, rng);
+    let s2 = Sketch::draw(SketchKind::Count, s, a.cols(), None, rng);
+    // S1 A S2ᵀ   (s×s)
+    let sa = s2.apply_right(&a.sketch_left(&s1));
+    // S1 C X R S2ᵀ = (S1 C) X (R S2ᵀ)
+    let s1c = s1.apply_left(c);
+    let rs2 = s2.apply_right(r);
+    let approx = matmul(&matmul(&s1c, x), &rs2);
+    crate::linalg::fro_norm_diff(&sa, &approx)
+}

@@ -1,0 +1,130 @@
+//! Fast GMR — Algorithm 1 of the paper.
+//!
+//! Draw sketches `S_C ∈ R^{s_c×m}`, `S_R ∈ R^{s_r×n}`, form the three
+//! small products `S_C C`, `R S_Rᵀ`, `Ã = S_C A S_Rᵀ`, and solve the
+//! sketched problem in closed form:
+//!
+//! ```text
+//! X̃ = (S_C C)† Ã (R S_Rᵀ)†          (Eqn. 3.3)
+//! ```
+//!
+//! Theorem 1: with sketch sizes from Table 2 this is a `(1+ε)`-relative-
+//! error solution with probability ≥ 0.95, and the solve itself costs
+//! `O(s_r r² + s_c c² + s_c s_r min(c,r)) + T_sketch` — independent of
+//! `A`'s dimensions beyond the sketch applications.
+
+use super::Input;
+use crate::linalg::{matmul, pinv_apply_left, pinv_apply_right, Mat};
+use crate::rng::Pcg64;
+use crate::sketch::{row_leverage_scores, Sketch, SketchKind};
+
+/// Configuration for Algorithm 1.
+#[derive(Clone, Debug)]
+pub struct FastGmrConfig {
+    /// Family for the left sketch S_C (row space of C).
+    pub kind_c: SketchKind,
+    /// Family for the right sketch S_R (column space of R).
+    pub kind_r: SketchKind,
+    /// Left sketch size s_c.
+    pub s_c: usize,
+    /// Right sketch size s_r.
+    pub s_r: usize,
+}
+
+impl FastGmrConfig {
+    /// Gaussian sketches on both sides (the paper's dense-data choice).
+    pub fn gaussian(s_c: usize, s_r: usize) -> Self {
+        Self { kind_c: SketchKind::Gaussian, kind_r: SketchKind::Gaussian, s_c, s_r }
+    }
+
+    /// CountSketch on both sides (the paper's sparse-data choice, §6.1).
+    pub fn count(s_c: usize, s_r: usize) -> Self {
+        Self { kind_c: SketchKind::Count, kind_r: SketchKind::Count, s_c, s_r }
+    }
+
+    /// Leverage-score sampling on both sides (Remark 1's recommendation:
+    /// the whole A need not be observed).
+    pub fn leverage(s_c: usize, s_r: usize) -> Self {
+        Self { kind_c: SketchKind::Leverage, kind_r: SketchKind::Leverage, s_c, s_r }
+    }
+
+    /// Same family both sides.
+    pub fn uniform_kind(kind: SketchKind, s_c: usize, s_r: usize) -> Self {
+        Self { kind_c: kind, kind_r: kind, s_c, s_r }
+    }
+}
+
+/// Result of Algorithm 1, including the realized sketch products for
+/// callers that reuse them (the benches and the SPSD/SVD applications).
+pub struct FastGmrSolution {
+    /// `X̃` — the (1+ε)-approximate core matrix, c×r.
+    pub x: Mat,
+    /// `S_C C` (s_c × c).
+    pub sc_c: Mat,
+    /// `R S_Rᵀ` (r × s_r).
+    pub r_sr: Mat,
+    /// `Ã = S_C A S_Rᵀ` (s_c × s_r).
+    pub a_tilde: Mat,
+}
+
+/// Algorithm 1 (Fast GMR).
+///
+/// When a sampling family is selected, leverage scores are computed from
+/// the appropriate factor exactly as Table 2 prescribes: `S_C` w.r.t. the
+/// (column-space) leverage scores of `C`, `S_R` w.r.t. the (row-space)
+/// leverage scores of `R`.
+pub fn solve_fast(a: Input<'_>, c: &Mat, r: &Mat, cfg: &FastGmrConfig, rng: &mut Pcg64) -> FastGmrSolution {
+    let (m, n) = (a.rows(), a.cols());
+    assert_eq!(c.rows(), m, "solve_fast: A/C row mismatch");
+    assert_eq!(r.cols(), n, "solve_fast: A/R col mismatch");
+    assert!(cfg.s_c >= c.cols(), "s_c must be >= c (got {} < {})", cfg.s_c, c.cols());
+    assert!(cfg.s_r >= r.rows(), "s_r must be >= r (got {} < {})", cfg.s_r, r.rows());
+
+    let scores_c;
+    let s_c = match cfg.kind_c {
+        SketchKind::Leverage => {
+            scores_c = row_leverage_scores(c);
+            Sketch::draw(SketchKind::Leverage, cfg.s_c, m, Some(&scores_c), rng)
+        }
+        kind => Sketch::draw(kind, cfg.s_c, m, None, rng),
+    };
+    let scores_r;
+    let s_r = match cfg.kind_r {
+        SketchKind::Leverage => {
+            scores_r = row_leverage_scores(&r.transpose());
+            Sketch::draw(SketchKind::Leverage, cfg.s_r, n, Some(&scores_r), rng)
+        }
+        kind => Sketch::draw(kind, cfg.s_r, n, None, rng),
+    };
+
+    solve_fast_with(a, c, r, &s_c, &s_r)
+}
+
+/// Algorithm 1 with caller-supplied sketches (used when the coordinator
+/// has already streamed `Ã` or when sketches must be shared across calls).
+pub fn solve_fast_with(a: Input<'_>, c: &Mat, r: &Mat, s_c: &Sketch, s_r: &Sketch) -> FastGmrSolution {
+    // Step 3: the three sketched products.
+    let sc_c = s_c.apply_left(c); // s_c x c
+    let r_sr = s_r.apply_right(r); // r x s_r  (R S_Rᵀ)
+    let sc_a = a.sketch_left(s_c); // s_c x n
+    let a_tilde = s_r.apply_right(&sc_a); // s_c x s_r
+
+    // Step 4: X̃ = (S_C C)† Ã (R S_Rᵀ)†.
+    let x = solve_core(&sc_c, &a_tilde, &r_sr);
+    FastGmrSolution { x, sc_c, r_sr, a_tilde }
+}
+
+/// The sketched closed-form solve given the three small matrices
+/// (shared by the CPU backend and the PJRT-artifact path, which computes
+/// the same quantity inside the AOT graph).
+pub fn solve_core(sc_c: &Mat, a_tilde: &Mat, r_sr: &Mat) -> Mat {
+    let left = pinv_apply_left(sc_c, a_tilde); // c x s_r
+    pinv_apply_right(&left, r_sr) // c x r
+}
+
+/// Convenience wrapper returning only the residual-relevant product
+/// `C X̃ R`'s factors: (C·X̃, R). Kept for examples.
+pub fn approximate(a: Input<'_>, c: &Mat, r: &Mat, cfg: &FastGmrConfig, rng: &mut Pcg64) -> (Mat, Mat) {
+    let sol = solve_fast(a, c, r, cfg, rng);
+    (matmul(c, &sol.x), r.clone())
+}

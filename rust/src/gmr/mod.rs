@@ -1,0 +1,148 @@
+//! Generalized matrix regression: the paper's core problem
+//! `min_X ‖A − C X R‖_F` (Eqn. 1.1), its exact solution, and the Fast GMR
+//! sketched solver (Algorithm 1) with the symmetric/SPSD extensions of
+//! Section 3.2.
+
+mod error_est;
+mod exact;
+mod fast;
+mod rho;
+mod sym;
+
+pub use error_est::{estimate_residual, sketched_fro_norm};
+pub use exact::{solve_exact, solve_exact_robust, ExactGmrSolution};
+pub use fast::{approximate, solve_core, solve_fast, solve_fast_with, FastGmrConfig, FastGmrSolution};
+pub use rho::{compute_rho, compute_rho_symmetric, rho_upper_bound_inverse, RhoParts};
+pub use sym::{solve_fast_psd, solve_fast_symmetric, SymGmrConfig};
+
+use crate::linalg::{fro_norm_diff, matmul, Mat};
+use crate::sparse::Csr;
+
+/// Dense-or-sparse input matrix `A`.
+#[derive(Clone, Copy)]
+pub enum Input<'a> {
+    Dense(&'a Mat),
+    Sparse(&'a Csr),
+}
+
+impl<'a> From<&'a Mat> for Input<'a> {
+    fn from(a: &'a Mat) -> Self {
+        Input::Dense(a)
+    }
+}
+
+impl<'a> From<&'a Csr> for Input<'a> {
+    fn from(a: &'a Csr) -> Self {
+        Input::Sparse(a)
+    }
+}
+
+impl<'a> Input<'a> {
+    pub fn rows(&self) -> usize {
+        match self {
+            Input::Dense(a) => a.rows(),
+            Input::Sparse(a) => a.rows(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            Input::Dense(a) => a.cols(),
+            Input::Sparse(a) => a.cols(),
+        }
+    }
+
+    pub fn fro_norm(&self) -> f64 {
+        match self {
+            Input::Dense(a) => a.fro_norm(),
+            Input::Sparse(a) => a.fro_norm(),
+        }
+    }
+
+    /// `S · A`.
+    pub fn sketch_left(&self, s: &crate::sketch::Sketch) -> Mat {
+        match self {
+            Input::Dense(a) => s.apply_left(a),
+            Input::Sparse(a) => s.apply_left_csr(a),
+        }
+    }
+
+    /// `A · Sᵀ`.
+    pub fn sketch_right(&self, s: &crate::sketch::Sketch) -> Mat {
+        match self {
+            Input::Dense(a) => s.apply_right(a),
+            Input::Sparse(a) => s.apply_right_csr(a),
+        }
+    }
+
+    /// `Aᵀ B` (tall-thin B).
+    pub fn at_b(&self, b: &Mat) -> Mat {
+        match self {
+            Input::Dense(a) => crate::linalg::matmul_at_b(a, b),
+            Input::Sparse(a) => a.spmm_t(b),
+        }
+    }
+
+    /// `A B`.
+    pub fn a_b(&self, b: &Mat) -> Mat {
+        match self {
+            Input::Dense(a) => matmul(a, b),
+            Input::Sparse(a) => a.spmm(b),
+        }
+    }
+}
+
+/// Residual `‖A − C X R‖_F`, computed blockwise (dense) or via the
+/// inner-product expansion (sparse) so the m×n approximation is never
+/// materialized.
+pub fn residual(a: Input<'_>, c: &Mat, x: &Mat, r: &Mat) -> f64 {
+    assert_eq!(c.cols(), x.rows(), "residual: C/X mismatch");
+    assert_eq!(x.cols(), r.rows(), "residual: X/R mismatch");
+    let cx = matmul(c, x); // m x r_dim — thin
+    match a {
+        Input::Dense(am) => {
+            let mut acc = 0.0f64;
+            const B: usize = 512;
+            let m = am.rows();
+            for i0 in (0..m).step_by(B) {
+                let i1 = (i0 + B).min(m);
+                let cx_blk = cx.slice(i0, i1, 0, cx.cols());
+                let approx = matmul(&cx_blk, r);
+                let a_blk = am.slice(i0, i1, 0, am.cols());
+                let d = fro_norm_diff(&a_blk, &approx);
+                acc += d * d;
+            }
+            acc.sqrt()
+        }
+        Input::Sparse(am) => {
+            // ‖A − CXR‖² = ‖A‖² − 2·tr(Rᵀ(CX)ᵀA) + tr(Rᵀ(CX)ᵀ(CX)R).
+            let at_cx = am.spmm_t(&cx); // n x rdim  (Aᵀ·CX)
+            let mut cross = 0.0;
+            for j in 0..at_cx.rows() {
+                let row = at_cx.row(j);
+                for (t, &v) in row.iter().enumerate() {
+                    cross += v * r[(t, j)];
+                }
+            }
+            let gram = crate::linalg::matmul_at_b(&cx, &cx); // rdim x rdim
+            let gr = matmul(&gram, r); // rdim x n
+            let mut norm_cxr_sq = 0.0;
+            for t in 0..r.rows() {
+                for (a_, b_) in r.row(t).iter().zip(gr.row(t)) {
+                    norm_cxr_sq += a_ * b_;
+                }
+            }
+            (am.fro_norm_sq() - 2.0 * cross + norm_cxr_sq).max(0.0).sqrt()
+        }
+    }
+}
+
+/// Paper §6.1 error ratio: `‖A − C X̃ R‖ / ‖A − C X* R‖ − 1`.
+pub fn relative_regret(a: Input<'_>, c: &Mat, r: &Mat, x_tilde: &Mat, x_star: &Mat) -> f64 {
+    let num = residual(a, c, x_tilde, r);
+    let den = residual(a, c, x_star, r);
+    num / den - 1.0
+}
+
+#[cfg(test)]
+mod tests;

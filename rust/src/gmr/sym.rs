@@ -1,0 +1,71 @@
+//! Symmetric / SPSD Fast GMR — Section 3.2 (Theorem 2).
+//!
+//! For symmetric `A` and `C = Rᵀ`, draw two *independent* sketches
+//! `S_1, S_2 ∈ R^{s×n}`, solve
+//! `X̃ = (S_1 C)† (S_1 A S_2ᵀ) (Cᵀ S_2ᵀ)†`, then project onto the
+//! symmetric matrices (Eqn. 3.5) or the PSD cone (Eqn. 3.6). By
+//! Proposition 1 the projection cannot increase the error, so the
+//! (1+ε) bound of Theorem 1 carries over.
+
+use super::{fast::solve_core, Input};
+use crate::linalg::{project_psd, project_symmetric, Mat};
+use crate::rng::Pcg64;
+use crate::sketch::{row_leverage_scores, Sketch, SketchKind};
+
+/// Configuration for the symmetric solver (one size, one family — the two
+/// sketches are always drawn independently as Theorem 2 requires).
+#[derive(Clone, Debug)]
+pub struct SymGmrConfig {
+    pub kind: SketchKind,
+    pub s: usize,
+}
+
+/// Draw the two independent sketches for the symmetric solve.
+fn draw_pair(a: Input<'_>, c: &Mat, cfg: &SymGmrConfig, rng: &mut Pcg64) -> (Sketch, Sketch) {
+    let n = a.rows();
+    match cfg.kind {
+        SketchKind::Leverage => {
+            // Table 3: leverage scores w.r.t. the column leverage scores
+            // of C (i.e. row leverage scores of the n×c factor).
+            let scores = row_leverage_scores(c);
+            let s1 = Sketch::draw(SketchKind::Leverage, cfg.s, n, Some(&scores), rng);
+            let s2 = Sketch::draw(SketchKind::Leverage, cfg.s, n, Some(&scores), rng);
+            (s1, s2)
+        }
+        kind => {
+            let s1 = Sketch::draw(kind, cfg.s, n, None, rng);
+            let s2 = Sketch::draw(kind, cfg.s, n, None, rng);
+            (s1, s2)
+        }
+    }
+}
+
+/// Theorem 2, symmetric case: returns `Π_H(X̃)` — symmetric, and within
+/// (1+ε) of the optimal symmetric core.
+pub fn solve_fast_symmetric(a: Input<'_>, c: &Mat, cfg: &SymGmrConfig, rng: &mut Pcg64) -> Mat {
+    let x = solve_raw(a, c, cfg, rng);
+    project_symmetric(&x)
+}
+
+/// Theorem 2, SPSD case: returns `Π_{H+}(X̃)` — PSD, and within (1+ε) of
+/// the optimal core for SPSD `A`. This is the core step of Algorithm 2.
+pub fn solve_fast_psd(a: Input<'_>, c: &Mat, cfg: &SymGmrConfig, rng: &mut Pcg64) -> Mat {
+    let x = solve_raw(a, c, cfg, rng);
+    project_psd(&x)
+}
+
+/// The unprojected X̃ of Eqn. (3.7).
+pub fn solve_raw(a: Input<'_>, c: &Mat, cfg: &SymGmrConfig, rng: &mut Pcg64) -> Mat {
+    let n = a.rows();
+    assert_eq!(a.cols(), n, "symmetric solve expects square A");
+    assert_eq!(c.rows(), n, "C must have n rows");
+    assert!(cfg.s >= c.cols(), "sketch size must be >= c");
+    let (s1, s2) = draw_pair(a, c, cfg, rng);
+
+    let s1_c = s1.apply_left(c); // s x c
+    let ct_s2 = s2.apply_right(&c.transpose()); // c x s   (Cᵀ S_2ᵀ)
+    let s1_a = a.sketch_left(&s1); // s x n
+    let a_tilde = s2.apply_right(&s1_a); // s x s
+
+    solve_core(&s1_c, &a_tilde, &ct_s2)
+}

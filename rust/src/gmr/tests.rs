@@ -1,0 +1,228 @@
+//! Tests for the GMR solvers.
+
+use super::*;
+use crate::linalg::{eigh, matmul, matmul_a_bt, Mat};
+use crate::rng::rng;
+use crate::sketch::SketchKind;
+use crate::sparse::Csr;
+use crate::testing::{assert_close, assert_scalar_close};
+
+/// Low-rank-plus-noise test matrix with controllable residual level.
+fn test_problem(m: usize, n: usize, c_dim: usize, r_dim: usize, seed: u64) -> (Mat, Mat, Mat) {
+    let mut r = rng(seed);
+    let base = {
+        let u = Mat::randn(m, 10, &mut r);
+        let v = Mat::randn(10, n, &mut r);
+        let mut b = matmul(&u, &v);
+        let noise = Mat::randn(m, n, &mut r);
+        b.axpy(0.05, &noise);
+        b
+    };
+    let g_c = Mat::randn(n, c_dim, &mut r);
+    let c = matmul(&base, &g_c); // C = A G_C, as in §6.1
+    let g_r = Mat::randn(r_dim, m, &mut r);
+    let rr = matmul(&g_r, &base); // R = G_R A
+    (base, c, rr)
+}
+
+#[test]
+fn exact_solution_is_optimal() {
+    let (a, c, r) = test_problem(60, 50, 8, 6, 1);
+    let sol = solve_exact(Input::Dense(&a), &c, &r);
+    // Matches the robust SVD-based computation.
+    let want = exact::solve_exact_robust(&a, &c, &r);
+    assert_close(&sol.x, &want, 1e-7, "exact vs robust");
+    // First-order optimality: perturbing X in any direction cannot reduce
+    // the residual.
+    let base_res = residual(Input::Dense(&a), &c, &sol.x, &r);
+    let mut rr = rng(2);
+    for _ in 0..5 {
+        let dx = Mat::randn(sol.x.rows(), sol.x.cols(), &mut rr);
+        let mut xp = sol.x.clone();
+        xp.axpy(1e-4, &dx);
+        let res = residual(Input::Dense(&a), &c, &xp, &r);
+        assert!(res >= base_res - 1e-9, "perturbation reduced residual");
+    }
+}
+
+#[test]
+fn exact_csr_matches_dense() {
+    let (a, c, r) = test_problem(40, 35, 5, 4, 3);
+    let a_sp = Csr::from_dense(&a, 0.0);
+    let dense = solve_exact(Input::Dense(&a), &c, &r).x;
+    let sparse = solve_exact(Input::Sparse(&a_sp), &c, &r).x;
+    assert_close(&sparse, &dense, 1e-9, "exact csr vs dense");
+}
+
+#[test]
+fn residual_sparse_matches_dense() {
+    let (a, c, r) = test_problem(30, 25, 5, 4, 4);
+    let x = solve_exact(Input::Dense(&a), &c, &r).x;
+    let a_sp = Csr::from_dense(&a, 0.0);
+    let rd = residual(Input::Dense(&a), &c, &x, &r);
+    let rs = residual(Input::Sparse(&a_sp), &c, &x, &r);
+    assert_scalar_close(rs, rd, 1e-9, "residual sparse vs dense");
+}
+
+#[test]
+fn fast_gmr_converges_with_sketch_size() {
+    let (a, c, r) = test_problem(300, 250, 10, 10, 5);
+    let exact = solve_exact(Input::Dense(&a), &c, &r);
+    let mut rr = rng(6);
+    let mut prev = f64::INFINITY;
+    for &mult in &[2usize, 8, 24] {
+        // Average regret over draws (regret is a random variable).
+        let mut acc = 0.0;
+        let trials = 5;
+        for _ in 0..trials {
+            let cfg = FastGmrConfig::gaussian(mult * 10, mult * 10);
+            let sol = solve_fast(Input::Dense(&a), &c, &r, &cfg, &mut rr);
+            acc += relative_regret(Input::Dense(&a), &c, &r, &sol.x, &exact.x);
+        }
+        let regret = acc / trials as f64;
+        assert!(regret >= -1e-9, "regret cannot be negative, got {regret}");
+        assert!(regret < prev.max(1e-3) * 1.5, "regret not improving: {regret} after {prev}");
+        prev = regret;
+    }
+    // At 24x the base dims the sketched solve is essentially exact.
+    assert!(prev < 0.05, "regret at largest sketch {prev}");
+}
+
+#[test]
+fn fast_gmr_all_families_give_small_regret() {
+    let (a, c, r) = test_problem(400, 300, 8, 8, 7);
+    let exact = solve_exact(Input::Dense(&a), &c, &r);
+    for kind in SketchKind::all() {
+        let mut rr = rng(8);
+        let cfg = FastGmrConfig::uniform_kind(kind, 160, 160);
+        let mut acc = 0.0;
+        let trials = 3;
+        for _ in 0..trials {
+            let sol = solve_fast(Input::Dense(&a), &c, &r, &cfg, &mut rr);
+            acc += relative_regret(Input::Dense(&a), &c, &r, &sol.x, &exact.x);
+        }
+        let regret = acc / trials as f64;
+        assert!(regret < 0.6, "{}: regret {regret}", kind.name());
+    }
+}
+
+#[test]
+fn fast_gmr_sparse_input() {
+    let mut r = rng(9);
+    let mut trips = Vec::new();
+    let (m, n) = (200, 150);
+    for i in 0..m {
+        for j in 0..n {
+            if r.next_f64() < 0.05 {
+                trips.push(crate::sparse::Triplet { row: i, col: j, val: r.next_normal() });
+            }
+        }
+    }
+    let a_sp = Csr::from_triplets(m, n, trips);
+    let a_d = a_sp.to_dense();
+    let g_c = Mat::randn(n, 6, &mut r);
+    let c = a_sp.spmm(&g_c);
+    let g_r = Mat::randn(5, m, &mut r);
+    let rr_mat = g_r.data().to_vec();
+    let rr = {
+        let g = Mat::from_vec(5, m, rr_mat);
+        matmul(&g, &a_d)
+    };
+    let exact = solve_exact(Input::Sparse(&a_sp), &c, &rr);
+    let cfg = FastGmrConfig::count(90, 90);
+    let sol = solve_fast(Input::Sparse(&a_sp), &c, &rr, &cfg, &mut r);
+    let regret = relative_regret(Input::Sparse(&a_sp), &c, &rr, &sol.x, &exact.x);
+    assert!(regret >= -1e-9 && regret < 0.5, "sparse fast gmr regret {regret}");
+}
+
+#[test]
+fn lemma2_pythagoras() {
+    // ‖A − CX̃R‖² = ‖A − CX*R‖² + ‖C(X*−X̃)R‖² for any X̃ (Lemma 2).
+    let (a, c, r) = test_problem(50, 40, 6, 5, 10);
+    let star = solve_exact(Input::Dense(&a), &c, &r).x;
+    let mut rr = rng(11);
+    let xt = Mat::randn(6, 5, &mut rr);
+    let lhs = residual(Input::Dense(&a), &c, &xt, &r).powi(2);
+    let opt = residual(Input::Dense(&a), &c, &star, &r).powi(2);
+    let diff = &star - &xt;
+    let cross = matmul(&matmul(&c, &diff), &r).fro_norm_sq();
+    assert_scalar_close(lhs, opt + cross, 1e-9, "Lemma 2");
+}
+
+#[test]
+fn symmetric_solver_outputs_symmetric() {
+    let mut r = rng(12);
+    let b = Mat::randn(80, 80, &mut r);
+    let a = &b + &b.transpose(); // symmetric, indefinite
+    let g = Mat::randn(80, 8, &mut r);
+    let c = matmul(&a, &g);
+    let cfg = SymGmrConfig { kind: SketchKind::Gaussian, s: 64 };
+    let x = solve_fast_symmetric(Input::Dense(&a), &c, &cfg, &mut r);
+    assert_close(&x, &x.transpose(), 1e-12, "symmetric output");
+}
+
+#[test]
+fn psd_solver_outputs_psd_and_close() {
+    let mut r = rng(13);
+    let b = Mat::randn(100, 20, &mut r);
+    let a = matmul_a_bt(&b, &b); // SPSD rank 20
+    let idx: Vec<usize> = (0..10).map(|i| i * 9).collect();
+    let c = a.select_cols(&idx);
+    let cfg = SymGmrConfig { kind: SketchKind::Leverage, s: 80 };
+    let x = solve_fast_psd(Input::Dense(&a), &c, &cfg, &mut r);
+    // PSD check.
+    let e = eigh(&x);
+    assert!(e.values.iter().all(|&w| w >= -1e-9), "core not PSD");
+    // Error close to the optimal core's error.
+    let opt = solve_exact(Input::Dense(&a), &c, &c.transpose()).x;
+    let err_fast = residual(Input::Dense(&a), &c, &x, &c.transpose());
+    let err_opt = residual(Input::Dense(&a), &c, &opt, &c.transpose());
+    assert!(
+        err_fast <= err_opt * 1.8 + 1e-9,
+        "psd solve error {err_fast} vs optimal {err_opt}"
+    );
+}
+
+#[test]
+fn rho_definition_matches_direct_computation() {
+    let (a, c, r) = test_problem(40, 30, 5, 4, 14);
+    let parts = compute_rho(Input::Dense(&a), &c, &r);
+    // Direct: build the projectors densely.
+    let cp = crate::linalg::pinv(&c);
+    let rp = crate::linalg::pinv(&r);
+    let pc = matmul(&c, &cp); // m x m
+    let pr = matmul(&rp, &r); // n x n
+    let pa = matmul(&matmul(&pc, &a), &pr);
+    let residual_direct = crate::linalg::fro_norm_diff(&a, &pa);
+    let left = {
+        let t = &matmul(&a, &pr) - &pa;
+        t.fro_norm()
+    };
+    let right = {
+        let t = &matmul(&pc, &a) - &pa;
+        t.fro_norm()
+    };
+    assert_scalar_close(parts.residual, residual_direct, 1e-8, "rho residual");
+    assert_scalar_close(parts.left_defect, left, 1e-8, "rho left defect");
+    assert_scalar_close(parts.right_defect, right, 1e-8, "rho right defect");
+    assert!(parts.rho().is_finite() && parts.rho() > 0.0);
+}
+
+#[test]
+fn sketched_norm_estimates() {
+    let mut r = rng(15);
+    let a = Mat::randn(300, 200, &mut r);
+    let est = sketched_fro_norm(Input::Dense(&a), 600, &mut r);
+    let exact = a.fro_norm();
+    assert!((est / exact - 1.0).abs() < 0.15, "norm estimate ratio {}", est / exact);
+
+    let (a2, c, rr) = test_problem(150, 120, 6, 5, 16);
+    let x = solve_exact(Input::Dense(&a2), &c, &rr).x;
+    let est_res = estimate_residual(Input::Dense(&a2), &c, &x, &rr, 500, &mut r);
+    let true_res = residual(Input::Dense(&a2), &c, &x, &rr);
+    assert!(
+        (est_res / true_res - 1.0).abs() < 0.2,
+        "residual estimate ratio {}",
+        est_res / true_res
+    );
+}

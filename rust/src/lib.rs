@@ -1,0 +1,45 @@
+//! # fastgmr — Fast Generalized Matrix Regression
+//!
+//! A from-scratch reproduction of *"Fast Generalized Matrix Regression
+//! with Applications in Machine Learning"* (Ye, Wang, Zhang, Zhang, 2019)
+//! as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 1/2 (build time)** — Pallas kernels and JAX compute graphs in
+//!   `python/compile/`, AOT-lowered to HLO text artifacts.
+//! * **Layer 3 (this crate)** — streaming coordinator, sketching library,
+//!   the paper's algorithms (Fast GMR, faster-SPSD, fast single-pass SVD)
+//!   plus every baseline, a PJRT runtime that executes the artifacts, and
+//!   the benchmark harness that regenerates every table and figure of the
+//!   paper's evaluation.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod bench;
+pub mod cli;
+pub mod compute;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod gmr;
+pub mod linalg;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod sketch;
+pub mod sparse;
+pub mod spsd;
+pub mod svdstream;
+pub mod testing;
+
+pub use error::{FgError, Result};
+
+/// Common imports for examples and downstream users.
+pub mod prelude {
+    pub use crate::error::{FgError, Result};
+    pub use crate::linalg::Mat;
+    pub use crate::rng::Pcg64;
+    pub use crate::sketch::{Sketch, SketchKind};
+    pub use crate::sparse::Csr;
+}

@@ -1,0 +1,41 @@
+//! Cholesky factorization and SPD solves.
+
+use super::{solve_lower, solve_lower_transpose, Mat};
+use crate::error::FgError;
+
+/// Lower Cholesky factor of an SPD matrix: `A = L Lᵀ`.
+///
+/// Returns `Err` if a non-positive pivot is hit (matrix not numerically
+/// positive definite); callers that work with Gram matrices of possibly
+/// rank-deficient factors should add a ridge first (see `pinv`).
+pub fn cholesky(a: &Mat) -> Result<Mat, FgError> {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "cholesky: matrix must be square");
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[(i, j)];
+            // s -= sum_k l[i,k] * l[j,k]
+            let (li, lj) = (l.row(i), l.row(j));
+            for k in 0..j {
+                s -= li[k] * lj[k];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return Err(FgError::NotPositiveDefinite { pivot: i, value: s });
+                }
+                l[(i, i)] = s.sqrt();
+            } else {
+                l[(i, j)] = s / l[(j, j)];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve `A X = B` for SPD `A` via Cholesky (two triangular solves).
+pub fn cholesky_solve(a: &Mat, b: &Mat) -> Result<Mat, FgError> {
+    let l = cholesky(a)?;
+    let y = solve_lower(&l, b);
+    Ok(solve_lower_transpose(&l, &y))
+}

@@ -1,0 +1,125 @@
+//! Symmetric eigendecomposition (cyclic Jacobi) and the convex-cone
+//! projections from Section 3.2 of the paper (Eqns. 3.5 / 3.6).
+
+use super::{matmul, Mat};
+
+/// Symmetric eigendecomposition `A = V diag(w) Vᵀ`.
+pub struct EigH {
+    /// Eigenvalues in descending order.
+    pub values: Vec<f64>,
+    /// Eigenvectors as columns, matching `values` order.
+    pub vectors: Mat,
+}
+
+/// Cyclic Jacobi eigensolver for symmetric matrices.
+///
+/// Quadratically convergent sweeps; intended for the small `s×s` / `c×c`
+/// core matrices of Algorithms 2–3 (c ≲ few hundred), exactly the regime
+/// Remark 3 of the paper argues is cheap (`O(c³)`).
+pub fn eigh(a: &Mat) -> EigH {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "eigh: matrix must be square");
+    let mut m = a.clone();
+    // Symmetrize defensively (callers pass (X + Xᵀ)/2 already).
+    for i in 0..n {
+        for j in 0..i {
+            let avg = 0.5 * (m[(i, j)] + m[(j, i)]);
+            m[(i, j)] = avg;
+            m[(j, i)] = avg;
+        }
+    }
+    let mut v = Mat::eye(n);
+    let max_sweeps = 64;
+    let tol = 1e-14 * m.fro_norm().max(1e-300);
+
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() <= tol {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() <= tol * 1e-2 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = {
+                    let s = if theta >= 0.0 { 1.0 } else { -1.0 };
+                    s / (theta.abs() + (theta * theta + 1.0).sqrt())
+                };
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+
+                // Rotate rows/cols p and q of m.
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                // Accumulate rotations into V.
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // Sort eigenpairs by descending eigenvalue.
+    let mut order: Vec<usize> = (0..n).collect();
+    let diag: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    order.sort_by(|&a, &b| diag[b].partial_cmp(&diag[a]).unwrap());
+    let values: Vec<f64> = order.iter().map(|&i| diag[i]).collect();
+    let vectors = v.select_cols(&order);
+    EigH { values, vectors }
+}
+
+/// Projection onto the symmetric matrices `H^n` (Eqn. 3.5):
+/// `Π(X) = (X + Xᵀ)/2`.
+pub fn project_symmetric(x: &Mat) -> Mat {
+    assert_eq!(x.rows(), x.cols(), "project_symmetric: square input required");
+    let mut out = x.clone();
+    let n = x.rows();
+    for i in 0..n {
+        for j in 0..i {
+            let avg = 0.5 * (x[(i, j)] + x[(j, i)]);
+            out[(i, j)] = avg;
+            out[(j, i)] = avg;
+        }
+    }
+    out
+}
+
+/// Projection onto the PSD cone `H^n_+` (Eqn. 3.6): symmetrize, eigen-
+/// decompose, zero out negative eigenvalues, reassemble.
+pub fn project_psd(x: &Mat) -> Mat {
+    let sym = project_symmetric(x);
+    let EigH { values, vectors } = eigh(&sym);
+    let n = sym.rows();
+    // V * diag(max(w, 0)) * Vᵀ
+    let mut vd = vectors.clone();
+    for j in 0..n {
+        let w = values[j].max(0.0);
+        for i in 0..n {
+            vd[(i, j)] *= w;
+        }
+    }
+    matmul(&vd, &vectors.transpose())
+}

@@ -1,0 +1,38 @@
+//! Dense linear-algebra substrate, written from scratch (no BLAS/LAPACK in
+//! the offline image). Everything the paper's algorithms need:
+//!
+//! * [`Mat`] — row-major dense matrix over `f64`.
+//! * blocked, register-tiled matmul ([`matmul`]),
+//! * Householder QR ([`qr::qr_thin`]),
+//! * Cholesky + triangular solves ([`chol`], [`solve`]),
+//! * symmetric eigendecomposition via cyclic Jacobi ([`eig::eigh`]),
+//! * full SVD via one-sided Jacobi ([`svd::svd_jacobi`]) and randomized
+//!   top-k SVD via subspace iteration ([`svd::svd_randomized`]),
+//! * Moore–Penrose pseudoinverse ([`pinv::pinv`]),
+//! * norms and projections ([`norms`], [`eig::project_psd`]).
+//!
+//! Conventions: all factorizations are "thin"/economy size; matrices are
+//! row-major; row/column indices are zero-based.
+
+mod chol;
+mod eig;
+mod mat;
+mod matmul;
+mod norms;
+mod pinv;
+mod qr;
+mod solve;
+mod svd;
+
+pub use chol::{cholesky, cholesky_solve};
+pub use eig::{eigh, project_psd, project_symmetric, EigH};
+pub use mat::Mat;
+pub use matmul::{matmul, matmul_at_b, matmul_a_bt};
+pub use norms::{fro_norm, fro_norm_diff, spectral_norm_est};
+pub use pinv::{pinv, pinv_apply_left, pinv_apply_right};
+pub use qr::{qr_thin, QrThin};
+pub use solve::{solve_lower, solve_lower_transpose, solve_upper};
+pub use svd::{svd_jacobi, svd_randomized, Svd};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,44 @@
+//! Norms and norm estimates.
+
+use super::Mat;
+use crate::rng::Pcg64;
+
+/// Frobenius norm.
+pub fn fro_norm(a: &Mat) -> f64 {
+    a.fro_norm()
+}
+
+/// `‖A − B‖_F` without materializing the difference.
+pub fn fro_norm_diff(a: &Mat, b: &Mat) -> f64 {
+    assert_eq!(a.shape(), b.shape(), "fro_norm_diff: shape mismatch");
+    a.data()
+        .iter()
+        .zip(b.data())
+        .map(|(x, y)| {
+            let d = x - y;
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Spectral-norm estimate by power iteration on `AᵀA`.
+pub fn spectral_norm_est(a: &Mat, iters: usize, rng: &mut Pcg64) -> f64 {
+    let n = a.cols();
+    if n == 0 || a.rows() == 0 {
+        return 0.0;
+    }
+    let mut x: Vec<f64> = (0..n).map(|_| rng.next_normal()).collect();
+    let mut sigma = 0.0;
+    for _ in 0..iters.max(1) {
+        let y = a.matvec(&x); // m
+        let z = a.matvec_t(&y); // n = AᵀA x
+        let nz = z.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if nz == 0.0 {
+            return 0.0;
+        }
+        sigma = nz.sqrt(); // ‖AᵀA x‖ ≈ σ² ⇒ σ ≈ sqrt
+        x = z.iter().map(|v| v / nz).collect();
+    }
+    sigma
+}

@@ -1,0 +1,55 @@
+//! Moore–Penrose pseudoinverse and pinv-apply helpers.
+//!
+//! The Fast GMR solve (Eqn. 3.3) is `(S_C C)† Ã (R S_Rᵀ)†`. We never
+//! materialize a pseudoinverse on the hot path — `pinv_apply_left/right`
+//! solve the associated least-squares problems via Cholesky on the Gram
+//! matrix when well-conditioned, falling back to an SVD cutoff when not.
+
+use super::{cholesky_solve, matmul, matmul_a_bt, matmul_at_b, svd_jacobi, Mat, Svd};
+
+/// Relative singular-value cutoff for the SVD fallback (LAPACK-style).
+fn default_rcond(shape: (usize, usize)) -> f64 {
+    let (m, n) = shape;
+    m.max(n) as f64 * f64::EPSILON
+}
+
+/// Full pseudoinverse via SVD (baseline / test use; O(mn·min) + O(min³)).
+pub fn pinv(a: &Mat) -> Mat {
+    let Svd { u, s, v } = svd_jacobi(a);
+    let cutoff = s.first().copied().unwrap_or(0.0) * default_rcond(a.shape());
+    // A† = V diag(1/s) Uᵀ
+    let k = s.len();
+    let mut vs = v.clone(); // n x k scaled columns
+    for j in 0..k {
+        let inv = if s[j] > cutoff { 1.0 / s[j] } else { 0.0 };
+        for i in 0..vs.rows() {
+            vs[(i, j)] *= inv;
+        }
+    }
+    matmul_a_bt(&vs, &u)
+}
+
+/// `C† B` for a tall full-column-rank-ish `C` (m×c, m ≥ c): solves the
+/// normal equations `(CᵀC) X = Cᵀ B` by Cholesky; falls back to the SVD
+/// pseudoinverse if the Gram matrix is numerically singular.
+pub fn pinv_apply_left(c: &Mat, b: &Mat) -> Mat {
+    assert_eq!(c.rows(), b.rows(), "pinv_apply_left: dim mismatch");
+    let gram = matmul_at_b(c, c);
+    let rhs = matmul_at_b(c, b);
+    match cholesky_solve(&gram, &rhs) {
+        Ok(x) => x,
+        Err(_) => matmul(&pinv(c), b),
+    }
+}
+
+/// `B R†` for a wide full-row-rank-ish `R` (r×n, n ≥ r): solves
+/// `X (R Rᵀ) = B Rᵀ`, i.e. `(R Rᵀ) Xᵀ = R Bᵀ`, by Cholesky; SVD fallback.
+pub fn pinv_apply_right(b: &Mat, r: &Mat) -> Mat {
+    assert_eq!(b.cols(), r.cols(), "pinv_apply_right: dim mismatch");
+    let gram = matmul_a_bt(r, r); // r x r
+    let rhs = matmul_a_bt(b, r); // b.rows x r
+    match cholesky_solve(&gram, &rhs.transpose()) {
+        Ok(xt) => xt.transpose(),
+        Err(_) => matmul(b, &pinv(r)),
+    }
+}

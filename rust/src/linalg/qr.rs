@@ -1,0 +1,96 @@
+//! Thin (economy) QR via blocked Householder reflections.
+
+use super::Mat;
+
+/// Thin QR factorization `A = Q R`, `Q` m×k with orthonormal columns,
+/// `R` k×k upper triangular, `k = min(m, n)`.
+pub struct QrThin {
+    pub q: Mat,
+    pub r: Mat,
+}
+
+/// Householder thin QR. Numerically stable (reflector-based, column
+/// pivot-free); `A` is m×n with m >= n typical for our use (orthonormal
+/// bases of sketch outputs, Algorithm 3 step 10).
+pub fn qr_thin(a: &Mat) -> QrThin {
+    let (m, n) = a.shape();
+    let k = m.min(n);
+    let mut r_work = a.clone(); // will be reduced to R in its top k rows
+    // Householder vectors stored in the strictly-lower part + diag scale.
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(k);
+    let mut betas = Vec::with_capacity(k);
+
+    for j in 0..k {
+        // Build the reflector for column j from rows j..m.
+        let mut v: Vec<f64> = (j..m).map(|i| r_work[(i, j)]).collect();
+        let alpha = {
+            let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if v[0] >= 0.0 {
+                -norm
+            } else {
+                norm
+            }
+        };
+        if alpha == 0.0 {
+            // Column already zero below the diagonal; identity reflector.
+            vs.push(v);
+            betas.push(0.0);
+            continue;
+        }
+        v[0] -= alpha;
+        let vnorm_sq: f64 = v.iter().map(|x| x * x).sum();
+        let beta = if vnorm_sq == 0.0 { 0.0 } else { 2.0 / vnorm_sq };
+
+        // Apply (I - beta v vᵀ) to the trailing submatrix of r_work.
+        for col in j..n {
+            let mut dot = 0.0;
+            for (t, i) in (j..m).enumerate() {
+                dot += v[t] * r_work[(i, col)];
+            }
+            let s = beta * dot;
+            if s != 0.0 {
+                for (t, i) in (j..m).enumerate() {
+                    r_work[(i, col)] -= s * v[t];
+                }
+            }
+        }
+        vs.push(v);
+        betas.push(beta);
+    }
+
+    // Extract R (k x n upper-triangular in its first k columns; thin R is k x k
+    // when n <= m, otherwise k x n).
+    let rc = n;
+    let mut r = Mat::zeros(k, rc);
+    for i in 0..k {
+        for j in i..rc {
+            r[(i, j)] = r_work[(i, j)];
+        }
+    }
+
+    // Form thin Q by applying reflectors to the first k columns of I.
+    let mut q = Mat::zeros(m, k);
+    for i in 0..k {
+        q[(i, i)] = 1.0;
+    }
+    for j in (0..k).rev() {
+        let (v, beta) = (&vs[j], betas[j]);
+        if beta == 0.0 {
+            continue;
+        }
+        for col in 0..k {
+            let mut dot = 0.0;
+            for (t, i) in (j..m).enumerate() {
+                dot += v[t] * q[(i, col)];
+            }
+            let s = beta * dot;
+            if s != 0.0 {
+                for (t, i) in (j..m).enumerate() {
+                    q[(i, col)] -= s * v[t];
+                }
+            }
+        }
+    }
+
+    QrThin { q, r }
+}

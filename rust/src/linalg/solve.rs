@@ -1,0 +1,93 @@
+//! Triangular solves (forward/backward substitution), matrix right-hand
+//! sides.
+
+use super::Mat;
+
+/// Solve `L X = B` with `L` lower triangular (forward substitution).
+pub fn solve_lower(l: &Mat, b: &Mat) -> Mat {
+    let n = l.rows();
+    assert_eq!(n, l.cols(), "solve_lower: L must be square");
+    assert_eq!(n, b.rows(), "solve_lower: dim mismatch");
+    let m = b.cols();
+    let mut x = b.clone();
+    for i in 0..n {
+        let lii = l[(i, i)];
+        debug_assert!(lii != 0.0, "singular triangular factor");
+        // x[i, :] = (b[i, :] - sum_{k<i} l[i,k] x[k, :]) / l[i,i]
+        for k in 0..i {
+            let lik = l[(i, k)];
+            if lik == 0.0 {
+                continue;
+            }
+            let (head, tail) = x.data_mut().split_at_mut(i * m);
+            let xk = &head[k * m..(k + 1) * m];
+            let xi = &mut tail[..m];
+            for (xi_v, xk_v) in xi.iter_mut().zip(xk) {
+                *xi_v -= lik * xk_v;
+            }
+        }
+        for v in x.row_mut(i) {
+            *v /= lii;
+        }
+    }
+    x
+}
+
+/// Solve `Lᵀ X = B` with `L` lower triangular (backward substitution on
+/// the transpose, without materializing it).
+pub fn solve_lower_transpose(l: &Mat, b: &Mat) -> Mat {
+    let n = l.rows();
+    assert_eq!(n, l.cols());
+    assert_eq!(n, b.rows());
+    let m = b.cols();
+    let mut x = b.clone();
+    for i in (0..n).rev() {
+        let lii = l[(i, i)];
+        debug_assert!(lii != 0.0, "singular triangular factor");
+        for k in (i + 1)..n {
+            let lki = l[(k, i)]; // (Lᵀ)[i,k]
+            if lki == 0.0 {
+                continue;
+            }
+            let (head, tail) = x.data_mut().split_at_mut(k * m);
+            let xi = &mut head[i * m..(i + 1) * m];
+            let xk = &tail[..m];
+            for (xi_v, xk_v) in xi.iter_mut().zip(xk) {
+                *xi_v -= lki * xk_v;
+            }
+        }
+        for v in x.row_mut(i) {
+            *v /= lii;
+        }
+    }
+    x
+}
+
+/// Solve `U X = B` with `U` upper triangular.
+pub fn solve_upper(u: &Mat, b: &Mat) -> Mat {
+    let n = u.rows();
+    assert_eq!(n, u.cols());
+    assert_eq!(n, b.rows());
+    let m = b.cols();
+    let mut x = b.clone();
+    for i in (0..n).rev() {
+        let uii = u[(i, i)];
+        debug_assert!(uii != 0.0, "singular triangular factor");
+        for k in (i + 1)..n {
+            let uik = u[(i, k)];
+            if uik == 0.0 {
+                continue;
+            }
+            let (head, tail) = x.data_mut().split_at_mut(k * m);
+            let xi = &mut head[i * m..(i + 1) * m];
+            let xk = &tail[..m];
+            for (xi_v, xk_v) in xi.iter_mut().zip(xk) {
+                *xi_v -= uik * xk_v;
+            }
+        }
+        for v in x.row_mut(i) {
+            *v /= uii;
+        }
+    }
+    x
+}

@@ -1,0 +1,141 @@
+//! Singular value decompositions:
+//!
+//! * [`svd_jacobi`] — full thin SVD via one-sided Jacobi (small/medium
+//!   matrices, high accuracy; used for the core-matrix SVDs of
+//!   Algorithms 3–4 and for exact baselines on test-sized inputs).
+//! * [`svd_randomized`] — randomized subspace-iteration top-k SVD
+//!   (Halko–Martinsson–Tropp) for the `‖A − A_k‖_F` denominators on
+//!   dataset-sized matrices.
+
+use super::{matmul, matmul_at_b, qr_thin, Mat};
+use crate::rng::Pcg64;
+
+/// Thin SVD `A = U diag(s) Vᵀ`.
+pub struct Svd {
+    /// m×k left singular vectors.
+    pub u: Mat,
+    /// Singular values, descending.
+    pub s: Vec<f64>,
+    /// n×k right singular vectors (columns).
+    pub v: Mat,
+}
+
+/// One-sided Jacobi SVD (Hestenes). Works on `A` with m >= n by
+/// orthogonalizing columns; for m < n we factor the transpose and swap.
+pub fn svd_jacobi(a: &Mat) -> Svd {
+    let (m, n) = a.shape();
+    if m < n {
+        let Svd { u, s, v } = svd_jacobi(&a.transpose());
+        return Svd { u: v, s, v: u };
+    }
+    let mut u = a.clone(); // columns get orthogonalized in place
+    let mut v = Mat::eye(n);
+    let tol = 1e-15;
+    let max_sweeps = 64;
+
+    for _sweep in 0..max_sweeps {
+        let mut rotated = false;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Compute the 2x2 Gram block of columns p, q.
+                let mut app = 0.0;
+                let mut aqq = 0.0;
+                let mut apq = 0.0;
+                for i in 0..m {
+                    let up = u[(i, p)];
+                    let uq = u[(i, q)];
+                    app += up * up;
+                    aqq += uq * uq;
+                    apq += up * uq;
+                }
+                if apq.abs() <= tol * (app * aqq).sqrt() || apq == 0.0 {
+                    continue;
+                }
+                rotated = true;
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = {
+                    let sgn = if theta >= 0.0 { 1.0 } else { -1.0 };
+                    sgn / (theta.abs() + (theta * theta + 1.0).sqrt())
+                };
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                for i in 0..m {
+                    let up = u[(i, p)];
+                    let uq = u[(i, q)];
+                    u[(i, p)] = c * up - s * uq;
+                    u[(i, q)] = s * up + c * uq;
+                }
+                for i in 0..n {
+                    let vp = v[(i, p)];
+                    let vq = v[(i, q)];
+                    v[(i, p)] = c * vp - s * vq;
+                    v[(i, q)] = s * vp + c * vq;
+                }
+            }
+        }
+        if !rotated {
+            break;
+        }
+    }
+
+    // Column norms are the singular values; normalize U's columns.
+    let mut sv: Vec<(f64, usize)> = (0..n)
+        .map(|j| {
+            let norm: f64 = (0..m).map(|i| u[(i, j)] * u[(i, j)]).sum::<f64>().sqrt();
+            (norm, j)
+        })
+        .collect();
+    sv.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    let mut u_out = Mat::zeros(m, n);
+    let mut v_out = Mat::zeros(n, n);
+    let mut s_out = Vec::with_capacity(n);
+    for (oj, &(norm, j)) in sv.iter().enumerate() {
+        s_out.push(norm);
+        if norm > 0.0 {
+            for i in 0..m {
+                u_out[(i, oj)] = u[(i, j)] / norm;
+            }
+        }
+        for i in 0..n {
+            v_out[(i, oj)] = v[(i, j)];
+        }
+    }
+    Svd { u: u_out, s: s_out, v: v_out }
+}
+
+/// Randomized top-k SVD via subspace iteration with oversampling.
+///
+/// `n_iter` power iterations sharpen the spectrum (default callers use 4–8
+/// which is plenty for the exponential/power-law decays in our datasets).
+pub fn svd_randomized(a: &Mat, k: usize, oversample: usize, n_iter: usize, rng: &mut Pcg64) -> Svd {
+    let (m, n) = a.shape();
+    let l = (k + oversample).min(m.min(n));
+    // Range finder on the side with fewer rows for efficiency.
+    let omega = Mat::randn(n, l, rng);
+    let mut y = matmul(a, &omega); // m x l
+    let mut q = qr_thin(&y).q;
+    for _ in 0..n_iter {
+        let z = matmul_at_b(a, &q); // n x l  (Aᵀ Q)
+        let qz = qr_thin(&z).q;
+        y = matmul(a, &qz);
+        q = qr_thin(&y).q;
+    }
+    // B = Qᵀ A (l x n), small SVD of B.
+    let b = matmul_at_b(&q, a);
+    let Svd { u: ub, s, v } = svd_jacobi(&b);
+    let u = matmul(&q, &ub);
+    // Truncate to k.
+    let kk = k.min(s.len());
+    let mut u_k = Mat::zeros(m, kk);
+    let mut v_k = Mat::zeros(n, kk);
+    for j in 0..kk {
+        for i in 0..m {
+            u_k[(i, j)] = u[(i, j)];
+        }
+        for i in 0..n {
+            v_k[(i, j)] = v[(i, j)];
+        }
+    }
+    Svd { u: u_k, s: s[..kk].to_vec(), v: v_k }
+}

@@ -1,0 +1,306 @@
+//! Unit and property tests for the linalg substrate.
+
+use super::*;
+use crate::rng::rng;
+use crate::testing::{assert_close, prop_mats, MAT_DIM_SMALL};
+
+fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    for i in 0..a.rows() {
+        for j in 0..b.cols() {
+            let mut s = 0.0;
+            for k in 0..a.cols() {
+                s += a[(i, k)] * b[(k, j)];
+            }
+            c[(i, j)] = s;
+        }
+    }
+    c
+}
+
+#[test]
+fn matmul_matches_naive() {
+    let mut r = rng(1);
+    for &(m, k, n) in &[(1, 1, 1), (3, 4, 5), (17, 31, 13), (64, 64, 64), (65, 129, 67)] {
+        let a = Mat::randn(m, k, &mut r);
+        let b = Mat::randn(k, n, &mut r);
+        let got = matmul(&a, &b);
+        let want = naive_matmul(&a, &b);
+        assert_close(&got, &want, 1e-10, &format!("matmul {m}x{k}x{n}"));
+    }
+}
+
+#[test]
+fn matmul_at_b_matches_transpose() {
+    let mut r = rng(2);
+    let a = Mat::randn(23, 11, &mut r);
+    let b = Mat::randn(23, 17, &mut r);
+    let got = matmul_at_b(&a, &b);
+    let want = matmul(&a.transpose(), &b);
+    assert_close(&got, &want, 1e-10, "matmul_at_b");
+}
+
+#[test]
+fn matmul_a_bt_matches_transpose() {
+    let mut r = rng(3);
+    let a = Mat::randn(9, 21, &mut r);
+    let b = Mat::randn(14, 21, &mut r);
+    let got = matmul_a_bt(&a, &b);
+    let want = matmul(&a, &b.transpose());
+    assert_close(&got, &want, 1e-10, "matmul_a_bt");
+}
+
+#[test]
+fn prop_matmul_associates_with_identity() {
+    prop_mats(10, MAT_DIM_SMALL, |a, r| {
+        let i = Mat::eye(a.cols());
+        assert_close(&matmul(a, &i), a, 1e-12, "A*I = A");
+        let i2 = Mat::eye(a.rows());
+        assert_close(&matmul(&i2, a), a, 1e-12, "I*A = A");
+        let _ = r;
+    });
+}
+
+#[test]
+fn qr_reconstructs_and_is_orthonormal() {
+    let mut r = rng(4);
+    for &(m, n) in &[(5, 3), (30, 7), (12, 12), (64, 20)] {
+        let a = Mat::randn(m, n, &mut r);
+        let QrThin { q, r: rr } = qr_thin(&a);
+        assert_eq!(q.shape(), (m, n.min(m)));
+        // QᵀQ = I
+        let qtq = matmul_at_b(&q, &q);
+        assert_close(&qtq, &Mat::eye(n.min(m)), 1e-10, "QᵀQ = I");
+        // A = QR
+        let qr = matmul(&q, &rr);
+        assert_close(&qr, &a, 1e-9, "A = QR");
+        // R upper triangular
+        for i in 0..rr.rows() {
+            for j in 0..i.min(rr.cols()) {
+                assert!(rr[(i, j)].abs() < 1e-12, "R not upper triangular");
+            }
+        }
+    }
+}
+
+#[test]
+fn qr_wide_matrix() {
+    let mut r = rng(5);
+    let a = Mat::randn(4, 9, &mut r);
+    let QrThin { q, r: rr } = qr_thin(&a);
+    assert_eq!(q.shape(), (4, 4));
+    assert_eq!(rr.shape(), (4, 9));
+    assert_close(&matmul(&q, &rr), &a, 1e-10, "wide A = QR");
+}
+
+#[test]
+fn cholesky_roundtrip() {
+    let mut r = rng(6);
+    let b = Mat::randn(20, 12, &mut r);
+    let a = matmul_at_b(&b, &b); // SPD (almost surely)
+    let l = cholesky(&a).expect("SPD");
+    let llt = matmul_a_bt(&l, &l);
+    assert_close(&llt, &a, 1e-9, "A = LLᵀ");
+}
+
+#[test]
+fn cholesky_rejects_indefinite() {
+    let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+    assert!(cholesky(&a).is_err());
+}
+
+#[test]
+fn cholesky_solve_solves() {
+    let mut r = rng(7);
+    let b = Mat::randn(15, 15, &mut r);
+    let a = {
+        let mut g = matmul_at_b(&b, &b);
+        for i in 0..15 {
+            g[(i, i)] += 1.0;
+        }
+        g
+    };
+    let x_true = Mat::randn(15, 4, &mut r);
+    let rhs = matmul(&a, &x_true);
+    let x = cholesky_solve(&a, &rhs).unwrap();
+    assert_close(&x, &x_true, 1e-8, "cholesky_solve");
+}
+
+#[test]
+fn triangular_solves() {
+    let mut r = rng(8);
+    let mut l = Mat::randn(10, 10, &mut r);
+    for i in 0..10 {
+        for j in (i + 1)..10 {
+            l[(i, j)] = 0.0;
+        }
+        l[(i, i)] = l[(i, i)].abs() + 1.0;
+    }
+    let x_true = Mat::randn(10, 3, &mut r);
+    let b = matmul(&l, &x_true);
+    assert_close(&solve_lower(&l, &b), &x_true, 1e-10, "solve_lower");
+
+    let bt = matmul(&l.transpose(), &x_true);
+    assert_close(&solve_lower_transpose(&l, &bt), &x_true, 1e-10, "solve_lower_transpose");
+
+    let u = l.transpose();
+    let bu = matmul(&u, &x_true);
+    assert_close(&solve_upper(&u, &bu), &x_true, 1e-10, "solve_upper");
+}
+
+#[test]
+fn eigh_reconstructs() {
+    let mut r = rng(9);
+    let b = Mat::randn(18, 18, &mut r);
+    let a = &b + &b.transpose();
+    let EigH { values, vectors } = eigh(&a);
+    // Descending order.
+    for w in values.windows(2) {
+        assert!(w[0] >= w[1] - 1e-12);
+    }
+    // V diag(w) Vᵀ = A
+    let mut vd = vectors.clone();
+    for j in 0..18 {
+        for i in 0..18 {
+            vd[(i, j)] *= values[j];
+        }
+    }
+    let rec = matmul_a_bt(&vd, &vectors);
+    assert_close(&rec, &a, 1e-8, "eigh reconstruction");
+    // VᵀV = I
+    assert_close(&matmul_at_b(&vectors, &vectors), &Mat::eye(18), 1e-10, "VᵀV = I");
+}
+
+#[test]
+fn project_psd_properties() {
+    let mut r = rng(10);
+    let x = Mat::randn(12, 12, &mut r);
+    let p = project_psd(&x);
+    // Symmetric.
+    assert_close(&p, &p.transpose(), 1e-12, "PSD projection symmetric");
+    // PSD: all eigenvalues >= -tol.
+    let e = eigh(&p);
+    assert!(e.values.iter().all(|&w| w > -1e-9), "projection not PSD: {:?}", e.values);
+    // Idempotent.
+    let p2 = project_psd(&p);
+    assert_close(&p2, &p, 1e-8, "PSD projection idempotent");
+    // Proposition 1: projecting an SPD matrix is a no-op.
+    let b = Mat::randn(12, 12, &mut r);
+    let spd = matmul_a_bt(&b, &b);
+    assert_close(&project_psd(&spd), &spd, 1e-8, "PSD fixed point");
+}
+
+#[test]
+fn svd_jacobi_reconstructs() {
+    let mut r = rng(11);
+    for &(m, n) in &[(10, 6), (6, 10), (15, 15)] {
+        let a = Mat::randn(m, n, &mut r);
+        let Svd { u, s, v } = svd_jacobi(&a);
+        // Descending singular values, nonnegative.
+        for w in s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+        assert!(s.iter().all(|&x| x >= 0.0));
+        // U diag(s) Vᵀ = A
+        let mut us = u.clone();
+        for j in 0..s.len().min(us.cols()) {
+            for i in 0..us.rows() {
+                us[(i, j)] *= s[j];
+            }
+        }
+        let rec = matmul_a_bt(&us, &v);
+        assert_close(&rec, &a, 1e-8, &format!("svd reconstruction {m}x{n}"));
+
+    }
+}
+
+#[test]
+fn svd_randomized_captures_top_k() {
+    let mut r = rng(12);
+    // Construct a matrix with known spectrum.
+    let m = 80;
+    let n = 60;
+    let k = 5;
+    let u = qr_thin(&Mat::randn(m, n, &mut r)).q;
+    let v = qr_thin(&Mat::randn(n, n, &mut r)).q;
+    let s_true: Vec<f64> = (0..n).map(|i| 100.0 * 0.5f64.powi(i as i32)).collect();
+    let mut us = u.clone();
+    for j in 0..n {
+        for i in 0..m {
+            us[(i, j)] *= s_true[j];
+        }
+    }
+    let a = matmul_a_bt(&us, &v);
+    let svd = svd_randomized(&a, k, 10, 4, &mut r);
+    for i in 0..k {
+        let rel = (svd.s[i] - s_true[i]).abs() / s_true[i];
+        assert!(rel < 1e-6, "sigma_{i}: got {} want {}", svd.s[i], s_true[i]);
+    }
+}
+
+#[test]
+fn pinv_moore_penrose_axioms() {
+    let mut r = rng(13);
+    for &(m, n) in &[(12, 5), (5, 12), (8, 8)] {
+        let a = Mat::randn(m, n, &mut r);
+        let p = pinv(&a);
+        assert_eq!(p.shape(), (n, m));
+        let apa = matmul(&matmul(&a, &p), &a);
+        assert_close(&apa, &a, 1e-8, "A A† A = A");
+        let pap = matmul(&matmul(&p, &a), &p);
+        assert_close(&pap, &p, 1e-8, "A† A A† = A†");
+        let ap = matmul(&a, &p);
+        assert_close(&ap, &ap.transpose(), 1e-8, "(A A†)ᵀ = A A†");
+        let pa = matmul(&p, &a);
+        assert_close(&pa, &pa.transpose(), 1e-8, "(A† A)ᵀ = A† A");
+    }
+}
+
+#[test]
+fn pinv_apply_matches_pinv() {
+    let mut r = rng(14);
+    let c = Mat::randn(40, 7, &mut r); // tall
+    let b = Mat::randn(40, 9, &mut r);
+    let got = pinv_apply_left(&c, &b);
+    let want = matmul(&pinv(&c), &b);
+    assert_close(&got, &want, 1e-8, "pinv_apply_left");
+
+    let rr = Mat::randn(6, 30, &mut r); // wide
+    let b2 = Mat::randn(9, 30, &mut r);
+    let got2 = pinv_apply_right(&b2, &rr);
+    let want2 = matmul(&b2, &pinv(&rr));
+    assert_close(&got2, &want2, 1e-8, "pinv_apply_right");
+}
+
+#[test]
+fn norms_basic() {
+    let a = Mat::from_vec(2, 2, vec![3.0, 0.0, 0.0, 4.0]);
+    assert!((fro_norm(&a) - 5.0).abs() < 1e-12);
+    let b = Mat::zeros(2, 2);
+    assert!((fro_norm_diff(&a, &b) - 5.0).abs() < 1e-12);
+    let mut r = rng(15);
+    let sigma = spectral_norm_est(&a, 50, &mut r);
+    assert!((sigma - 4.0).abs() < 1e-6, "spectral est {sigma}");
+}
+
+#[test]
+fn mat_block_ops() {
+    let a = Mat::from_fn(4, 5, |i, j| (i * 5 + j) as f64);
+    let s = a.slice(1, 3, 2, 5);
+    assert_eq!(s.shape(), (2, 3));
+    assert_eq!(s[(0, 0)], 7.0);
+    let rows = a.select_rows(&[3, 0]);
+    assert_eq!(rows[(0, 0)], 15.0);
+    assert_eq!(rows[(1, 4)], 4.0);
+    let cols = a.select_cols(&[4, 1]);
+    assert_eq!(cols[(2, 0)], 14.0);
+    let cat = a.hcat(&a);
+    assert_eq!(cat.shape(), (4, 10));
+    assert_eq!(cat[(1, 7)], a[(1, 2)]);
+    let vc = a.vcat(&a);
+    assert_eq!(vc.shape(), (8, 5));
+    assert_eq!(vc[(5, 2)], a[(1, 2)]);
+    let t = a.transpose();
+    assert_eq!(t.shape(), (5, 4));
+    assert_eq!(t[(2, 3)], a[(3, 2)]);
+}

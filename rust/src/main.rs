@@ -1,0 +1,3 @@
+fn main() -> anyhow::Result<()> {
+    fastgmr::cli::main_entry()
+}

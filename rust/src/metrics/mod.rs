@@ -1,0 +1,182 @@
+//! Lightweight metrics: counters, gauges, wall-clock timers and
+//! histograms, shared across coordinator threads.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// A process-wide metrics registry. Cheap to clone handles out of; all
+/// counters are atomics and histograms sit behind a mutex (cold path).
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, std::sync::Arc<AtomicU64>>>,
+    histograms: Mutex<BTreeMap<String, Histogram>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fetch-or-create a counter handle.
+    pub fn counter(&self, name: &str) -> std::sync::Arc<AtomicU64> {
+        let mut map = self.counters.lock().unwrap();
+        map.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Add to a counter by name (convenience; takes the map lock).
+    pub fn add(&self, name: &str, delta: u64) {
+        self.counter(name).fetch_add(delta, Ordering::Relaxed);
+    }
+
+    /// Record a duration (seconds) into a histogram.
+    pub fn observe(&self, name: &str, seconds: f64) {
+        let mut map = self.histograms.lock().unwrap();
+        map.entry(name.to_string()).or_default().record(seconds);
+    }
+
+    /// Time a closure into a histogram.
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let start = Instant::now();
+        let out = f();
+        self.observe(name, start.elapsed().as_secs_f64());
+        out
+    }
+
+    /// Render a human-readable snapshot.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("{name}: {}\n", c.load(Ordering::Relaxed)));
+        }
+        for (name, h) in self.histograms.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "{name}: n={} mean={:.6}s p50={:.6}s p99={:.6}s max={:.6}s\n",
+                h.count,
+                h.mean(),
+                h.quantile(0.5),
+                h.quantile(0.99),
+                h.max
+            ));
+        }
+        out
+    }
+
+    /// Read a counter's current value.
+    pub fn get(&self, name: &str) -> u64 {
+        self.counter(name).load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-size log-bucketed histogram of seconds.
+pub struct Histogram {
+    /// Buckets: [1ns, ~1000s) in half-decade steps.
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self { buckets: vec![0; 48], count: 0, sum: 0.0, max: 0.0 }
+    }
+}
+
+impl Histogram {
+    fn bucket_index(seconds: f64) -> usize {
+        // bucket i covers [1e-9 * sqrt(10)^i, ...): i = 2*log10(s/1e-9)
+        if seconds <= 1e-9 {
+            return 0;
+        }
+        let i = (2.0 * (seconds / 1e-9).log10()).floor() as isize;
+        i.clamp(0, 47) as usize
+    }
+
+    pub fn record(&mut self, seconds: f64) {
+        self.buckets[Self::bucket_index(seconds)] += 1;
+        self.count += 1;
+        self.sum += seconds;
+        if seconds > self.max {
+            self.max = seconds;
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= target {
+                return 1e-9 * 10f64.powf(i as f64 / 2.0);
+            }
+        }
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.add("blocks", 3);
+        m.add("blocks", 4);
+        assert_eq!(m.get("blocks"), 7);
+        assert_eq!(m.get("other"), 0);
+    }
+
+    #[test]
+    fn histogram_stats() {
+        let mut h = Histogram::default();
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-3);
+        }
+        assert_eq!(h.count, 100);
+        assert!((h.mean() - 0.0505).abs() < 1e-6);
+        let p50 = h.quantile(0.5);
+        assert!(p50 > 0.005 && p50 < 0.2, "p50 {p50}");
+        assert!((h.max - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn timing_records() {
+        let m = Metrics::new();
+        let v = m.time("op", || 42);
+        assert_eq!(v, 42);
+        assert!(m.report().contains("op:"));
+    }
+
+    #[test]
+    fn threads_share_counters() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let mut handles = vec![];
+        for _ in 0..4 {
+            let mm = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    mm.add("x", 1);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.get("x"), 4000);
+    }
+}

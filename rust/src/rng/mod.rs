@@ -1,0 +1,100 @@
+//! Deterministic, dependency-free random number generation.
+//!
+//! The offline build vendors no `rand` crate, so the library ships its own
+//! PCG-64 generator plus the distributions the sketching library needs
+//! (uniform, normal, Rademacher signs, permutations, weighted index
+//! sampling). Everything is seedable and reproducible across runs, which
+//! the property-test harness and the benchmark sweeps rely on.
+
+mod pcg;
+
+pub use pcg::Pcg64;
+
+/// Convenience constructor used across tests and benches.
+pub fn rng(seed: u64) -> Pcg64 {
+    Pcg64::seed_from_u64(seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = rng(42);
+        let mut b = rng(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = rng(1);
+        let mut b = rng(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn uniform_mean_is_half() {
+        let mut r = rng(7);
+        let n = 200_000;
+        let mean: f64 = (0..n).map(|_| r.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 5e-3, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = rng(11);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.next_normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 1e-2, "mean={mean}");
+        assert!((var - 1.0).abs() < 2e-2, "var={var}");
+    }
+
+    #[test]
+    fn range_bounds() {
+        let mut r = rng(3);
+        for _ in 0..10_000 {
+            let v = r.next_range(17);
+            assert!(v < 17);
+        }
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        let mut r = rng(5);
+        let p = r.permutation(257);
+        let mut seen = vec![false; 257];
+        for &i in &p {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn weighted_sample_respects_weights() {
+        let mut r = rng(9);
+        let w = vec![0.0, 1.0, 3.0, 0.0];
+        let mut counts = [0usize; 4];
+        for _ in 0..40_000 {
+            counts[r.sample_weighted(&w)] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        assert_eq!(counts[3], 0);
+        let ratio = counts[2] as f64 / counts[1] as f64;
+        assert!((ratio - 3.0).abs() < 0.3, "ratio={ratio}");
+    }
+
+    #[test]
+    fn rademacher_is_balanced() {
+        let mut r = rng(13);
+        let n = 100_000;
+        let sum: i64 = (0..n).map(|_| r.next_sign() as i64).sum();
+        assert!(sum.abs() < 2_000, "sum={sum}");
+    }
+}

@@ -1,0 +1,188 @@
+//! PCG-64 (XSL-RR 128/64) generator with the distribution helpers the
+//! sketch library needs. Reference: O'Neill, "PCG: A Family of Simple
+//! Fast Space-Efficient Statistically Good Algorithms for Random Number
+//! Generation" (2014).
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+const PCG_INC: u128 = 0x5851_f42d_4c95_7f2d_1405_7b7e_f767_814f;
+
+/// 128-bit-state PCG generator producing 64-bit outputs.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+    /// Cached second normal from the Box–Muller pair.
+    spare_normal: Option<f64>,
+}
+
+impl Pcg64 {
+    /// Seed from a single u64 via SplitMix64 expansion.
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9e37_79b9_7f4a_7c15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+            z ^ (z >> 31)
+        };
+        let state = ((next() as u128) << 64) | next() as u128;
+        let inc = (((next() as u128) << 64) | next() as u128) | 1;
+        let mut rng = Self { state, inc, spare_normal: None };
+        // Burn a few outputs so poor seeds decorrelate.
+        for _ in 0..4 {
+            rng.next_u64();
+        }
+        rng
+    }
+
+    /// Derive an independent stream (used to hand each worker its own rng).
+    pub fn split(&mut self) -> Self {
+        Self::seed_from_u64(self.next_u64())
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc | PCG_INC);
+        let rot = (self.state >> 122) as u32;
+        let xsl = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xsl.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1) with 53 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Unbiased uniform integer in [0, bound) (Lemire rejection).
+    #[inline]
+    pub fn next_range(&mut self, bound: usize) -> usize {
+        debug_assert!(bound > 0);
+        let bound = bound as u64;
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(bound as u128);
+            let lo = m as u64;
+            if lo >= bound || lo >= lo.wrapping_neg() % bound {
+                return (m >> 64) as usize;
+            }
+        }
+    }
+
+    /// Rademacher sign: ±1 with equal probability.
+    #[inline]
+    pub fn next_sign(&mut self) -> i8 {
+        if self.next_u64() & 1 == 0 {
+            1
+        } else {
+            -1
+        }
+    }
+
+    /// Standard normal via Box–Muller (pair-cached).
+    pub fn next_normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        // Avoid log(0).
+        let u1 = loop {
+            let u = self.next_f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let u2 = self.next_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.spare_normal = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Standard normal as f32.
+    #[inline]
+    pub fn next_normal_f32(&mut self) -> f32 {
+        self.next_normal() as f32
+    }
+
+    /// Fill a slice with i.i.d. N(0, sigma^2) values.
+    pub fn fill_normal(&mut self, out: &mut [f32], sigma: f32) {
+        for v in out.iter_mut() {
+            *v = self.next_normal() as f32 * sigma;
+        }
+    }
+
+    /// Fisher–Yates permutation of 0..n.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = self.next_range(i + 1);
+            p.swap(i, j);
+        }
+        p
+    }
+
+    /// Sample `k` distinct indices from 0..n (k <= n), in random order.
+    pub fn sample_without_replacement(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {k} from {n} without replacement");
+        if k * 4 >= n {
+            let mut p = self.permutation(n);
+            p.truncate(k);
+            return p;
+        }
+        // Floyd's algorithm for k << n.
+        let mut chosen = std::collections::HashSet::with_capacity(k);
+        let mut out = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.next_range(j + 1);
+            let pick = if chosen.contains(&t) { j } else { t };
+            chosen.insert(pick);
+            out.push(pick);
+        }
+        out
+    }
+
+    /// Sample one index proportional to the (nonnegative) weights.
+    pub fn sample_weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "weights must have positive sum");
+        let target = self.next_f64() * total;
+        let mut acc = 0.0;
+        for (i, &w) in weights.iter().enumerate() {
+            acc += w;
+            if target < acc {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Alias-free batched weighted sampling with replacement: returns `k`
+    /// indices drawn proportional to `weights`, using a cumulative table
+    /// and binary search (O(n + k log n)).
+    pub fn sample_weighted_many(&mut self, weights: &[f64], k: usize) -> Vec<usize> {
+        let mut cum = Vec::with_capacity(weights.len());
+        let mut acc = 0.0;
+        for &w in weights {
+            debug_assert!(w >= 0.0);
+            acc += w;
+            cum.push(acc);
+        }
+        assert!(acc > 0.0, "weights must have positive sum");
+        (0..k)
+            .map(|_| {
+                let t = self.next_f64() * acc;
+                match cum.binary_search_by(|c| c.partial_cmp(&t).unwrap()) {
+                    Ok(i) => (i + 1).min(weights.len() - 1),
+                    Err(i) => i.min(weights.len() - 1),
+                }
+            })
+            .collect()
+    }
+}

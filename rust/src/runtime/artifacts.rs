@@ -1,0 +1,139 @@
+//! Artifact manifest: `artifacts/manifest.txt` maps graph names to HLO
+//! files, I/O shapes, and golden-check files. Written by `aot.py` in a
+//! line format the Rust side parses without a JSON dependency:
+//!
+//! ```text
+//! graph rbf_block_256 file=rbf_block_256.hlo.txt inputs=256x8,256x8 outputs=256x256 golden=rbf_block_256.golden
+//! ```
+
+use crate::error::{FgError, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One AOT graph.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub hlo_path: PathBuf,
+    /// Input shapes, row-major (rows, cols) per argument.
+    pub input_shapes: Vec<(usize, usize)>,
+    /// Output shapes per result.
+    pub output_shapes: Vec<(usize, usize)>,
+    /// Optional golden check file (f32 binary: inputs then outputs).
+    pub golden_path: Option<PathBuf>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    entries: BTreeMap<String, ManifestEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).map_err(|_| FgError::ArtifactMissing {
+            name: "manifest.txt".into(),
+            dir: dir.display().to_string(),
+        })?;
+        let mut entries = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let entry = Self::parse_line(&dir, line)
+                .ok_or_else(|| FgError::Config(format!("manifest line {}: malformed", lineno + 1)))?;
+            entries.insert(entry.name.clone(), entry);
+        }
+        Ok(Self { dir, entries })
+    }
+
+    fn parse_line(dir: &Path, line: &str) -> Option<ManifestEntry> {
+        let mut parts = line.split_whitespace();
+        if parts.next()? != "graph" {
+            return None;
+        }
+        let name = parts.next()?.to_string();
+        let mut hlo_path = None;
+        let mut input_shapes = Vec::new();
+        let mut output_shapes = Vec::new();
+        let mut golden_path = None;
+        for kv in parts {
+            let (k, v) = kv.split_once('=')?;
+            match k {
+                "file" => hlo_path = Some(dir.join(v)),
+                "inputs" => input_shapes = parse_shapes(v)?,
+                "outputs" => output_shapes = parse_shapes(v)?,
+                "golden" => golden_path = Some(dir.join(v)),
+                _ => return None,
+            }
+        }
+        Some(ManifestEntry { name, hlo_path: hlo_path?, input_shapes, output_shapes, golden_path })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ManifestEntry> {
+        self.entries.get(name).ok_or_else(|| FgError::ArtifactMissing {
+            name: name.to_string(),
+            dir: self.dir.display().to_string(),
+        })
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+fn parse_shapes(spec: &str) -> Option<Vec<(usize, usize)>> {
+    spec.split(',')
+        .map(|s| {
+            let (r, c) = s.split_once('x')?;
+            Some((r.parse().ok()?, c.parse().ok()?))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_lines() {
+        let dir = std::path::Path::new("/tmp/fastgmr_manifest_test");
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "# comment\n\
+             graph g1 file=g1.hlo.txt inputs=4x3,3x2 outputs=4x2 golden=g1.golden\n\
+             graph g2 file=g2.hlo.txt inputs=8x8 outputs=8x8\n",
+        )
+        .unwrap();
+        let m = Manifest::load(dir).unwrap();
+        assert_eq!(m.len(), 2);
+        let g1 = m.get("g1").unwrap();
+        assert_eq!(g1.input_shapes, vec![(4, 3), (3, 2)]);
+        assert_eq!(g1.output_shapes, vec![(4, 2)]);
+        assert!(g1.golden_path.is_some());
+        let g2 = m.get("g2").unwrap();
+        assert!(g2.golden_path.is_none());
+        assert!(m.get("missing").is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_artifact_error() {
+        let err = Manifest::load("/tmp/definitely_missing_dir_fastgmr").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

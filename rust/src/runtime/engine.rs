@@ -1,0 +1,153 @@
+//! PJRT execution engine.
+//!
+//! Wraps the `xla` crate: one CPU client per process, one compiled
+//! executable per artifact (compiled lazily, cached). All artifacts are
+//! lowered by `aot.py` with `return_tuple=True`, so outputs arrive as a
+//! tuple literal; inputs/outputs are f32 (the PJRT boundary — the Rust
+//! side computes in f64 and converts here).
+
+use super::artifacts::{Manifest, ManifestEntry};
+use crate::error::{FgError, Result};
+use crate::linalg::Mat;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// A compiled, ready-to-run artifact.
+pub struct LoadedGraph {
+    pub entry: ManifestEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedGraph {
+    /// Execute with `Mat` inputs (converted to f32 literals); returns the
+    /// tuple elements as `Mat`s in declaration order.
+    pub fn run(&self, inputs: &[&Mat]) -> Result<Vec<Mat>> {
+        if inputs.len() != self.entry.input_shapes.len() {
+            return Err(FgError::ShapeMismatch {
+                context: format!("{} inputs", self.entry.name),
+                expected: format!("{}", self.entry.input_shapes.len()),
+                got: format!("{}", inputs.len()),
+            });
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (mat, &(r, c)) in inputs.iter().zip(&self.entry.input_shapes) {
+            if mat.shape() != (r, c) {
+                return Err(FgError::ShapeMismatch {
+                    context: format!("{} input", self.entry.name),
+                    expected: format!("{r}x{c}"),
+                    got: format!("{}x{}", mat.rows(), mat.cols()),
+                });
+            }
+            let lit = xla::Literal::vec1(&mat.to_f32()).reshape(&[r as i64, c as i64])?;
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let tuple = result.to_tuple()?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for (lit, &(r, c)) in tuple.iter().zip(&self.entry.output_shapes) {
+            let vals = lit.to_vec::<f32>()?;
+            if vals.len() != r * c {
+                return Err(FgError::ShapeMismatch {
+                    context: format!("{} output", self.entry.name),
+                    expected: format!("{r}x{c}"),
+                    got: format!("{} elements", vals.len()),
+                });
+            }
+            out.push(Mat::from_f32(r, c, &vals));
+        }
+        Ok(out)
+    }
+}
+
+/// The process-wide engine: PJRT client + executable cache.
+///
+/// Single-threaded (the `xla` crate's client handle is `Rc`-based); the
+/// coordinator keeps the engine on its executor thread.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<LoadedGraph>>>,
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("platform", &self.client.platform_name())
+            .field("artifacts", &self.manifest.len())
+            .finish()
+    }
+}
+
+impl Engine {
+    /// Create the CPU PJRT client and load the manifest from `dir`
+    /// (default `artifacts/`).
+    pub fn new(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        let manifest = Manifest::load(dir)?;
+        Ok(Self { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) an artifact by name.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<LoadedGraph>> {
+        if let Some(g) = self.cache.lock().unwrap().get(name) {
+            return Ok(g.clone());
+        }
+        let entry = self.manifest.get(name)?.clone();
+        let proto = xla::HloModuleProto::from_text_file(
+            entry.hlo_path.to_str().ok_or_else(|| FgError::Runtime("bad path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let graph = std::sync::Arc::new(LoadedGraph { entry, exe });
+        self.cache.lock().unwrap().insert(name.to_string(), graph.clone());
+        Ok(graph)
+    }
+
+    /// Run every artifact that ships a golden file against it; returns
+    /// (name, max |err|) per graph. Startup self-check.
+    pub fn verify_goldens(&self) -> Result<Vec<(String, f64)>> {
+        let names: Vec<String> = self.manifest.names().map(str::to_string).collect();
+        let mut results = Vec::new();
+        for name in names {
+            let entry = self.manifest.get(&name)?.clone();
+            let Some(golden) = entry.golden_path.clone() else { continue };
+            let graph = self.load(&name)?;
+            let bytes = std::fs::read(&golden)?;
+            let floats: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            // Layout: concatenated inputs then outputs, row-major f32.
+            let mut pos = 0usize;
+            let mut inputs = Vec::new();
+            for &(r, c) in &entry.input_shapes {
+                inputs.push(Mat::from_f32(r, c, &floats[pos..pos + r * c]));
+                pos += r * c;
+            }
+            let mut expected = Vec::new();
+            for &(r, c) in &entry.output_shapes {
+                expected.push(Mat::from_f32(r, c, &floats[pos..pos + r * c]));
+                pos += r * c;
+            }
+            let input_refs: Vec<&Mat> = inputs.iter().collect();
+            let outputs = graph.run(&input_refs)?;
+            let mut max_err = 0.0f64;
+            for (got, want) in outputs.iter().zip(&expected) {
+                let scale = want.max_abs().max(1.0);
+                for (g, w) in got.data().iter().zip(want.data()) {
+                    max_err = max_err.max((g - w).abs() / scale);
+                }
+            }
+            results.push((name, max_err));
+        }
+        Ok(results)
+    }
+}

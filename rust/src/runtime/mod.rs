@@ -1,0 +1,16 @@
+//! PJRT runtime — loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! Python never runs at request time: `make artifacts` lowers the L2 JAX
+//! graphs (which call the L1 Pallas kernels) to HLO *text* once; this
+//! module compiles them on the PJRT CPU client at startup and caches the
+//! executables.
+
+mod artifacts;
+mod engine;
+
+pub use artifacts::{Manifest, ManifestEntry};
+pub use engine::{Engine, LoadedGraph};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,25 @@
+//! Runtime tests that don't require artifacts (the artifact integration
+//! test lives in `rust/tests/artifacts.rs` and is skipped when
+//! `artifacts/` hasn't been built).
+
+use super::*;
+
+#[test]
+fn engine_errors_cleanly_without_artifacts() {
+    let err = Engine::new("/tmp/no_such_artifacts_dir").unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("make artifacts"), "unexpected error: {msg}");
+}
+
+#[test]
+fn manifest_entry_is_cloneable() {
+    let e = ManifestEntry {
+        name: "g".into(),
+        hlo_path: "/tmp/g.hlo.txt".into(),
+        input_shapes: vec![(2, 2)],
+        output_shapes: vec![(2, 2)],
+        golden_path: None,
+    };
+    let e2 = e.clone();
+    assert_eq!(e2.name, "g");
+}

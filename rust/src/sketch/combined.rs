@@ -1,0 +1,28 @@
+//! Composed sketches. Remark 1 of the paper: "Gaussian projection matrix
+//! is commonly not used independently but combined with count sketch or
+//! OSNAP, where after sketching by OSNAP, Gaussian projection is used to
+//! obtain a more compact sketched form." The composition
+//! `S = G · S_osnap` keeps `O(nnz)` application cost while reaching the
+//! smaller Gaussian sketch sizes of Table 2.
+
+use super::{osnap, Op, Sketch};
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+
+/// Draw `G ∘ OSNAP`: OSNAP to an intermediate dimension `s_mid = 4s`
+/// (a (1+γ)-style inflation), then dense Gaussian down to `s`.
+pub(crate) fn draw_osnap_gaussian(s: usize, m: usize, rng: &mut Pcg64) -> Sketch {
+    let s_mid = (4 * s).min(m.max(s));
+    let first = osnap::draw(s_mid, m, 2, rng);
+    let g = Mat::randn_sketch(s, s_mid, rng);
+    let second = Sketch::from_op(s, s_mid, Op::Gaussian(g));
+    Sketch::from_op(s, m, Op::Composed { first: Box::new(first), second: Box::new(second) })
+}
+
+/// General composition helper (exposed for Algorithm 3's Ω̃ = Ωᵀ G_Cᵀ and
+/// Ψ̃ = G_R Ψ constructions, where the caller picks both stages).
+pub fn compose(first: Sketch, second: Sketch) -> Sketch {
+    assert_eq!(second.in_dim(), first.out_dim(), "compose: inner dims mismatch");
+    let (s, m) = (second.out_dim(), first.in_dim());
+    Sketch::from_op(s, m, Op::Composed { first: Box::new(first), second: Box::new(second) })
+}

@@ -1,0 +1,17 @@
+//! CountSketch (Clarkson–Woodruff 2013): each column of `S` has exactly
+//! one nonzero, a random sign at a uniformly random row. Applying S to a
+//! matrix costs `O(nnz)`.
+
+use super::{Op, Sketch};
+use crate::rng::Pcg64;
+
+pub(crate) fn draw(s: usize, m: usize, rng: &mut Pcg64) -> Sketch {
+    assert!(s > 0);
+    let mut bucket = Vec::with_capacity(m);
+    let mut sign = Vec::with_capacity(m);
+    for _ in 0..m {
+        bucket.push(rng.next_range(s));
+        sign.push(rng.next_sign() as f64);
+    }
+    Sketch::from_op(s, m, Op::Count { bucket, sign })
+}

@@ -1,0 +1,11 @@
+//! Gaussian projection: dense `S` with i.i.d. N(0, 1/s) entries
+//! (Section 2.3). Classic Johnson–Lindenstrauss; `E[SᵀS] = I`.
+
+use super::{Op, Sketch};
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+
+pub(crate) fn draw(s: usize, m: usize, rng: &mut Pcg64) -> Sketch {
+    let g = Mat::randn_sketch(s, m, rng);
+    Sketch::from_op(s, m, Op::Gaussian(g))
+}

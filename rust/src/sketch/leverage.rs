@@ -1,0 +1,35 @@
+//! Row-sampling sketches (uniform and leverage-score), plus leverage
+//! score computation (Section 2.1: `ℓ_i = ‖Q_{i,:}‖²` for an orthonormal
+//! basis Q of the column space).
+
+use super::{Op, Sketch};
+use crate::linalg::{qr_thin, Mat};
+use crate::rng::Pcg64;
+
+/// Row leverage scores of `A` (m×n, m ≥ n typical): squared row norms of
+/// the thin-QR `Q` factor. Sums to rank(A).
+pub fn row_leverage_scores(a: &Mat) -> Vec<f64> {
+    let q = qr_thin(a).q;
+    q.row_norms_sq()
+}
+
+/// Column leverage scores of `A` = row leverage scores of `Aᵀ`.
+pub fn column_leverage_scores(a: &Mat) -> Vec<f64> {
+    row_leverage_scores(&a.transpose())
+}
+
+/// Sampling sketch with probabilities proportional to `weights`
+/// (uniform sampling = all-ones weights). Row `t` of `S A` is
+/// `A[idx_t, :] / sqrt(s * p_{idx_t})`, the standard unbiased scaling.
+pub(crate) fn draw_sampling(s: usize, m: usize, weights: &[f64], rng: &mut Pcg64) -> Sketch {
+    assert_eq!(weights.len(), m);
+    let total: f64 = weights.iter().sum();
+    assert!(total > 0.0, "sampling sketch: weights sum to zero");
+    // Guard against exactly-zero probabilities producing infinite scales:
+    // mix in a tiny uniform floor (standard practice; changes p_i by <1e-9).
+    let floor = total * 1e-12 / m as f64;
+    let probs: Vec<f64> = weights.iter().map(|&w| (w + floor) / (total + floor * m as f64)).collect();
+    let idx = rng.sample_weighted_many(&probs, s);
+    let scale: Vec<f64> = idx.iter().map(|&i| 1.0 / ((s as f64) * probs[i]).sqrt()).collect();
+    Sketch::from_op(s, m, Op::Sampling { idx, scale })
+}

@@ -1,0 +1,443 @@
+//! Matrix sketching library — all five families from Section 2.3 of the
+//! paper plus the OSNAP∘Gaussian composition recommended by Remark 1.
+//!
+//! A [`Sketch`] is a realized random linear map `S ∈ R^{s×m}`. The two
+//! operations the algorithms need are
+//!
+//! * `apply_left(A)`  → `S · A`   (sketching the row space / rows of A),
+//! * `apply_right(A)` → `A · Sᵀ`  (sketching the column space),
+//!
+//! with `O(nnz)`-time specializations for CSR inputs where the family
+//! admits them (sampling, CountSketch, OSNAP), an `O(mn log s)`-style
+//! fast Walsh–Hadamard path for SRHT, and dense matmul for Gaussian.
+//!
+//! Scalings follow Lemma 1's conventions: every family satisfies
+//! `E[SᵀS] = I`, so singular values are preserved in expectation and the
+//! subspace-embedding property (property 1) holds with the sketch sizes
+//! of Table 1 — which `tests::subspace_embedding_*` verify empirically.
+
+mod combined;
+mod count;
+mod gaussian;
+mod leverage;
+mod osnap;
+mod srht;
+
+pub use combined::compose as compose_sketches;
+pub use leverage::{column_leverage_scores, row_leverage_scores};
+
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+use crate::sparse::Csr;
+
+/// Which sketching family to use (bench/config-facing descriptor).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SketchKind {
+    /// Dense i.i.d. N(0, 1/s) projection.
+    Gaussian,
+    /// Uniform row sampling with replacement, scaled 1/sqrt(s p_i).
+    Uniform,
+    /// Leverage-score row sampling (scores must be supplied).
+    Leverage,
+    /// Subsampled randomized Hadamard transform.
+    Srht,
+    /// CountSketch: one ±1 per column of S.
+    Count,
+    /// OSNAP with `p` nonzeros per column (we default p = 2).
+    Osnap,
+    /// Gaussian ∘ OSNAP composition (Remark 1): OSNAP to an intermediate
+    /// dimension, then a dense Gaussian to the final size.
+    OsnapGaussian,
+}
+
+impl SketchKind {
+    /// Parse from a CLI/config token.
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "gaussian" | "gauss" => Self::Gaussian,
+            "uniform" => Self::Uniform,
+            "leverage" | "lev" => Self::Leverage,
+            "srht" | "hadamard" => Self::Srht,
+            "count" | "countsketch" => Self::Count,
+            "osnap" => Self::Osnap,
+            "osnap-gaussian" | "osnapgaussian" | "combined" => Self::OsnapGaussian,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Gaussian => "gaussian",
+            Self::Uniform => "uniform",
+            Self::Leverage => "leverage",
+            Self::Srht => "srht",
+            Self::Count => "count",
+            Self::Osnap => "osnap",
+            Self::OsnapGaussian => "osnap-gaussian",
+        }
+    }
+
+    /// All kinds, for table sweeps.
+    pub fn all() -> [SketchKind; 7] {
+        [
+            Self::Gaussian,
+            Self::Uniform,
+            Self::Leverage,
+            Self::Srht,
+            Self::Count,
+            Self::Osnap,
+            Self::OsnapGaussian,
+        ]
+    }
+}
+
+/// Internal realized operator.
+pub(crate) enum Op {
+    Gaussian(Mat),
+    /// Row sampling: out row t = scale[t] * A[idx[t], :].
+    Sampling { idx: Vec<usize>, scale: Vec<f64> },
+    /// SRHT: signs (±1, length m), sampled indices into the padded
+    /// Hadamard domain, padded = next power of two >= m.
+    Srht { signs: Vec<f64>, sample: Vec<usize>, padded: usize, scale: f64 },
+    /// CountSketch: for input coordinate i, add sign[i]*row_i to bucket[i].
+    Count { bucket: Vec<usize>, sign: Vec<f64> },
+    /// OSNAP: p entries per input coordinate; flattened (m*p) arrays.
+    Osnap { buckets: Vec<usize>, signs: Vec<f64>, p: usize },
+    /// Composition second ∘ first (first applied to the data first).
+    Composed { first: Box<Sketch>, second: Box<Sketch> },
+}
+
+/// A realized sketching matrix `S ∈ R^{s×m}`.
+pub struct Sketch {
+    s: usize,
+    m: usize,
+    pub(crate) op: Op,
+}
+
+impl Sketch {
+    /// Draw a sketch of the given family. `scores` is required for
+    /// [`SketchKind::Leverage`] (row leverage scores of the matrix whose
+    /// row space must be preserved) and ignored otherwise.
+    pub fn draw(kind: SketchKind, s: usize, m: usize, scores: Option<&[f64]>, rng: &mut Pcg64) -> Self {
+        match kind {
+            SketchKind::Gaussian => gaussian::draw(s, m, rng),
+            SketchKind::Uniform => {
+                let w = vec![1.0; m];
+                leverage::draw_sampling(s, m, &w, rng)
+            }
+            SketchKind::Leverage => {
+                let scores = scores.expect("leverage sketch requires scores");
+                assert_eq!(scores.len(), m, "leverage scores length != m");
+                leverage::draw_sampling(s, m, scores, rng)
+            }
+            SketchKind::Srht => srht::draw(s, m, rng),
+            SketchKind::Count => count::draw(s, m, rng),
+            SketchKind::Osnap => osnap::draw(s, m, 2, rng),
+            SketchKind::OsnapGaussian => combined::draw_osnap_gaussian(s, m, rng),
+        }
+    }
+
+    pub(crate) fn from_op(s: usize, m: usize, op: Op) -> Self {
+        Self { s, m, op }
+    }
+
+    /// Output dimension `s`.
+    #[inline]
+    pub fn out_dim(&self) -> usize {
+        self.s
+    }
+
+    /// Input dimension `m`.
+    #[inline]
+    pub fn in_dim(&self) -> usize {
+        self.m
+    }
+
+    /// `S · A` for dense `A` (m×n) → (s×n).
+    pub fn apply_left(&self, a: &Mat) -> Mat {
+        assert_eq!(a.rows(), self.m, "apply_left: A has {} rows, sketch wants {}", a.rows(), self.m);
+        match &self.op {
+            Op::Gaussian(g) => crate::linalg::matmul(g, a),
+            Op::Sampling { idx, scale } => {
+                let mut out = a.select_rows(idx);
+                for (t, &sc) in scale.iter().enumerate() {
+                    for v in out.row_mut(t) {
+                        *v *= sc;
+                    }
+                }
+                out
+            }
+            Op::Srht { signs, sample, padded, scale } => srht::apply_left(a, signs, sample, *padded, *scale),
+            Op::Count { bucket, sign } => {
+                let mut out = Mat::zeros(self.s, a.cols());
+                for i in 0..self.m {
+                    let (b, sg) = (bucket[i], sign[i]);
+                    let src = a.row(i);
+                    let dst = out.row_mut(b);
+                    for (d, &v) in dst.iter_mut().zip(src) {
+                        *d += sg * v;
+                    }
+                }
+                out
+            }
+            Op::Osnap { buckets, signs, p } => {
+                let mut out = Mat::zeros(self.s, a.cols());
+                for i in 0..self.m {
+                    let src = a.row(i);
+                    for t in 0..*p {
+                        let (b, sg) = (buckets[i * p + t], signs[i * p + t]);
+                        let dst = out.row_mut(b);
+                        for (d, &v) in dst.iter_mut().zip(src) {
+                            *d += sg * v;
+                        }
+                    }
+                }
+                out
+            }
+            Op::Composed { first, second } => second.apply_left(&first.apply_left(a)),
+        }
+    }
+
+    /// `S · A` for CSR `A` — `O(nnz)` for sampling/count/OSNAP families.
+    pub fn apply_left_csr(&self, a: &Csr) -> Mat {
+        assert_eq!(a.rows(), self.m, "apply_left_csr: dim mismatch");
+        match &self.op {
+            Op::Gaussian(g) => a.left_mul_dense(g),
+            Op::Sampling { idx, scale } => a.select_rows_scaled_dense(idx, scale),
+            Op::Srht { .. } => self.apply_left(&a.to_dense()),
+            Op::Count { bucket, sign } => {
+                let mut out = Mat::zeros(self.s, a.cols());
+                for i in 0..self.m {
+                    let (cols, vals) = a.row(i);
+                    if cols.is_empty() {
+                        continue;
+                    }
+                    let (b, sg) = (bucket[i], sign[i]);
+                    let dst = out.row_mut(b);
+                    for (&j, &v) in cols.iter().zip(vals) {
+                        dst[j] += sg * v;
+                    }
+                }
+                out
+            }
+            Op::Osnap { buckets, signs, p } => {
+                let mut out = Mat::zeros(self.s, a.cols());
+                for i in 0..self.m {
+                    let (cols, vals) = a.row(i);
+                    if cols.is_empty() {
+                        continue;
+                    }
+                    for t in 0..*p {
+                        let (b, sg) = (buckets[i * p + t], signs[i * p + t]);
+                        let dst = out.row_mut(b);
+                        for (&j, &v) in cols.iter().zip(vals) {
+                            dst[j] += sg * v;
+                        }
+                    }
+                }
+                out
+            }
+            Op::Composed { first, second } => second.apply_left(&first.apply_left_csr(a)),
+        }
+    }
+
+    /// `A · Sᵀ` for dense `A` (n×m) → (n×s).
+    pub fn apply_right(&self, a: &Mat) -> Mat {
+        assert_eq!(a.cols(), self.m, "apply_right: A has {} cols, sketch wants {}", a.cols(), self.m);
+        match &self.op {
+            Op::Gaussian(g) => crate::linalg::matmul_a_bt(a, g),
+            Op::Sampling { idx, scale } => {
+                let mut out = a.select_cols(idx);
+                for i in 0..out.rows() {
+                    let row = out.row_mut(i);
+                    for (t, &sc) in scale.iter().enumerate() {
+                        row[t] *= sc;
+                    }
+                }
+                out
+            }
+            Op::Srht { signs, sample, padded, scale } => srht::apply_right(a, signs, sample, *padded, *scale),
+            Op::Count { bucket, sign } => {
+                let mut out = Mat::zeros(a.rows(), self.s);
+                for i in 0..a.rows() {
+                    let src = a.row(i);
+                    let dst = out.row_mut(i);
+                    for j in 0..self.m {
+                        dst[bucket[j]] += sign[j] * src[j];
+                    }
+                }
+                out
+            }
+            Op::Osnap { buckets, signs, p } => {
+                let mut out = Mat::zeros(a.rows(), self.s);
+                for i in 0..a.rows() {
+                    let src = a.row(i);
+                    let dst = out.row_mut(i);
+                    for j in 0..self.m {
+                        for t in 0..*p {
+                            dst[buckets[j * p + t]] += signs[j * p + t] * src[j];
+                        }
+                    }
+                }
+                out
+            }
+            Op::Composed { first, second } => second.apply_right(&first.apply_right(a)),
+        }
+    }
+
+    /// `A · Sᵀ` for CSR `A`.
+    pub fn apply_right_csr(&self, a: &Csr) -> Mat {
+        assert_eq!(a.cols(), self.m, "apply_right_csr: dim mismatch");
+        match &self.op {
+            Op::Gaussian(g) => {
+                let mut out = Mat::zeros(a.rows(), self.s);
+                for i in 0..a.rows() {
+                    let (cols, vals) = a.row(i);
+                    let dst = out.row_mut(i);
+                    for (t, d) in dst.iter_mut().enumerate() {
+                        let grow = g.row(t);
+                        let mut acc = 0.0;
+                        for (&j, &v) in cols.iter().zip(vals) {
+                            acc += grow[j] * v;
+                        }
+                        *d = acc;
+                    }
+                }
+                out
+            }
+            Op::Srht { .. } => self.apply_right(&a.to_dense()),
+            Op::Sampling { idx, scale } => {
+                let mut pos_of: std::collections::HashMap<usize, Vec<usize>> = Default::default();
+                for (t, &j) in idx.iter().enumerate() {
+                    pos_of.entry(j).or_default().push(t);
+                }
+                let mut out = Mat::zeros(a.rows(), self.s);
+                for i in 0..a.rows() {
+                    let (cols, vals) = a.row(i);
+                    let dst = out.row_mut(i);
+                    for (&j, &v) in cols.iter().zip(vals) {
+                        if let Some(ts) = pos_of.get(&j) {
+                            for &t in ts {
+                                dst[t] = scale[t] * v;
+                            }
+                        }
+                    }
+                }
+                out
+            }
+            Op::Count { bucket, sign } => {
+                let mut out = Mat::zeros(a.rows(), self.s);
+                for i in 0..a.rows() {
+                    let (cols, vals) = a.row(i);
+                    let dst = out.row_mut(i);
+                    for (&j, &v) in cols.iter().zip(vals) {
+                        dst[bucket[j]] += sign[j] * v;
+                    }
+                }
+                out
+            }
+            Op::Osnap { buckets, signs, p } => {
+                let mut out = Mat::zeros(a.rows(), self.s);
+                for i in 0..a.rows() {
+                    let (cols, vals) = a.row(i);
+                    let dst = out.row_mut(i);
+                    for (&j, &v) in cols.iter().zip(vals) {
+                        for t in 0..*p {
+                            dst[buckets[j * p + t]] += signs[j * p + t] * v;
+                        }
+                    }
+                }
+                out
+            }
+            Op::Composed { first, second } => second.apply_right(&first.apply_right_csr(a)),
+        }
+    }
+
+    /// Materialize `S` as a dense matrix (tests, artifact generation).
+    pub fn to_dense(&self) -> Mat {
+        let id = Mat::eye(self.m);
+        self.apply_left(&id)
+    }
+
+    /// Restrict the sketch to the input coordinates `c0..c1` — i.e. the
+    /// column slice `S[:, c0..c1]` as a new sketch on `c1 - c0` inputs.
+    ///
+    /// This is what makes sketches *streamable*: for a column block
+    /// `A_L = A[:, c0..c1]`, `A · Sᵀ = Σ_blocks A_L · (S[:, c0..c1])ᵀ`,
+    /// so the coordinator can consume blocks with a sliced sketch and
+    /// accumulate. Supported for Gaussian, sampling, CountSketch, OSNAP,
+    /// and compositions whose first stage is sliceable; SRHT mixes all
+    /// coordinates globally and cannot be sliced (panics).
+    pub fn slice_input(&self, c0: usize, c1: usize) -> Sketch {
+        assert!(c0 <= c1 && c1 <= self.m, "slice_input out of bounds");
+        let w = c1 - c0;
+        let op = match &self.op {
+            Op::Gaussian(g) => Op::Gaussian(g.slice(0, g.rows(), c0, c1)),
+            Op::Sampling { idx, scale } => {
+                // Rows sampling a coordinate outside the slice become zero
+                // rows (index 0, scale 0 — exact).
+                let mut nidx = Vec::with_capacity(idx.len());
+                let mut nscale = Vec::with_capacity(scale.len());
+                for (&i, &sc) in idx.iter().zip(scale) {
+                    if i >= c0 && i < c1 {
+                        nidx.push(i - c0);
+                        nscale.push(sc);
+                    } else {
+                        nidx.push(0);
+                        nscale.push(0.0);
+                    }
+                }
+                Op::Sampling { idx: nidx, scale: nscale }
+            }
+            Op::Count { bucket, sign } => {
+                Op::Count { bucket: bucket[c0..c1].to_vec(), sign: sign[c0..c1].to_vec() }
+            }
+            Op::Osnap { buckets, signs, p } => Op::Osnap {
+                buckets: buckets[c0 * p..c1 * p].to_vec(),
+                signs: signs[c0 * p..c1 * p].to_vec(),
+                p: *p,
+            },
+            Op::Composed { first, second } => {
+                let sliced = first.slice_input(c0, c1);
+                return Sketch::from_op(
+                    self.s,
+                    w,
+                    Op::Composed {
+                        first: Box::new(sliced),
+                        second: Box::new(Sketch::from_op(second.s, second.m, clone_op(&second.op))),
+                    },
+                );
+            }
+            Op::Srht { .. } => panic!("SRHT sketches cannot be input-sliced (global mixing)"),
+        };
+        Sketch::from_op(self.s, w, op)
+    }
+}
+
+/// Deep-clone an op (sketches are cheap to clone except Gaussian).
+fn clone_op(op: &Op) -> Op {
+    match op {
+        Op::Gaussian(g) => Op::Gaussian(g.clone()),
+        Op::Sampling { idx, scale } => Op::Sampling { idx: idx.clone(), scale: scale.clone() },
+        Op::Srht { signs, sample, padded, scale } => {
+            Op::Srht { signs: signs.clone(), sample: sample.clone(), padded: *padded, scale: *scale }
+        }
+        Op::Count { bucket, sign } => Op::Count { bucket: bucket.clone(), sign: sign.clone() },
+        Op::Osnap { buckets, signs, p } => {
+            Op::Osnap { buckets: buckets.clone(), signs: signs.clone(), p: *p }
+        }
+        Op::Composed { first, second } => Op::Composed {
+            first: Box::new(Sketch::from_op(first.s, first.m, clone_op(&first.op))),
+            second: Box::new(Sketch::from_op(second.s, second.m, clone_op(&second.op))),
+        },
+    }
+}
+
+impl Clone for Sketch {
+    fn clone(&self) -> Self {
+        Sketch::from_op(self.s, self.m, clone_op(&self.op))
+    }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,22 @@
+//! OSNAP (Nelson–Nguyễn 2013): `p` nonzeros per column, each a random
+//! sign scaled by `1/sqrt(p)`, at distinct uniformly random rows.
+//! `p = O(1)` suffices per the paper (Algorithm 3 step 3 uses O(1)
+//! nonzeros per column); we default to p = 2.
+
+use super::{Op, Sketch};
+use crate::rng::Pcg64;
+
+pub(crate) fn draw(s: usize, m: usize, p: usize, rng: &mut Pcg64) -> Sketch {
+    assert!(p >= 1 && p <= s, "osnap: need 1 <= p <= s");
+    let inv = 1.0 / (p as f64).sqrt();
+    let mut buckets = Vec::with_capacity(m * p);
+    let mut signs = Vec::with_capacity(m * p);
+    for _ in 0..m {
+        let rows = rng.sample_without_replacement(s, p);
+        for t in 0..p {
+            buckets.push(rows[t]);
+            signs.push(rng.next_sign() as f64 * inv);
+        }
+    }
+    Sketch::from_op(s, m, Op::Osnap { buckets, signs, p })
+}

@@ -1,0 +1,93 @@
+//! Subsampled Randomized Hadamard Transform:
+//! `S = sqrt(m̃/s) · P · H · D` with `H` the orthonormal Walsh–Hadamard
+//! matrix on the zero-padded dimension `m̃ = 2^⌈log2 m⌉`, `D` random ±1
+//! diagonal, `P` a uniform row sampler. Applying to an m×n matrix costs
+//! `O(m̃ n log m̃)` via the in-place fast Walsh–Hadamard transform.
+
+use super::{Op, Sketch};
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+
+pub(crate) fn draw(s: usize, m: usize, rng: &mut Pcg64) -> Sketch {
+    let padded = m.next_power_of_two();
+    let signs: Vec<f64> = (0..m).map(|_| rng.next_sign() as f64).collect();
+    let sample: Vec<usize> = (0..s).map(|_| rng.next_range(padded)).collect();
+    // H is orthonormal (entries ±1/sqrt(padded)); uniform sampling of s of
+    // padded rows needs sqrt(padded/s) to keep E[SᵀS] = I.
+    let scale = ((padded as f64) / (s as f64)).sqrt();
+    Sketch::from_op(s, m, Op::Srht { signs, sample, padded, scale })
+}
+
+/// In-place fast Walsh–Hadamard transform of a buffer whose length is a
+/// power of two (unnormalized butterflies; caller divides by sqrt(len)).
+pub(crate) fn fwht(buf: &mut [f64]) {
+    let n = buf.len();
+    debug_assert!(n.is_power_of_two());
+    let mut h = 1;
+    while h < n {
+        for block in (0..n).step_by(h * 2) {
+            for i in block..block + h {
+                let (x, y) = (buf[i], buf[i + h]);
+                buf[i] = x + y;
+                buf[i + h] = x - y;
+            }
+        }
+        h *= 2;
+    }
+}
+
+/// `S · A`: sign-flip rows, FWHT each column over the padded domain,
+/// select sampled rows with scaling.
+pub(crate) fn apply_left(a: &Mat, signs: &[f64], sample: &[usize], padded: usize, scale: f64) -> Mat {
+    let (m, n) = a.shape();
+    let s = sample.len();
+    let norm = 1.0 / (padded as f64).sqrt();
+    let mut out = Mat::zeros(s, n);
+    // Process columns in strips to stay cache-friendly: transform a strip
+    // of `W` columns at once, walking the FWHT over rows.
+    const W: usize = 32;
+    let mut strip = vec![0.0f64; padded * W];
+    for j0 in (0..n).step_by(W) {
+        let w = W.min(n - j0);
+        // Load strip (row-major a → column-strip buffer, padded with 0).
+        strip[..padded * w].iter_mut().for_each(|v| *v = 0.0);
+        for i in 0..m {
+            let arow = &a.row(i)[j0..j0 + w];
+            let sg = signs[i];
+            for (jj, &v) in arow.iter().enumerate() {
+                strip[jj * padded + i] = sg * v;
+            }
+        }
+        for jj in 0..w {
+            let col = &mut strip[jj * padded..(jj + 1) * padded];
+            fwht(col);
+            for (t, &src) in sample.iter().enumerate() {
+                out[(t, j0 + jj)] = col[src] * norm * scale;
+            }
+        }
+    }
+    out
+}
+
+/// `A · Sᵀ` where S sketches the column dimension of A: sign-flip
+/// columns, FWHT each row, select sampled coordinates.
+pub(crate) fn apply_right(a: &Mat, signs: &[f64], sample: &[usize], padded: usize, scale: f64) -> Mat {
+    let (m, n) = a.shape();
+    let s = sample.len();
+    let norm = 1.0 / (padded as f64).sqrt();
+    let mut out = Mat::zeros(m, s);
+    let mut buf = vec![0.0f64; padded];
+    for i in 0..m {
+        buf.fill(0.0);
+        for (j, &v) in a.row(i).iter().enumerate() {
+            buf[j] = signs[j] * v;
+        }
+        let _ = n;
+        fwht(&mut buf);
+        let orow = out.row_mut(i);
+        for (t, &src) in sample.iter().enumerate() {
+            orow[t] = buf[src] * norm * scale;
+        }
+    }
+    out
+}

@@ -1,0 +1,220 @@
+//! Sketch-library tests: correctness of every apply path against the
+//! densified operator, plus empirical checks of Lemma 1's two properties.
+
+use super::*;
+use crate::linalg::{matmul, matmul_a_bt, qr_thin, Mat};
+use crate::rng::rng;
+use crate::sparse::{Csr, Triplet};
+use crate::testing::assert_close;
+
+fn random_csr(m: usize, n: usize, density: f64, seed: u64) -> Csr {
+    let mut r = rng(seed);
+    let mut t = Vec::new();
+    for i in 0..m {
+        for j in 0..n {
+            if r.next_f64() < density {
+                t.push(Triplet { row: i, col: j, val: r.next_normal() });
+            }
+        }
+    }
+    Csr::from_triplets(m, n, t)
+}
+
+/// Every family: apply_left(A) must equal to_dense(S) * A, and the CSR and
+/// right-apply paths must agree with the dense operator too.
+#[test]
+fn all_families_consistent_with_dense_operator() {
+    let (s, m, n) = (16, 37, 9);
+    for kind in SketchKind::all() {
+        let mut r = rng(100 + kind.name().len() as u64);
+        let scores: Vec<f64> = (0..m).map(|i| 1.0 + (i % 5) as f64).collect();
+        let sk = Sketch::draw(kind, s, m, Some(&scores), &mut r);
+        assert_eq!(sk.out_dim(), s);
+        assert_eq!(sk.in_dim(), m);
+        let sd = sk.to_dense();
+        assert_eq!(sd.shape(), (s, m));
+
+        let a = Mat::randn(m, n, &mut r);
+        let got = sk.apply_left(&a);
+        let want = matmul(&sd, &a);
+        assert_close(&got, &want, 1e-10, &format!("{} apply_left", kind.name()));
+
+        let ac = Csr::from_dense(&a, 0.0);
+        let got_csr = sk.apply_left_csr(&ac);
+        assert_close(&got_csr, &want, 1e-10, &format!("{} apply_left_csr", kind.name()));
+
+        let b = Mat::randn(n, m, &mut r);
+        let got_r = sk.apply_right(&b);
+        let want_r = matmul_a_bt(&b, &sd);
+        assert_close(&got_r, &want_r, 1e-10, &format!("{} apply_right", kind.name()));
+
+        let bc = Csr::from_dense(&b, 0.0);
+        let got_rc = sk.apply_right_csr(&bc);
+        assert_close(&got_rc, &want_r, 1e-10, &format!("{} apply_right_csr", kind.name()));
+    }
+}
+
+#[test]
+fn csr_paths_on_truly_sparse_input() {
+    let a = random_csr(50, 31, 0.1, 7);
+    for kind in [SketchKind::Count, SketchKind::Osnap, SketchKind::Gaussian] {
+        let mut r = rng(3);
+        let sk = Sketch::draw(kind, 12, 50, None, &mut r);
+        let want = matmul(&sk.to_dense(), &a.to_dense());
+        assert_close(&sk.apply_left_csr(&a), &want, 1e-10, kind.name());
+    }
+}
+
+/// Lemma 1 property 1 (subspace embedding): for an orthonormal U (m×k),
+/// all singular values of SU should lie in [1-η, 1+η].
+#[test]
+fn subspace_embedding_property() {
+    let m = 512;
+    let k = 8;
+    let mut r = rng(42);
+    let u = qr_thin(&Mat::randn(m, k, &mut r)).q;
+    let scores = u.row_norms_sq();
+    // Generous sizes appropriate for each family at this (m, k).
+    let cases = [
+        (SketchKind::Gaussian, 160),
+        (SketchKind::Srht, 200),
+        (SketchKind::Count, 400),
+        (SketchKind::Osnap, 300),
+        (SketchKind::Leverage, 300),
+        (SketchKind::OsnapGaussian, 200),
+    ];
+    for (kind, s) in cases {
+        let sk = Sketch::draw(kind, s, m, Some(&scores), &mut r);
+        let su = sk.apply_left(&u);
+        let gram = crate::linalg::matmul_at_b(&su, &su);
+        // Eigenvalues of (SU)ᵀSU must be within [1-η, 1+η].
+        let e = crate::linalg::eigh(&gram);
+        let (lo, hi) = (e.values[k - 1], e.values[0]);
+        assert!(
+            lo > 0.25 && hi < 2.5,
+            "{}: singular value bounds violated: [{lo}, {hi}]",
+            kind.name()
+        );
+    }
+}
+
+/// Lemma 1 property 2 (approximate matrix multiplication): averaged over
+/// draws, ‖BᵀSᵀSA − BᵀA‖_F should shrink like 1/sqrt(s).
+#[test]
+fn matrix_multiplication_property_scales() {
+    let m = 256;
+    let mut r = rng(9);
+    let a = Mat::randn(m, 6, &mut r);
+    let b = Mat::randn(m, 5, &mut r);
+    let exact = crate::linalg::matmul_at_b(&b, &a);
+    let denom = a.fro_norm() * b.fro_norm();
+    for kind in [SketchKind::Gaussian, SketchKind::Count, SketchKind::Osnap] {
+        let mut err_small = 0.0;
+        let mut err_big = 0.0;
+        let trials = 12;
+        for t in 0..trials {
+            let mut rr = rng(1000 + t);
+            let sk_small = Sketch::draw(kind, 32, m, None, &mut rr);
+            let sk_big = Sketch::draw(kind, 512, m, None, &mut rr);
+            for (sk, acc) in [(&sk_small, &mut err_small), (&sk_big, &mut err_big)] {
+                let sa = sk.apply_left(&a);
+                let sb = sk.apply_left(&b);
+                let approx = crate::linalg::matmul_at_b(&sb, &sa);
+                *acc += crate::linalg::fro_norm_diff(&approx, &exact) / denom;
+            }
+        }
+        // s grows 16x => error should shrink ~4x; accept 2x as the pass bar.
+        assert!(
+            err_big < err_small / 2.0,
+            "{}: error did not shrink with s: small={err_small} big={err_big}",
+            kind.name()
+        );
+    }
+}
+
+/// Unbiasedness: E[SᵀS] = I — empirical mean over draws approaches I.
+#[test]
+fn expectation_identity() {
+    let m = 24;
+    for kind in [SketchKind::Gaussian, SketchKind::Count, SketchKind::Osnap, SketchKind::Uniform, SketchKind::Srht] {
+        let mut acc = Mat::zeros(m, m);
+        let trials = 300;
+        for t in 0..trials {
+            let mut r = rng(5000 + t);
+            let sk = Sketch::draw(kind, 48, m, None, &mut r);
+            let sd = sk.to_dense();
+            acc += &crate::linalg::matmul_at_b(&sd, &sd);
+        }
+        acc.scale(1.0 / trials as f64);
+        let err = crate::linalg::fro_norm_diff(&acc, &Mat::eye(m)) / (m as f64).sqrt();
+        assert!(err < 0.25, "{}: E[SᵀS] far from I (err {err})", kind.name());
+    }
+}
+
+#[test]
+fn leverage_scores_sum_to_rank() {
+    let mut r = rng(17);
+    let a = Mat::randn(40, 6, &mut r);
+    let scores = row_leverage_scores(&a);
+    let total: f64 = scores.iter().sum();
+    assert!((total - 6.0).abs() < 1e-8, "sum of leverage scores = rank, got {total}");
+    assert!(scores.iter().all(|&s| s >= -1e-12 && s <= 1.0 + 1e-12));
+
+    let col_scores = column_leverage_scores(&a);
+    assert_eq!(col_scores.len(), 6);
+    let ct: f64 = col_scores.iter().sum();
+    assert!((ct - 6.0).abs() < 1e-8);
+}
+
+#[test]
+fn fwht_is_orthogonal_involution() {
+    let mut r = rng(23);
+    let n = 64;
+    let orig: Vec<f64> = (0..n).map(|_| r.next_normal()).collect();
+    let mut buf = orig.clone();
+    super::srht::fwht(&mut buf);
+    super::srht::fwht(&mut buf);
+    // H_unnorm^2 = n * I
+    for (a, b) in buf.iter().zip(&orig) {
+        assert!((a / n as f64 - b).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn srht_preserves_norms_in_expectation() {
+    let m = 100;
+    let mut r = rng(29);
+    let x = Mat::randn(m, 1, &mut r);
+    let norm_sq = x.fro_norm_sq();
+    let mut acc = 0.0;
+    let trials = 200;
+    for t in 0..trials {
+        let mut rr = rng(7000 + t);
+        let sk = Sketch::draw(SketchKind::Srht, 40, m, None, &mut rr);
+        acc += sk.apply_left(&x).fro_norm_sq();
+    }
+    let ratio = acc / trials as f64 / norm_sq;
+    assert!((ratio - 1.0).abs() < 0.1, "SRHT norm ratio {ratio}");
+}
+
+#[test]
+fn compose_matches_sequential() {
+    let mut r = rng(31);
+    let first = Sketch::draw(SketchKind::Count, 64, 128, None, &mut r);
+    let second = Sketch::draw(SketchKind::Gaussian, 16, 64, None, &mut r);
+    let a = Mat::randn(128, 5, &mut r);
+    let seq = second.apply_left(&first.apply_left(&a));
+    let composed = super::combined::compose(first, second);
+    assert_close(&composed.apply_left(&a), &seq, 1e-12, "compose");
+    assert_eq!(composed.out_dim(), 16);
+    assert_eq!(composed.in_dim(), 128);
+}
+
+#[test]
+#[should_panic(expected = "apply_left")]
+fn dimension_mismatch_panics() {
+    let mut r = rng(37);
+    let sk = Sketch::draw(SketchKind::Gaussian, 4, 10, None, &mut r);
+    let a = Mat::zeros(11, 3);
+    let _ = sk.apply_left(&a);
+}

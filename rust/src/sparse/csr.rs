@@ -1,0 +1,267 @@
+//! CSR sparse matrix.
+
+use crate::linalg::Mat;
+
+/// Coordinate-format entry used to assemble CSR matrices.
+#[derive(Clone, Copy, Debug)]
+pub struct Triplet {
+    pub row: usize,
+    pub col: usize,
+    pub val: f64,
+}
+
+/// Compressed sparse row matrix over `f64`.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    rows: usize,
+    cols: usize,
+    /// Row pointer array, length rows+1.
+    indptr: Vec<usize>,
+    /// Column indices, length nnz, sorted within each row.
+    indices: Vec<usize>,
+    /// Values, parallel to `indices`.
+    values: Vec<f64>,
+}
+
+impl Csr {
+    /// Assemble from (row, col, val) triplets; duplicates are summed.
+    pub fn from_triplets(rows: usize, cols: usize, mut trips: Vec<Triplet>) -> Self {
+        trips.sort_by(|a, b| (a.row, a.col).cmp(&(b.row, b.col)));
+        let mut indptr = vec![0usize; rows + 1];
+        let mut indices: Vec<usize> = Vec::with_capacity(trips.len());
+        let mut values: Vec<f64> = Vec::with_capacity(trips.len());
+        let mut last: Option<(usize, usize)> = None;
+        for t in trips {
+            assert!(t.row < rows && t.col < cols, "triplet out of bounds");
+            if last == Some((t.row, t.col)) {
+                // Duplicate coordinate: accumulate.
+                *values.last_mut().unwrap() += t.val;
+                continue;
+            }
+            indices.push(t.col);
+            values.push(t.val);
+            indptr[t.row + 1] += 1;
+            last = Some((t.row, t.col));
+        }
+        for r in 0..rows {
+            indptr[r + 1] += indptr[r];
+        }
+        Self { rows, cols, indptr, indices, values }
+    }
+
+    /// Build from raw CSR arrays (trusted input, validated cheaply).
+    pub fn from_raw(rows: usize, cols: usize, indptr: Vec<usize>, indices: Vec<usize>, values: Vec<f64>) -> Self {
+        assert_eq!(indptr.len(), rows + 1);
+        assert_eq!(indices.len(), values.len());
+        assert_eq!(*indptr.last().unwrap(), indices.len());
+        debug_assert!(indices.iter().all(|&c| c < cols));
+        Self { rows, cols, indptr, indices, values }
+    }
+
+    /// Densify-then-sparsify constructor (entries with |v| <= tol dropped).
+    pub fn from_dense(a: &Mat, tol: f64) -> Self {
+        let mut trips = Vec::new();
+        for i in 0..a.rows() {
+            for (j, &v) in a.row(i).iter().enumerate() {
+                if v.abs() > tol {
+                    trips.push(Triplet { row: i, col: j, val: v });
+                }
+            }
+        }
+        Self::from_triplets(a.rows(), a.cols(), trips)
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Sparsity as nnz / (rows*cols).
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.rows as f64 * self.cols as f64)
+    }
+
+    /// Borrow row `i` as (column indices, values).
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[usize], &[f64]) {
+        let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[s..e], &self.values[s..e])
+    }
+
+    /// Densify.
+    pub fn to_dense(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            let dst = out.row_mut(i);
+            for (&j, &v) in cols.iter().zip(vals) {
+                dst[j] = v;
+            }
+        }
+        out
+    }
+
+    /// `self * B` with dense B — O(nnz(self) * B.cols).
+    pub fn spmm(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows(), "spmm: dim mismatch");
+        let n = b.cols();
+        let mut out = Mat::zeros(self.rows, n);
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            let orow = out.row_mut(i);
+            for (&k, &v) in cols.iter().zip(vals) {
+                let brow = b.row(k);
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += v * bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// `selfᵀ * B` with dense B (B has self.rows rows) — O(nnz * B.cols).
+    pub fn spmm_t(&self, b: &Mat) -> Mat {
+        assert_eq!(self.rows, b.rows(), "spmm_t: dim mismatch");
+        let n = b.cols();
+        let mut out = Mat::zeros(self.cols, n);
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            let brow = b.row(i);
+            for (&k, &v) in cols.iter().zip(vals) {
+                let orow = out.row_mut(k);
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += v * bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// `S * self` with dense S (S.cols == self.rows) — iterates the sparse
+    /// rows once: O(nnz * S.rows).
+    pub fn left_mul_dense(&self, s: &Mat) -> Mat {
+        assert_eq!(s.cols(), self.rows, "left_mul_dense: dim mismatch");
+        let m = s.rows();
+        let mut out = Mat::zeros(m, self.cols);
+        for k in 0..self.rows {
+            let (cols, vals) = self.row(k);
+            if cols.is_empty() {
+                continue;
+            }
+            for i in 0..m {
+                let sik = s[(i, k)];
+                if sik == 0.0 {
+                    continue;
+                }
+                let orow = out.row_mut(i);
+                for (&j, &v) in cols.iter().zip(vals) {
+                    orow[j] += sik * v;
+                }
+            }
+        }
+        out
+    }
+
+    /// Transpose (O(nnz)).
+    pub fn transpose(&self) -> Csr {
+        let mut counts = vec![0usize; self.cols + 1];
+        for &j in &self.indices {
+            counts[j + 1] += 1;
+        }
+        for j in 0..self.cols {
+            counts[j + 1] += counts[j];
+        }
+        let indptr = counts.clone();
+        let mut indices = vec![0usize; self.nnz()];
+        let mut values = vec![0.0f64; self.nnz()];
+        let mut next = counts;
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            for (&j, &v) in cols.iter().zip(vals) {
+                let pos = next[j];
+                indices[pos] = i;
+                values[pos] = v;
+                next[j] += 1;
+            }
+        }
+        Csr { rows: self.cols, cols: self.rows, indptr, indices, values }
+    }
+
+    /// Gather a column subset into a dense matrix (used to extract the
+    /// sampled columns C of a sparse A).
+    pub fn select_cols_dense(&self, idx: &[usize]) -> Mat {
+        let mut pos_of: std::collections::HashMap<usize, Vec<usize>> = std::collections::HashMap::new();
+        for (o, &j) in idx.iter().enumerate() {
+            pos_of.entry(j).or_default().push(o);
+        }
+        let mut out = Mat::zeros(self.rows, idx.len());
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            let orow = out.row_mut(i);
+            for (&j, &v) in cols.iter().zip(vals) {
+                if let Some(outs) = pos_of.get(&j) {
+                    for &o in outs {
+                        orow[o] = v;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Gather a row subset into a dense matrix, scaling row `idx[t]` by
+    /// `scale[t]` (sampling-sketch application).
+    pub fn select_rows_scaled_dense(&self, idx: &[usize], scale: &[f64]) -> Mat {
+        assert_eq!(idx.len(), scale.len());
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (t, (&i, &s)) in idx.iter().zip(scale).enumerate() {
+            let (cols, vals) = self.row(i);
+            let orow = out.row_mut(t);
+            for (&j, &v) in cols.iter().zip(vals) {
+                orow[j] = s * v;
+            }
+        }
+        out
+    }
+
+    /// Squared Frobenius norm.
+    pub fn fro_norm_sq(&self) -> f64 {
+        self.values.iter().map(|v| v * v).sum()
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.fro_norm_sq().sqrt()
+    }
+
+    /// Column slice (contiguous range) as a new CSR — used by the
+    /// streaming reader to hand out column blocks.
+    pub fn slice_cols(&self, c0: usize, c1: usize) -> Csr {
+        assert!(c0 <= c1 && c1 <= self.cols);
+        let mut trips = Vec::new();
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            for (&j, &v) in cols.iter().zip(vals) {
+                if j >= c0 && j < c1 {
+                    trips.push(Triplet { row: i, col: j - c0, val: v });
+                }
+            }
+        }
+        Csr::from_triplets(self.rows, c1 - c0, trips)
+    }
+}

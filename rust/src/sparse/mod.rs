@@ -1,0 +1,106 @@
+//! Compressed sparse row matrices and the operations the input-sparsity
+//! code paths need (`O(nnz)` sketch application, spmm, norms).
+
+mod csr;
+
+pub use csr::{Csr, Triplet};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, Mat};
+    use crate::rng::rng;
+    use crate::testing::assert_close;
+
+    fn random_sparse(m: usize, n: usize, density: f64, seed: u64) -> Csr {
+        let mut r = rng(seed);
+        let mut trips = Vec::new();
+        for i in 0..m {
+            for j in 0..n {
+                if r.next_f64() < density {
+                    trips.push(Triplet { row: i, col: j, val: r.next_normal() });
+                }
+            }
+        }
+        Csr::from_triplets(m, n, trips)
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let a = random_sparse(13, 9, 0.3, 1);
+        let d = a.to_dense();
+        let a2 = Csr::from_dense(&d, 0.0);
+        assert_close(&a2.to_dense(), &d, 1e-15, "csr roundtrip");
+        assert_eq!(a.nnz(), a2.nnz());
+    }
+
+    #[test]
+    fn spmm_matches_dense() {
+        let a = random_sparse(20, 15, 0.2, 2);
+        let mut r = rng(3);
+        let b = Mat::randn(15, 7, &mut r);
+        let got = a.spmm(&b);
+        let want = matmul(&a.to_dense(), &b);
+        assert_close(&got, &want, 1e-12, "spmm");
+    }
+
+    #[test]
+    fn spmm_t_matches_dense() {
+        let a = random_sparse(20, 15, 0.2, 4);
+        let mut r = rng(5);
+        let b = Mat::randn(20, 6, &mut r);
+        let got = a.spmm_t(&b);
+        let want = matmul(&a.to_dense().transpose(), &b);
+        assert_close(&got, &want, 1e-12, "spmm_t");
+    }
+
+    #[test]
+    fn left_dense_product() {
+        let a = random_sparse(12, 18, 0.25, 6);
+        let mut r = rng(7);
+        let s = Mat::randn(5, 12, &mut r);
+        let got = a.left_mul_dense(&s);
+        let want = matmul(&s, &a.to_dense());
+        assert_close(&got, &want, 1e-12, "left_mul_dense");
+    }
+
+    #[test]
+    fn norms_and_cols() {
+        let a = random_sparse(10, 10, 0.3, 8);
+        let d = a.to_dense();
+        assert!((a.fro_norm() - d.fro_norm()).abs() < 1e-12);
+        let cols = a.select_cols_dense(&[0, 3, 7]);
+        let want = d.select_cols(&[0, 3, 7]);
+        assert_close(&cols, &want, 1e-15, "select_cols_dense");
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = random_sparse(9, 14, 0.2, 9);
+        let att = a.transpose().transpose();
+        assert_close(&att.to_dense(), &a.to_dense(), 1e-15, "transpose twice");
+    }
+
+    #[test]
+    fn row_slice_view() {
+        let a = random_sparse(8, 8, 0.4, 10);
+        let d = a.to_dense();
+        for i in 0..8 {
+            let (cols, vals) = a.row(i);
+            for (&j, &v) in cols.iter().zip(vals) {
+                assert_eq!(d[(i, j)], v);
+            }
+            let nnz_row = (0..8).filter(|&j| d[(i, j)] != 0.0).count();
+            assert_eq!(cols.len(), nnz_row);
+        }
+    }
+
+    #[test]
+    fn empty_matrix_ok() {
+        let a = Csr::from_triplets(5, 5, vec![]);
+        assert_eq!(a.nnz(), 0);
+        let b = Mat::eye(5);
+        let c = a.spmm(&b);
+        assert_eq!(c.fro_norm(), 0.0);
+    }
+}

@@ -1,0 +1,30 @@
+//! Nyström (Williams–Seeger 2001) and the optimal/prototype core
+//! (Wang et al. 2016a) — the two classical baselines of §6.2.
+
+use super::KernelOracle;
+use crate::linalg::{matmul, pinv, pinv_apply_left, Mat};
+
+/// Conventional Nyström core: `X = W†` where `W = K[idx, idx]` is the
+/// intersection matrix of the sampled columns. Observes only the `nc`
+/// entries of `C` (W is a sub-block of C).
+pub fn nystrom_core(c: &Mat, idx: &[usize]) -> Mat {
+    // W = C[idx, :] (rows of C at the sampled positions).
+    let w = c.select_rows(idx);
+    pinv(&w)
+}
+
+/// Optimal (modified-Nyström / prototype) core:
+/// `X = C† K (C†)ᵀ = argmin_X ‖K − C X Cᵀ‖_F`. Observes all n² entries.
+pub fn optimal_core<O: KernelOracle + ?Sized>(oracle: &O, c: &Mat) -> Mat {
+    let n = oracle.n();
+    let all: Vec<usize> = (0..n).collect();
+    let k = oracle.block(&all, &all);
+    // C†K then (C†K)C†ᵀ = pinv_apply on both sides.
+    let ck = pinv_apply_left(c, &k); // c x n
+    pinv_apply_left(c, &ck.transpose()).transpose()
+}
+
+/// `C X Cᵀ` reconstruction helper (examples).
+pub fn reconstruct(c: &Mat, x: &Mat) -> Mat {
+    matmul(&matmul(c, x), &c.transpose())
+}

@@ -1,0 +1,180 @@
+//! Tests for the SPSD approximation methods.
+
+use super::*;
+use crate::linalg::{eigh, matmul_a_bt, Mat};
+use crate::rng::rng;
+
+/// Build a small RBF kernel problem with a fast-decaying spectrum.
+fn kernel_problem(n: usize, d: usize, sigma: f64, seed: u64) -> (Mat, Mat) {
+    let mut r = rng(seed);
+    // Clustered points → near-low-rank kernel (like the paper's η ≥ 0.6).
+    let centers = Mat::randn(5, d, &mut r);
+    let mut x = Mat::zeros(n, d);
+    for i in 0..n {
+        let c = i % 5;
+        for j in 0..d {
+            x[(i, j)] = centers[(c, j)] + 0.3 * r.next_normal();
+        }
+    }
+    let oracle = RbfOracle::new(&x, sigma);
+    let all: Vec<usize> = (0..n).collect();
+    let k = oracle.block(&all, &all);
+    (x, k)
+}
+
+#[test]
+fn rbf_oracle_matches_direct() {
+    let mut r = rng(1);
+    let x = Mat::randn(20, 4, &mut r);
+    let oracle = RbfOracle::new(&x, 0.7);
+    let rows = [0usize, 5, 19];
+    let cols = [2usize, 5, 7, 11];
+    let blk = oracle.block(&rows, &cols);
+    for (oi, &i) in rows.iter().enumerate() {
+        for (oj, &j) in cols.iter().enumerate() {
+            let mut d2 = 0.0;
+            for t in 0..4 {
+                let d = x[(i, t)] - x[(j, t)];
+                d2 += d * d;
+            }
+            let want = (-0.7 * d2).exp();
+            assert!((blk[(oi, oj)] - want).abs() < 1e-12);
+        }
+    }
+    // Diagonal entries are 1.
+    let diag = oracle.block(&[3], &[3]);
+    assert!((diag[(0, 0)] - 1.0).abs() < 1e-12);
+}
+
+#[test]
+fn counting_oracle_counts() {
+    let mut r = rng(2);
+    let x = Mat::randn(30, 3, &mut r);
+    let inner = RbfOracle::new(&x, 0.5);
+    let counting = CountingOracle::new(&inner);
+    let _ = counting.block(&[0, 1, 2], &[4, 5]);
+    assert_eq!(counting.observed(), 6);
+    let _ = counting.columns(&[7]);
+    assert_eq!(counting.observed(), 6 + 30);
+}
+
+#[test]
+fn optimal_core_beats_nystrom() {
+    let (_x, k) = kernel_problem(120, 6, 0.4, 3);
+    let oracle = DenseKernelOracle { k: &k };
+    let mut r = rng(4);
+    let idx = r.sample_without_replacement(120, 15);
+    let c = oracle.columns(&idx);
+
+    let x_nys = nystrom_core(&c, &idx);
+    let x_opt = optimal_core(&oracle, &c);
+    let e_nys = error_ratio(&k, &c, &x_nys);
+    let e_opt = error_ratio(&k, &c, &x_opt);
+    assert!(e_opt <= e_nys + 1e-12, "optimal {e_opt} vs nystrom {e_nys}");
+    assert!(e_opt < 0.5, "optimal error too large: {e_opt}");
+}
+
+#[test]
+fn faster_spsd_approaches_optimal_as_s_grows() {
+    let (_x, k) = kernel_problem(200, 6, 0.4, 5);
+    let oracle = DenseKernelOracle { k: &k };
+    let mut r = rng(6);
+    let c_dim = 20;
+    let idx = r.sample_without_replacement(200, c_dim);
+    let c = oracle.columns(&idx);
+    let x_opt = optimal_core(&oracle, &c);
+    let e_opt = error_ratio(&k, &c, &x_opt);
+
+    let mut prev = f64::INFINITY;
+    for &s in &[40usize, 100, 190] {
+        let mut acc = 0.0;
+        let trials = 3;
+        for t in 0..trials {
+            let mut rr = rng(100 + s as u64 + t);
+            let x = faster_spsd_core(&oracle, &c, s, &mut rr);
+            acc += error_ratio(&k, &c, &x);
+        }
+        let e = acc / trials as f64;
+        assert!(e < prev * 1.3 + 1e-12, "error not shrinking: {e} after {prev}");
+        prev = e;
+    }
+    // At s close to n the faster-SPSD error approaches the optimal.
+    assert!(prev <= e_opt * 1.5 + 0.05, "final {prev} vs optimal {e_opt}");
+}
+
+#[test]
+fn faster_spsd_core_is_psd() {
+    let (_x, k) = kernel_problem(80, 5, 0.5, 7);
+    let oracle = DenseKernelOracle { k: &k };
+    let mut r = rng(8);
+    let sol = faster_spsd(&oracle, &FasterSpsdConfig { c: 10, s: 40 }, &mut r);
+    assert_eq!(sol.c.shape(), (80, 10));
+    assert_eq!(sol.x.shape(), (10, 10));
+    let e = eigh(&sol.x);
+    assert!(e.values.iter().all(|&w| w >= -1e-9), "core not PSD: {:?}", e.values);
+}
+
+#[test]
+fn entries_observed_matches_theorem3() {
+    let (_x, k) = kernel_problem(150, 5, 0.5, 9);
+    let oracle = DenseKernelOracle { k: &k };
+    let counting = CountingOracle::new(&oracle);
+    let mut r = rng(10);
+    let (c_dim, s) = (12, 50);
+    let _ = faster_spsd(&counting, &FasterSpsdConfig { c: c_dim, s }, &mut r);
+    // N = n*c + s*s exactly: C columns + the sampled intersection block.
+    assert_eq!(counting.observed(), (150 * c_dim + s * s) as u64);
+}
+
+#[test]
+fn fast_spsd_single_sketch_baseline_runs() {
+    let (_x, k) = kernel_problem(100, 5, 0.5, 11);
+    let oracle = DenseKernelOracle { k: &k };
+    let mut r = rng(12);
+    let idx = r.sample_without_replacement(100, 10);
+    let c = oracle.columns(&idx);
+    let x = fast_spsd_core(&oracle, &c, 60, &mut r);
+    assert_eq!(x.shape(), (10, 10));
+    let e = error_ratio(&k, &c, &x);
+    assert!(e.is_finite() && e < 2.0, "fast-SPSD error {e}");
+}
+
+/// §6.2's headline comparison, in miniature: with s = 10c the faster-SPSD
+/// error should be close to optimal and beat Nyström.
+#[test]
+fn headline_comparison_shape() {
+    let (_x, k) = kernel_problem(300, 6, 0.4, 13);
+    let oracle = DenseKernelOracle { k: &k };
+    let mut r = rng(14);
+    let c_dim = 20;
+    let idx = r.sample_without_replacement(300, c_dim);
+    let c = oracle.columns(&idx);
+
+    let e_opt = error_ratio(&k, &c, &optimal_core(&oracle, &c));
+    let e_nys = error_ratio(&k, &c, &nystrom_core(&c, &idx));
+    let mut acc = 0.0;
+    let trials = 3;
+    for t in 0..trials {
+        let mut rr = rng(200 + t);
+        acc += error_ratio(&k, &c, &faster_spsd_core(&oracle, &c, 10 * c_dim, &mut rr));
+    }
+    let e_faster = acc / trials as f64;
+    assert!(
+        e_faster < e_nys,
+        "faster-SPSD ({e_faster}) should beat Nyström ({e_nys}); optimal {e_opt}"
+    );
+    assert!(e_faster < e_opt * 1.25 + 0.02, "faster-SPSD {e_faster} far from optimal {e_opt}");
+}
+
+#[test]
+fn reconstruct_shape() {
+    let mut r = rng(15);
+    let c = Mat::randn(30, 4, &mut r);
+    let b = Mat::randn(4, 4, &mut r);
+    let x = matmul_a_bt(&b, &b);
+    let k_hat = reconstruct(&c, &x);
+    assert_eq!(k_hat.shape(), (30, 30));
+    // C X Cᵀ is symmetric PSD.
+    let e = eigh(&k_hat);
+    assert!(e.values.iter().all(|&w| w >= -1e-8));
+}

@@ -1,0 +1,175 @@
+//! Fast SP-SVD — Algorithm 3 of the paper.
+
+use super::source::ColumnStream;
+use crate::linalg::{matmul, pinv_apply_left, pinv_apply_right, qr_thin, svd_jacobi, Mat, Svd};
+use crate::rng::Pcg64;
+use crate::sketch::{Sketch, SketchKind};
+
+/// Sketch sizes for Algorithm 3. The paper's step 2 sets
+/// `r0, c0 = O((k/ε)^{1+γ})`, `r, c = O(k/ε)` and
+/// `s_c, s_r = O(max{k/ε^{3/2}, k/(ε²ρ²)} + (k/ε)^{1+γ})`; the §6.3
+/// experiments use `c = r` (one tuning knob — a practical advantage over
+/// Algorithm 4) and `s_c = 3c·√a`.
+#[derive(Clone, Debug)]
+pub struct FastSpSvdConfig {
+    /// Target rank k (metadata; the factors have rank ≥ k).
+    pub k: usize,
+    /// Range-sketch size c (columns of C = A Ω̃).
+    pub c: usize,
+    /// Range-sketch size r (rows of R = Ψ̃ A).
+    pub r: usize,
+    /// Core-solve sketch size s_c.
+    pub s_c: usize,
+    /// Core-solve sketch size s_r.
+    pub s_r: usize,
+    /// Intermediate OSNAP dimension multiplier for Ω/Ψ (c0 = mult·c).
+    pub osnap_mult: usize,
+    /// Family for the core sketches S_C/S_R (OSNAP in the paper;
+    /// Gaussian for dense data, CountSketch for sparse in §6.3).
+    pub core_kind: SketchKind,
+}
+
+impl FastSpSvdConfig {
+    /// §6.3 parameterization: `c = r = mult·k`, `s_c = s_r = 3c·√a`
+    /// where `a = mult` plays the x-axis role of Figure 3.
+    pub fn paper(k: usize, mult: usize, core_kind: SketchKind) -> Self {
+        let c = mult * k;
+        let s = (3.0 * c as f64 * (mult as f64).sqrt()).ceil() as usize;
+        Self { k, c, r: c, s_c: s, s_r: s, osnap_mult: 4, core_kind }
+    }
+}
+
+/// Output factors: `A ≈ U diag(σ) Vᵀ` with rank = min(c, r) ≥ k.
+pub struct SpSvdResult {
+    pub u: Mat,
+    pub sigma: Vec<f64>,
+    pub v: Mat,
+    /// Number of column blocks consumed (diagnostics).
+    pub blocks: usize,
+}
+
+/// The realized sketches of Algorithm 3 (drawn before the pass; the
+/// coordinator shares this struct so the concurrent pipeline and this
+/// reference implementation are bit-identical given the same rng seed).
+pub struct FastSpSvdSketches {
+    /// Ψ̃ = G_R Ψ — r×m (left range sketch).
+    pub psi: Sketch,
+    /// Ω̃ᵀ = G_C Ω — c×n (right range sketch, stored as the c×n map so
+    /// `C = A Ω̃` is `apply_right` over column coordinates).
+    pub omega: Sketch,
+    /// S_C — s_c×m.
+    pub s_c: Sketch,
+    /// S_R — s_r×n.
+    pub s_r: Sketch,
+}
+
+impl FastSpSvdSketches {
+    /// Draw all four sketches. Ψ̃ and Ω̃ are OSNAP∘Gaussian compositions
+    /// exactly as in Algorithm 3 step 3 (OSNAP with O(1) nonzeros per
+    /// column to an intermediate `mult`-inflated dimension, then a dense
+    /// Gaussian down to r / c).
+    pub fn draw(cfg: &FastSpSvdConfig, m: usize, n: usize, rng: &mut Pcg64) -> Self {
+        let r0 = (cfg.osnap_mult * cfg.r).min(m);
+        let c0 = (cfg.osnap_mult * cfg.c).min(n);
+        let psi = {
+            let osnap = Sketch::draw(SketchKind::Osnap, r0, m, None, rng);
+            let g = Sketch::draw(SketchKind::Gaussian, cfg.r, r0, None, rng);
+            crate::sketch::compose_sketches(osnap, g)
+        };
+        let omega = {
+            let osnap = Sketch::draw(SketchKind::Osnap, c0, n, None, rng);
+            let g = Sketch::draw(SketchKind::Gaussian, cfg.c, c0, None, rng);
+            crate::sketch::compose_sketches(osnap, g)
+        };
+        let s_c = Sketch::draw(cfg.core_kind, cfg.s_c, m, None, rng);
+        let s_r = Sketch::draw(cfg.core_kind, cfg.s_r, n, None, rng);
+        Self { psi, omega, s_c, s_r }
+    }
+}
+
+/// Algorithm 3 — Fast Single-Pass SVD.
+///
+/// Consumes the stream exactly once. Memory: `O((m+n)(c+r) + s_c s_r)` —
+/// the accumulators only; blocks are dropped after processing.
+pub fn fast_sp_svd(
+    stream: &mut dyn ColumnStream,
+    cfg: &FastSpSvdConfig,
+    rng: &mut Pcg64,
+) -> SpSvdResult {
+    let (m, n) = (stream.rows(), stream.cols());
+    let sketches = FastSpSvdSketches::draw(cfg, m, n, rng);
+    fast_sp_svd_with(stream, cfg, &sketches)
+}
+
+/// Algorithm 3 with pre-drawn sketches (shared with the coordinator).
+pub fn fast_sp_svd_with(
+    stream: &mut dyn ColumnStream,
+    cfg: &FastSpSvdConfig,
+    sk: &FastSpSvdSketches,
+) -> SpSvdResult {
+    let (m, n) = (stream.rows(), stream.cols());
+    // Accumulators (steps 4–9).
+    let mut c_acc = Mat::zeros(m, cfg.c); // C = A Ω̃
+    let mut r_acc = Mat::zeros(cfg.r, n); // R = Ψ̃ A
+    let mut m_acc = Mat::zeros(cfg.s_c, cfg.s_r); // M = S_C A S_Rᵀ
+    let mut blocks = 0usize;
+
+    while let Some(block) = stream.next_block() {
+        let a_l = &block.data;
+        let (c0, c1) = (block.col_start, block.col_start + a_l.cols());
+        accumulate_block(a_l, c0, c1, sk, &mut c_acc, &mut r_acc, &mut m_acc);
+        blocks += 1;
+    }
+
+    let (u, sigma, v) = finalize(cfg, sk, &c_acc, &r_acc, &m_acc);
+    SpSvdResult { u, sigma, v, blocks }
+}
+
+/// One streaming update (steps 6–8). Factored out so the coordinator's
+/// worker threads and the PJRT `stream_update` artifact path share the
+/// exact same semantics.
+pub fn accumulate_block(
+    a_l: &Mat,
+    c0: usize,
+    c1: usize,
+    sk: &FastSpSvdSketches,
+    c_acc: &mut Mat,
+    r_acc: &mut Mat,
+    m_acc: &mut Mat,
+) {
+    // R[:, c0..c1] = Ψ̃ A_L
+    let r_blk = sk.psi.apply_left(a_l); // r x L
+    r_acc.set_block(0, c0, &r_blk);
+    // C += A_L · Ω̃[c0..c1, :]  (Ω̃ = omegaᵀ, so this is apply_right with
+    // the sliced coordinates).
+    let om_slice = sk.omega.slice_input(c0, c1); // c x L map
+    let c_blk = om_slice.apply_right(a_l); // m x c
+    *c_acc += &c_blk;
+    // M += (S_C A_L) (S_R[:, c0..c1])ᵀ
+    let sc_al = sk.s_c.apply_left(a_l); // s_c x L
+    let sr_slice = sk.s_r.slice_input(c0, c1); // s_r x L
+    let m_blk = sr_slice.apply_right(&sc_al); // s_c x s_r
+    *m_acc += &m_blk;
+}
+
+/// Steps 10–13: orthonormal bases, Fast-GMR core solve, small SVD.
+pub fn finalize(
+    cfg: &FastSpSvdConfig,
+    sk: &FastSpSvdSketches,
+    c_acc: &Mat,
+    r_acc: &Mat,
+    m_acc: &Mat,
+) -> (Mat, Vec<f64>, Mat) {
+    let _ = cfg;
+    let u_c = qr_thin(c_acc).q; // m x c
+    let v_r = qr_thin(&r_acc.transpose()).q; // n x r
+    // N = (S_C U_C)† M (V_Rᵀ S_Rᵀ)†
+    let sc_uc = sk.s_c.apply_left(&u_c); // s_c x c
+    let vr_sr = sk.s_r.apply_right(&v_r.transpose()); // r x s_r  (V_Rᵀ S_Rᵀ)
+    let left = pinv_apply_left(&sc_uc, m_acc); // c x s_r
+    let n_core = pinv_apply_right(&left, &vr_sr); // c x r
+    let Svd { u: u_n, s: sigma, v: v_n } = svd_jacobi(&n_core);
+    let u = matmul(&u_c, &u_n);
+    let v = matmul(&v_r, &v_n);
+    (u, sigma, v)
+}

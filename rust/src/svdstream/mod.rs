@@ -1,0 +1,101 @@
+//! Single-pass (streaming) SVD — Section 5 of the paper.
+//!
+//! * [`fast_sp_svd`] — Algorithm 3 (**Fast SP-SVD**, the paper's method):
+//!   range sketches `C = A Ω̃`, `R = Ψ̃ A` with OSNAP∘Gaussian maps, plus a
+//!   third sketch pair for the Fast-GMR core solve
+//!   `N = (S_C U_C)† M (V_Rᵀ S_Rᵀ)†` with `M = S_C A S_Rᵀ` accumulated in
+//!   the same single pass.
+//! * [`practical_sp_svd`] — Algorithm 4 (Tropp et al. 2017 baseline):
+//!   `N' = (Ψ̃ U_C)† R V_R`.
+//!
+//! Both consume the matrix through a [`ColumnStream`] — column blocks
+//! arrive once and are dropped, exactly the streaming model of §5. The
+//! concurrent production version of this loop lives in
+//! [`crate::coordinator::pipeline`]; this module is the reference
+//! (single-threaded) implementation the coordinator is tested against.
+
+pub mod fast;
+pub mod practical;
+pub mod source;
+
+pub use fast::{fast_sp_svd, fast_sp_svd_with, FastSpSvdConfig, FastSpSvdSketches, SpSvdResult};
+pub use practical::{practical_sp_svd, PracticalSpSvdConfig};
+pub use source::{ColumnStream, CsrColumnStream, DenseColumnStream};
+
+use crate::linalg::Mat;
+
+/// §6.3 error ratio: `‖A − U Σ Vᵀ‖_F / ‖A − A_k‖_F − 1` (can be negative:
+/// the factors have rank > k).
+pub fn error_ratio(a: &Mat, res: &SpSvdResult, ak_err: f64) -> f64 {
+    let approx_err = reconstruction_error(a, res);
+    approx_err / ak_err - 1.0
+}
+
+/// `‖A − A_k‖_F` for dense or sparse A via randomized subspace iteration:
+/// `‖A − A_k‖² = ‖A‖² − Σ_{i≤k} σ_i²`.
+pub fn ak_error(a: crate::gmr::Input<'_>, k: usize, n_iter: usize, rng: &mut crate::rng::Pcg64) -> f64 {
+    let (m, n) = (a.rows(), a.cols());
+    let l = (k + 8).min(m.min(n));
+    let omega = Mat::randn(n, l, rng);
+    let mut q = crate::linalg::qr_thin(&a.a_b(&omega)).q;
+    for _ in 0..n_iter {
+        let z = a.at_b(&q);
+        let qz = crate::linalg::qr_thin(&z).q;
+        q = crate::linalg::qr_thin(&a.a_b(&qz)).q;
+    }
+    let b = a.at_b(&q).transpose(); // l x n
+    let svd = crate::linalg::svd_jacobi(&b);
+    let top: f64 = svd.s.iter().take(k).map(|s| s * s).sum();
+    let total = a.fro_norm();
+    (total * total - top).max(0.0).sqrt()
+}
+
+/// `‖A − U Σ Vᵀ‖_F` for dense or sparse A via the Gram expansion
+/// (never materializes the m×n approximation):
+/// `‖A − UΣVᵀ‖² = ‖A‖² − 2·tr(ΣᵀUᵀAV) + tr((UᵀU)Σ(VᵀV)Σ)`.
+pub fn reconstruction_error_input(a: crate::gmr::Input<'_>, res: &SpSvdResult) -> f64 {
+    let k = res.sigma.len();
+    // Uᵀ A (k×n) computed as (Aᵀ U)ᵀ — one pass over A.
+    let at_u = a.at_b(&res.u); // n x k
+    let utav = crate::linalg::matmul_at_b(&at_u, &res.v); // k x k  (UᵀAV)ᵀ… careful
+    // at_u = AᵀU; (AᵀU)ᵀ V has shape k×k and equals Uᵀ A V.
+    let mut cross = 0.0;
+    for i in 0..k {
+        cross += res.sigma[i] * utav[(i, i)];
+    }
+    let gu = crate::linalg::matmul_at_b(&res.u, &res.u); // k x k
+    let gv = crate::linalg::matmul_at_b(&res.v, &res.v);
+    // tr(Gu Σ Gv Σ) = Σ_ij Gu[i,j] σ_j Gv[j,i] σ_i
+    let mut norm_sq = 0.0;
+    for i in 0..k {
+        for j in 0..k {
+            norm_sq += gu[(i, j)] * res.sigma[j] * gv[(j, i)] * res.sigma[i];
+        }
+    }
+    let af = a.fro_norm();
+    (af * af - 2.0 * cross + norm_sq).max(0.0).sqrt()
+}
+
+/// `‖A − U Σ Vᵀ‖_F`, blockwise.
+pub fn reconstruction_error(a: &Mat, res: &SpSvdResult) -> f64 {
+    let mut us = res.u.clone();
+    for j in 0..res.sigma.len() {
+        for i in 0..us.rows() {
+            us[(i, j)] *= res.sigma[j];
+        }
+    }
+    let mut acc = 0.0;
+    const B: usize = 512;
+    for i0 in (0..a.rows()).step_by(B) {
+        let i1 = (i0 + B).min(a.rows());
+        let us_blk = us.slice(i0, i1, 0, us.cols());
+        let approx = crate::linalg::matmul_a_bt(&us_blk, &res.v);
+        let a_blk = a.slice(i0, i1, 0, a.cols());
+        let d = crate::linalg::fro_norm_diff(&a_blk, &approx);
+        acc += d * d;
+    }
+    acc.sqrt()
+}
+
+#[cfg(test)]
+mod tests;

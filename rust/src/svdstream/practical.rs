@@ -1,0 +1,74 @@
+//! Practical SP-SVD — Algorithm 4 (Tropp et al. 2017 / Clarkson–Woodruff
+//! 2013), the baseline Fast SP-SVD is compared against in §6.3.
+//!
+//! Same streaming range sketches `C = A Ω̃`, `R = Ψ̃ A`, but the core is
+//! `N' = (Ψ̃ U_C)† R V_R` — no third sketch pair, which forces the
+//! r-side sketch to be much larger than the c-side (`r = O(k/ε²)` vs
+//! `c = O(k/ε)`) or `N'` becomes ill-conditioned (Section 5.3).
+
+use super::fast::SpSvdResult;
+use super::source::ColumnStream;
+use crate::linalg::{matmul, pinv_apply_left, qr_thin, svd_jacobi, Mat, Svd};
+use crate::rng::Pcg64;
+use crate::sketch::{Sketch, SketchKind};
+
+/// Configuration for Algorithm 4.
+#[derive(Clone, Debug)]
+pub struct PracticalSpSvdConfig {
+    /// Target rank (metadata).
+    pub k: usize,
+    /// Column-sketch size c (Ω̃ ∈ R^{n×c}).
+    pub c: usize,
+    /// Row-sketch size r (Ψ̃ ∈ R^{r×m}); Tropp et al. recommend r ≈ 2c+1.
+    pub r: usize,
+    /// Sketch family (Gaussian for dense, CountSketch for sparse — §6.3).
+    pub kind: SketchKind,
+}
+
+impl PracticalSpSvdConfig {
+    /// The §6.3 comparison point: split a total budget `c + r` with the
+    /// baseline's recommended r ≈ 2c ratio.
+    pub fn from_budget(k: usize, total: usize, kind: SketchKind) -> Self {
+        let c = (total / 3).max(k + 1);
+        let r = (total - c).max(c + 1);
+        Self { k, c, r, kind }
+    }
+}
+
+/// Algorithm 4 — Practical Single-Pass SVD (baseline).
+pub fn practical_sp_svd(
+    stream: &mut dyn ColumnStream,
+    cfg: &PracticalSpSvdConfig,
+    rng: &mut Pcg64,
+) -> SpSvdResult {
+    let (m, n) = (stream.rows(), stream.cols());
+    let psi = Sketch::draw(cfg.kind, cfg.r, m, None, rng); // Ψ̃: r×m
+    let omega = Sketch::draw(cfg.kind, cfg.c, n, None, rng); // Ω̃ᵀ: c×n
+
+    let mut c_acc = Mat::zeros(m, cfg.c);
+    let mut r_acc = Mat::zeros(cfg.r, n);
+    let mut blocks = 0usize;
+
+    // Steps 4–7: one pass.
+    while let Some(block) = stream.next_block() {
+        let a_l = &block.data;
+        let (c0, c1) = (block.col_start, block.col_start + a_l.cols());
+        let r_blk = psi.apply_left(a_l); // r x L
+        r_acc.set_block(0, c0, &r_blk);
+        let om_slice = omega.slice_input(c0, c1);
+        let c_blk = om_slice.apply_right(a_l); // m x c
+        c_acc += &c_blk;
+        blocks += 1;
+    }
+
+    // Steps 8–11.
+    let u_c = qr_thin(&c_acc).q; // m x c
+    let v_r = qr_thin(&r_acc.transpose()).q; // n x r'
+    let psi_uc = psi.apply_left(&u_c); // r x c
+    let r_vr = matmul(&r_acc, &v_r); // r x r'
+    let n_core = pinv_apply_left(&psi_uc, &r_vr); // c x r'
+    let Svd { u: u_n, s: sigma, v: v_n } = svd_jacobi(&n_core);
+    let u = matmul(&u_c, &u_n);
+    let v = matmul(&v_r, &v_n);
+    SpSvdResult { u, sigma, v, blocks }
+}

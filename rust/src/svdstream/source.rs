@@ -1,0 +1,107 @@
+//! Column-block streams — the single-pass data model of Section 5.
+//!
+//! A [`ColumnStream`] yields consecutive column blocks `A_L` of a matrix
+//! exactly once. Implementations exist for in-memory dense and CSR
+//! matrices (benches/tests) and the same trait is what the coordinator's
+//! reader thread drives in production.
+
+use crate::linalg::Mat;
+use crate::sparse::Csr;
+
+/// One block of consecutive columns.
+pub struct ColumnBlock {
+    /// First column index of this block in A.
+    pub col_start: usize,
+    /// The dense m × L block.
+    pub data: Mat,
+}
+
+/// A single-pass source of column blocks.
+pub trait ColumnStream {
+    /// Total rows m.
+    fn rows(&self) -> usize;
+    /// Total columns n.
+    fn cols(&self) -> usize;
+    /// Next block, or `None` when the matrix has been fully read.
+    fn next_block(&mut self) -> Option<ColumnBlock>;
+    /// Reset to the beginning (allowed only in tests/benches — a true
+    /// stream cannot be replayed; the algorithms never call this).
+    fn reset(&mut self);
+}
+
+/// Stream over an in-memory dense matrix.
+pub struct DenseColumnStream<'a> {
+    a: &'a Mat,
+    block: usize,
+    pos: usize,
+}
+
+impl<'a> DenseColumnStream<'a> {
+    pub fn new(a: &'a Mat, block: usize) -> Self {
+        assert!(block > 0);
+        Self { a, block, pos: 0 }
+    }
+}
+
+impl<'a> ColumnStream for DenseColumnStream<'a> {
+    fn rows(&self) -> usize {
+        self.a.rows()
+    }
+
+    fn cols(&self) -> usize {
+        self.a.cols()
+    }
+
+    fn next_block(&mut self) -> Option<ColumnBlock> {
+        if self.pos >= self.a.cols() {
+            return None;
+        }
+        let c0 = self.pos;
+        let c1 = (c0 + self.block).min(self.a.cols());
+        self.pos = c1;
+        Some(ColumnBlock { col_start: c0, data: self.a.slice(0, self.a.rows(), c0, c1) })
+    }
+
+    fn reset(&mut self) {
+        self.pos = 0;
+    }
+}
+
+/// Stream over an in-memory CSR matrix (densifies each block; the blocks
+/// are thin so this is the natural layout for the downstream sketches).
+pub struct CsrColumnStream<'a> {
+    a: &'a Csr,
+    block: usize,
+    pos: usize,
+}
+
+impl<'a> CsrColumnStream<'a> {
+    pub fn new(a: &'a Csr, block: usize) -> Self {
+        assert!(block > 0);
+        Self { a, block, pos: 0 }
+    }
+}
+
+impl<'a> ColumnStream for CsrColumnStream<'a> {
+    fn rows(&self) -> usize {
+        self.a.rows()
+    }
+
+    fn cols(&self) -> usize {
+        self.a.cols()
+    }
+
+    fn next_block(&mut self) -> Option<ColumnBlock> {
+        if self.pos >= self.a.cols() {
+            return None;
+        }
+        let c0 = self.pos;
+        let c1 = (c0 + self.block).min(self.a.cols());
+        self.pos = c1;
+        Some(ColumnBlock { col_start: c0, data: self.a.slice_cols(c0, c1).to_dense() })
+    }
+
+    fn reset(&mut self) {
+        self.pos = 0;
+    }
+}

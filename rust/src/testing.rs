@@ -1,0 +1,74 @@
+//! Tiny property-testing harness (no proptest in the offline vendor set).
+//!
+//! Provides seeded random-case generation with failure reporting that
+//! includes the case seed, so any failing property is reproducible by
+//! construction.
+
+use crate::linalg::Mat;
+use crate::rng::{rng, Pcg64};
+
+/// Default dimension cap for "small" property matrices.
+pub const MAT_DIM_SMALL: usize = 24;
+
+/// Assert two matrices are elementwise close (absolute + relative blend).
+#[track_caller]
+pub fn assert_close(got: &Mat, want: &Mat, tol: f64, context: &str) {
+    assert_eq!(got.shape(), want.shape(), "{context}: shape mismatch");
+    let scale = want.max_abs().max(1.0);
+    for i in 0..got.rows() {
+        for j in 0..got.cols() {
+            let d = (got[(i, j)] - want[(i, j)]).abs();
+            assert!(
+                d <= tol * scale,
+                "{context}: mismatch at ({i},{j}): got {} want {} (|d|={d}, tol*scale={})",
+                got[(i, j)],
+                want[(i, j)],
+                tol * scale
+            );
+        }
+    }
+}
+
+/// Assert two scalars are close.
+#[track_caller]
+pub fn assert_scalar_close(got: f64, want: f64, tol: f64, context: &str) {
+    let d = (got - want).abs();
+    let scale = want.abs().max(1.0);
+    assert!(d <= tol * scale, "{context}: got {got} want {want} (|d|={d})");
+}
+
+/// Run `cases` random property checks over a random matrix with dims in
+/// `1..=max_dim`. The closure receives the matrix and a per-case rng.
+/// Panics (from the closure's asserts) are annotated with the case seed.
+pub fn prop_mats(cases: usize, max_dim: usize, mut check: impl FnMut(&Mat, &mut Pcg64)) {
+    for case in 0..cases {
+        let seed = 0x5eed_0000 + case as u64;
+        let mut r = rng(seed);
+        let m = 1 + r.next_range(max_dim);
+        let n = 1 + r.next_range(max_dim);
+        let a = Mat::randn(m, n, &mut r);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check(&a, &mut r);
+        }));
+        if let Err(e) = result {
+            eprintln!("property failed on case {case} (seed {seed:#x}, shape {m}x{n})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Run `cases` checks over (m, n, k)-indexed closures with a seeded rng
+/// and custom generation. Generic scaffold for non-matrix properties.
+pub fn prop_cases(cases: usize, mut check: impl FnMut(u64, &mut Pcg64)) {
+    for case in 0..cases {
+        let seed = 0xabcd_0000 + case as u64;
+        let mut r = rng(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check(case as u64, &mut r);
+        }));
+        if let Err(e) = result {
+            eprintln!("property failed on case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}

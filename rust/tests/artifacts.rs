@@ -1,0 +1,124 @@
+//! Integration tests over the AOT artifacts: load every artifact through
+//! the PJRT engine, check golden outputs, and verify that the PJRT
+//! backend agrees with the CPU backend on the hot-path ops.
+//!
+//! Skipped (cleanly, with a message) when `artifacts/` hasn't been built.
+
+use fastgmr::compute::{Backend, CpuBackend, PjrtBackend};
+use fastgmr::linalg::Mat;
+use fastgmr::rng::rng;
+use fastgmr::runtime::Engine;
+use std::sync::Arc;
+
+fn engine() -> Option<Arc<Engine>> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Engine::new(&dir) {
+        Ok(e) => Some(Arc::new(e)),
+        Err(_) => {
+            eprintln!("artifacts/ not built — run `make artifacts`; skipping");
+            None
+        }
+    }
+}
+
+#[test]
+fn all_goldens_pass() {
+    let Some(engine) = engine() else { return };
+    let results = engine.verify_goldens().expect("golden verification ran");
+    assert!(!results.is_empty(), "no goldens found");
+    for (name, err) in &results {
+        // f32 end-to-end; cholesky solves amplify to ~1e-4 relative.
+        assert!(err < &2e-3, "golden mismatch for {name}: max rel err {err}");
+    }
+    eprintln!("verified {} artifacts", results.len());
+}
+
+#[test]
+fn pjrt_backend_matches_cpu_backend() {
+    let Some(engine) = engine() else { return };
+    let pjrt = PjrtBackend::new(engine);
+    let cpu = CpuBackend;
+    let mut r = rng(1);
+
+    // sketch_apply at a non-tile shape (exercises padding).
+    let s = Mat::randn(100, 900, &mut r);
+    let a = Mat::randn(900, 200, &mut r);
+    let got = pjrt.sketch_apply(&s, &a).unwrap();
+    let want = cpu.sketch_apply(&s, &a).unwrap();
+    assert_eq!(got.shape(), want.shape());
+    let denom = want.fro_norm().max(1.0);
+    assert!(
+        fastgmr::linalg::fro_norm_diff(&got, &want) / denom < 1e-5,
+        "sketch_apply mismatch"
+    );
+
+    // rbf_block.
+    let xi = Mat::randn(70, 100, &mut r);
+    let xj = Mat::randn(90, 100, &mut r);
+    let got = pjrt.rbf_block(&xi, &xj, 0.25).unwrap();
+    let want = cpu.rbf_block(&xi, &xj, 0.25).unwrap();
+    assert!(
+        fastgmr::linalg::fro_norm_diff(&got, &want) / want.fro_norm() < 1e-5,
+        "rbf_block mismatch"
+    );
+
+    // twoside.
+    let sc = Mat::randn(150, 1200, &mut r);
+    let al = Mat::randn(1200, 300, &mut r);
+    let sr = Mat::randn(150, 300, &mut r);
+    let got = pjrt.twoside_sketch(&sc, &al, &sr).unwrap();
+    let want = cpu.twoside_sketch(&sc, &al, &sr).unwrap();
+    assert!(
+        fastgmr::linalg::fro_norm_diff(&got, &want) / want.fro_norm() < 1e-4,
+        "twoside mismatch"
+    );
+
+    // stream_update.
+    let a_l = Mat::randn(1500, 400, &mut r);
+    let om = Mat::randn(400, 50, &mut r);
+    let psi = Mat::randn(40, 1500, &mut r);
+    let sc2 = Mat::randn(120, 1500, &mut r);
+    let sr2 = Mat::randn(120, 400, &mut r);
+    let (gc, gr, gm) = pjrt.stream_update(&a_l, &om, &psi, &sc2, &sr2).unwrap();
+    let (wc, wr, wm) = cpu.stream_update(&a_l, &om, &psi, &sc2, &sr2).unwrap();
+    for (g, w, tag) in [(&gc, &wc, "C"), (&gr, &wr, "R"), (&gm, &wm, "M")] {
+        assert_eq!(g.shape(), w.shape(), "{tag} shape");
+        assert!(
+            fastgmr::linalg::fro_norm_diff(g, w) / w.fro_norm() < 1e-4,
+            "stream_update {tag} mismatch"
+        );
+    }
+}
+
+#[test]
+fn gmr_solve_artifact_matches_rust_solver() {
+    let Some(engine) = engine() else { return };
+    let graph = engine.load("gmr_solve_192x64x192x64").expect("artifact present");
+    let mut r = rng(5);
+    let sc_c = Mat::randn(192, 64, &mut r);
+    let a_tilde = Mat::randn(192, 192, &mut r);
+    let r_sr = Mat::randn(64, 192, &mut r);
+    let out = graph.run(&[&sc_c, &a_tilde, &r_sr]).unwrap();
+    assert_eq!(out.len(), 1);
+    let want = fastgmr::gmr::solve_core(&sc_c, &a_tilde, &r_sr);
+    let rel = fastgmr::linalg::fro_norm_diff(&out[0], &want) / want.fro_norm();
+    assert!(rel < 1e-3, "gmr_solve artifact vs rust: rel err {rel}");
+}
+
+#[test]
+fn executable_cache_returns_same_instance() {
+    let Some(engine) = engine() else { return };
+    let g1 = engine.load("rbf_128x128x128").unwrap();
+    let g2 = engine.load("rbf_128x128x128").unwrap();
+    assert!(Arc::ptr_eq(&g1, &g2), "cache must reuse the compiled executable");
+}
+
+#[test]
+fn shape_mismatch_is_rejected() {
+    let Some(engine) = engine() else { return };
+    let graph = engine.load("rbf_128x128x128").unwrap();
+    let bad = Mat::zeros(64, 128);
+    let sig = Mat::from_vec(1, 1, vec![0.5]);
+    let err = graph.run(&[&bad, &bad, &sig]).unwrap_err();
+    assert!(err.to_string().contains("128x128"), "got: {err}");
+}

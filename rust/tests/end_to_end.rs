@@ -1,0 +1,124 @@
+//! End-to-end integration tests exercising the full stack on small
+//! problems (no artifacts required — the CPU backend path).
+
+use fastgmr::coordinator::{PipelineConfig, StreamPipeline};
+use fastgmr::data::{synth_dense, SpectrumKind};
+use fastgmr::gmr::{relative_regret, solve_exact, solve_fast, FastGmrConfig, Input};
+use fastgmr::linalg::{matmul, Mat};
+use fastgmr::rng::rng;
+use fastgmr::sketch::SketchKind;
+use fastgmr::spsd::{error_ratio, faster_spsd, DenseKernelOracle, FasterSpsdConfig};
+use fastgmr::svdstream::fast::FastSpSvdSketches;
+use fastgmr::svdstream::source::DenseColumnStream;
+use fastgmr::svdstream::FastSpSvdConfig;
+
+/// Full Fast-GMR flow on a Figure-1-shaped problem (shrunk): error ratio
+/// must decay as sketch size grows, matching the paper's qualitative
+/// claim.
+#[test]
+fn fig1_shape_holds_in_miniature() {
+    let mut r = rng(1);
+    let a = synth_dense(400, 300, 40, SpectrumKind::Exponential { base: 0.9 }, 0.02, &mut r);
+    let (c_dim, r_dim) = (20, 20);
+    let g_c = Mat::randn(300, c_dim, &mut r);
+    let c = matmul(&a, &g_c);
+    let g_r = Mat::randn(r_dim, 400, &mut r);
+    let rr = matmul(&g_r, &a);
+    let exact = solve_exact(Input::Dense(&a), &c, &rr);
+
+    let mut ratios = Vec::new();
+    for &mult in &[2usize, 6, 12] {
+        let mut acc = 0.0;
+        let trials = 4;
+        for t in 0..trials {
+            let mut rt = rng(100 + mult as u64 * 17 + t);
+            let cfg = FastGmrConfig::gaussian(mult * c_dim, mult * r_dim);
+            let sol = solve_fast(Input::Dense(&a), &c, &rr, &cfg, &mut rt);
+            acc += relative_regret(Input::Dense(&a), &c, &rr, &sol.x, &exact.x);
+        }
+        ratios.push(acc / trials as f64);
+    }
+    assert!(ratios[2] < ratios[0], "error ratio must decay with a: {ratios:?}");
+    assert!(ratios[2] < 0.05, "a=12 should be near-exact: {ratios:?}");
+}
+
+/// Full Algorithm-2 flow on a Figure-2-shaped kernel problem.
+#[test]
+fn fig2_shape_holds_in_miniature() {
+    let mut r = rng(2);
+    let x = fastgmr::data::synth_clustered(300, 12, 8, 0.45, &mut r);
+    let sigma = fastgmr::data::calibrate_sigma(&x, 15, 0.85, &mut r);
+    let k = fastgmr::data::rbf_kernel(&x, sigma);
+    let oracle = DenseKernelOracle { k: &k };
+    let c_dim = 30; // 2k with k=15
+    let sol = faster_spsd(&oracle, &FasterSpsdConfig { c: c_dim, s: 10 * c_dim }, &mut r);
+    let e_faster = error_ratio(&k, &sol.c, &sol.x);
+    let nys = fastgmr::spsd::nystrom_core(&sol.c, &sol.idx);
+    let e_nys = error_ratio(&k, &sol.c, &nys);
+    let opt = fastgmr::spsd::optimal_core(&oracle, &sol.c);
+    let e_opt = error_ratio(&k, &sol.c, &opt);
+    assert!(
+        e_opt <= e_faster && e_faster <= e_nys * 1.05 + 1e-9,
+        "ordering violated: opt {e_opt}, faster {e_faster}, nystrom {e_nys}"
+    );
+    assert!(e_faster < e_opt + 0.08, "faster should be near optimal at s=10c");
+}
+
+/// Coordinator pipeline + Algorithm 3 against the paper's single-pass
+/// guarantee on a small dense stream.
+#[test]
+fn streaming_pipeline_end_to_end() {
+    let mut r = rng(3);
+    let a = synth_dense(250, 220, 30, SpectrumKind::Exponential { base: 0.75 }, 0.01, &mut r);
+    let cfg = FastSpSvdConfig::paper(6, 5, SketchKind::Gaussian);
+    let sketches = FastSpSvdSketches::draw(&cfg, 250, 220, &mut r);
+    let pipeline = StreamPipeline::new(PipelineConfig { workers: 2, queue_depth: 3 });
+    let mut stream = DenseColumnStream::new(&a, 32);
+    let res = pipeline.run(&mut stream, &cfg, &sketches).unwrap();
+
+    // Error ratio against ‖A − A_k‖.
+    let ak = {
+        let svd = fastgmr::linalg::svd_randomized(&a, 6, 10, 6, &mut r);
+        let top: f64 = svd.s.iter().map(|s| s * s).sum();
+        (a.fro_norm_sq() - top).max(0.0).sqrt()
+    };
+    let ratio = fastgmr::svdstream::error_ratio(&a, &res, ak);
+    assert!(ratio < 0.35, "pipeline SP-SVD error ratio {ratio}");
+    // Single-pass accounting.
+    assert_eq!(res.blocks, (220 + 31) / 32);
+}
+
+/// The router serves mixed workloads without deadlock and keeps metrics.
+#[test]
+fn router_mixed_workload() {
+    use fastgmr::coordinator::{jobs::MatrixPayload, ApproxJob, JobResult, Router};
+    let router = Router::new(2);
+    let mut r = rng(4);
+    let mut handles = Vec::new();
+    for seed in 0..6u64 {
+        let a = synth_dense(100, 80, 15, SpectrumKind::Exponential { base: 0.85 }, 0.02, &mut r);
+        let g_c = Mat::randn(80, 8, &mut r);
+        let c = matmul(&a, &g_c);
+        let g_r = Mat::randn(6, 100, &mut r);
+        let rr = matmul(&g_r, &a);
+        handles.push(router.submit(ApproxJob::Gmr {
+            a: MatrixPayload::Dense(a),
+            c,
+            r: rr,
+            cfg: FastGmrConfig::gaussian(40, 40),
+            seed,
+        }));
+        let x = Mat::randn(120, 10, &mut r);
+        handles.push(router.submit(ApproxJob::SpsdKernel { x, sigma: 0.3, c: 8, s: 30, seed }));
+    }
+    let mut gmr = 0;
+    let mut spsd = 0;
+    for h in handles {
+        match h.wait().unwrap() {
+            JobResult::Gmr { .. } => gmr += 1,
+            JobResult::Spsd { .. } => spsd += 1,
+            _ => unreachable!(),
+        }
+    }
+    assert_eq!((gmr, spsd), (6, 6));
+}
