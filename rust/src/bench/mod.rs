@@ -41,8 +41,19 @@ pub fn targets() -> Vec<(&'static str, fn(&mut BenchCtx))> {
     ]
 }
 
+/// Targets run by `--smoke` when none are named explicitly: one table,
+/// one figure, and the microbenchmarks — enough to catch a perf
+/// regression per-PR without paper-scale runtimes.
+const SMOKE_TARGETS: [&str; 3] = ["table1", "fig1", "perf"];
+
 /// Entry point used by `rust/benches/bench_main.rs`.
+///
+/// `--full` runs paper-scale sizes; `--smoke` runs the reduced CI subset
+/// at the quick profile and writes per-target wall times to
+/// `results/bench_smoke.json` (uploaded as a CI artifact so perf
+/// regressions are visible per-PR).
 pub fn bench_main(args: &[String]) {
+    let smoke = args.iter().any(|a| a == "--smoke");
     let profile = if args.iter().any(|a| a == "--full") { Profile::Full } else { Profile::Quick };
     let wanted: Vec<&String> = args.iter().filter(|a| !a.starts_with("--")).collect();
     if wanted.iter().any(|a| a.as_str() == "list") {
@@ -52,13 +63,45 @@ pub fn bench_main(args: &[String]) {
         return;
     }
     std::fs::create_dir_all("results").ok();
+    let mut timings: Vec<(&'static str, f64)> = Vec::new();
     for (name, f) in targets() {
-        if !wanted.is_empty() && !wanted.iter().any(|w| w.as_str() == name) {
+        let selected = if !wanted.is_empty() {
+            wanted.iter().any(|w| w.as_str() == name)
+        } else if smoke {
+            SMOKE_TARGETS.contains(&name)
+        } else {
+            true
+        };
+        if !selected {
             continue;
         }
         let mut ctx = BenchCtx::new(name, profile);
         let start = std::time::Instant::now();
         f(&mut ctx);
-        ctx.finish(start.elapsed());
+        let elapsed = start.elapsed();
+        ctx.finish(elapsed);
+        timings.push((name, elapsed.as_secs_f64()));
+    }
+    if smoke {
+        write_smoke_json(&timings);
+    }
+}
+
+/// Serialize smoke timings as JSON by hand (no serde in the offline
+/// vendor set).
+fn write_smoke_json(timings: &[(&str, f64)]) {
+    let mut out = String::from("{\n");
+    out.push_str("  \"mode\": \"smoke\",\n");
+    out.push_str(&format!("  \"threads\": {},\n", crate::parallel::threads()));
+    out.push_str("  \"targets\": [\n");
+    for (i, (name, secs)) in timings.iter().enumerate() {
+        let comma = if i + 1 < timings.len() { "," } else { "" };
+        out.push_str(&format!("    {{\"name\": \"{name}\", \"seconds\": {secs:.6}}}{comma}\n"));
+    }
+    out.push_str("  ]\n}\n");
+    let path = "results/bench_smoke.json";
+    match std::fs::write(path, &out) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }

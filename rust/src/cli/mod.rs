@@ -5,14 +5,20 @@
 //! ```text
 //! fastgmr info                         # platform + artifact inventory
 //! fastgmr verify                       # run artifact golden self-checks
-//! fastgmr bench <target> [--full]     # regenerate a paper table/figure
-//! fastgmr pipeline [--config f.toml]  # run the streaming SVD service
-//! fastgmr serve [--jobs N]            # demo the approximation router
+//! fastgmr bench <target> [--full|--smoke] [--threads N]
+//! fastgmr pipeline [--config f.toml] [--threads N]
+//! fastgmr serve [--jobs N] [--threads N]
 //! ```
+//!
+//! `--threads N` sets the process-wide worker count for the parallel
+//! sketch/matmul layer (`crate::parallel`); `0` auto-detects, `1`
+//! reproduces single-threaded results bitwise. Config files can set the
+//! same knob as `[parallel] threads`.
 
 use crate::config::Config;
 use crate::coordinator::{jobs::MatrixPayload, ApproxJob, PipelineConfig, Router, StreamPipeline};
 use crate::data::{synth_dense, SpectrumKind};
+use crate::error::{FgError, Result};
 use crate::linalg::Mat;
 use crate::rng::rng;
 use crate::sketch::SketchKind;
@@ -26,31 +32,41 @@ fastgmr — Fast Generalized Matrix Regression (paper reproduction)
 USAGE:
   fastgmr info                       platform + artifact inventory
   fastgmr verify                     artifact golden self-checks
-  fastgmr bench <target|all> [--full]  regenerate paper tables/figures
-  fastgmr pipeline [--config FILE]   run the streaming SP-SVD pipeline
-  fastgmr serve [--jobs N]           demo the approximation-job router
+  fastgmr bench <target|all> [--full|--smoke] [--threads N]
+                                     regenerate paper tables/figures
+  fastgmr pipeline [--config FILE] [--threads N]
+                                     run the streaming SP-SVD pipeline
+  fastgmr serve [--jobs N] [--threads N]
+                                     demo the approximation-job router
   fastgmr help                       this message
 
-Bench targets: table1..table7, fig1, fig2, fig3, perf (see DESIGN.md §5).";
+  --threads N   worker threads for the parallel layer (0 = auto-detect,
+                1 = bitwise single-threaded reproduction)
+
+Bench targets: table1..table7, fig1, fig2, fig3, perf (see DESIGN.md §5).
+`bench --smoke` runs a reduced CI subset and writes results/bench_smoke.json.";
 
 /// Main dispatch (called from `rust/src/main.rs`).
-pub fn main_entry() -> anyhow::Result<()> {
+pub fn main_entry() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let tail = args.get(1..).unwrap_or(&[]);
+    let (rest, threads) = take_flag_value(tail, "--threads");
+    apply_threads(threads.as_deref())?;
     match cmd {
         "info" => info(),
         "verify" => verify(),
         "bench" => {
-            let rest: Vec<String> = args[1..]
+            let targets: Vec<String> = rest
                 .iter()
                 .map(|a| if a == "all" { String::new() } else { a.clone() })
                 .filter(|a| !a.is_empty())
                 .collect();
-            crate::bench::bench_main(&rest);
+            crate::bench::bench_main(&targets);
             Ok(())
         }
-        "pipeline" => pipeline(&args[1..]),
-        "serve" => serve(&args[1..]),
+        "pipeline" => pipeline(&rest, threads.is_some()),
+        "serve" => serve(&rest),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
@@ -62,14 +78,16 @@ pub fn main_entry() -> anyhow::Result<()> {
     }
 }
 
-fn info() -> anyhow::Result<()> {
+fn info() -> Result<()> {
     match crate::runtime::Engine::new("artifacts") {
         Ok(engine) => {
             println!("platform: {}", engine.platform());
+            println!("threads: {}", crate::parallel::threads());
             println!("artifacts ({}):", engine.manifest().len());
             for name in engine.manifest().names() {
                 let e = engine.manifest().get(name)?;
-                let ins: Vec<String> = e.input_shapes.iter().map(|(r, c)| format!("{r}x{c}")).collect();
+                let ins: Vec<String> =
+                    e.input_shapes.iter().map(|(r, c)| format!("{r}x{c}")).collect();
                 println!("  {name}: inputs [{}]", ins.join(", "));
             }
         }
@@ -78,7 +96,7 @@ fn info() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn verify() -> anyhow::Result<()> {
+fn verify() -> Result<()> {
     let engine = crate::runtime::Engine::new("artifacts")?;
     let results = engine.verify_goldens()?;
     let mut worst = 0.0f64;
@@ -87,7 +105,7 @@ fn verify() -> anyhow::Result<()> {
         worst = worst.max(*err);
     }
     if worst > 2e-3 {
-        anyhow::bail!("golden verification failed (worst {worst:.2e})");
+        return Err(FgError::Runtime(format!("golden verification failed (worst {worst:.2e})")));
     }
     println!("all {} artifacts verified", results.len());
     Ok(())
@@ -97,23 +115,73 @@ fn flag_value<'a>(args: &'a [String], flag: &str) -> Option<&'a str> {
     args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1)).map(String::as_str)
 }
 
-fn pipeline(args: &[String]) -> anyhow::Result<()> {
+/// Remove `flag VALUE` / `flag=VALUE` from an argument list, returning
+/// the remaining arguments and the (last) value, so subcommands never
+/// mistake the value for a positional argument. A trailing `flag` with
+/// no value yields `Some("")` so the caller reports a usage error
+/// instead of silently ignoring the flag.
+fn take_flag_value(args: &[String], flag: &str) -> (Vec<String>, Option<String>) {
+    let mut rest = Vec::with_capacity(args.len());
+    let mut value = None;
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == flag {
+            if i + 1 < args.len() {
+                value = Some(args[i + 1].clone());
+                i += 2;
+            } else {
+                value = Some(String::new());
+                i += 1;
+            }
+        } else if let Some(v) = args[i].strip_prefix(flag).and_then(|r| r.strip_prefix('=')) {
+            value = Some(v.to_string());
+            i += 1;
+        } else {
+            rest.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (rest, value)
+}
+
+/// Apply a `--threads N` override to the process-wide pool knob.
+fn apply_threads(spec: Option<&str>) -> Result<()> {
+    if let Some(s) = spec {
+        let n: usize = s
+            .parse()
+            .map_err(|_| FgError::Config(format!("--threads: expected a number, got `{s}`")))?;
+        crate::parallel::set_threads(n);
+    }
+    Ok(())
+}
+
+fn pipeline(args: &[String], cli_threads: bool) -> Result<()> {
     let cfg = match flag_value(args, "--config") {
         Some(path) => Config::load(path)?,
         None => Config::default(),
     };
+    // Config-file threads knob (a CLI --threads, applied earlier, wins).
+    if !cli_threads {
+        if let Some(t) = cfg.parallel_threads() {
+            crate::parallel::set_threads(t);
+        }
+    }
     let m = cfg.int_or("pipeline", "rows", 2048) as usize;
     let n = cfg.int_or("pipeline", "cols", 4096) as usize;
     let block = cfg.int_or("pipeline", "block", 512) as usize;
-    let workers = cfg.int_or("pipeline", "workers", 1) as usize;
+    let workers = cfg.int_or("pipeline", "workers", 0) as usize;
     let depth = cfg.int_or("pipeline", "queue_depth", 4) as usize;
     let k = cfg.int_or("svd", "k", 10) as usize;
     let mult = cfg.int_or("svd", "mult", 4) as usize;
     let kind = SketchKind::parse(cfg.str_or("svd", "sketch", "gaussian"))
-        .ok_or_else(|| anyhow::anyhow!("bad sketch kind"))?;
+        .ok_or_else(|| FgError::Config("bad sketch kind".into()))?;
     let seed = cfg.int_or("pipeline", "seed", 0) as u64;
 
-    println!("pipeline: {m}x{n}, block={block}, workers={workers}, depth={depth}, k={k}, mult={mult}");
+    println!(
+        "pipeline: {m}x{n}, block={block}, workers={workers} (0=auto), depth={depth}, \
+         threads={}, k={k}, mult={mult}",
+        crate::parallel::threads()
+    );
     let mut r = rng(seed);
     let a = synth_dense(m, n, 3 * k, SpectrumKind::Exponential { base: 0.85 }, 0.02, &mut r);
     let svd_cfg = FastSpSvdConfig::paper(k, mult, kind);
@@ -133,7 +201,7 @@ fn pipeline(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn serve(args: &[String]) -> anyhow::Result<()> {
+fn serve(args: &[String]) -> Result<()> {
     let jobs: usize = flag_value(args, "--jobs").and_then(|v| v.parse().ok()).unwrap_or(8);
     let router = Router::new(2);
     let mut r = rng(42);
@@ -168,7 +236,7 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
         }
     }
     for (i, h) in handles.into_iter().enumerate() {
-        let res = h.wait().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let res = h.wait()?;
         println!("job {i}: {} done", res.kind());
     }
     println!("\n{}", router.metrics.report());

@@ -1,8 +1,17 @@
 //! Pure-Rust compute backend (reference + fallback).
+//!
+//! Hot-path products go through `linalg`'s size-gated parallel dispatch
+//! (row-panel sharding on the `crate::parallel` pool above
+//! `PAR_FLOP_MIN`, serial below — so tiny remainder tiles never pay
+//! thread-spawn overhead), and the RBF exponential pass shards over
+//! output rows with the same work gate. Row-panel sharding is bitwise
+//! equal to the serial kernels for any thread count, and `threads = 1`
+//! reproduces the original single-threaded results bitwise.
 
 use super::Backend;
 use crate::error::Result;
 use crate::linalg::{matmul, matmul_a_bt, Mat};
+use crate::parallel::Pool;
 
 /// Backend backed by the crate's own linalg substrate.
 pub struct CpuBackend;
@@ -20,15 +29,23 @@ impl Backend for CpuBackend {
         let ni = xi.row_norms_sq();
         let nj = xj.row_norms_sq();
         let cross = matmul_a_bt(xi, xj);
-        let mut out = Mat::zeros(xi.rows(), xj.rows());
-        for i in 0..xi.rows() {
-            let crow = cross.row(i);
-            let orow = out.row_mut(i);
-            for j in 0..xj.rows() {
-                let d2 = (ni[i] + nj[j] - 2.0 * crow[j]).max(0.0);
-                orow[j] = (-sigma * d2).exp();
+        let (rows, cols) = (xi.rows(), xj.rows());
+        let mut out = Mat::zeros(rows, cols);
+        let exp_pool = if rows * cols >= crate::parallel::PAR_MIN_WORK {
+            Pool::current()
+        } else {
+            Pool::new(1)
+        };
+        exp_pool.run_row_panels(rows, cols, out.data_mut(), |r0, r1, panel| {
+            for i in r0..r1 {
+                let crow = cross.row(i);
+                let orow = &mut panel[(i - r0) * cols..(i - r0 + 1) * cols];
+                for j in 0..cols {
+                    let d2 = (ni[i] + nj[j] - 2.0 * crow[j]).max(0.0);
+                    orow[j] = (-sigma * d2).exp();
+                }
             }
-        }
+        });
         Ok(out)
     }
 

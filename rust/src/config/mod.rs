@@ -7,6 +7,9 @@
 //! block = 1024
 //! workers = 1
 //!
+//! [parallel]
+//! threads = 4        # worker pool size; 0 = auto, 1 = bitwise serial
+//!
 //! [svd]
 //! k = 10
 //! sketch = "gaussian"
@@ -132,6 +135,16 @@ impl Config {
     pub fn set(&mut self, section: &str, key: &str, value: Value) {
         self.sections.entry(section.to_string()).or_default().insert(key.to_string(), value);
     }
+
+    /// The `[parallel] threads` knob for `crate::parallel::set_threads`,
+    /// if present: `0` means auto-detect, `1` means bitwise serial.
+    /// Negative values are treated as absent.
+    pub fn parallel_threads(&self) -> Option<usize> {
+        match self.get("parallel", "threads").and_then(Value::as_int) {
+            Some(n) if n >= 0 => Some(n as usize),
+            _ => None,
+        }
+    }
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -200,6 +213,14 @@ enabled = true
         assert!(Config::parse("[unclosed").is_err());
         assert!(Config::parse("novalue").is_err());
         assert!(Config::parse("k = @@@").is_err());
+    }
+
+    #[test]
+    fn parallel_threads_knob() {
+        let cfg = Config::parse("[parallel]\nthreads = 3\n").unwrap();
+        assert_eq!(cfg.parallel_threads(), Some(3));
+        assert_eq!(Config::parse("[parallel]\nthreads = -1\n").unwrap().parallel_threads(), None);
+        assert_eq!(Config::default().parallel_threads(), None);
     }
 
     #[test]

@@ -2,9 +2,10 @@
 //! service that wrap the paper's algorithms into a deployable system.
 //!
 //! * [`pipeline`] — concurrent single-pass pipeline for Algorithm 3:
-//!   reader thread → bounded channel (backpressure) → sketch workers →
-//!   accumulator fold. Numerically identical to the single-threaded
-//!   reference in [`crate::svdstream`] (tested).
+//!   reader → bounded block batches dispatched on the
+//!   [`crate::parallel`] pool → deterministic slot-ordered accumulator
+//!   fold. Matches the single-threaded reference in
+//!   [`crate::svdstream`] (tested).
 //! * [`router`] — a job service: clients submit [`jobs::ApproxJob`]s,
 //!   worker threads execute them against a [`crate::compute::Backend`].
 //! * [`batcher`] — tiles kernel-entry requests into fixed-shape

@@ -2,41 +2,55 @@
 //! system).
 //!
 //! ```text
-//! reader ──(bounded channel: backpressure)──▶ worker₀ ─┐
-//!                                            worker₁ ─┼─▶ fold ─▶ finalize
-//!                                            …        ─┘
+//! reader ──(batch of ≤ slots blocks)──▶ pool worker₀ ─┐
+//!                                       pool worker₁ ─┼─▶ fold ─▶ finalize
+//!                                       …             ─┘
 //! ```
 //!
 //! * The reader owns the [`ColumnStream`] and never buffers more than
-//!   `queue_depth` blocks — O((m+n)·sketch) memory total, the paper's
-//!   single-pass guarantee.
-//! * Workers hold private accumulators (C, M) and write disjoint column
-//!   ranges of R; the fold step sums worker accumulators. All updates
-//!   commute, so the result is independent of scheduling (tested against
-//!   the single-threaded reference).
+//!   one batch (≤ `slots` blocks) — O(slots·(m+n)·sketch) memory total
+//!   (the paper's single-pass guarantee, scaled by the slot count,
+//!   which `queue_depth` bounds in auto mode). Reading and computing
+//!   alternate per batch; overlapping them (double-buffered batches)
+//!   is a ROADMAP item for I/O-bound streams.
+//! * Per-block stream updates are dispatched to the `crate::parallel`
+//!   pool: block `j` of a batch lands in accumulator slot `j`, so each
+//!   slot folds a fixed, scheduling-independent subsequence of blocks in
+//!   stream order, and slots are reduced in ascending order at the end.
+//!   The result is therefore **deterministic** for a given worker count
+//!   (updates commute exactly in ℝ; in floating point the slot fold
+//!   regroups sums, which the tests pin at ≤ 1e-8 against the
+//!   single-threaded reference). `workers = 1` reproduces the serial
+//!   fold bitwise.
 
 use crate::error::{FgError, Result};
 use crate::linalg::Mat;
 use crate::metrics::Metrics;
-use crate::svdstream::fast::{accumulate_block, finalize, FastSpSvdConfig, FastSpSvdSketches};
+use crate::parallel::{self, Pool};
+use crate::svdstream::fast::{accumulate_block_with, finalize, FastSpSvdConfig, FastSpSvdSketches};
 use crate::svdstream::source::ColumnStream;
 use crate::svdstream::SpSvdResult;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
 
 /// Pipeline tuning knobs.
 #[derive(Clone, Debug)]
 pub struct PipelineConfig {
-    /// Worker threads (1 is optimal on a 1-core container; kept
-    /// configurable for larger machines).
+    /// Accumulator slots / pool workers for block updates. 0 means "use
+    /// the process-wide `threads` knob" (see `crate::parallel`); 1
+    /// reproduces the single-threaded fold bitwise.
     pub workers: usize,
-    /// Bounded-queue depth between reader and workers (backpressure).
+    /// Backpressure/memory bound: caps the auto-resolved slot count
+    /// (`workers == 0`), and with it both in-flight blocks and
+    /// accumulator memory (O(slots·(m+n)·sketch)). An explicit `workers`
+    /// is honored exactly and holds at most `workers` blocks in flight —
+    /// tighter than the old channel's `queue_depth + workers`.
     pub queue_depth: usize,
 }
 
 impl Default for PipelineConfig {
     fn default() -> Self {
-        Self { workers: 1, queue_depth: 4 }
+        Self { workers: 0, queue_depth: 4 }
     }
 }
 
@@ -46,7 +60,7 @@ pub struct StreamPipeline {
     pub metrics: Arc<Metrics>,
 }
 
-struct WorkerState {
+struct SlotState {
     c_acc: Mat,
     r_acc: Mat,
     m_acc: Mat,
@@ -55,14 +69,32 @@ struct WorkerState {
 
 impl StreamPipeline {
     pub fn new(cfg: PipelineConfig) -> Self {
-        assert!(cfg.workers >= 1 && cfg.queue_depth >= 1);
+        assert!(cfg.queue_depth >= 1);
         Self { cfg, metrics: Arc::new(Metrics::new()) }
+    }
+
+    /// Worker/slot count. `threads = 1` forces one slot — the bitwise
+    /// single-threaded contract of the CLI `--threads 1` overrides even
+    /// an explicit `workers`. Otherwise an explicit `workers` is honored
+    /// exactly, and the auto default (`workers == 0`) resolves to the
+    /// `threads` knob capped by `queue_depth`, so accumulator memory —
+    /// O(slots·(m+n)·sketch) — stays bounded by a documented knob on
+    /// many-core hosts instead of silently scaling with the machine.
+    fn slots(&self) -> usize {
+        if parallel::threads() <= 1 {
+            1
+        } else if self.cfg.workers == 0 {
+            parallel::threads().min(self.cfg.queue_depth).max(1)
+        } else {
+            self.cfg.workers
+        }
     }
 
     /// Run Algorithm 3 over the stream with pre-drawn sketches.
     ///
-    /// The stream is consumed exactly once; blocks are moved through the
-    /// bounded channel and dropped after their worker processes them.
+    /// The stream is consumed exactly once; blocks are moved into a
+    /// batch, dispatched to the pool, and dropped once their slot has
+    /// accumulated them.
     pub fn run(
         &self,
         stream: &mut dyn ColumnStream,
@@ -70,93 +102,102 @@ impl StreamPipeline {
         sketches: &FastSpSvdSketches,
     ) -> Result<SpSvdResult> {
         let (m, n) = (stream.rows(), stream.cols());
-        let workers = self.cfg.workers;
-        let (tx, rx) = mpsc::sync_channel::<(usize, Mat)>(self.cfg.queue_depth);
-        let rx = Arc::new(std::sync::Mutex::new(rx));
-        let processed = Arc::new(AtomicUsize::new(0));
-        let max_inflight = Arc::new(AtomicUsize::new(0));
-        let inflight = Arc::new(AtomicUsize::new(0));
+        let slots = self.slots();
+        let pool = Pool::new(slots);
+        let mut states: Vec<SlotState> = (0..slots)
+            .map(|_| SlotState {
+                c_acc: Mat::zeros(m, cfg.c),
+                r_acc: Mat::zeros(cfg.r, n),
+                m_acc: Mat::zeros(cfg.s_c, cfg.s_r),
+                blocks: 0,
+            })
+            .collect();
 
-        let states: Vec<WorkerState> = std::thread::scope(|scope| -> Result<Vec<WorkerState>> {
-            let mut handles = Vec::with_capacity(workers);
-            for _ in 0..workers {
-                let rx = rx.clone();
-                let processed = processed.clone();
-                let inflight = inflight.clone();
-                let metrics = self.metrics.clone();
-                handles.push(scope.spawn(move || {
-                    let mut st = WorkerState {
-                        c_acc: Mat::zeros(m, cfg.c),
-                        r_acc: Mat::zeros(cfg.r, n),
-                        m_acc: Mat::zeros(cfg.s_c, cfg.s_r),
-                        blocks: 0,
+        let mut sent = 0usize;
+        let mut max_inflight = 0usize;
+        loop {
+            let mut batch: Vec<(usize, Mat)> = Vec::with_capacity(slots);
+            while batch.len() < slots {
+                match stream.next_block() {
+                    Some(block) => batch.push((block.col_start, block.data)),
+                    None => break,
+                }
+            }
+            if batch.is_empty() {
+                break;
+            }
+            sent += batch.len();
+            max_inflight = max_inflight.max(batch.len());
+            let batch_cols: u64 = batch.iter().map(|(_, b)| b.cols() as u64).sum();
+            let batch_len = batch.len() as u64;
+
+            // Deterministic slot assignment: batch entry j → slot j.
+            // Each occupied slot's sketch applies split the remaining
+            // thread budget (remainder-aware, so slots × inner fills the
+            // knob without nested regions oversubscribing the machine —
+            // short final batches hand the freed budget to the slots
+            // still working). The inner count depends only on the knob,
+            // the batch length, and the slot index, never on scheduling.
+            let budget = parallel::threads();
+            let used = batch.len();
+            let mut units: Vec<(&mut SlotState, (usize, Mat))> =
+                states.iter_mut().zip(batch.into_iter()).collect();
+            let update = || {
+                pool.for_each_mut(&mut units, |slot, unit| {
+                    let inner = if used > 1 {
+                        Pool::new((budget / used + usize::from(slot < budget % used)).max(1))
+                    } else {
+                        Pool::current()
                     };
-                    loop {
-                        let msg = rx.lock().unwrap().recv();
-                        let Ok((col_start, block)) = msg else { break };
-                        inflight.fetch_sub(1, Ordering::Relaxed);
-                        let c1 = col_start + block.cols();
-                        metrics.time("pipeline.block_update", || {
-                            accumulate_block(
-                                &block,
-                                col_start,
-                                c1,
-                                sketches,
-                                &mut st.c_acc,
-                                &mut st.r_acc,
-                                &mut st.m_acc,
-                            );
-                        });
-                        st.blocks += 1;
-                        processed.fetch_add(1, Ordering::Relaxed);
-                        metrics.add("pipeline.blocks", 1);
-                        metrics.add("pipeline.cols", block.cols() as u64);
-                    }
-                    st
-                }));
-            }
+                    let (state, payload) = unit;
+                    let col_start = payload.0;
+                    let block = &payload.1;
+                    let c1 = col_start + block.cols();
+                    accumulate_block_with(
+                        block,
+                        col_start,
+                        c1,
+                        sketches,
+                        &inner,
+                        &mut state.c_acc,
+                        &mut state.r_acc,
+                        &mut state.m_acc,
+                    );
+                    state.blocks += 1;
+                });
+            };
+            // One timing sample per *batch* (≤ slots blocks), hence the
+            // metric name — per-block latency is this divided by the
+            // batch size, not comparable to a per-block timer.
+            self.metrics
+                .time("pipeline.batch_update", || catch_unwind(AssertUnwindSafe(update)))
+                .map_err(|_| FgError::Coordinator("worker panicked during block update".into()))?;
+            self.metrics.add("pipeline.blocks", batch_len);
+            self.metrics.add("pipeline.cols", batch_cols);
+        }
+        self.metrics.add("pipeline.blocks_sent", sent as u64);
+        self.metrics.add("pipeline.max_queue_depth", max_inflight as u64);
 
-            // Reader loop (current thread): owns the stream, applies
-            // backpressure via the bounded channel.
-            let mut sent = 0usize;
-            while let Some(block) = stream.next_block() {
-                let depth = inflight.fetch_add(1, Ordering::Relaxed) + 1;
-                max_inflight.fetch_max(depth, Ordering::Relaxed);
-                tx.send((block.col_start, block.data))
-                    .map_err(|_| FgError::Coordinator("workers exited early".into()))?;
-                sent += 1;
-            }
-            drop(tx);
-            self.metrics.add("pipeline.blocks_sent", sent as u64);
-
-            let mut states = Vec::with_capacity(workers);
-            for h in handles {
-                states.push(h.join().map_err(|_| FgError::Coordinator("worker panicked".into()))?);
-            }
-            Ok(states)
-        })?;
-
-        self.metrics.add("pipeline.max_queue_depth", max_inflight.load(Ordering::Relaxed) as u64);
-
-        // Fold worker accumulators (all updates commute).
+        // Fold slot accumulators in ascending slot order (deterministic).
         let mut c_acc = Mat::zeros(m, cfg.c);
         let mut r_acc = Mat::zeros(cfg.r, n);
         let mut m_acc = Mat::zeros(cfg.s_c, cfg.s_r);
         let mut blocks = 0usize;
-        for st in states {
+        for st in &states {
             c_acc += &st.c_acc;
             r_acc += &st.r_acc;
             m_acc += &st.m_acc;
             blocks += st.blocks;
         }
-        debug_assert_eq!(blocks, processed.load(Ordering::Relaxed));
+        debug_assert_eq!(blocks, sent);
 
-        let (u, sigma, v) =
-            self.metrics.time("pipeline.finalize", || finalize(cfg, sketches, &c_acc, &r_acc, &m_acc));
+        let (u, sigma, v) = self
+            .metrics
+            .time("pipeline.finalize", || finalize(cfg, sketches, &c_acc, &r_acc, &m_acc));
         Ok(SpSvdResult { u, sigma, v, blocks })
     }
 
-    /// Maximum queue depth observed in the last run (backpressure bound).
+    /// Maximum batch size observed in the last run (backpressure bound).
     pub fn max_queue_depth(&self) -> u64 {
         self.metrics.get("pipeline.max_queue_depth")
     }

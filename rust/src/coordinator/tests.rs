@@ -60,10 +60,12 @@ fn pipeline_processes_each_block_once_with_bounded_queue() {
     assert_eq!(pipeline.metrics.get("pipeline.blocks"), expected_blocks as u64);
     assert_eq!(pipeline.metrics.get("pipeline.blocks_sent"), expected_blocks as u64);
     assert_eq!(pipeline.metrics.get("pipeline.cols"), 90);
-    // Bounded channel: sender blocks at `depth` queued + workers' in-hand.
+    // Batch design: at most `workers` blocks are ever in flight (the
+    // metric records the largest batch), tighter than the old channel's
+    // `depth + workers` bound.
     assert!(
-        pipeline.max_queue_depth() <= (depth + 2 + 1) as u64,
-        "queue depth {} exceeded bound",
+        pipeline.max_queue_depth() <= 2,
+        "in-flight blocks {} exceeded the `workers` bound",
         pipeline.max_queue_depth()
     );
 }

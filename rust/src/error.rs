@@ -1,33 +1,55 @@
-//! Library-wide error type.
+//! Library-wide error type (hand-rolled `Display`/`Error` impls — the
+//! offline image vendors no `thiserror`).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors surfaced by the fastgmr library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum FgError {
-    #[error("matrix is not positive definite (pivot {pivot}, value {value})")]
     NotPositiveDefinite { pivot: usize, value: f64 },
-
-    #[error("shape mismatch: {context} (expected {expected}, got {got})")]
     ShapeMismatch { context: String, expected: String, got: String },
-
-    #[error("artifact `{name}` not found under {dir} — run `make artifacts`")]
     ArtifactMissing { name: String, dir: String },
-
-    #[error("runtime error: {0}")]
     Runtime(String),
-
-    #[error("config error: {0}")]
     Config(String),
-
-    #[error("data error: {0}")]
     Data(String),
-
-    #[error("coordinator error: {0}")]
     Coordinator(String),
+    Io(std::io::Error),
+}
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+impl fmt::Display for FgError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FgError::NotPositiveDefinite { pivot, value } => {
+                write!(f, "matrix is not positive definite (pivot {pivot}, value {value})")
+            }
+            FgError::ShapeMismatch { context, expected, got } => {
+                write!(f, "shape mismatch: {context} (expected {expected}, got {got})")
+            }
+            FgError::ArtifactMissing { name, dir } => {
+                write!(f, "artifact `{name}` not found under {dir} — run `make artifacts`")
+            }
+            FgError::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            FgError::Config(msg) => write!(f, "config error: {msg}"),
+            FgError::Data(msg) => write!(f, "data error: {msg}"),
+            FgError::Coordinator(msg) => write!(f, "coordinator error: {msg}"),
+            FgError::Io(e) => e.fmt(f),
+        }
+    }
+}
+
+impl std::error::Error for FgError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            FgError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for FgError {
+    fn from(e: std::io::Error) -> Self {
+        FgError::Io(e)
+    }
 }
 
 impl From<xla::Error> for FgError {

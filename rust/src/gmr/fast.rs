@@ -123,8 +123,16 @@ pub fn solve_core(sc_c: &Mat, a_tilde: &Mat, r_sr: &Mat) -> Mat {
 }
 
 /// Convenience wrapper returning only the residual-relevant product
-/// `C X̃ R`'s factors: (C·X̃, R). Kept for examples.
-pub fn approximate(a: Input<'_>, c: &Mat, r: &Mat, cfg: &FastGmrConfig, rng: &mut Pcg64) -> (Mat, Mat) {
+/// `C X̃ R`'s factors: (C·X̃, R). Kept for examples. The right factor is
+/// returned by reference — the caller already owns `r` and cloning a
+/// potentially r×n matrix here would be pure overhead.
+pub fn approximate<'r>(
+    a: Input<'_>,
+    c: &Mat,
+    r: &'r Mat,
+    cfg: &FastGmrConfig,
+    rng: &mut Pcg64,
+) -> (Mat, &'r Mat) {
     let sol = solve_fast(a, c, r, cfg, rng);
-    (matmul(c, &sol.x), r.clone())
+    (matmul(c, &sol.x), r)
 }

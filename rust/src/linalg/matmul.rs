@@ -1,12 +1,18 @@
 //! Blocked matrix multiplication.
 //!
-//! Single-threaded (the container exposes one core), cache-blocked, and
-//! written so LLVM auto-vectorizes the inner loops (AVX-512 via
-//! `-C target-cpu=native` in `.cargo/config.toml`). Layout is row-major
-//! throughout; `matmul` packs nothing but iterates i-k-j with 4-row
-//! A-blocking so each streamed B row is reused 4x. Measured ~8.7–10.9
-//! GFLOP/s f64 on the dev container's Xeon (vs ~3.5 before the perf
-//! pass); the optimization log lives in EXPERIMENTS.md §Perf.
+//! Cache-blocked and written so LLVM auto-vectorizes the inner loops
+//! (AVX-512 via `-C target-cpu=native` in `.cargo/config.toml`). Layout
+//! is row-major throughout; the serial kernel packs nothing but iterates
+//! i-k-j with 4-row A-blocking so each streamed B row is reused 4x.
+//! Measured ~8.7–10.9 GFLOP/s f64 single-core on the dev container's
+//! Xeon (vs ~3.5 before the perf pass); the optimization log lives in
+//! EXPERIMENTS.md §Perf.
+//!
+//! Above `parallel::PAR_FLOP_MIN` the public entry points dispatch to
+//! `crate::parallel`'s row-panel drivers, which run this same kernel on
+//! disjoint row panels — one worker per panel, bitwise identical to the
+//! serial path (row iterations are independent; per-row accumulation
+//! order is unchanged).
 
 use super::Mat;
 
@@ -31,15 +37,36 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     c
 }
 
+/// `C = A * B` on the serial kernel regardless of the `threads` knob
+/// (hot-loop callers that manage their own sharding).
+pub(crate) fn matmul_serial(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.rows(), "matmul_serial: inner dims mismatch");
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    matmul_acc_panel(a.data(), b.data(), c.data_mut(), a.rows(), a.cols(), b.cols());
+    c
+}
+
 /// `C += A * B` into a preallocated output (hot-path form, no alloc).
 pub fn matmul_acc(a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(a.cols(), b.rows(), "matmul_acc: inner dims mismatch");
     assert_eq!(c.rows(), a.rows());
     assert_eq!(c.cols(), b.cols());
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
-    let (ad, bd) = (a.data(), b.data());
-    let cd = c.data_mut();
+    if crate::parallel::matmul_should_shard(m, k, n) {
+        crate::parallel::par_matmul_acc(&crate::parallel::Pool::current(), a, b, c);
+        return;
+    }
+    matmul_acc_panel(a.data(), b.data(), c.data_mut(), m, k, n);
+}
 
+/// The serial blocked kernel on raw row-major slices: `C += A * B` for
+/// an `m×k` panel of A and matching `m×n` panel of C. Callers (serial
+/// dispatch above, row-panel workers in `crate::parallel`) pass panel
+/// slices; the kernel itself never sees global row indices.
+pub(crate) fn matmul_acc_panel(ad: &[f64], bd: &[f64], cd: &mut [f64], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(ad.len(), m * k);
+    debug_assert_eq!(bd.len(), k * n);
+    debug_assert_eq!(cd.len(), m * n);
     for jc in (0..n).step_by(NC) {
         let nb = NC.min(n - jc);
         for pc in (0..k).step_by(KC) {
@@ -132,12 +159,23 @@ pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
 /// `C = A * Bᵀ` without materializing the transpose.
 pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols(), b.cols(), "matmul_a_bt: dims mismatch");
-    let (m, _k, n) = (a.rows(), a.cols(), b.rows());
+    let (m, k, n) = (a.rows(), a.cols(), b.rows());
+    if crate::parallel::matmul_should_shard(m, k, n) {
+        return crate::parallel::par_matmul_a_bt(a, b);
+    }
     let mut c = Mat::zeros(m, n);
-    let cd = c.data_mut();
-    for i in 0..m {
+    matmul_a_bt_panel(a, b, 0, m, c.data_mut());
+    c
+}
+
+/// Serial `A · Bᵀ` kernel over the row panel `r0..r1` of A, writing the
+/// matching panel of C into `cd` (panel-local, `(r1-r0)×b.rows()`).
+pub(crate) fn matmul_a_bt_panel(a: &Mat, b: &Mat, r0: usize, r1: usize, cd: &mut [f64]) {
+    let n = b.rows();
+    debug_assert_eq!(cd.len(), (r1 - r0) * n);
+    for i in r0..r1 {
         let arow = a.row(i);
-        let crow = &mut cd[i * n..(i + 1) * n];
+        let crow = &mut cd[(i - r0) * n..(i - r0 + 1) * n];
         // Four B rows per pass: the A row streams from L1 once per four
         // dot products, and the four accumulators break the reduction
         // dependency chain so the loop vectorizes with multiple FMAs.
@@ -167,5 +205,4 @@ pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
             crow[j] = acc;
         }
     }
-    c
 }

@@ -1,3 +1,6 @@
-fn main() -> anyhow::Result<()> {
-    fastgmr::cli::main_entry()
+fn main() {
+    if let Err(e) = fastgmr::cli::main_entry() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
 }

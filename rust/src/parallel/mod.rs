@@ -1,0 +1,118 @@
+//! Parallel execution layer for the sketch hot paths.
+//!
+//! The paper's promise is that the sketched solve is cheap once the
+//! sketch applications (`S_C A`, `A S_Rᵀ`, RBF blocks) are fast; this
+//! module makes those applications use every core. It provides
+//!
+//! * [`Pool`] — a `std::thread`-based worker pool with deterministic
+//!   contiguous row-panel sharding (no new dependencies),
+//! * parallel drivers [`par_matmul`], [`par_matmul_a_bt`], and a
+//!   panel-sharded [`sketch_apply`],
+//! * the process-wide `threads` knob ([`threads`]/[`set_threads`]) that
+//!   `linalg::matmul`, the sketch library, [`crate::compute::CpuBackend`]
+//!   and the streaming pipeline all consult. Default is the machine's
+//!   available parallelism; `threads = 1` reproduces the single-threaded
+//!   results bitwise.
+//!
+//! Determinism: matmul row panels partition an `i`-loop whose iterations
+//! are independent, so sharded products are **bitwise identical** to the
+//! serial kernel for every thread count. Scatter-style sketch applies
+//! (CountSketch/OSNAP) accumulate per-shard partials and reduce them in
+//! fixed shard order — deterministic for a given thread count and within
+//! ~1e-15/element of the serial order (the `tests` module pins ≤ 1e-12).
+
+mod pool;
+#[cfg(test)]
+mod tests;
+
+pub use pool::{set_threads, threads, Pool};
+
+use crate::linalg::{matmul_a_bt_panel, matmul_acc_panel, Mat};
+
+/// Minimum fused-multiply-add count (`m·k·n`) before a matmul is worth
+/// sharding — below this, thread spawn overhead dominates.
+pub(crate) const PAR_FLOP_MIN: usize = 1 << 18;
+
+/// Minimum output/input element count (`m·n`) before an elementwise or
+/// scatter pass is worth sharding.
+pub(crate) const PAR_MIN_WORK: usize = 1 << 14;
+
+/// True when a `m×k · k×n` product is big enough to shard at all.
+pub(crate) fn worth_sharding(m: usize, k: usize, n: usize) -> bool {
+    m >= 2 && m.saturating_mul(k).saturating_mul(n) >= PAR_FLOP_MIN
+}
+
+/// Dispatch predicate used by `linalg::matmul`/`matmul_a_bt`: shard when
+/// the knob allows more than one thread and the product is big enough.
+pub(crate) fn matmul_should_shard(m: usize, k: usize, n: usize) -> bool {
+    threads() > 1 && worth_sharding(m, k, n)
+}
+
+/// `C = A · B` on the configured pool (row panels of A/C). Bitwise equal
+/// to the serial kernel for every thread count.
+pub fn par_matmul(a: &Mat, b: &Mat) -> Mat {
+    par_matmul_with(&Pool::current(), a, b)
+}
+
+/// [`par_matmul`] on an explicit pool.
+pub fn par_matmul_with(pool: &Pool, a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(
+        a.cols(),
+        b.rows(),
+        "par_matmul: inner dims mismatch {}x{} * {}x{}",
+        a.rows(),
+        a.cols(),
+        b.rows(),
+        b.cols()
+    );
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    par_matmul_acc(pool, a, b, &mut c);
+    c
+}
+
+/// `C += A · B` with deterministic row-panel sharding: worker `s` owns
+/// rows `bounds[s]..bounds[s+1]` of C and runs the serial blocked kernel
+/// on them, so every output row accumulates in exactly the serial order.
+pub fn par_matmul_acc(pool: &Pool, a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols(), b.rows(), "par_matmul_acc: inner dims mismatch");
+    assert_eq!(c.rows(), a.rows(), "par_matmul_acc: output rows mismatch");
+    assert_eq!(c.cols(), b.cols(), "par_matmul_acc: output cols mismatch");
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    if pool.threads() <= 1 || m < 2 {
+        matmul_acc_panel(a.data(), b.data(), c.data_mut(), m, k, n);
+        return;
+    }
+    let (ad, bd) = (a.data(), b.data());
+    pool.run_row_panels(m, n, c.data_mut(), |r0, r1, cpanel| {
+        matmul_acc_panel(&ad[r0 * k..r1 * k], bd, cpanel, r1 - r0, k, n);
+    });
+}
+
+/// `C = A · Bᵀ` on the configured pool (row panels of A/C; bitwise equal
+/// to the serial kernel — C rows are independent dot-product sweeps).
+pub fn par_matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
+    par_matmul_a_bt_with(&Pool::current(), a, b)
+}
+
+/// [`par_matmul_a_bt`] on an explicit pool.
+pub fn par_matmul_a_bt_with(pool: &Pool, a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.cols(), "par_matmul_a_bt: dims mismatch");
+    let (m, n) = (a.rows(), b.rows());
+    let mut c = Mat::zeros(m, n);
+    if pool.threads() <= 1 || m < 2 {
+        matmul_a_bt_panel(a, b, 0, m, c.data_mut());
+        return c;
+    }
+    pool.run_row_panels(m, n, c.data_mut(), |r0, r1, cpanel| {
+        matmul_a_bt_panel(a, b, r0, r1, cpanel);
+    });
+    c
+}
+
+/// Panel-sharded sketch application `S · A` on an explicit pool —
+/// Gaussian goes through [`par_matmul_with`], SRHT shards its FWHT
+/// column strips, CountSketch/OSNAP scatter over input-row shards with
+/// an ordered reduction.
+pub fn sketch_apply(pool: &Pool, s: &crate::sketch::Sketch, a: &Mat) -> Mat {
+    s.apply_left_with(a, pool)
+}

@@ -1,0 +1,141 @@
+//! The worker pool: deterministic contiguous sharding on scoped
+//! `std::thread` workers.
+//!
+//! A [`Pool`] is a *shard plan*, not a set of live threads: each parallel
+//! region spawns its workers inside a `std::thread::scope`, which keeps
+//! every borrow safe without `unsafe` lifetime laundering and joins all
+//! workers (propagating panics) before the region returns. Spawn cost is
+//! tens of microseconds per region — noise next to the panel products the
+//! regions guard, which are threshold-gated in `parallel::mod`.
+//!
+//! Determinism contract: shards are *contiguous ascending* ranges fixed
+//! by `(len, threads)` alone — never by scheduling — so any reduction
+//! performed in shard order is reproducible run-to-run for a given
+//! thread count, and `threads = 1` executes the exact serial code path.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Process-wide thread-count override; 0 means "auto-detect".
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+fn detected_parallelism() -> usize {
+    static DETECTED: OnceLock<usize> = OnceLock::new();
+    *DETECTED.get_or_init(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
+/// The configured worker count: the value set by [`set_threads`], or the
+/// machine's available parallelism when unset (or set to 0).
+pub fn threads() -> usize {
+    match THREAD_OVERRIDE.load(Ordering::Relaxed) {
+        0 => detected_parallelism(),
+        n => n,
+    }
+}
+
+/// Set the process-wide worker count (the `threads` knob: CLI
+/// `--threads N`, config `[parallel] threads`). 0 restores auto-detect;
+/// 1 reproduces the single-threaded code paths bitwise.
+pub fn set_threads(n: usize) {
+    THREAD_OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// A shard plan over a fixed number of workers.
+#[derive(Clone, Copy, Debug)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Pool {
+    /// A pool with an explicit worker count (clamped to ≥ 1).
+    pub fn new(threads: usize) -> Self {
+        Self { threads: threads.max(1) }
+    }
+
+    /// A pool sized by the process-wide `threads` knob.
+    pub fn current() -> Self {
+        Self::new(threads())
+    }
+
+    /// Worker count of this pool.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Deterministic contiguous shard boundaries: `shards + 1` ascending
+    /// cut points over `0..len`, the first `len % shards` shards one
+    /// element longer (so remainders never starve a trailing panel).
+    pub fn shard_bounds(len: usize, shards: usize) -> Vec<usize> {
+        let shards = shards.max(1);
+        let (base, rem) = (len / shards, len % shards);
+        let mut bounds = Vec::with_capacity(shards + 1);
+        let mut at = 0usize;
+        bounds.push(at);
+        for s in 0..shards {
+            at += base + usize::from(s < rem);
+            bounds.push(at);
+        }
+        bounds
+    }
+
+    /// Run `f(r0, r1, panel)` over disjoint contiguous row panels of
+    /// `out` (a `rows × row_len` row-major buffer), one scoped worker per
+    /// panel. With one shard (or one row) this degenerates to a plain
+    /// inline call — the exact serial path.
+    pub fn run_row_panels<F>(&self, rows: usize, row_len: usize, out: &mut [f64], f: F)
+    where
+        F: Fn(usize, usize, &mut [f64]) + Sync,
+    {
+        assert_eq!(out.len(), rows * row_len, "run_row_panels: buffer is not rows*row_len");
+        let shards = self.threads.min(rows);
+        if shards <= 1 {
+            f(0, rows, out);
+            return;
+        }
+        let bounds = Self::shard_bounds(rows, shards);
+        std::thread::scope(|scope| {
+            let f = &f;
+            let mut rest = out;
+            for w in bounds.windows(2) {
+                let (r0, r1) = (w[0], w[1]);
+                let (panel, tail) = rest.split_at_mut((r1 - r0) * row_len);
+                rest = tail;
+                scope.spawn(move || f(r0, r1, panel));
+            }
+        });
+    }
+
+    /// Run `f(i, &mut items[i])` for every item, items partitioned into
+    /// contiguous chunks across workers. Chunk boundaries come from
+    /// [`Pool::shard_bounds`], so the item→worker mapping is
+    /// deterministic.
+    pub fn for_each_mut<T, F>(&self, items: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        let n = items.len();
+        let shards = self.threads.min(n);
+        if shards <= 1 {
+            for (i, item) in items.iter_mut().enumerate() {
+                f(i, item);
+            }
+            return;
+        }
+        let bounds = Self::shard_bounds(n, shards);
+        std::thread::scope(|scope| {
+            let f = &f;
+            let mut rest = items;
+            for w in bounds.windows(2) {
+                let (i0, i1) = (w[0], w[1]);
+                let (chunk, tail) = rest.split_at_mut(i1 - i0);
+                rest = tail;
+                scope.spawn(move || {
+                    for (off, item) in chunk.iter_mut().enumerate() {
+                        f(i0 + off, item);
+                    }
+                });
+            }
+        });
+    }
+}

@@ -1,0 +1,142 @@
+//! Determinism tests for the parallel layer: `threads = 1` and
+//! `threads = N` must agree — bitwise for the row-panel matmul drivers,
+//! ≤ 1e-12 for the ordered-reduction scatter paths — including odd sizes
+//! where rows don't divide the shard count (remainder panels).
+
+use super::*;
+use crate::compute::{Backend, CpuBackend};
+use crate::gmr::{solve_fast, FastGmrConfig, Input};
+use crate::linalg::matmul;
+use crate::rng::rng;
+use crate::sketch::{Sketch, SketchKind};
+use crate::testing::assert_close;
+
+#[test]
+fn shard_bounds_cover_and_balance() {
+    for (len, shards) in [(10usize, 3usize), (97, 4), (5, 8), (16, 1), (0, 3), (7, 7)] {
+        let b = Pool::shard_bounds(len, shards);
+        assert_eq!(b.len(), shards.max(1) + 1);
+        assert_eq!(b[0], 0);
+        assert_eq!(*b.last().unwrap(), len);
+        for w in b.windows(2) {
+            assert!(w[0] <= w[1]);
+            // Balanced to within one element.
+            assert!(w[1] - w[0] <= len / shards.max(1) + 1);
+        }
+    }
+}
+
+/// Row panels partition independent output rows, so the parallel matmul
+/// must be *bitwise* identical to the serial kernel for any thread
+/// count — including 97 rows over 4/7 shards (remainder panels).
+#[test]
+fn par_matmul_bitwise_matches_serial_all_thread_counts() {
+    let mut r = rng(1);
+    let a = crate::linalg::Mat::randn(97, 64, &mut r);
+    let b = crate::linalg::Mat::randn(64, 53, &mut r);
+    let serial = par_matmul_with(&Pool::new(1), &a, &b);
+    assert_close(&serial, &matmul(&a, &b), 1e-12, "serial driver vs matmul");
+    for t in [2usize, 3, 4, 7] {
+        let par = par_matmul_with(&Pool::new(t), &a, &b);
+        assert_eq!(serial.data(), par.data(), "par_matmul not bitwise equal at threads={t}");
+    }
+}
+
+#[test]
+fn par_matmul_a_bt_bitwise_matches_serial_all_thread_counts() {
+    let mut r = rng(2);
+    let a = crate::linalg::Mat::randn(61, 40, &mut r);
+    let b = crate::linalg::Mat::randn(29, 40, &mut r);
+    let serial = par_matmul_a_bt_with(&Pool::new(1), &a, &b);
+    for t in [2usize, 3, 5] {
+        let par = par_matmul_a_bt_with(&Pool::new(t), &a, &b);
+        assert_eq!(serial.data(), par.data(), "par_matmul_a_bt not bitwise equal at threads={t}");
+    }
+}
+
+/// Accumulating drivers must preserve pre-existing output contents.
+#[test]
+fn par_matmul_acc_accumulates() {
+    let mut r = rng(3);
+    let a = crate::linalg::Mat::randn(33, 17, &mut r);
+    let b = crate::linalg::Mat::randn(17, 21, &mut r);
+    let mut c1 = crate::linalg::Mat::randn(33, 21, &mut r);
+    let mut c4 = c1.clone();
+    par_matmul_acc(&Pool::new(1), &a, &b, &mut c1);
+    par_matmul_acc(&Pool::new(4), &a, &b, &mut c4);
+    assert_eq!(c1.data(), c4.data(), "accumulation not bitwise equal");
+}
+
+/// Sharded sketch application: Gaussian/SRHT are bitwise, CountSketch/
+/// OSNAP reduce per-shard partials in fixed order (≤ 1e-12). Sizes are
+/// above the sharding thresholds so threads > 1 actually shards, and 601
+/// rows over 4 shards pins the remainder path.
+#[test]
+fn sketch_apply_threads_agree() {
+    let mut r = rng(4);
+    let a = crate::linalg::Mat::randn(601, 120, &mut r);
+    let at = a.transpose(); // 120 x 601, for apply_right
+    for kind in
+        [SketchKind::Gaussian, SketchKind::Srht, SketchKind::Count, SketchKind::Osnap, SketchKind::OsnapGaussian]
+    {
+        let mut rs = rng(40 + kind.name().len() as u64);
+        let s = Sketch::draw(kind, 48, 601, None, &mut rs);
+        let serial = sketch_apply(&Pool::new(1), &s, &a);
+        let serial_r = s.apply_right_with(&at, &Pool::new(1));
+        for t in [2usize, 4] {
+            let par = sketch_apply(&Pool::new(t), &s, &a);
+            assert_close(&par, &serial, 1e-12, &format!("apply_left {} threads={t}", kind.name()));
+            let par_r = s.apply_right_with(&at, &Pool::new(t));
+            assert_close(
+                &par_r,
+                &serial_r,
+                1e-12,
+                &format!("apply_right {} threads={t}", kind.name()),
+            );
+        }
+    }
+}
+
+/// The process-wide knob end-to-end: matmul dispatch, the CPU backend's
+/// rbf_block/twoside/stream_update, and a full `solve_fast` call must
+/// agree between threads=1 and threads=4. Everything global-knob-touching
+/// lives in this one test so concurrent tests never observe a knob value
+/// they didn't set.
+#[test]
+fn global_threads_knob_end_to_end() {
+    let be = CpuBackend;
+    let run_all = || {
+        let mut r = rng(5);
+        let a = crate::linalg::Mat::randn(300, 240, &mut r);
+        let x = crate::linalg::Mat::randn(220, 9, &mut r);
+        let m = matmul(&a, &a.transpose().slice(0, 240, 0, 200));
+        let k = be.rbf_block(&x, &x, 0.35).unwrap();
+        let sc = crate::linalg::Mat::randn(40, 300, &mut r);
+        let sr = crate::linalg::Mat::randn(44, 240, &mut r);
+        let two = be.twoside_sketch(&sc, &a, &sr).unwrap();
+        let mut rg = rng(6);
+        let g_c = crate::linalg::Mat::randn(240, 12, &mut rg);
+        let c = matmul(&a, &g_c);
+        let g_r = crate::linalg::Mat::randn(10, 300, &mut rg);
+        let rr = matmul(&g_r, &a);
+        let mut rs = rng(7);
+        let sol =
+            solve_fast(Input::Dense(&a), &c, &rr, &FastGmrConfig::gaussian(60, 60), &mut rs);
+        let mut rs2 = rng(7);
+        let sol_count =
+            solve_fast(Input::Dense(&a), &c, &rr, &FastGmrConfig::count(60, 60), &mut rs2);
+        (m, k, two, sol.x, sol_count.x)
+    };
+
+    set_threads(1);
+    let (m1, k1, two1, x1, xc1) = run_all();
+    set_threads(4);
+    let (m4, k4, two4, x4, xc4) = run_all();
+    set_threads(0); // restore auto-detect
+
+    assert_eq!(m1.data(), m4.data(), "matmul dispatch not bitwise across thread counts");
+    assert_eq!(k1.data(), k4.data(), "rbf_block not bitwise across thread counts");
+    assert_eq!(two1.data(), two4.data(), "twoside_sketch not bitwise across thread counts");
+    assert_close(&x4, &x1, 1e-12, "solve_fast (gaussian) threads=1 vs 4");
+    assert_close(&xc4, &xc1, 1e-12, "solve_fast (count) threads=1 vs 4");
+}

@@ -27,6 +27,7 @@ pub use combined::compose as compose_sketches;
 pub use leverage::{column_leverage_scores, row_leverage_scores};
 
 use crate::linalg::Mat;
+use crate::parallel::Pool;
 use crate::rng::Pcg64;
 use crate::sparse::Csr;
 
@@ -153,11 +154,37 @@ impl Sketch {
         self.m
     }
 
-    /// `S · A` for dense `A` (m×n) → (s×n).
+    /// `S · A` for dense `A` (m×n) → (s×n), sharded on the process-wide
+    /// pool when the apply is big enough (see [`Sketch::apply_left_with`]).
     pub fn apply_left(&self, a: &Mat) -> Mat {
+        self.apply_left_with(a, &Pool::current())
+    }
+
+    /// `S · A` with the sketch application sharded over row panels on
+    /// `pool`:
+    ///
+    /// * Gaussian — parallel matmul (bitwise equal to serial: row panels
+    ///   partition independent output rows),
+    /// * SRHT — FWHT column strips sharded across workers (bitwise equal:
+    ///   each output column is computed exactly as in the serial path),
+    /// * CountSketch/OSNAP — input-row shards scatter into private
+    ///   buckets, reduced in fixed shard order (deterministic for a given
+    ///   thread count; agrees with serial to ~1e-15/element),
+    /// * sampling — a gather, too cheap to shard.
+    ///
+    /// A pool with 1 thread reproduces the serial results bitwise.
+    pub fn apply_left_with(&self, a: &Mat, pool: &Pool) -> Mat {
         assert_eq!(a.rows(), self.m, "apply_left: A has {} rows, sketch wants {}", a.rows(), self.m);
+        let sharded = pool.threads() > 1 && self.m * a.cols() >= crate::parallel::PAR_MIN_WORK;
         match &self.op {
-            Op::Gaussian(g) => crate::linalg::matmul(g, a),
+            Op::Gaussian(g) => {
+                if pool.threads() > 1 && crate::parallel::worth_sharding(g.rows(), g.cols(), a.cols())
+                {
+                    crate::parallel::par_matmul_with(pool, g, a)
+                } else {
+                    crate::linalg::matmul_serial(g, a)
+                }
+            }
             Op::Sampling { idx, scale } => {
                 let mut out = a.select_rows(idx);
                 for (t, &sc) in scale.iter().enumerate() {
@@ -167,34 +194,39 @@ impl Sketch {
                 }
                 out
             }
-            Op::Srht { signs, sample, padded, scale } => srht::apply_left(a, signs, sample, *padded, *scale),
-            Op::Count { bucket, sign } => {
-                let mut out = Mat::zeros(self.s, a.cols());
-                for i in 0..self.m {
-                    let (b, sg) = (bucket[i], sign[i]);
-                    let src = a.row(i);
-                    let dst = out.row_mut(b);
-                    for (d, &v) in dst.iter_mut().zip(src) {
-                        *d += sg * v;
-                    }
-                }
-                out
+            Op::Srht { signs, sample, padded, scale } => {
+                srht::apply_left(a, signs, sample, *padded, *scale, pool)
             }
-            Op::Osnap { buckets, signs, p } => {
-                let mut out = Mat::zeros(self.s, a.cols());
-                for i in 0..self.m {
-                    let src = a.row(i);
-                    for t in 0..*p {
-                        let (b, sg) = (buckets[i * p + t], signs[i * p + t]);
+            Op::Count { bucket, sign } => {
+                scatter_sharded(pool, sharded, self.m, self.s, a.cols(), |i0, i1, out| {
+                    for i in i0..i1 {
+                        let (b, sg) = (bucket[i], sign[i]);
+                        let src = a.row(i);
                         let dst = out.row_mut(b);
                         for (d, &v) in dst.iter_mut().zip(src) {
                             *d += sg * v;
                         }
                     }
-                }
-                out
+                })
             }
-            Op::Composed { first, second } => second.apply_left(&first.apply_left(a)),
+            Op::Osnap { buckets, signs, p } => {
+                let p = *p;
+                scatter_sharded(pool, sharded, self.m, self.s, a.cols(), |i0, i1, out| {
+                    for i in i0..i1 {
+                        let src = a.row(i);
+                        for t in 0..p {
+                            let (b, sg) = (buckets[i * p + t], signs[i * p + t]);
+                            let dst = out.row_mut(b);
+                            for (d, &v) in dst.iter_mut().zip(src) {
+                                *d += sg * v;
+                            }
+                        }
+                    }
+                })
+            }
+            Op::Composed { first, second } => {
+                second.apply_left_with(&first.apply_left_with(a, pool), pool)
+            }
         }
     }
 
@@ -241,11 +273,29 @@ impl Sketch {
         }
     }
 
-    /// `A · Sᵀ` for dense `A` (n×m) → (n×s).
+    /// `A · Sᵀ` for dense `A` (n×m) → (n×s), sharded on the process-wide
+    /// pool when the apply is big enough.
     pub fn apply_right(&self, a: &Mat) -> Mat {
+        self.apply_right_with(a, &Pool::current())
+    }
+
+    /// `A · Sᵀ` sharded over row panels of `A` on `pool`. Every family's
+    /// output rows depend only on the matching input row, so the sharded
+    /// result is bitwise equal to the serial one for any thread count.
+    pub fn apply_right_with(&self, a: &Mat, pool: &Pool) -> Mat {
         assert_eq!(a.cols(), self.m, "apply_right: A has {} cols, sketch wants {}", a.cols(), self.m);
+        let sharded = pool.threads() > 1 && a.rows() * self.m >= crate::parallel::PAR_MIN_WORK;
         match &self.op {
-            Op::Gaussian(g) => crate::linalg::matmul_a_bt(a, g),
+            Op::Gaussian(g) => {
+                if pool.threads() > 1 && crate::parallel::worth_sharding(a.rows(), a.cols(), g.rows())
+                {
+                    crate::parallel::par_matmul_a_bt_with(pool, a, g)
+                } else {
+                    let mut out = Mat::zeros(a.rows(), g.rows());
+                    crate::linalg::matmul_a_bt_panel(a, g, 0, a.rows(), out.data_mut());
+                    out
+                }
+            }
             Op::Sampling { idx, scale } => {
                 let mut out = a.select_cols(idx);
                 for i in 0..out.rows() {
@@ -256,32 +306,44 @@ impl Sketch {
                 }
                 out
             }
-            Op::Srht { signs, sample, padded, scale } => srht::apply_right(a, signs, sample, *padded, *scale),
+            Op::Srht { signs, sample, padded, scale } => {
+                srht::apply_right(a, signs, sample, *padded, *scale, pool)
+            }
             Op::Count { bucket, sign } => {
-                let mut out = Mat::zeros(a.rows(), self.s);
-                for i in 0..a.rows() {
-                    let src = a.row(i);
-                    let dst = out.row_mut(i);
-                    for j in 0..self.m {
-                        dst[bucket[j]] += sign[j] * src[j];
+                let (rows, s, m) = (a.rows(), self.s, self.m);
+                let mut out = Mat::zeros(rows, s);
+                let shard_pool = if sharded { *pool } else { Pool::new(1) };
+                shard_pool.run_row_panels(rows, s, out.data_mut(), |r0, r1, panel| {
+                    for i in r0..r1 {
+                        let src = a.row(i);
+                        let dst = &mut panel[(i - r0) * s..(i - r0 + 1) * s];
+                        for j in 0..m {
+                            dst[bucket[j]] += sign[j] * src[j];
+                        }
                     }
-                }
+                });
                 out
             }
             Op::Osnap { buckets, signs, p } => {
-                let mut out = Mat::zeros(a.rows(), self.s);
-                for i in 0..a.rows() {
-                    let src = a.row(i);
-                    let dst = out.row_mut(i);
-                    for j in 0..self.m {
-                        for t in 0..*p {
-                            dst[buckets[j * p + t]] += signs[j * p + t] * src[j];
+                let (rows, s, m, p) = (a.rows(), self.s, self.m, *p);
+                let mut out = Mat::zeros(rows, s);
+                let shard_pool = if sharded { *pool } else { Pool::new(1) };
+                shard_pool.run_row_panels(rows, s, out.data_mut(), |r0, r1, panel| {
+                    for i in r0..r1 {
+                        let src = a.row(i);
+                        let dst = &mut panel[(i - r0) * s..(i - r0 + 1) * s];
+                        for j in 0..m {
+                            for t in 0..p {
+                                dst[buckets[j * p + t]] += signs[j * p + t] * src[j];
+                            }
                         }
                     }
-                }
+                });
                 out
             }
-            Op::Composed { first, second } => second.apply_right(&first.apply_right(a)),
+            Op::Composed { first, second } => {
+                second.apply_right_with(&first.apply_right_with(a, pool), pool)
+            }
         }
     }
 
@@ -412,6 +474,48 @@ impl Sketch {
         };
         Sketch::from_op(self.s, w, op)
     }
+}
+
+/// Shard a row-scatter `out = Σ_i contribution(i)` over contiguous
+/// input-row panels: each shard accumulates into a private `s×n` buffer
+/// (`body(i0, i1, buf)` adds rows `i0..i1`), and partials are reduced in
+/// ascending shard order — deterministic for a fixed thread count, and
+/// exactly the serial path when `sharded` is false or the pool has one
+/// thread.
+fn scatter_sharded(
+    pool: &Pool,
+    sharded: bool,
+    m: usize,
+    s: usize,
+    n: usize,
+    body: impl Fn(usize, usize, &mut Mat) + Sync,
+) -> Mat {
+    let mut shards = if sharded { pool.threads().min(m).max(1) } else { 1 };
+    // Each shard zero-inits and later folds an s×n partial; unless the
+    // per-shard scatter work (m/shards rows) dominates that buffer
+    // traffic (s rows), the "parallel" path would cost more than the
+    // serial scatter it replaces.
+    if m < 2 * shards * s {
+        shards = 1;
+    }
+    if shards <= 1 {
+        let mut out = Mat::zeros(s, n);
+        body(0, m, &mut out);
+        return out;
+    }
+    let bounds = Pool::shard_bounds(m, shards);
+    let mut partials: Vec<Mat> = (0..shards).map(|_| Mat::zeros(s, n)).collect();
+    {
+        let bounds = &bounds;
+        let body = &body;
+        pool.for_each_mut(&mut partials, |w, buf| body(bounds[w], bounds[w + 1], buf));
+    }
+    let mut it = partials.into_iter();
+    let mut out = it.next().expect("at least one shard");
+    for p in it {
+        out += &p;
+    }
+    out
 }
 
 /// Deep-clone an op (sketches are cheap to clone except Gaussian).

@@ -3,9 +3,15 @@
 //! matrix on the zero-padded dimension `m̃ = 2^⌈log2 m⌉`, `D` random ±1
 //! diagonal, `P` a uniform row sampler. Applying to an m×n matrix costs
 //! `O(m̃ n log m̃)` via the in-place fast Walsh–Hadamard transform.
+//!
+//! Parallelism: the FWHT mixes *within* a column (`apply_left`) or row
+//! (`apply_right`), never across them, so columns/rows shard perfectly —
+//! each worker transforms a disjoint strip with a private padded buffer
+//! and the sharded result is bitwise equal to the serial one.
 
 use super::{Op, Sketch};
 use crate::linalg::Mat;
+use crate::parallel::Pool;
 use crate::rng::Pcg64;
 
 pub(crate) fn draw(s: usize, m: usize, rng: &mut Pcg64) -> Sketch {
@@ -37,22 +43,68 @@ pub(crate) fn fwht(buf: &mut [f64]) {
 }
 
 /// `S · A`: sign-flip rows, FWHT each column over the padded domain,
-/// select sampled rows with scaling.
-pub(crate) fn apply_left(a: &Mat, signs: &[f64], sample: &[usize], padded: usize, scale: f64) -> Mat {
+/// select sampled rows with scaling. Column strips are sharded across
+/// `pool`'s workers when the apply is big enough.
+pub(crate) fn apply_left(
+    a: &Mat,
+    signs: &[f64],
+    sample: &[usize],
+    padded: usize,
+    scale: f64,
+    pool: &Pool,
+) -> Mat {
     let (m, n) = a.shape();
     let s = sample.len();
-    let norm = 1.0 / (padded as f64).sqrt();
+    let shardable = pool.threads() > 1 && n >= 2 && m * n >= crate::parallel::PAR_MIN_WORK;
+    if !shardable {
+        return apply_left_cols(a, signs, sample, padded, scale, 0, n);
+    }
+    let shards = pool.threads().min(n);
+    let bounds = Pool::shard_bounds(n, shards);
+    // Each shard transforms its own column range into a private s×w
+    // piece; pieces land in disjoint column blocks of the output (no
+    // reduction, hence bitwise equality with the serial path).
+    let mut pieces: Vec<(usize, Mat)> =
+        bounds.windows(2).map(|w| (w[0], Mat::zeros(0, 0))).collect();
+    {
+        let bounds = &bounds;
+        pool.for_each_mut(&mut pieces, |w, piece| {
+            piece.1 = apply_left_cols(a, signs, sample, padded, scale, bounds[w], bounds[w + 1]);
+        });
+    }
     let mut out = Mat::zeros(s, n);
+    for (j0, piece) in &pieces {
+        out.set_block(0, *j0, piece);
+    }
+    out
+}
+
+/// Serial worker for [`apply_left`]: transform columns `j0..j1` of A,
+/// returning the `s × (j1-j0)` output block.
+fn apply_left_cols(
+    a: &Mat,
+    signs: &[f64],
+    sample: &[usize],
+    padded: usize,
+    scale: f64,
+    j0: usize,
+    j1: usize,
+) -> Mat {
+    let m = a.rows();
+    let s = sample.len();
+    let width = j1 - j0;
+    let norm = 1.0 / (padded as f64).sqrt();
+    let mut out = Mat::zeros(s, width);
     // Process columns in strips to stay cache-friendly: transform a strip
     // of `W` columns at once, walking the FWHT over rows.
     const W: usize = 32;
-    let mut strip = vec![0.0f64; padded * W];
-    for j0 in (0..n).step_by(W) {
-        let w = W.min(n - j0);
+    let mut strip = vec![0.0f64; padded * W.min(width.max(1))];
+    for c0 in (0..width).step_by(W) {
+        let w = W.min(width - c0);
         // Load strip (row-major a → column-strip buffer, padded with 0).
         strip[..padded * w].iter_mut().for_each(|v| *v = 0.0);
         for i in 0..m {
-            let arow = &a.row(i)[j0..j0 + w];
+            let arow = &a.row(i)[j0 + c0..j0 + c0 + w];
             let sg = signs[i];
             for (jj, &v) in arow.iter().enumerate() {
                 strip[jj * padded + i] = sg * v;
@@ -62,7 +114,7 @@ pub(crate) fn apply_left(a: &Mat, signs: &[f64], sample: &[usize], padded: usize
             let col = &mut strip[jj * padded..(jj + 1) * padded];
             fwht(col);
             for (t, &src) in sample.iter().enumerate() {
-                out[(t, j0 + jj)] = col[src] * norm * scale;
+                out[(t, c0 + jj)] = col[src] * norm * scale;
             }
         }
     }
@@ -70,24 +122,36 @@ pub(crate) fn apply_left(a: &Mat, signs: &[f64], sample: &[usize], padded: usize
 }
 
 /// `A · Sᵀ` where S sketches the column dimension of A: sign-flip
-/// columns, FWHT each row, select sampled coordinates.
-pub(crate) fn apply_right(a: &Mat, signs: &[f64], sample: &[usize], padded: usize, scale: f64) -> Mat {
+/// columns, FWHT each row, select sampled coordinates. Rows shard
+/// perfectly (each worker keeps a private padded buffer), bitwise equal
+/// to the serial path.
+pub(crate) fn apply_right(
+    a: &Mat,
+    signs: &[f64],
+    sample: &[usize],
+    padded: usize,
+    scale: f64,
+    pool: &Pool,
+) -> Mat {
     let (m, n) = a.shape();
     let s = sample.len();
     let norm = 1.0 / (padded as f64).sqrt();
     let mut out = Mat::zeros(m, s);
-    let mut buf = vec![0.0f64; padded];
-    for i in 0..m {
-        buf.fill(0.0);
-        for (j, &v) in a.row(i).iter().enumerate() {
-            buf[j] = signs[j] * v;
+    let shardable = pool.threads() > 1 && m >= 2 && m * n >= crate::parallel::PAR_MIN_WORK;
+    let shard_pool = if shardable { *pool } else { Pool::new(1) };
+    shard_pool.run_row_panels(m, s, out.data_mut(), |r0, r1, panel| {
+        let mut buf = vec![0.0f64; padded];
+        for i in r0..r1 {
+            buf.fill(0.0);
+            for (j, &v) in a.row(i).iter().enumerate() {
+                buf[j] = signs[j] * v;
+            }
+            fwht(&mut buf);
+            let orow = &mut panel[(i - r0) * s..(i - r0 + 1) * s];
+            for (t, &src) in sample.iter().enumerate() {
+                orow[t] = buf[src] * norm * scale;
+            }
         }
-        let _ = n;
-        fwht(&mut buf);
-        let orow = out.row_mut(i);
-        for (t, &src) in sample.iter().enumerate() {
-            orow[t] = buf[src] * norm * scale;
-        }
-    }
+    });
     out
 }

@@ -127,7 +127,7 @@ pub fn fast_sp_svd_with(
 
 /// One streaming update (steps 6–8). Factored out so the coordinator's
 /// worker threads and the PJRT `stream_update` artifact path share the
-/// exact same semantics.
+/// exact same semantics. Sketch applies shard on the process-wide pool.
 pub fn accumulate_block(
     a_l: &Mat,
     c0: usize,
@@ -137,18 +137,34 @@ pub fn accumulate_block(
     r_acc: &mut Mat,
     m_acc: &mut Mat,
 ) {
+    accumulate_block_with(a_l, c0, c1, sk, &crate::parallel::Pool::current(), c_acc, r_acc, m_acc);
+}
+
+/// [`accumulate_block`] with an explicit pool for the sketch applies —
+/// the coordinator pipeline passes a 1-thread pool from its slot workers
+/// so parallelism shards at exactly one layer (no oversubscription).
+pub fn accumulate_block_with(
+    a_l: &Mat,
+    c0: usize,
+    c1: usize,
+    sk: &FastSpSvdSketches,
+    pool: &crate::parallel::Pool,
+    c_acc: &mut Mat,
+    r_acc: &mut Mat,
+    m_acc: &mut Mat,
+) {
     // R[:, c0..c1] = Ψ̃ A_L
-    let r_blk = sk.psi.apply_left(a_l); // r x L
+    let r_blk = sk.psi.apply_left_with(a_l, pool); // r x L
     r_acc.set_block(0, c0, &r_blk);
     // C += A_L · Ω̃[c0..c1, :]  (Ω̃ = omegaᵀ, so this is apply_right with
     // the sliced coordinates).
     let om_slice = sk.omega.slice_input(c0, c1); // c x L map
-    let c_blk = om_slice.apply_right(a_l); // m x c
+    let c_blk = om_slice.apply_right_with(a_l, pool); // m x c
     *c_acc += &c_blk;
     // M += (S_C A_L) (S_R[:, c0..c1])ᵀ
-    let sc_al = sk.s_c.apply_left(a_l); // s_c x L
+    let sc_al = sk.s_c.apply_left_with(a_l, pool); // s_c x L
     let sr_slice = sk.s_r.slice_input(c0, c1); // s_r x L
-    let m_blk = sr_slice.apply_right(&sc_al); // s_c x s_r
+    let m_blk = sr_slice.apply_right_with(&sc_al, pool); // s_c x s_r
     *m_acc += &m_blk;
 }
 

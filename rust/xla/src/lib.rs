@@ -1,0 +1,145 @@
+//! Offline stub of the `xla` PJRT binding.
+//!
+//! The container image does not vendor the real `xla` crate (it links
+//! libpjrt), so this shim provides the exact API surface
+//! `fastgmr::runtime` compiles against. Construction of the CPU client
+//! succeeds — so manifest loading and error paths behave as in the real
+//! build — but compiling or executing a computation returns
+//! [`Error::Unavailable`]. The CPU backend remains the production path;
+//! swapping this stub for the real crate is a one-line change in
+//! `rust/Cargo.toml`.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error`'s role (everything here is the
+/// "runtime not available" case).
+#[derive(Debug, Clone)]
+pub enum Error {
+    /// The operation needs the real PJRT runtime, which this stub build
+    /// does not link.
+    Unavailable(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => {
+                write!(f, "{what}: PJRT/XLA runtime not linked (offline `xla` stub build)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error::Unavailable(what.to_string()))
+}
+
+/// Host literal (f32 tensors at the PJRT boundary).
+pub struct Literal;
+
+impl Literal {
+    /// Build a rank-1 literal from host data.
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    /// Destructure a tuple literal.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    /// Copy out as a host vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+/// Device buffer returned by an executable.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Transfer the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// A compiled executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments; outer vec is per-device.
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// The PJRT client handle.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// CPU client. Succeeds in the stub so callers can still load
+    /// manifests and surface precise errors at compile/execute time.
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    /// Platform name for logs.
+    pub fn platform_name(&self) -> String {
+        "cpu (xla stub — PJRT not linked)".to_string()
+    }
+
+    /// Compile a computation.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Parsed HLO module.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse an HLO-text artifact from disk.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation wrapping a parsed module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_constructs_but_compile_is_unavailable() {
+        let client = PjRtClient::cpu().unwrap();
+        assert!(client.platform_name().contains("stub"));
+        let comp = XlaComputation::from_proto(&HloModuleProto);
+        let err = client.compile(&comp).unwrap_err();
+        assert!(err.to_string().contains("PJRT"));
+    }
+
+    #[test]
+    fn hlo_parse_reports_unavailable() {
+        assert!(HloModuleProto::from_text_file("/tmp/x.hlo.txt").is_err());
+    }
+}
