@@ -18,6 +18,7 @@
 pub mod fig1;
 pub mod fig2;
 pub mod fig3;
+pub mod fig_cur;
 pub mod harness;
 pub mod perf;
 pub mod tables;
@@ -37,14 +38,16 @@ pub fn targets() -> Vec<(&'static str, fn(&mut BenchCtx))> {
         ("fig2", fig2::run),
         ("table7", fig2::run_table7),
         ("fig3", fig3::run),
+        ("fig_cur", fig_cur::run),
         ("perf", perf::run),
     ]
 }
 
 /// Targets run by `--smoke` when none are named explicitly: one table,
-/// one figure, and the microbenchmarks — enough to catch a perf
-/// regression per-PR without paper-scale runtimes.
-const SMOKE_TARGETS: [&str; 3] = ["table1", "fig1", "perf"];
+/// two figures (fig_cur covers the CUR workload so the perf trajectory
+/// tracks it per-PR), and the microbenchmarks — enough to catch a perf
+/// regression without paper-scale runtimes.
+const SMOKE_TARGETS: [&str; 4] = ["table1", "fig1", "fig_cur", "perf"];
 
 /// Entry point used by `rust/benches/bench_main.rs`.
 ///

@@ -8,6 +8,7 @@
 //! fastgmr bench <target> [--full|--smoke] [--threads N]
 //! fastgmr pipeline [--config f.toml] [--threads N]
 //! fastgmr serve [--jobs N] [--threads N]
+//! fastgmr cur [--size MxN] [--rank K] [--selection S] [--sketch KIND]
 //! ```
 //!
 //! `--threads N` sets the process-wide worker count for the parallel
@@ -17,6 +18,7 @@
 
 use crate::config::Config;
 use crate::coordinator::{jobs::MatrixPayload, ApproxJob, PipelineConfig, Router, StreamPipeline};
+use crate::cur::{self, CurConfig, SelectionStrategy};
 use crate::data::{synth_dense, SpectrumKind};
 use crate::error::{FgError, Result};
 use crate::linalg::Mat;
@@ -38,13 +40,20 @@ USAGE:
                                      run the streaming SP-SVD pipeline
   fastgmr serve [--jobs N] [--threads N]
                                      demo the approximation-job router
+  fastgmr cur [--size MxN] [--rank K] [--c C] [--r R] [--selection S]
+              [--sketch KIND] [--mult A] [--seed N] [--threads N]
+                                     CUR decomposition demo: compare the
+                                     exact, Fast-GMR, and stabilized-QR
+                                     cores on a synthetic rank-K matrix
+                                     (S: uniform|leverage|sketched)
   fastgmr help                       this message
 
   --threads N   worker threads for the parallel layer (0 = auto-detect,
                 1 = bitwise single-threaded reproduction)
 
-Bench targets: table1..table7, fig1, fig2, fig3, perf (see DESIGN.md §5).
-`bench --smoke` runs a reduced CI subset and writes results/bench_smoke.json.";
+Bench targets: table1..table7, fig1, fig2, fig3, fig_cur, perf (see
+DESIGN.md §5). `bench --smoke` runs a reduced CI subset and writes
+results/bench_smoke.json.";
 
 /// Main dispatch (called from `rust/src/main.rs`).
 pub fn main_entry() -> Result<()> {
@@ -67,6 +76,7 @@ pub fn main_entry() -> Result<()> {
         }
         "pipeline" => pipeline(&rest, threads.is_some()),
         "serve" => serve(&rest),
+        "cur" => cur_cmd(&rest),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
@@ -201,6 +211,83 @@ fn pipeline(args: &[String], cli_threads: bool) -> Result<()> {
     Ok(())
 }
 
+/// Parse an optional numeric flag, erroring loudly on malformed values
+/// (a silent default would benchmark a configuration the user did not
+/// ask for).
+fn parse_flag<T: std::str::FromStr>(args: &[String], flag: &str, default: T) -> Result<T> {
+    match flag_value(args, flag) {
+        None => Ok(default),
+        Some(v) => {
+            v.parse().map_err(|_| FgError::Config(format!("{flag}: expected a number, got `{v}`")))
+        }
+    }
+}
+
+/// `fastgmr cur` — decompose a synthetic rank-`k` + noise matrix and
+/// compare the three core solvers against `‖A − A_k‖_F`.
+fn cur_cmd(args: &[String]) -> Result<()> {
+    let (m, n) = match flag_value(args, "--size").unwrap_or("1200x900").split_once('x') {
+        Some((ms, ns)) => {
+            let m = ms.parse().map_err(|_| FgError::Config(format!("--size: bad rows `{ms}`")))?;
+            let n = ns.parse().map_err(|_| FgError::Config(format!("--size: bad cols `{ns}`")))?;
+            (m, n)
+        }
+        None => return Err(FgError::Config("--size: expected MxN (e.g. 1200x900)".into())),
+    };
+    let k: usize = parse_flag(args, "--rank", 10)?;
+    let c: usize = parse_flag(args, "--c", 3 * k)?;
+    let r: usize = parse_flag(args, "--r", 3 * k)?;
+    let mult: usize = parse_flag(args, "--mult", 4)?;
+    let seed: u64 = parse_flag(args, "--seed", 0)?;
+    let sketch = SketchKind::parse(flag_value(args, "--sketch").unwrap_or("gaussian"))
+        .ok_or_else(|| FgError::Config("--sketch: unknown sketch kind".into()))?;
+    let sel_tok = flag_value(args, "--selection").unwrap_or("leverage");
+    let selection = SelectionStrategy::parse(sel_tok, sketch, 4 * k)
+        .ok_or_else(|| FgError::Config(format!("--selection: unknown strategy `{sel_tok}`")))?;
+
+    println!(
+        "cur: A {m}x{n} rank-{k}+noise, c={c} r={r}, selection={}, sketch={} (mult {mult}), \
+         threads={}",
+        selection.name(),
+        sketch.name(),
+        crate::parallel::threads()
+    );
+    let mut rs = rng(seed);
+    let a = synth_dense(m, n, k, SpectrumKind::Exponential { base: 0.85 }, 0.02, &mut rs);
+    let input = crate::gmr::Input::Dense(&a);
+
+    let start = std::time::Instant::now();
+    let (col_idx, cmat) = cur::select_columns(input, &selection, c, &mut rs);
+    let (row_idx, rmat) = cur::select_rows(input, &selection, r, &mut rs);
+    println!(
+        "selected {} columns / {} rows in {:.3}s",
+        col_idx.len(),
+        row_idx.len(),
+        start.elapsed().as_secs_f64()
+    );
+
+    let mut rak = rng(seed + 1);
+    let ak = crate::svdstream::ak_error(input, k, 6, &mut rak);
+    println!("‖A − A_k‖_F = {ak:.5}");
+
+    println!("{:>14}  {:>10}  {:>10}  {:>8}", "core", "residual", "vs ‖A−A_k‖", "t_core");
+    let report = |name: &str, u: Mat, secs: f64| {
+        let res = crate::gmr::residual(input, &cmat, &u, &rmat);
+        println!("{:>14}  {:>10.5}  {:>10.4}  {:>7.3}s", name, res, res / ak, secs);
+    };
+    let t0 = std::time::Instant::now();
+    let u = cur::core_exact(input, &cmat, &rmat);
+    report("exact", u, t0.elapsed().as_secs_f64());
+    let mut rc = rng(seed + 2);
+    let t0 = std::time::Instant::now();
+    let u = cur::core_fast(input, &cmat, &rmat, sketch, mult * c, mult * r, &mut rc);
+    report("fast-gmr", u, t0.elapsed().as_secs_f64());
+    let t0 = std::time::Instant::now();
+    let u = cur::core_stabilized(input, &cmat, &rmat);
+    report("stabilized-qr", u, t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
 fn serve(args: &[String]) -> Result<()> {
     let jobs: usize = flag_value(args, "--jobs").and_then(|v| v.parse().ok()).unwrap_or(8);
     let router = Router::new(2);
@@ -209,7 +296,7 @@ fn serve(args: &[String]) -> Result<()> {
     println!("submitting {jobs} mixed jobs…");
     for seed in 0..jobs as u64 {
         let a = synth_dense(300, 240, 20, SpectrumKind::Exponential { base: 0.9 }, 0.02, &mut r);
-        match seed % 3 {
+        match seed % 4 {
             0 => {
                 let g_c = Mat::randn(240, 10, &mut r);
                 let c = crate::linalg::matmul(&a, &g_c);
@@ -227,10 +314,15 @@ fn serve(args: &[String]) -> Result<()> {
                 let x = Mat::randn(400, 8, &mut r);
                 handles.push(router.submit(ApproxJob::SpsdKernel { x, sigma: 0.4, c: 12, s: 60, seed }));
             }
-            _ => handles.push(router.submit(ApproxJob::StreamSvd {
+            2 => handles.push(router.submit(ApproxJob::StreamSvd {
                 a: MatrixPayload::Dense(a),
                 cfg: FastSpSvdConfig::paper(5, 4, SketchKind::Gaussian),
                 block: 64,
+                seed,
+            })),
+            _ => handles.push(router.submit(ApproxJob::Cur {
+                a: MatrixPayload::Dense(a),
+                cfg: CurConfig::fast(12, 12, 3),
                 seed,
             })),
         }

@@ -32,7 +32,7 @@ impl Backend for CpuBackend {
         let (rows, cols) = (xi.rows(), xj.rows());
         let mut out = Mat::zeros(rows, cols);
         let exp_pool = if rows * cols >= crate::parallel::PAR_MIN_WORK {
-            Pool::current()
+            self.pool()
         } else {
             Pool::new(1)
         };

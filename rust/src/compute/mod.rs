@@ -20,6 +20,7 @@ pub use pjrt::PjrtBackend;
 
 use crate::error::Result;
 use crate::linalg::Mat;
+use crate::parallel::Pool;
 
 /// Fixed-shape hot-path operations.
 ///
@@ -29,6 +30,16 @@ use crate::linalg::Mat;
 pub trait Backend {
     /// Human-readable name for logs/metrics.
     fn name(&self) -> &'static str;
+
+    /// Worker pool the backend's sharded hot loops run on. The default
+    /// is the calling thread's effective budget: the process-wide
+    /// `threads` knob capped by any per-executor budget installed with
+    /// [`crate::parallel::set_thread_budget`] (the router does this for
+    /// its executor threads, so `N_workers × threads` never
+    /// oversubscribes the machine).
+    fn pool(&self) -> Pool {
+        Pool::current()
+    }
 
     /// Dense product `S · A` (the sketch-apply hot spot).
     fn sketch_apply(&self, s: &Mat, a: &Mat) -> Result<Mat>;

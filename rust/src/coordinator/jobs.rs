@@ -1,5 +1,6 @@
 //! Approximation jobs — the unit of work the router schedules.
 
+use crate::cur::{CurConfig, CurDecomposition};
 use crate::gmr::FastGmrConfig;
 use crate::linalg::Mat;
 use crate::sketch::SketchKind;
@@ -46,6 +47,8 @@ pub enum ApproxJob {
     StreamSvd { a: MatrixPayload, cfg: FastSpSvdConfig, block: usize, seed: u64 },
     /// Exact GMR baseline (for comparisons through the same service).
     GmrExact { a: MatrixPayload, c: Mat, r: Mat },
+    /// CUR decomposition (column/row selection + Fast-GMR core).
+    Cur { a: MatrixPayload, cfg: CurConfig, seed: u64 },
 }
 
 impl ApproxJob {
@@ -56,6 +59,7 @@ impl ApproxJob {
             ApproxJob::SpsdKernel { .. } => "spsd",
             ApproxJob::StreamSvd { .. } => "svd",
             ApproxJob::GmrExact { .. } => "gmr_exact",
+            ApproxJob::Cur { .. } => "cur",
         }
     }
 
@@ -70,6 +74,9 @@ impl ApproxJob {
             ApproxJob::GmrExact { a, c, r } => {
                 a.rows() as u64 * a.cols() as u64 * (c.cols() + r.rows()) as u64
             }
+            ApproxJob::Cur { a, cfg, .. } => {
+                (a.rows() + a.cols()) as u64 * (cfg.c + cfg.r + cfg.s_c + cfg.s_r) as u64
+            }
         }
     }
 }
@@ -83,6 +90,8 @@ pub enum JobResult {
     Spsd { idx: Vec<usize>, c: Mat, x: Mat, entries_observed: u64 },
     /// SVD factors.
     Svd { u: Mat, sigma: Vec<f64>, v: Mat },
+    /// CUR factors (selected indices + C, U, R).
+    Cur { cur: CurDecomposition },
 }
 
 impl JobResult {
@@ -91,6 +100,7 @@ impl JobResult {
             JobResult::Gmr { .. } => "gmr",
             JobResult::Spsd { .. } => "spsd",
             JobResult::Svd { .. } => "svd",
+            JobResult::Cur { .. } => "cur",
         }
     }
 }

@@ -4,6 +4,14 @@
 //! `wait()` blocks for the result. Workers pull from a shared queue
 //! (work-stealing by contention — single consumer lock on the receiver),
 //! run the algorithm, and report per-kind latency into [`Metrics`].
+//!
+//! Each executor thread installs its share of the process-wide `threads`
+//! knob as a per-thread pool budget
+//! ([`crate::parallel::set_thread_budget`]) at startup, so the pool
+//! regions its jobs open — matmul dispatch, sketch applies, CUR
+//! selection — use `threads / workers` lanes each instead of all of
+//! them. Without the cap, N workers running pool-hungry jobs would
+//! oversubscribe the machine N×.
 
 use super::jobs::{ApproxJob, JobResult, MatrixPayload};
 use crate::error::{FgError, Result};
@@ -44,17 +52,24 @@ impl Router {
         let rx = Arc::new(Mutex::new(rx));
         let metrics = Arc::new(Metrics::new());
         let mut handles = Vec::with_capacity(workers);
-        for _ in 0..workers {
+        for w in 0..workers {
             let rx = rx.clone();
             let metrics = metrics.clone();
-            handles.push(std::thread::spawn(move || loop {
-                let item = rx.lock().unwrap().recv();
-                let Ok((job, reply)) = item else { break };
-                let kind = job.kind();
-                metrics.add(&format!("router.{kind}.submitted"), 1);
-                let result = metrics.time(&format!("router.{kind}.latency"), || execute(job));
-                metrics.add(&format!("router.{kind}.completed"), 1);
-                let _ = reply.send(result);
+            handles.push(std::thread::spawn(move || {
+                // This executor's share of the `threads` knob: nested
+                // pool regions opened by its jobs stay within it, so
+                // `workers × threads` never oversubscribes the machine.
+                let budget = crate::parallel::share_budget(crate::parallel::threads(), workers, w);
+                crate::parallel::set_thread_budget(budget);
+                loop {
+                    let item = rx.lock().unwrap().recv();
+                    let Ok((job, reply)) = item else { break };
+                    let kind = job.kind();
+                    metrics.add(&format!("router.{kind}.submitted"), 1);
+                    let result = metrics.time(&format!("router.{kind}.latency"), || execute(job));
+                    metrics.add(&format!("router.{kind}.completed"), 1);
+                    let _ = reply.send(result);
+                }
             }));
         }
         Self { tx: Some(tx), workers: handles, metrics }
@@ -116,6 +131,11 @@ fn execute(job: ApproxJob) -> Result<JobResult> {
                 x: sol.x,
                 entries_observed: counting.observed(),
             })
+        }
+        ApproxJob::Cur { a, cfg, seed } => {
+            let mut rr = rng(seed);
+            let cur = crate::cur::decompose(a.as_input(), &cfg, &mut rr);
+            Ok(JobResult::Cur { cur })
         }
         ApproxJob::StreamSvd { a, cfg, block, seed } => {
             let mut rr = rng(seed);

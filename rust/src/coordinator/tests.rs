@@ -100,6 +100,11 @@ fn router_executes_all_job_kinds() {
         block: 16,
         seed: 9,
     });
+    let h5 = router.submit(ApproxJob::Cur {
+        a: MatrixPayload::Dense(a.clone()),
+        cfg: crate::cur::CurConfig::fast(9, 7, 3),
+        seed: 10,
+    });
 
     match h1.wait().unwrap() {
         JobResult::Gmr { x } => assert_eq!(x.shape(), (6, 5)),
@@ -126,9 +131,22 @@ fn router_executes_all_job_kinds() {
         }
         _ => panic!("wrong result kind"),
     }
+    match h5.wait().unwrap() {
+        JobResult::Cur { cur } => {
+            assert_eq!(cur.c.shape(), (80, 9));
+            assert_eq!(cur.u.shape(), (9, 7));
+            assert_eq!(cur.r.shape(), (7, 60));
+            assert_eq!(cur.col_idx.len(), 9);
+            assert_eq!(cur.row_idx.len(), 7);
+            let res = cur.residual(crate::gmr::Input::Dense(&a));
+            assert!(res.is_finite() && res < a.fro_norm(), "router CUR residual {res} not sane");
+        }
+        _ => panic!("wrong result kind"),
+    }
     assert_eq!(router.metrics.get("router.gmr.completed"), 1);
     assert_eq!(router.metrics.get("router.spsd.completed"), 1);
     assert_eq!(router.metrics.get("router.svd.completed"), 1);
+    assert_eq!(router.metrics.get("router.cur.completed"), 1);
     router.shutdown();
 }
 

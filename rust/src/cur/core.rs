@@ -1,0 +1,130 @@
+//! Core-matrix solvers: the three ways CUR computes `U ≈ C† A R†`.
+
+use crate::gmr::{self, Input};
+use crate::linalg::{matmul_at_b, qr_thin, solve_upper, Mat};
+use crate::rng::Pcg64;
+use crate::sketch::{Sketch, SketchKind};
+
+/// How the core `U` is computed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CoreMethod {
+    /// `U = C† A R†` via the normal-equation pinv-applies (the baseline
+    /// Fast GMR accelerates; one full pass over `A`).
+    Exact,
+    /// Fast-GMR sketched core (Algorithm 1, the paper's route): solve
+    /// the sketched problem `(S_C C)† (S_C A S_Rᵀ) (R S_Rᵀ)†`.
+    FastGmr,
+    /// Exact core solved through thin-QR of `C` and `Rᵀ` — avoids
+    /// squaring the condition number for ill-conditioned selections,
+    /// falling back to [`CoreMethod::Exact`] when a triangular factor is
+    /// numerically rank-deficient (e.g. near-duplicate sampled columns).
+    StabilizedQr,
+}
+
+impl CoreMethod {
+    /// Parse from a CLI/config token.
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "exact" => Self::Exact,
+            "fast" | "gmr" | "fast-gmr" => Self::FastGmr,
+            "qr" | "stabilized" | "stabilized-qr" => Self::StabilizedQr,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Exact => "exact",
+            Self::FastGmr => "fast-gmr",
+            Self::StabilizedQr => "stabilized-qr",
+        }
+    }
+}
+
+/// `U = C† A R†` (delegates to [`gmr::solve_exact`]).
+pub fn core_exact(a: Input<'_>, c: &Mat, r: &Mat) -> Mat {
+    gmr::solve_exact(a, c, r).x
+}
+
+/// Fast-GMR core with `kind` sketches of size `s_c × s_r` (clamped to
+/// `[cols(C), m] × [rows(R), n]`). When both sketch sizes reach the full
+/// dimensions the sketches degenerate to [`Sketch::identity`], so the
+/// sketched code path reproduces the exact `C† A R†` solve — the
+/// identity-sized agreement the tests pin at ≤ 1e-8. Degenerate
+/// selections that no sketch size can serve (more columns than rows of
+/// A, or vice versa) and sparse identity-sized inputs (where an identity
+/// sampling sketch would densify A) solve through [`core_exact`].
+pub fn core_fast(
+    a: Input<'_>,
+    c: &Mat,
+    r: &Mat,
+    kind: SketchKind,
+    s_c: usize,
+    s_r: usize,
+    rng: &mut Pcg64,
+) -> Mat {
+    let (m, n) = (a.rows(), a.cols());
+    // Lower-bound by the factor width (solve_fast's requirement), then
+    // cap at the full dimension where sketching stops making sense.
+    let s_c = s_c.max(c.cols());
+    let s_c = s_c.min(m);
+    let s_r = s_r.max(r.rows());
+    let s_r = s_r.min(n);
+    if s_c < c.cols() || s_r < r.rows() {
+        // Over-selection (c > m or r > n): no valid sketch size exists.
+        return core_exact(a, c, r);
+    }
+    if s_c >= m && s_r >= n {
+        return match a {
+            Input::Dense(_) => {
+                gmr::solve_fast_with(a, c, r, &Sketch::identity(m), &Sketch::identity(n)).x
+            }
+            // Identity sampling would materialize the sparse A densely
+            // (twice); the exact core computes the same thing in O(nnz).
+            Input::Sparse(_) => core_exact(a, c, r),
+        };
+    }
+    let cfg = gmr::FastGmrConfig { kind_c: kind, kind_r: kind, s_c, s_r };
+    gmr::solve_fast(a, c, r, &cfg, rng).x
+}
+
+/// Stabilized exact core: with thin factorizations `C = Q_c R_c` and
+/// `Rᵀ = Q_r R_r`, the minimizer is
+///
+/// ```text
+/// U = C† A R† = R_c⁻¹ (Q_cᵀ A Q_r) R_r⁻ᵀ
+/// ```
+///
+/// computed by two triangular solves — conditioning κ(C) instead of the
+/// normal equations' κ(C)². Falls back to [`core_exact`]'s pinv route
+/// when either triangular factor is numerically singular.
+pub fn core_stabilized(a: Input<'_>, c: &Mat, r: &Mat) -> Mat {
+    let qc = qr_thin(c);
+    let qr_fac = qr_thin(&r.transpose());
+    if !diag_well_conditioned(&qc.r) || !diag_well_conditioned(&qr_fac.r) {
+        return core_exact(a, c, r);
+    }
+    let aq = a.a_b(&qr_fac.q); // m × r
+    let mid = matmul_at_b(&qc.q, &aq); // c × r = Q_cᵀ A Q_r
+    let y = solve_upper(&qc.r, &mid); // R_c Y = Q_cᵀ A Q_r
+    // U R_rᵀ = Y  ⇔  R_r Uᵀ = Yᵀ.
+    solve_upper(&qr_fac.r, &y.transpose()).transpose()
+}
+
+/// Diagonal-ratio conditioning guard for a triangular QR factor: the
+/// smallest |diagonal| must not be more than ~10 decades below the
+/// largest (duplicate sampled columns put an exact zero here).
+fn diag_well_conditioned(r: &Mat) -> bool {
+    let k = r.rows().min(r.cols());
+    if k == 0 {
+        return false;
+    }
+    let mut maxd = 0.0f64;
+    let mut mind = f64::INFINITY;
+    for i in 0..k {
+        let d = r[(i, i)].abs();
+        maxd = maxd.max(d);
+        mind = mind.min(d);
+    }
+    maxd > 0.0 && mind >= maxd * 1e-10
+}

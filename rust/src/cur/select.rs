@@ -1,0 +1,213 @@
+//! Column/row selection for CUR decomposition.
+//!
+//! Three strategies, all returning a sorted index set plus the gathered
+//! submatrix (`C = A[:, idx]` for columns, `R = A[idx, :]` for rows):
+//!
+//! * **uniform** — indices without replacement, the cheapest baseline;
+//! * **leverage** — exact leverage-score sampling: column scores are
+//!   `sketch::leverage::column_leverage_scores` (thin-QR of `Aᵀ`), row
+//!   scores `row_leverage_scores` (thin-QR of `A`) — `O(mn·min(m,n))`;
+//! * **sketched leverage** — approximate scores from a small sketch of
+//!   the *opposite* side (Drineas et al. 2012 flavour): column scores
+//!   come from `S·A` with `S ∈ R^{s×m}`, so scoring is sublinear in `m`
+//!   (and `O(nnz)` for CSR inputs with CountSketch); row scores from
+//!   `A·Sᵀ`. The scores are the rank-`s` leverage proxy — exactly what
+//!   CUR wants when the full-rank scores degenerate to uniform.
+//!
+//! Leverage draws are *without replacement* (weights are zeroed as
+//! indices are taken), so the gathered factors are full-rank generically
+//! instead of carrying duplicate columns into the core solve.
+
+use crate::gmr::Input;
+use crate::linalg::Mat;
+use crate::parallel::{self, Pool};
+use crate::rng::Pcg64;
+use crate::sketch::{column_leverage_scores, row_leverage_scores, Sketch, SketchKind};
+
+/// How CUR picks its column/row index sets.
+#[derive(Clone, Debug)]
+pub enum SelectionStrategy {
+    /// Uniform sampling without replacement.
+    Uniform,
+    /// Exact leverage-score sampling (thin-QR of `A`/`Aᵀ`; densifies CSR
+    /// inputs — prefer [`SelectionStrategy::SketchedLeverage`] there).
+    Leverage,
+    /// Leverage scores estimated from a `size`-row sketch of the
+    /// opposite dimension; sublinear in the big dimension.
+    SketchedLeverage { kind: SketchKind, size: usize },
+}
+
+impl SelectionStrategy {
+    /// CLI/config token → strategy (`size` scales with the selection).
+    pub fn parse(s: &str, sketch: SketchKind, size: usize) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "uniform" => Self::Uniform,
+            "leverage" | "lev" => Self::Leverage,
+            "sketched" | "sketched-leverage" | "approx" => {
+                Self::SketchedLeverage { kind: sketch, size }
+            }
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Uniform => "uniform",
+            Self::Leverage => "leverage",
+            Self::SketchedLeverage { .. } => "sketched-leverage",
+        }
+    }
+}
+
+/// Column sampling weights for the strategy (`None` = uniform).
+pub fn column_scores(
+    a: Input<'_>,
+    strategy: &SelectionStrategy,
+    rng: &mut Pcg64,
+) -> Option<Vec<f64>> {
+    match strategy {
+        SelectionStrategy::Uniform => None,
+        SelectionStrategy::Leverage => Some(match a {
+            Input::Dense(m) => column_leverage_scores(m),
+            Input::Sparse(m) => column_leverage_scores(&m.to_dense()),
+        }),
+        SelectionStrategy::SketchedLeverage { kind, size } => {
+            let s = (*size).clamp(1, a.rows().max(1));
+            let sk = Sketch::draw(oblivious(*kind), s, a.rows(), None, rng);
+            // Column scores of S·A ≈ rank-s column leverage of A.
+            Some(column_leverage_scores(&a.sketch_left(&sk)))
+        }
+    }
+}
+
+/// Row sampling weights for the strategy (`None` = uniform).
+pub fn row_scores(a: Input<'_>, strategy: &SelectionStrategy, rng: &mut Pcg64) -> Option<Vec<f64>> {
+    match strategy {
+        SelectionStrategy::Uniform => None,
+        SelectionStrategy::Leverage => Some(match a {
+            Input::Dense(m) => row_leverage_scores(m),
+            Input::Sparse(m) => row_leverage_scores(&m.to_dense()),
+        }),
+        SelectionStrategy::SketchedLeverage { kind, size } => {
+            let s = (*size).clamp(1, a.cols().max(1));
+            let sk = Sketch::draw(oblivious(*kind), s, a.cols(), None, rng);
+            // Row scores of A·Sᵀ ≈ rank-s row leverage of A.
+            Some(row_leverage_scores(&a.sketch_right(&sk)))
+        }
+    }
+}
+
+/// Select `count` column indices of `A` and gather `C = A[:, idx]`.
+pub fn select_columns(
+    a: Input<'_>,
+    strategy: &SelectionStrategy,
+    count: usize,
+    rng: &mut Pcg64,
+) -> (Vec<usize>, Mat) {
+    let n = a.cols();
+    let idx = match column_scores(a, strategy, rng) {
+        None => uniform_indices(n, count, rng),
+        Some(w) => weighted_indices_without_replacement(&w, count, rng),
+    };
+    let c = gather_columns(a, &idx);
+    (idx, c)
+}
+
+/// Select `count` row indices of `A` and gather `R = A[idx, :]`.
+pub fn select_rows(
+    a: Input<'_>,
+    strategy: &SelectionStrategy,
+    count: usize,
+    rng: &mut Pcg64,
+) -> (Vec<usize>, Mat) {
+    let m = a.rows();
+    let idx = match row_scores(a, strategy, rng) {
+        None => uniform_indices(m, count, rng),
+        Some(w) => weighted_indices_without_replacement(&w, count, rng),
+    };
+    let r = gather_rows(a, &idx);
+    (idx, r)
+}
+
+/// The scoring sketch must be data-oblivious: `SketchKind::Leverage`
+/// would need the very scores we are estimating, so it degrades to
+/// uniform sampling instead of panicking in `Sketch::draw`.
+fn oblivious(kind: SketchKind) -> SketchKind {
+    match kind {
+        SketchKind::Leverage => SketchKind::Uniform,
+        k => k,
+    }
+}
+
+fn uniform_indices(n: usize, count: usize, rng: &mut Pcg64) -> Vec<usize> {
+    let mut idx = rng.sample_without_replacement(n, count.min(n));
+    idx.sort_unstable();
+    idx
+}
+
+/// Draw `count` distinct indices with probability proportional to the
+/// (nonnegative) weights, zeroing each taken weight. A tiny uniform
+/// floor (the same 1e-12 convention as `sketch::leverage`) keeps
+/// degenerate score vectors able to fill every slot.
+fn weighted_indices_without_replacement(
+    weights: &[f64],
+    count: usize,
+    rng: &mut Pcg64,
+) -> Vec<usize> {
+    let n = weights.len();
+    let count = count.min(n);
+    let mut w: Vec<f64> = weights.iter().map(|&x| x.max(0.0)).collect();
+    let total: f64 = w.iter().sum();
+    assert!(total.is_finite(), "cur selection: non-finite leverage scores");
+    let floor = (total.max(1.0)) * 1e-12 / n as f64;
+    for v in &mut w {
+        *v += floor;
+    }
+    let mut idx = Vec::with_capacity(count);
+    for _ in 0..count {
+        let i = rng.sample_weighted(&w);
+        idx.push(i);
+        w[i] = 0.0;
+    }
+    idx.sort_unstable();
+    idx
+}
+
+/// Gather `C = A[:, idx]` — dense inputs shard the row-wise gather over
+/// the calling thread's pool (bitwise: pure gather, no reductions); CSR
+/// inputs use the `O(nnz)` column gather.
+pub fn gather_columns(a: Input<'_>, idx: &[usize]) -> Mat {
+    match a {
+        Input::Dense(am) => {
+            let (rows, w) = (am.rows(), idx.len());
+            let mut out = Mat::zeros(rows, w);
+            let pool = if parallel::threads() > 1 && rows * w >= parallel::PAR_MIN_WORK {
+                Pool::current()
+            } else {
+                Pool::new(1)
+            };
+            pool.run_row_panels(rows, w, out.data_mut(), |r0, r1, panel| {
+                for i in r0..r1 {
+                    let src = am.row(i);
+                    let dst = &mut panel[(i - r0) * w..(i - r0 + 1) * w];
+                    for (o, &j) in idx.iter().enumerate() {
+                        dst[o] = src[j];
+                    }
+                }
+            });
+            out
+        }
+        Input::Sparse(am) => am.select_cols_dense(idx),
+    }
+}
+
+/// Gather `R = A[idx, :]` (row copies — memcpy-bound, not worth sharding).
+pub fn gather_rows(a: Input<'_>, idx: &[usize]) -> Mat {
+    match a {
+        Input::Dense(am) => am.select_rows(idx),
+        Input::Sparse(am) => {
+            let ones = vec![1.0; idx.len()];
+            am.select_rows_scaled_dense(idx, &ones)
+        }
+    }
+}

@@ -24,6 +24,7 @@ pub mod cli;
 pub mod compute;
 pub mod config;
 pub mod coordinator;
+pub mod cur;
 pub mod data;
 pub mod error;
 pub mod gmr;

@@ -136,12 +136,26 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
 pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.rows(), b.rows(), "matmul_at_b: dims mismatch");
     let (m, k, n) = (a.cols(), a.rows(), b.cols());
+    if crate::parallel::matmul_should_shard(m, k, n) {
+        return crate::parallel::par_matmul_at_b(a, b);
+    }
     let mut c = Mat::zeros(m, n);
+    matmul_at_b_panel(a, b, 0, m, c.data_mut());
+    c
+}
+
+/// Serial `Aᵀ · B` scatter kernel over the output-row panel `c0..c1`
+/// (columns `c0..c1` of A), writing the panel-local `(c1-c0)×b.cols()`
+/// slice. Row `p` of A contributes in ascending `p` order regardless of
+/// the panel bounds, so a sharded run accumulates every output row in
+/// exactly the serial order (bitwise equal for any shard count).
+pub(crate) fn matmul_at_b_panel(a: &Mat, b: &Mat, c0: usize, c1: usize, cd: &mut [f64]) {
+    let (m, k, n) = (a.cols(), a.rows(), b.cols());
+    debug_assert_eq!(cd.len(), (c1 - c0) * n);
     let (ad, bd) = (a.data(), b.data());
-    let cd = c.data_mut();
     // aᵀ(i, p) = a(p, i): iterate p (rows of A/B), scatter into C rows.
     for p in 0..k {
-        let arow = &ad[p * m..(p + 1) * m];
+        let arow = &ad[p * m + c0..p * m + c1];
         let brow = &bd[p * n..(p + 1) * n];
         for (i, &aval) in arow.iter().enumerate() {
             if aval == 0.0 {
@@ -153,7 +167,6 @@ pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
             }
         }
     }
-    c
 }
 
 /// `C = A * Bᵀ` without materializing the transpose.

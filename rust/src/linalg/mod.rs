@@ -28,7 +28,7 @@ pub use chol::{cholesky, cholesky_solve};
 pub use eig::{eigh, project_psd, project_symmetric, EigH};
 pub use mat::Mat;
 pub use matmul::{matmul, matmul_at_b, matmul_a_bt};
-pub(crate) use matmul::{matmul_a_bt_panel, matmul_acc_panel, matmul_serial};
+pub(crate) use matmul::{matmul_a_bt_panel, matmul_acc_panel, matmul_at_b_panel, matmul_serial};
 pub use norms::{fro_norm, fro_norm_diff, spectral_norm_est};
 pub use pinv::{pinv, pinv_apply_left, pinv_apply_right};
 pub use qr::{qr_thin, QrThin};

@@ -6,8 +6,8 @@
 //!
 //! * [`Pool`] — a `std::thread`-based worker pool with deterministic
 //!   contiguous row-panel sharding (no new dependencies),
-//! * parallel drivers [`par_matmul`], [`par_matmul_a_bt`], and a
-//!   panel-sharded [`sketch_apply`],
+//! * parallel drivers [`par_matmul`], [`par_matmul_a_bt`],
+//!   [`par_matmul_at_b`], and a panel-sharded [`sketch_apply`],
 //! * the process-wide `threads` knob ([`threads`]/[`set_threads`]) that
 //!   `linalg::matmul`, the sketch library, [`crate::compute::CpuBackend`]
 //!   and the streaming pipeline all consult. Default is the machine's
@@ -25,9 +25,9 @@ mod pool;
 #[cfg(test)]
 mod tests;
 
-pub use pool::{set_threads, threads, Pool};
+pub use pool::{set_thread_budget, set_threads, share_budget, thread_budget, threads, Pool};
 
-use crate::linalg::{matmul_a_bt_panel, matmul_acc_panel, Mat};
+use crate::linalg::{matmul_a_bt_panel, matmul_acc_panel, matmul_at_b_panel, Mat};
 
 /// Minimum fused-multiply-add count (`m·k·n`) before a matmul is worth
 /// sharding — below this, thread spawn overhead dominates.
@@ -105,6 +105,29 @@ pub fn par_matmul_a_bt_with(pool: &Pool, a: &Mat, b: &Mat) -> Mat {
     }
     pool.run_row_panels(m, n, c.data_mut(), |r0, r1, cpanel| {
         matmul_a_bt_panel(a, b, r0, r1, cpanel);
+    });
+    c
+}
+
+/// `C = Aᵀ · B` on the configured pool. Output-row panels are column
+/// strips of A; each worker streams the rows of A in the same ascending
+/// order over its private strip, so every output row accumulates in
+/// exactly the serial order — bitwise equal for any thread count.
+pub fn par_matmul_at_b(a: &Mat, b: &Mat) -> Mat {
+    par_matmul_at_b_with(&Pool::current(), a, b)
+}
+
+/// [`par_matmul_at_b`] on an explicit pool.
+pub fn par_matmul_at_b_with(pool: &Pool, a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows(), b.rows(), "par_matmul_at_b: dims mismatch");
+    let (m, n) = (a.cols(), b.cols());
+    let mut c = Mat::zeros(m, n);
+    if pool.threads() <= 1 || m < 2 {
+        matmul_at_b_panel(a, b, 0, m, c.data_mut());
+        return c;
+    }
+    pool.run_row_panels(m, n, c.data_mut(), |r0, r1, panel| {
+        matmul_at_b_panel(a, b, r0, r1, panel);
     });
     c
 }

@@ -13,23 +13,39 @@
 //! performed in shard order is reproducible run-to-run for a given
 //! thread count, and `threads = 1` executes the exact serial code path.
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
 
 /// Process-wide thread-count override; 0 means "auto-detect".
 static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
 
+thread_local! {
+    /// Per-thread cap on the worker budget; 0 means "no cap". Installed
+    /// by coordinator layers that own several executor threads (the
+    /// router) so each executor's nested pool regions use only its share
+    /// of the process-wide knob instead of all of it.
+    static THREAD_BUDGET: Cell<usize> = const { Cell::new(0) };
+}
+
 fn detected_parallelism() -> usize {
     static DETECTED: OnceLock<usize> = OnceLock::new();
     *DETECTED.get_or_init(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
 }
 
-/// The configured worker count: the value set by [`set_threads`], or the
-/// machine's available parallelism when unset (or set to 0).
+/// The calling thread's effective worker count: the value set by
+/// [`set_threads`] (or the machine's available parallelism when unset),
+/// capped by any per-thread budget installed with [`set_thread_budget`].
+/// `threads = 1` still reproduces single-threaded results bitwise —
+/// a budget can only shrink the count, never raise it.
 pub fn threads() -> usize {
-    match THREAD_OVERRIDE.load(Ordering::Relaxed) {
+    let base = match THREAD_OVERRIDE.load(Ordering::Relaxed) {
         0 => detected_parallelism(),
         n => n,
+    };
+    match THREAD_BUDGET.with(|b| b.get()) {
+        0 => base,
+        cap => base.min(cap),
     }
 }
 
@@ -38,6 +54,32 @@ pub fn threads() -> usize {
 /// 1 reproduces the single-threaded code paths bitwise.
 pub fn set_threads(n: usize) {
     THREAD_OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// Cap the *calling thread's* worker budget (0 clears the cap). An
+/// executor thread that runs pool-hungry jobs concurrently with its
+/// siblings installs its share of the knob here once at startup; every
+/// `Pool::current()` region it opens afterwards — directly or deep
+/// inside `linalg`/`sketch` dispatch — is then bounded by that share, so
+/// `N_workers × threads` never oversubscribes the machine. The cap is
+/// thread-local and does not propagate to threads the pool spawns (panel
+/// workers run serial kernels and open no nested regions).
+pub fn set_thread_budget(n: usize) {
+    THREAD_BUDGET.with(|b| b.set(n));
+}
+
+/// The calling thread's budget cap (0 = none). See [`set_thread_budget`].
+pub fn thread_budget() -> usize {
+    THREAD_BUDGET.with(|b| b.get())
+}
+
+/// Executor `w`'s share when a `total`-thread budget is split across
+/// `shares` sibling executors: remainder-aware (the first `total %
+/// shares` executors get one extra) and floored at 1 so every executor
+/// can always make progress. Mirrors the pipeline's per-slot split.
+pub fn share_budget(total: usize, shares: usize, w: usize) -> usize {
+    let shares = shares.max(1);
+    (total / shares + usize::from(w % shares < total % shares)).max(1)
 }
 
 /// A shard plan over a fixed number of workers.

@@ -42,6 +42,49 @@ fn par_matmul_bitwise_matches_serial_all_thread_counts() {
     }
 }
 
+/// The `Aᵀ·B` scatter kernel shards over output rows (columns of A);
+/// each worker streams A's rows in the same ascending order over its
+/// private column strip, so the result is bitwise equal to serial for
+/// any thread count — including 53 output rows over 3/5/7 shards.
+#[test]
+fn par_matmul_at_b_bitwise_matches_serial_all_thread_counts() {
+    let mut r = rng(6);
+    let a = crate::linalg::Mat::randn(83, 53, &mut r);
+    let b = crate::linalg::Mat::randn(83, 31, &mut r);
+    let serial = par_matmul_at_b_with(&Pool::new(1), &a, &b);
+    assert_close(&serial, &matmul(&a.transpose(), &b), 1e-12, "serial driver vs reference");
+    for t in [2usize, 3, 5, 7] {
+        let par = par_matmul_at_b_with(&Pool::new(t), &a, &b);
+        assert_eq!(serial.data(), par.data(), "par_matmul_at_b not bitwise equal at threads={t}");
+    }
+}
+
+/// The per-thread budget caps `threads()` on the installing thread only;
+/// other threads (including this one) are unaffected, and clearing the
+/// budget restores the process-wide knob.
+#[test]
+fn thread_budget_caps_calling_thread_only() {
+    let handle = std::thread::spawn(|| {
+        set_thread_budget(1);
+        let capped = threads();
+        set_thread_budget(0);
+        (capped, thread_budget())
+    });
+    let (capped, cleared) = handle.join().unwrap();
+    assert_eq!(capped, 1, "budget of 1 must cap threads() to 1");
+    assert_eq!(cleared, 0, "set_thread_budget(0) must clear the cap");
+    assert_eq!(thread_budget(), 0, "budget must not leak across threads");
+}
+
+#[test]
+fn share_budget_splits_remainder_and_floors_at_one() {
+    assert_eq!((0..3).map(|w| share_budget(8, 3, w)).sum::<usize>(), 8);
+    assert_eq!((0..3).map(|w| share_budget(8, 3, w)).collect::<Vec<_>>(), vec![3, 3, 2]);
+    assert_eq!((0..4).map(|w| share_budget(2, 4, w)).collect::<Vec<_>>(), vec![1, 1, 1, 1]);
+    assert_eq!(share_budget(0, 4, 2), 1, "budget floors at one");
+    assert_eq!(share_budget(5, 0, 0), 5, "zero shares clamps to one executor");
+}
+
 #[test]
 fn par_matmul_a_bt_bitwise_matches_serial_all_thread_counts() {
     let mut r = rng(2);
@@ -125,13 +168,16 @@ fn global_threads_knob_end_to_end() {
         let mut rs2 = rng(7);
         let sol_count =
             solve_fast(Input::Dense(&a), &c, &rr, &FastGmrConfig::count(60, 60), &mut rs2);
-        (m, k, two, sol.x, sol_count.x)
+        let mut rc = rng(8);
+        let cur_cfg = crate::cur::CurConfig::fast(10, 10, 3);
+        let cur = crate::cur::decompose(Input::Dense(&a), &cur_cfg, &mut rc);
+        (m, k, two, sol.x, sol_count.x, cur)
     };
 
     set_threads(1);
-    let (m1, k1, two1, x1, xc1) = run_all();
+    let (m1, k1, two1, x1, xc1, cur1) = run_all();
     set_threads(4);
-    let (m4, k4, two4, x4, xc4) = run_all();
+    let (m4, k4, two4, x4, xc4, cur4) = run_all();
     set_threads(0); // restore auto-detect
 
     assert_eq!(m1.data(), m4.data(), "matmul dispatch not bitwise across thread counts");
@@ -139,4 +185,10 @@ fn global_threads_knob_end_to_end() {
     assert_eq!(two1.data(), two4.data(), "twoside_sketch not bitwise across thread counts");
     assert_close(&x4, &x1, 1e-12, "solve_fast (gaussian) threads=1 vs 4");
     assert_close(&xc4, &xc1, 1e-12, "solve_fast (count) threads=1 vs 4");
+    // CUR contract: selection indices bitwise, core ≤ 1e-12 across counts.
+    assert_eq!(cur1.col_idx, cur4.col_idx, "CUR column selection not bitwise across thread counts");
+    assert_eq!(cur1.row_idx, cur4.row_idx, "CUR row selection not bitwise across thread counts");
+    assert_eq!(cur1.c.data(), cur4.c.data(), "CUR column gather not bitwise across thread counts");
+    assert_eq!(cur1.r.data(), cur4.r.data(), "CUR row gather not bitwise across thread counts");
+    assert_close(&cur4.u, &cur1.u, 1e-12, "CUR core threads=1 vs 4");
 }

@@ -142,6 +142,15 @@ impl Sketch {
         Self { s, m, op }
     }
 
+    /// The identity operator `S = I_m` as a (degenerate) sampling sketch:
+    /// `apply_left`/`apply_right` return the input unchanged up to a
+    /// copy. Lets sketched code paths degenerate *exactly* to their
+    /// unsketched solves — `cur` uses it when a requested sketch size
+    /// reaches the full dimension.
+    pub fn identity(m: usize) -> Self {
+        Self::from_op(m, m, Op::Sampling { idx: (0..m).collect(), scale: vec![1.0; m] })
+    }
+
     /// Output dimension `s`.
     #[inline]
     pub fn out_dim(&self) -> usize {

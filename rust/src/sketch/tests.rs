@@ -151,6 +151,74 @@ fn expectation_identity() {
     }
 }
 
+/// `draw_sampling` with a weight vector that is zero everywhere but one
+/// coordinate: the 1e-12 uniform floor must keep every probability
+/// finite, and every draw lands on the single massive coordinate with
+/// the unbiased `1/sqrt(s·p)` scale (p ≈ 1 ⇒ entries ≈ 1/sqrt(s)).
+#[test]
+fn draw_sampling_single_nonzero_weight_floor_path() {
+    let (s, m, hot) = (8usize, 16usize, 11usize);
+    let mut w = vec![0.0; m];
+    w[hot] = 2.5;
+    let mut r = rng(91);
+    let sk = super::leverage::draw_sampling(s, m, &w, &mut r);
+    let sd = sk.to_dense();
+    assert_eq!(sd.shape(), (s, m));
+    let expect = 1.0 / (s as f64).sqrt();
+    for t in 0..s {
+        for j in 0..m {
+            if j == hot {
+                assert!(
+                    (sd[(t, j)] - expect).abs() < 1e-6,
+                    "row {t}: scale {} != 1/sqrt(s) {expect}",
+                    sd[(t, j)]
+                );
+            } else {
+                assert_eq!(sd[(t, j)], 0.0, "row {t} sampled a zero-weight coordinate {j}");
+            }
+        }
+    }
+}
+
+/// Oversampling `s > m` is legal for sampling-with-replacement sketches:
+/// shapes stay `s×m` and the realized operator agrees with its densified
+/// form on both apply paths.
+#[test]
+fn draw_sampling_oversamples_beyond_input_dim() {
+    let (s, m) = (50usize, 10usize);
+    let mut r = rng(92);
+    let w = vec![1.0; m];
+    let sk = super::leverage::draw_sampling(s, m, &w, &mut r);
+    assert_eq!(sk.out_dim(), s);
+    assert_eq!(sk.in_dim(), m);
+    let sd = sk.to_dense();
+    let a = Mat::randn(m, 7, &mut r);
+    assert_close(&sk.apply_left(&a), &matmul(&sd, &a), 1e-12, "oversampled apply_left");
+    let b = Mat::randn(6, m, &mut r);
+    assert_close(&sk.apply_right(&b), &matmul_a_bt(&b, &sd), 1e-12, "oversampled apply_right");
+}
+
+/// The `1/sqrt(s·p_i)` scaling keeps `E[SᵀS] ≈ I` for *non-uniform*
+/// weights too (the existing expectation test only covers the uniform
+/// family) — averaged over draws, the weighted sampling operator is
+/// unbiased.
+#[test]
+fn draw_sampling_weighted_expectation_identity() {
+    let m = 20;
+    let weights: Vec<f64> = (0..m).map(|i| 1.0 + i as f64).collect();
+    let mut acc = Mat::zeros(m, m);
+    let trials = 400;
+    for t in 0..trials {
+        let mut r = rng(9000 + t);
+        let sk = super::leverage::draw_sampling(32, m, &weights, &mut r);
+        let sd = sk.to_dense();
+        acc += &crate::linalg::matmul_at_b(&sd, &sd);
+    }
+    acc.scale(1.0 / trials as f64);
+    let err = crate::linalg::fro_norm_diff(&acc, &Mat::eye(m)) / (m as f64).sqrt();
+    assert!(err < 0.25, "weighted sampling E[SᵀS] far from I (err {err})");
+}
+
 #[test]
 fn leverage_scores_sum_to_rank() {
     let mut r = rng(17);
