@@ -1,0 +1,405 @@
+//! Factorization-kernel figure — GFLOP/s and speedup-vs-seed for the
+//! blocked compact-WY [`qr_thin`], the round-robin parallel
+//! [`svd_jacobi`] and [`eigh`], across tall and square shapes.
+//!
+//! The seed kernels (column-at-a-time Householder QR, cyclic
+//! strided-access Jacobi SVD/eigh) are kept **here, frozen, bench-only**
+//! as the comparison baseline — no production caller reaches them; every
+//! caller goes through `crate::linalg`. Expected shape: blocked QR ≥
+//! 2.5x the seed on the tall 4096×512 input at default threads (the
+//! trailing updates ride the blocked parallel matmul), and the Jacobi
+//! kernels gain from contiguous column/row rotations plus round
+//! sharding.
+//!
+//! Emits `results/BENCH_linalg.json` (uploaded as a CI artifact next to
+//! `bench_smoke.json`) and `PERF`-prefixed stdout lines the CI bench
+//! step greps into the log, so seed-vs-current regressions are visible
+//! per-PR. The §Perf log in EXPERIMENTS.md tracks these numbers.
+
+use super::harness::{secs, BenchCtx, Profile};
+use crate::linalg::{eigh, qr_thin, svd_jacobi, Mat};
+use crate::rng::rng;
+
+/// One measured row for the JSON artifact.
+struct Row {
+    kernel: &'static str,
+    m: usize,
+    n: usize,
+    seed_s: f64,
+    new_s: f64,
+    flops: f64,
+}
+
+impl Row {
+    fn speedup(&self) -> f64 {
+        self.seed_s / self.new_s
+    }
+    fn gflops(&self) -> f64 {
+        self.flops / self.new_s / 1e9
+    }
+    fn seed_gflops(&self) -> f64 {
+        self.flops / self.seed_s / 1e9
+    }
+}
+
+/// Nominal QR flop count (factor + thin-Q formation), `k = min(m, n)`:
+/// `4mnk − (4/3)k³`. Nominal — used consistently for seed and current,
+/// so the speedup column is an exact time ratio.
+fn qr_flops(m: usize, n: usize) -> f64 {
+    let k = m.min(n) as f64;
+    4.0 * m as f64 * n as f64 * k - 4.0 / 3.0 * k * k * k
+}
+
+/// Nominal one-sided Jacobi flop model: 8 sweeps × n(n−1)/2 pairs ×
+/// 6(2m + n) flops per pair (Gram dots + U and V rotations). A
+/// throughput *index* (actual sweep counts vary), identical for both
+/// implementations.
+fn svd_flops(m: usize, n: usize) -> f64 {
+    8.0 * (n * (n - 1) / 2) as f64 * 6.0 * (2 * m + n) as f64
+}
+
+/// Nominal two-sided Jacobi flop model: 8 sweeps × n(n−1)/2 pairs ×
+/// 12n flops per pair (row + column + V rotations).
+fn eigh_flops(n: usize) -> f64 {
+    8.0 * (n * (n - 1) / 2) as f64 * 12.0 * n as f64
+}
+
+pub fn run(ctx: &mut BenchCtx) {
+    let (qr_shapes, svd_shapes, eig_sizes): (&[(usize, usize)], &[(usize, usize)], &[usize]) =
+        match ctx.profile {
+            Profile::Quick => (&[(4096, 512), (1024, 1024)], &[(512, 128), (256, 256)], &[256]),
+            Profile::Full => (
+                &[(4096, 512), (8192, 1024), (2048, 2048), (1024, 4096)],
+                &[(1024, 256), (512, 512)],
+                &[256, 512],
+            ),
+        };
+    ctx.line(&format!("threads = {}", crate::parallel::threads()));
+    let mut rows: Vec<Row> = Vec::new();
+
+    ctx.line("\n-- qr_thin: blocked compact-WY vs seed column-at-a-time --");
+    for &(m, n) in qr_shapes {
+        let mut r = rng(0x11);
+        let a = Mat::randn(m, n, &mut r);
+        let seed_s = ctx.time_n(&format!("seed qr {m}x{n}"), 1, || {
+            std::hint::black_box(seed_qr_thin(&a));
+        });
+        let new_s = ctx.time_n(&format!("blocked qr {m}x{n}"), 3, || {
+            std::hint::black_box(qr_thin(&a));
+        });
+        rows.push(Row { kernel: "qr_thin", m, n, seed_s, new_s, flops: qr_flops(m, n) });
+    }
+
+    ctx.line("\n-- svd_jacobi: round-robin parallel vs seed cyclic --");
+    for &(m, n) in svd_shapes {
+        let mut r = rng(0x12);
+        let a = Mat::randn(m, n, &mut r);
+        let seed_s = ctx.time_n(&format!("seed svd {m}x{n}"), 1, || {
+            std::hint::black_box(seed_svd_jacobi(&a));
+        });
+        let new_s = ctx.time_n(&format!("parallel svd {m}x{n}"), 3, || {
+            std::hint::black_box(svd_jacobi(&a));
+        });
+        rows.push(Row { kernel: "svd_jacobi", m, n, seed_s, new_s, flops: svd_flops(m, n) });
+    }
+
+    ctx.line("\n-- eigh: round-robin parallel vs seed cyclic --");
+    for &n in eig_sizes {
+        let mut r = rng(0x13);
+        let b = Mat::randn(n, n, &mut r);
+        let a = &b + &b.transpose();
+        let seed_s = ctx.time_n(&format!("seed eigh {n}"), 1, || {
+            std::hint::black_box(seed_eigh(&a));
+        });
+        let new_s = ctx.time_n(&format!("parallel eigh {n}"), 3, || {
+            std::hint::black_box(eigh(&a));
+        });
+        rows.push(Row { kernel: "eigh", m: n, n, seed_s, new_s, flops: eigh_flops(n) });
+    }
+
+    // Table + grep-able PERF lines (the CI bench-smoke step surfaces
+    // these in the workflow log).
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.kernel.to_string(),
+                format!("{}x{}", r.m, r.n),
+                secs(r.seed_s),
+                secs(r.new_s),
+                format!("{:.2}", r.speedup()),
+                format!("{:.2}", r.seed_gflops()),
+                format!("{:.2}", r.gflops()),
+            ]
+        })
+        .collect();
+    ctx.line("");
+    ctx.table(&["kernel", "shape", "t_seed", "t_new", "speedup", "seed_GF/s", "GF/s"], &table);
+    for r in &rows {
+        ctx.line(&format!(
+            "PERF {} {}x{}: seed {} -> {} ({:.2}x, {:.2} GF/s)",
+            r.kernel,
+            r.m,
+            r.n,
+            secs(r.seed_s),
+            secs(r.new_s),
+            r.speedup(),
+            r.gflops()
+        ));
+    }
+    write_json(&rows);
+    ctx.line("\nshape check: qr_thin 4096x512 speedup >= 2.5x at default threads (acceptance bar).");
+}
+
+/// Hand-rolled JSON artifact (no serde in the offline vendor set).
+fn write_json(rows: &[Row]) {
+    let mut out = String::from("{\n");
+    out.push_str("  \"bench\": \"fig_linalg\",\n");
+    out.push_str(&format!("  \"threads\": {},\n", crate::parallel::threads()));
+    out.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        out.push_str(&format!(
+            "    {{\"kernel\": \"{}\", \"m\": {}, \"n\": {}, \"seed_seconds\": {:.6}, \"seconds\": {:.6}, \"seed_gflops\": {:.3}, \"gflops\": {:.3}, \"speedup\": {:.3}}}{comma}\n",
+            r.kernel, r.m, r.n, r.seed_s, r.new_s, r.seed_gflops(), r.gflops(), r.speedup()
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    let path = "results/BENCH_linalg.json";
+    match std::fs::write(path, &out) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Frozen seed kernels (baseline for the speedup columns). These are the
+// pre-PR-3 implementations, kept verbatim and bench-local: production
+// code must never call them.
+// ---------------------------------------------------------------------------
+
+/// Seed `qr_thin`: column-at-a-time Householder with strided
+/// `r_work[(i, col)]` access.
+fn seed_qr_thin(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = a.shape();
+    let k = m.min(n);
+    let mut r_work = a.clone();
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(k);
+    let mut betas = Vec::with_capacity(k);
+
+    for j in 0..k {
+        let mut v: Vec<f64> = (j..m).map(|i| r_work[(i, j)]).collect();
+        let alpha = {
+            let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if v[0] >= 0.0 {
+                -norm
+            } else {
+                norm
+            }
+        };
+        if alpha == 0.0 {
+            vs.push(v);
+            betas.push(0.0);
+            continue;
+        }
+        v[0] -= alpha;
+        let vnorm_sq: f64 = v.iter().map(|x| x * x).sum();
+        let beta = if vnorm_sq == 0.0 { 0.0 } else { 2.0 / vnorm_sq };
+        for col in j..n {
+            let mut dot = 0.0;
+            for (t, i) in (j..m).enumerate() {
+                dot += v[t] * r_work[(i, col)];
+            }
+            let s = beta * dot;
+            if s != 0.0 {
+                for (t, i) in (j..m).enumerate() {
+                    r_work[(i, col)] -= s * v[t];
+                }
+            }
+        }
+        vs.push(v);
+        betas.push(beta);
+    }
+
+    let mut r = Mat::zeros(k, n);
+    for i in 0..k {
+        for j in i..n {
+            r[(i, j)] = r_work[(i, j)];
+        }
+    }
+    let mut q = Mat::zeros(m, k);
+    for i in 0..k {
+        q[(i, i)] = 1.0;
+    }
+    for j in (0..k).rev() {
+        let (v, beta) = (&vs[j], betas[j]);
+        if beta == 0.0 {
+            continue;
+        }
+        for col in 0..k {
+            let mut dot = 0.0;
+            for (t, i) in (j..m).enumerate() {
+                dot += v[t] * q[(i, col)];
+            }
+            let s = beta * dot;
+            if s != 0.0 {
+                for (t, i) in (j..m).enumerate() {
+                    q[(i, col)] -= s * v[t];
+                }
+            }
+        }
+    }
+    (q, r)
+}
+
+/// Seed `svd_jacobi`: cyclic one-sided Jacobi with strided column walks.
+fn seed_svd_jacobi(a: &Mat) -> (Mat, Vec<f64>, Mat) {
+    let (m, n) = a.shape();
+    if m < n {
+        let (u, s, v) = seed_svd_jacobi(&a.transpose());
+        return (v, s, u);
+    }
+    let mut u = a.clone();
+    let mut v = Mat::eye(n);
+    let tol = 1e-15;
+    let max_sweeps = 64;
+
+    for _sweep in 0..max_sweeps {
+        let mut rotated = false;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let mut app = 0.0;
+                let mut aqq = 0.0;
+                let mut apq = 0.0;
+                for i in 0..m {
+                    let up = u[(i, p)];
+                    let uq = u[(i, q)];
+                    app += up * up;
+                    aqq += uq * uq;
+                    apq += up * uq;
+                }
+                if apq.abs() <= tol * (app * aqq).sqrt() || apq == 0.0 {
+                    continue;
+                }
+                rotated = true;
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = {
+                    let sgn = if theta >= 0.0 { 1.0 } else { -1.0 };
+                    sgn / (theta.abs() + (theta * theta + 1.0).sqrt())
+                };
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                for i in 0..m {
+                    let up = u[(i, p)];
+                    let uq = u[(i, q)];
+                    u[(i, p)] = c * up - s * uq;
+                    u[(i, q)] = s * up + c * uq;
+                }
+                for i in 0..n {
+                    let vp = v[(i, p)];
+                    let vq = v[(i, q)];
+                    v[(i, p)] = c * vp - s * vq;
+                    v[(i, q)] = s * vp + c * vq;
+                }
+            }
+        }
+        if !rotated {
+            break;
+        }
+    }
+
+    let mut sv: Vec<(f64, usize)> = (0..n)
+        .map(|j| {
+            let norm: f64 = (0..m).map(|i| u[(i, j)] * u[(i, j)]).sum::<f64>().sqrt();
+            (norm, j)
+        })
+        .collect();
+    sv.sort_by(|a, b| b.0.total_cmp(&a.0));
+
+    let mut u_out = Mat::zeros(m, n);
+    let mut v_out = Mat::zeros(n, n);
+    let mut s_out = Vec::with_capacity(n);
+    for (oj, &(norm, j)) in sv.iter().enumerate() {
+        s_out.push(norm);
+        if norm > 0.0 {
+            for i in 0..m {
+                u_out[(i, oj)] = u[(i, j)] / norm;
+            }
+        }
+        for i in 0..n {
+            v_out[(i, oj)] = v[(i, j)];
+        }
+    }
+    (u_out, s_out, v_out)
+}
+
+/// Seed `eigh`: cyclic two-sided Jacobi with per-pair row+column
+/// rotations over strided indices.
+fn seed_eigh(a: &Mat) -> (Vec<f64>, Mat) {
+    let n = a.rows();
+    let mut m = a.clone();
+    for i in 0..n {
+        for j in 0..i {
+            let avg = 0.5 * (m[(i, j)] + m[(j, i)]);
+            m[(i, j)] = avg;
+            m[(j, i)] = avg;
+        }
+    }
+    let mut v = Mat::eye(n);
+    let max_sweeps = 64;
+    let tol = 1e-14 * m.fro_norm().max(1e-300);
+
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() <= tol {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() <= tol * 1e-2 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = {
+                    let s = if theta >= 0.0 { 1.0 } else { -1.0 };
+                    s / (theta.abs() + (theta * theta + 1.0).sqrt())
+                };
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    let mut order: Vec<usize> = (0..n).collect();
+    let diag: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    order.sort_by(|&a, &b| diag[b].total_cmp(&diag[a]));
+    let values: Vec<f64> = order.iter().map(|&i| diag[i]).collect();
+    let vectors = v.select_cols(&order);
+    (values, vectors)
+}

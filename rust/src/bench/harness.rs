@@ -74,7 +74,7 @@ impl BenchCtx {
             f();
             samples.push(start.elapsed().as_secs_f64());
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples.sort_by(|a, b| a.total_cmp(b)); // NaN-safe, never panics
         let med = samples[n / 2];
         self.line(&format!("  {label}: median {:.6}s over {n} runs", med));
         med

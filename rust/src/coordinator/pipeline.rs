@@ -8,11 +8,15 @@
 //! ```
 //!
 //! * The reader owns the [`ColumnStream`] and never buffers more than
-//!   one batch (≤ `slots` blocks) — O(slots·(m+n)·sketch) memory total
+//!   two batches (≤ `slots` blocks each: the one being accumulated and
+//!   the one being prefetched) — O(slots·(m+n)·sketch) memory total
 //!   (the paper's single-pass guarantee, scaled by the slot count,
-//!   which `queue_depth` bounds in auto mode). Reading and computing
-//!   alternate per batch; overlapping them (double-buffered batches)
-//!   is a ROADMAP item for I/O-bound streams.
+//!   which `queue_depth` bounds in auto mode). Batches are
+//!   **double-buffered**: the current batch's slot updates run on a
+//!   scoped compute thread while the reader thread pulls the next batch
+//!   from the stream, so an I/O-bound stream overlaps with compute.
+//!   Batch boundaries depend only on stream order and the slot count —
+//!   the overlap cannot change any slot's block subsequence.
 //! * Per-block stream updates are dispatched to the `crate::parallel`
 //!   pool: block `j` of a batch lands in accumulator slot `j`, so each
 //!   slot folds a fixed, scheduling-independent subsequence of blocks in
@@ -30,7 +34,6 @@ use crate::parallel::{self, Pool};
 use crate::svdstream::fast::{accumulate_block_with, finalize, FastSpSvdConfig, FastSpSvdSketches};
 use crate::svdstream::source::ColumnStream;
 use crate::svdstream::SpSvdResult;
-use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 
 /// Pipeline tuning knobs.
@@ -43,8 +46,10 @@ pub struct PipelineConfig {
     /// Backpressure/memory bound: caps the auto-resolved slot count
     /// (`workers == 0`), and with it both in-flight blocks and
     /// accumulator memory (O(slots·(m+n)·sketch)). An explicit `workers`
-    /// is honored exactly and holds at most `workers` blocks in flight —
-    /// tighter than the old channel's `queue_depth + workers`.
+    /// is honored exactly; with double-buffered batches the pipeline
+    /// holds at most `2·workers` blocks alive (the batch being
+    /// accumulated plus the prefetched one) — still tighter than the old
+    /// channel's per-block queue for typical depths.
     pub queue_depth: usize,
 }
 
@@ -113,67 +118,77 @@ impl StreamPipeline {
             })
             .collect();
 
+        // The calling thread's effective worker budget, captured once up
+        // front: the budget is thread-local and would NOT be visible from
+        // the compute thread the double-buffered loop spawns.
+        let budget = parallel::threads();
+
         let mut sent = 0usize;
         let mut max_inflight = 0usize;
-        loop {
-            let mut batch: Vec<(usize, Mat)> = Vec::with_capacity(slots);
-            while batch.len() < slots {
-                match stream.next_block() {
-                    Some(block) => batch.push((block.col_start, block.data)),
-                    None => break,
-                }
-            }
-            if batch.is_empty() {
-                break;
-            }
+        let mut batch = read_batch(stream, slots);
+        while !batch.is_empty() {
             sent += batch.len();
             max_inflight = max_inflight.max(batch.len());
             let batch_cols: u64 = batch.iter().map(|(_, b)| b.cols() as u64).sum();
             let batch_len = batch.len() as u64;
-
-            // Deterministic slot assignment: batch entry j → slot j.
-            // Each occupied slot's sketch applies split the remaining
-            // thread budget (remainder-aware, so slots × inner fills the
-            // knob without nested regions oversubscribing the machine —
-            // short final batches hand the freed budget to the slots
-            // still working). The inner count depends only on the knob,
-            // the batch length, and the slot index, never on scheduling.
-            let budget = parallel::threads();
             let used = batch.len();
-            let mut units: Vec<(&mut SlotState, (usize, Mat))> =
-                states.iter_mut().zip(batch.into_iter()).collect();
-            let update = || {
-                pool.for_each_mut(&mut units, |slot, unit| {
-                    let inner = if used > 1 {
-                        Pool::new((budget / used + usize::from(slot < budget % used)).max(1))
-                    } else {
-                        Pool::current()
-                    };
-                    let (state, payload) = unit;
-                    let col_start = payload.0;
-                    let block = &payload.1;
-                    let c1 = col_start + block.cols();
-                    accumulate_block_with(
-                        block,
-                        col_start,
-                        c1,
-                        sketches,
-                        &inner,
-                        &mut state.c_acc,
-                        &mut state.r_acc,
-                        &mut state.m_acc,
-                    );
-                    state.blocks += 1;
-                });
-            };
+
+            // Double-buffered batches: the current batch's slot updates
+            // run on a scoped compute thread while this (reader) thread
+            // prefetches the next batch, so an I/O-bound stream overlaps
+            // with compute. Deterministic slot assignment is unchanged:
+            // batch entry j → slot j, and each occupied slot's sketch
+            // applies split the captured thread budget (remainder-aware,
+            // so slots × inner fills the knob without nested regions
+            // oversubscribing the machine — short final batches hand the
+            // freed budget to the slots still working). The inner count
+            // depends only on the knob, the batch length, and the slot
+            // index, never on scheduling.
+            //
             // One timing sample per *batch* (≤ slots blocks), hence the
-            // metric name — per-block latency is this divided by the
+            // metric name; with the overlap it covers max(compute, read)
+            // for the batch — per-block latency is this divided by the
             // batch size, not comparable to a per-block timer.
-            self.metrics
-                .time("pipeline.batch_update", || catch_unwind(AssertUnwindSafe(update)))
+            let states_ref: &mut [SlotState] = &mut states;
+            let (update_res, next) = self.metrics.time("pipeline.batch_update", || {
+                std::thread::scope(|scope| {
+                    let compute = scope.spawn(move || {
+                        let mut units: Vec<(&mut SlotState, (usize, Mat))> =
+                            states_ref.iter_mut().zip(batch.into_iter()).collect();
+                        pool.for_each_mut(&mut units, |slot, unit| {
+                            let inner = if used > 1 {
+                                Pool::new(
+                                    (budget / used + usize::from(slot < budget % used)).max(1),
+                                )
+                            } else {
+                                Pool::new(budget)
+                            };
+                            let (state, payload) = unit;
+                            let col_start = payload.0;
+                            let block = &payload.1;
+                            let c1 = col_start + block.cols();
+                            accumulate_block_with(
+                                block,
+                                col_start,
+                                c1,
+                                sketches,
+                                &inner,
+                                &mut state.c_acc,
+                                &mut state.r_acc,
+                                &mut state.m_acc,
+                            );
+                            state.blocks += 1;
+                        });
+                    });
+                    let next = read_batch(stream, slots);
+                    (compute.join(), next)
+                })
+            });
+            update_res
                 .map_err(|_| FgError::Coordinator("worker panicked during block update".into()))?;
             self.metrics.add("pipeline.blocks", batch_len);
             self.metrics.add("pipeline.cols", batch_cols);
+            batch = next;
         }
         self.metrics.add("pipeline.blocks_sent", sent as u64);
         self.metrics.add("pipeline.max_queue_depth", max_inflight as u64);
@@ -197,8 +212,24 @@ impl StreamPipeline {
         Ok(SpSvdResult { u, sigma, v, blocks })
     }
 
-    /// Maximum batch size observed in the last run (backpressure bound).
+    /// Maximum *batch* size observed in the last run. With
+    /// double-buffering, peak resident blocks ≈ 2x this (current batch +
+    /// prefetched batch).
     pub fn max_queue_depth(&self) -> u64 {
         self.metrics.get("pipeline.max_queue_depth")
     }
+}
+
+/// Pull the next batch (≤ `slots` blocks) off the stream. Batch
+/// composition depends only on stream order and the slot count — the
+/// double-buffered prefetch cannot reorder it.
+fn read_batch(stream: &mut dyn ColumnStream, slots: usize) -> Vec<(usize, Mat)> {
+    let mut batch = Vec::with_capacity(slots);
+    while batch.len() < slots {
+        match stream.next_block() {
+            Some(block) => batch.push((block.col_start, block.data)),
+            None => break,
+        }
+    }
+    batch
 }

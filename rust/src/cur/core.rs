@@ -14,7 +14,8 @@ pub enum CoreMethod {
     /// Fast-GMR sketched core (Algorithm 1, the paper's route): solve
     /// the sketched problem `(S_C C)† (S_C A S_Rᵀ) (R S_Rᵀ)†`.
     FastGmr,
-    /// Exact core solved through thin-QR of `C` and `Rᵀ` — avoids
+    /// Exact core solved through thin-QR of `C` and `Rᵀ` (the blocked
+    /// compact-WY kernel, so the tall factors ride the pool) — avoids
     /// squaring the condition number for ill-conditioned selections,
     /// falling back to [`CoreMethod::Exact`] when a triangular factor is
     /// numerically rank-deficient (e.g. near-duplicate sampled columns).

@@ -36,7 +36,8 @@ impl RhoParts {
 /// * left_defect²   = ‖B‖² − ‖P‖²   (‖(I−UUᵀ)AVVᵀ‖²)
 /// * right_defect²  = ‖D‖² − ‖P‖²   (‖UUᵀA(I−VVᵀ)‖²)
 ///
-/// Only thin products against A are formed — O(nnz·(c+r)) total.
+/// Only thin products against A are formed — O(nnz·(c+r)) total; the
+/// two orthobasis QRs are the blocked compact-WY kernel.
 pub fn compute_rho(a: Input<'_>, c: &Mat, r: &Mat) -> RhoParts {
     let u = qr_thin(c).q; // m x c'
     let v = qr_thin(&r.transpose()).q; // n x r'

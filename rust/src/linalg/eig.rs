@@ -1,7 +1,7 @@
-//! Symmetric eigendecomposition (cyclic Jacobi) and the convex-cone
-//! projections from Section 3.2 of the paper (Eqns. 3.5 / 3.6).
+//! Symmetric eigendecomposition (round-robin parallel Jacobi) and the
+//! convex-cone projections from Section 3.2 of the paper (Eqns. 3.5 / 3.6).
 
-use super::{matmul, Mat};
+use super::{jacobi, matmul, Mat};
 
 /// Symmetric eigendecomposition `A = V diag(w) Vᵀ`.
 pub struct EigH {
@@ -11,84 +11,137 @@ pub struct EigH {
     pub vectors: Mat,
 }
 
-/// Cyclic Jacobi eigensolver for symmetric matrices.
+/// One row pair for the Jacobi row-rotation phase, moved out of the row
+/// table so the pool can rotate the round's pairs concurrently (header
+/// swaps only, no element copies).
+struct RowPair {
+    rp: Vec<f64>,
+    rq: Vec<f64>,
+    c: f64,
+    s: f64,
+}
+
+/// Round-robin parallel Jacobi eigensolver for symmetric matrices.
 ///
 /// Quadratically convergent sweeps; intended for the small `s×s` / `c×c`
 /// core matrices of Algorithms 2–3 (c ≲ few hundred), exactly the regime
 /// Remark 3 of the paper argues is cheap (`O(c³)`).
+///
+/// Each sweep is `n−1` rounds of disjoint pivot pairs
+/// ([`jacobi::ring_rounds`]). A round applies its similarity rotations
+/// `A ← Jᵀ A J` in two structurally fixed phases — column rotations
+/// `A·J` (every row updated independently, sharded over row chunks),
+/// then row rotations `Jᵀ·A` (each pair owns its two contiguous rows) —
+/// so the result is **bitwise identical** for every thread count: each
+/// element is written by exactly one worker, in a schedule-independent
+/// expression. Rotation angles come from the round-start matrix; a
+/// pair's defining entries `(p,p), (q,q), (p,q)` are untouched by the
+/// round's other (disjoint) pairs, so the angles equal the sequential
+/// ones.
 pub fn eigh(a: &Mat) -> EigH {
     let n = a.rows();
     assert_eq!(n, a.cols(), "eigh: matrix must be square");
-    let mut m = a.clone();
-    // Symmetrize defensively (callers pass (X + Xᵀ)/2 already).
+    // Rows as contiguous Vecs (the two phases shard over rows / row
+    // pairs), symmetrized defensively (callers pass (X + Xᵀ)/2 already).
+    let mut arows: Vec<Vec<f64>> = (0..n).map(|i| a.row(i).to_vec()).collect();
     for i in 0..n {
         for j in 0..i {
-            let avg = 0.5 * (m[(i, j)] + m[(j, i)]);
-            m[(i, j)] = avg;
-            m[(j, i)] = avg;
+            let avg = 0.5 * (arows[i][j] + arows[j][i]);
+            arows[i][j] = avg;
+            arows[j][i] = avg;
         }
     }
-    let mut v = Mat::eye(n);
+    let mut vrows: Vec<Vec<f64>> = (0..n)
+        .map(|i| {
+            let mut e = vec![0.0; n];
+            e[i] = 1.0;
+            e
+        })
+        .collect();
     let max_sweeps = 64;
-    let tol = 1e-14 * m.fro_norm().max(1e-300);
+    let fro = arows.iter().flatten().map(|x| x * x).sum::<f64>().sqrt();
+    let tol = 1e-14 * fro.max(1e-300);
+    let rounds = jacobi::ring_rounds(n);
+    let pool = jacobi::jacobi_pool(n * n);
 
     for _sweep in 0..max_sweeps {
         let mut off = 0.0f64;
-        for i in 0..n {
-            for j in (i + 1)..n {
-                off += m[(i, j)] * m[(i, j)];
+        for (i, row) in arows.iter().enumerate() {
+            for &x in &row[i + 1..] {
+                off += x * x;
             }
         }
         if off.sqrt() <= tol {
             break;
         }
-        for p in 0..n {
-            for q in (p + 1)..n {
-                let apq = m[(p, q)];
-                if apq.abs() <= tol * 1e-2 {
-                    continue;
-                }
-                let app = m[(p, p)];
-                let aqq = m[(q, q)];
-                let theta = (aqq - app) / (2.0 * apq);
-                let t = {
-                    let s = if theta >= 0.0 { 1.0 } else { -1.0 };
-                    s / (theta.abs() + (theta * theta + 1.0).sqrt())
-                };
-                let c = 1.0 / (t * t + 1.0).sqrt();
-                let s = t * c;
-
-                // Rotate rows/cols p and q of m.
-                for k in 0..n {
-                    let mkp = m[(k, p)];
-                    let mkq = m[(k, q)];
-                    m[(k, p)] = c * mkp - s * mkq;
-                    m[(k, q)] = s * mkp + c * mkq;
-                }
-                for k in 0..n {
-                    let mpk = m[(p, k)];
-                    let mqk = m[(q, k)];
-                    m[(p, k)] = c * mpk - s * mqk;
-                    m[(q, k)] = s * mpk + c * mqk;
-                }
-                // Accumulate rotations into V.
-                for k in 0..n {
-                    let vkp = v[(k, p)];
-                    let vkq = v[(k, q)];
-                    v[(k, p)] = c * vkp - s * vkq;
-                    v[(k, q)] = s * vkp + c * vkq;
-                }
+        for round in &rounds {
+            // Rotation angles from the round-start state.
+            let rots: Vec<(usize, usize, f64, f64)> = round
+                .iter()
+                .filter_map(|&(p, q)| {
+                    let apq = arows[p][q];
+                    if apq.abs() <= tol * 1e-2 {
+                        return None;
+                    }
+                    let (c, s) = jacobi::jacobi_cs(arows[p][p], arows[q][q], apq);
+                    Some((p, q, c, s))
+                })
+                .collect();
+            if rots.is_empty() {
+                continue;
             }
+            // Phase A — column rotations `A ← A·J`: every row applies the
+            // round's rotations to its own entries, rows sharded in
+            // chunks over the pool.
+            pool.for_each_mut(&mut arows, |_, row| apply_col_rotations(row, &rots));
+            // Phase B — row rotations `A ← Jᵀ·A`: each pair rotates its
+            // two (contiguous) rows, pairs sharded over the pool.
+            let mut units: Vec<RowPair> = rots
+                .iter()
+                .map(|&(p, q, c, s)| RowPair {
+                    rp: std::mem::take(&mut arows[p]),
+                    rq: std::mem::take(&mut arows[q]),
+                    c,
+                    s,
+                })
+                .collect();
+            pool.for_each_mut(&mut units, |_, u| {
+                jacobi::rotate_pair(&mut u.rp, &mut u.rq, u.c, u.s);
+            });
+            for (&(p, q, _, _), u) in rots.iter().zip(units) {
+                arows[p] = u.rp;
+                arows[q] = u.rq;
+            }
+            // Accumulate `V ← V·J` — the same per-row column rotations.
+            pool.for_each_mut(&mut vrows, |_, row| apply_col_rotations(row, &rots));
         }
     }
 
-    // Sort eigenpairs by descending eigenvalue.
+    // Sort eigenpairs by descending eigenvalue (NaN-safe ordering).
     let mut order: Vec<usize> = (0..n).collect();
-    let diag: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
-    order.sort_by(|&a, &b| diag[b].partial_cmp(&diag[a]).unwrap());
+    let diag: Vec<f64> = (0..n).map(|i| arows[i][i]).collect();
+    order.sort_by(|&a, &b| diag[b].total_cmp(&diag[a]));
     let values: Vec<f64> = order.iter().map(|&i| diag[i]).collect();
-    let vectors = v.select_cols(&order);
+    let mut vectors = Mat::zeros(n, n);
+    for i in 0..n {
+        let dst = vectors.row_mut(i);
+        for (oj, &j) in order.iter().enumerate() {
+            dst[oj] = vrows[i][j];
+        }
+    }
     EigH { values, vectors }
+}
+
+/// Apply a round's plane rotations to one row's column entries:
+/// `(row[p], row[q]) ← (c·row[p] − s·row[q], s·row[p] + c·row[q])`.
+/// Pairs are disjoint, so the per-row result is order-independent.
+#[inline]
+fn apply_col_rotations(row: &mut [f64], rots: &[(usize, usize, f64, f64)]) {
+    for &(p, q, c, s) in rots {
+        let (x, y) = (row[p], row[q]);
+        row[p] = c * x - s * y;
+        row[q] = s * x + c * y;
+    }
 }
 
 /// Projection onto the symmetric matrices `H^n` (Eqn. 3.5):

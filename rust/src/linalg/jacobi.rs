@@ -1,0 +1,84 @@
+//! Shared machinery for the *parallel* Jacobi kernels ([`super::svd_jacobi`],
+//! [`super::eigh`]): the round-robin (ring) pair ordering that partitions
+//! each sweep into rounds of disjoint rotations, the 2×2 rotation solve,
+//! and the pool-gating helper.
+//!
+//! Determinism contract: a round's pairs touch disjoint columns (one-sided
+//! SVD) or are applied in two structurally fixed phases (two-sided eigh),
+//! so executing a round's pairs concurrently produces *bitwise* the same
+//! result as executing them one after another — `threads = 1` and
+//! `threads = N` agree exactly, and the pool gate below is a pure
+//! performance switch.
+
+use crate::parallel::{self, Pool};
+
+/// Round-robin tournament schedule over `0..n`: `ñ − 1` rounds
+/// (`ñ = n` rounded up to even), each a maximal set of disjoint index
+/// pairs, together covering every unordered pair exactly once per sweep.
+/// This is the classic "circle method": index `ñ−1` sits still while the
+/// rest rotate one seat per round.
+pub(crate) fn ring_rounds(n: usize) -> Vec<Vec<(usize, usize)>> {
+    if n < 2 {
+        return Vec::new();
+    }
+    let e = n + (n & 1); // round up to even; index n is a bye when n is odd
+    let mut rounds = Vec::with_capacity(e - 1);
+    for r in 0..e - 1 {
+        let mut pairs = Vec::with_capacity(e / 2);
+        // Seat 0: the fixed player (index e−1 — the bye when n is odd)
+        // against the rotating one.
+        if r < n && e - 1 < n {
+            pairs.push((r.min(e - 1), r.max(e - 1)));
+        }
+        for i in 1..e / 2 {
+            let a = (r + i) % (e - 1);
+            let b = (r + e - 1 - i) % (e - 1);
+            if a < n && b < n {
+                pairs.push((a.min(b), a.max(b)));
+            }
+        }
+        pairs.sort_unstable(); // fixed, schedule-independent round order
+        rounds.push(pairs);
+    }
+    rounds
+}
+
+/// Solve the 2×2 symmetric Jacobi rotation: the (c, s) that diagonalizes
+/// `[[app, apq], [apq, aqq]]` (inner-rotation convention, |t| ≤ 1).
+#[inline]
+pub(crate) fn jacobi_cs(app: f64, aqq: f64, apq: f64) -> (f64, f64) {
+    let theta = (aqq - app) / (2.0 * apq);
+    let t = {
+        let sgn = if theta >= 0.0 { 1.0 } else { -1.0 };
+        sgn / (theta.abs() + (theta * theta + 1.0).sqrt())
+    };
+    let c = 1.0 / (t * t + 1.0).sqrt();
+    (c, t * c)
+}
+
+/// Apply the plane rotation to a pair of equal-length contiguous slices:
+/// `(x, y) ← (c·x − s·y, s·x + c·y)` elementwise. Contiguous access is
+/// what lets LLVM vectorize this — the seed kernels' strided `(i, p)`
+/// walks could not.
+#[inline]
+pub(crate) fn rotate_pair(x: &mut [f64], y: &mut [f64], c: f64, s: f64) {
+    debug_assert_eq!(x.len(), y.len());
+    for (a, b) in x.iter_mut().zip(y.iter_mut()) {
+        let (xa, yb) = (*a, *b);
+        *a = c * xa - s * yb;
+        *b = s * xa + c * yb;
+    }
+}
+
+/// Pool for a Jacobi solve over `work` elements of state: the configured
+/// pool when the knob allows sharding and the matrix is big enough to
+/// amortize spawn cost, else the inline serial pool. Either choice gives
+/// bitwise-identical results (see module docs), so this gate is
+/// perf-only.
+pub(crate) fn jacobi_pool(work: usize) -> Pool {
+    if parallel::threads() > 1 && work >= parallel::PAR_MIN_WORK {
+        Pool::current()
+    } else {
+        Pool::new(1)
+    }
+}

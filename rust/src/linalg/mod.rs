@@ -3,11 +3,14 @@
 //!
 //! * [`Mat`] — row-major dense matrix over `f64`.
 //! * blocked, register-tiled matmul ([`matmul`]),
-//! * Householder QR ([`qr::qr_thin`]),
+//! * blocked compact-WY Householder QR ([`qr::qr_thin`]) whose panel
+//!   updates ride the matmul kernel and the `crate::parallel` pool,
 //! * Cholesky + triangular solves ([`chol`], [`solve`]),
-//! * symmetric eigendecomposition via cyclic Jacobi ([`eig::eigh`]),
-//! * full SVD via one-sided Jacobi ([`svd::svd_jacobi`]) and randomized
-//!   top-k SVD via subspace iteration ([`svd::svd_randomized`]),
+//! * symmetric eigendecomposition via round-robin parallel Jacobi
+//!   ([`eig::eigh`]),
+//! * full SVD via pool-parallel one-sided Jacobi ([`svd::svd_jacobi`])
+//!   and randomized top-k SVD via subspace iteration
+//!   ([`svd::svd_randomized`]),
 //! * Moore–Penrose pseudoinverse ([`pinv::pinv`]),
 //! * norms and projections ([`norms`], [`eig::project_psd`]).
 //!
@@ -16,6 +19,7 @@
 
 mod chol;
 mod eig;
+mod jacobi;
 mod mat;
 mod matmul;
 mod norms;
@@ -27,7 +31,7 @@ mod svd;
 pub use chol::{cholesky, cholesky_solve};
 pub use eig::{eigh, project_psd, project_symmetric, EigH};
 pub use mat::Mat;
-pub use matmul::{matmul, matmul_at_b, matmul_a_bt};
+pub use matmul::{matmul, matmul_acc, matmul_at_b, matmul_a_bt};
 pub(crate) use matmul::{matmul_a_bt_panel, matmul_acc_panel, matmul_at_b_panel, matmul_serial};
 pub use norms::{fro_norm, fro_norm_diff, spectral_norm_est};
 pub use pinv::{pinv, pinv_apply_left, pinv_apply_right};

@@ -4,6 +4,8 @@
 //! materialize a pseudoinverse on the hot path — `pinv_apply_left/right`
 //! solve the associated least-squares problems via Cholesky on the Gram
 //! matrix when well-conditioned, falling back to an SVD cutoff when not.
+//! The SVD fallback runs on the round-robin parallel [`svd_jacobi`], so
+//! even the ill-conditioned path shards over the pool.
 
 use super::{cholesky_solve, matmul, matmul_a_bt, matmul_at_b, svd_jacobi, Mat, Svd};
 

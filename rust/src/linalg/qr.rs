@@ -1,96 +1,238 @@
-//! Thin (economy) QR via blocked Householder reflections.
+//! Thin (economy) QR via *blocked* Householder reflections with
+//! compact-WY accumulation.
+//!
+//! The factorization proceeds over column panels of width [`PANEL`].
+//! Each panel is copied into a column-major scratch buffer so the
+//! unblocked reflector construction walks contiguous slices (the seed
+//! kernel's strided `r_work[(i, col)]` access was the dominant cost on
+//! tall inputs), then the panel's reflectors are aggregated into the
+//! compact-WY form `Q_panel = I − V T Vᵀ` (Schreiber–Van Loan). The
+//! trailing-matrix update and the thin-Q formation are then two dense
+//! products per panel — `W = Vᵀ·A_trail` and `A_trail −= V·(Tᵀ·W)` —
+//! routed through [`matmul_at_b`] / [`matmul_acc`], so the O(mn²) bulk
+//! of the factorization rides the blocked, register-tiled matmul kernel
+//! and shards over the `crate::parallel` pool exactly like a plain
+//! product (bitwise identical for every thread count — see the
+//! determinism notes in `crate::parallel`).
+//!
+//! Callers throughout the crate — Algorithm 1's sketched solve
+//! (`gmr`), the CUR stabilized core (`cur::core`), leverage-score
+//! selection (`sketch::leverage`), `svd_randomized`'s three thin QRs
+//! per power iteration, and the streaming finalizers (`svdstream`) —
+//! all go through this one entry point.
 
-use super::Mat;
+use super::{matmul_acc, matmul_at_b, Mat};
+
+/// Panel width: wide enough that the trailing update is matmul-bound,
+/// narrow enough that the panel fits in L1/L2 alongside a C panel.
+pub(crate) const PANEL: usize = 32;
 
 /// Thin QR factorization `A = Q R`, `Q` m×k with orthonormal columns,
-/// `R` k×k upper triangular, `k = min(m, n)`.
+/// `R` k×n upper trapezoidal (k×k triangular when n ≤ m), `k = min(m, n)`.
 pub struct QrThin {
     pub q: Mat,
     pub r: Mat,
 }
 
-/// Householder thin QR. Numerically stable (reflector-based, column
-/// pivot-free); `A` is m×n with m >= n typical for our use (orthonormal
-/// bases of sketch outputs, Algorithm 3 step 10).
+/// One factored panel in compact-WY form: `Q_p = I − V T Vᵀ` acting on
+/// rows `j0..m`. `v` is (m−j0)×nb column-major (column `i` zero above
+/// its pivot row `i`), `t` is nb×nb upper triangular row-major.
+struct WyPanel {
+    j0: usize,
+    nb: usize,
+    /// (m − j0) × nb, as a row-major [`Mat`] for the update products.
+    v: Mat,
+    /// nb × nb upper triangular.
+    t: Mat,
+}
+
+/// Blocked Householder thin QR. Numerically stable (reflector-based,
+/// column pivot-free); `A` is m×n with m ≥ n typical for our use
+/// (orthonormal bases of sketch outputs, Algorithm 3 step 10).
 pub fn qr_thin(a: &Mat) -> QrThin {
     let (m, n) = a.shape();
     let k = m.min(n);
-    let mut r_work = a.clone(); // will be reduced to R in its top k rows
-    // Householder vectors stored in the strictly-lower part + diag scale.
-    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(k);
-    let mut betas = Vec::with_capacity(k);
+    if k == 0 {
+        return QrThin { q: Mat::zeros(m, 0), r: Mat::zeros(0, n) };
+    }
+    let mut r_work = a.clone(); // reduced to R in its top k rows
+    let mut panels: Vec<WyPanel> = Vec::with_capacity(k.div_ceil(PANEL));
 
-    for j in 0..k {
-        // Build the reflector for column j from rows j..m.
-        let mut v: Vec<f64> = (j..m).map(|i| r_work[(i, j)]).collect();
-        let alpha = {
-            let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
-            if v[0] >= 0.0 {
-                -norm
-            } else {
-                norm
-            }
-        };
-        if alpha == 0.0 {
-            // Column already zero below the diagonal; identity reflector.
-            vs.push(v);
-            betas.push(0.0);
-            continue;
+    let mut j0 = 0;
+    while j0 < k {
+        let nb = PANEL.min(k - j0);
+        let panel = factor_panel(&mut r_work, j0, nb);
+        // Trailing update: A[j0.., j0+nb..] ← (I − V Tᵀ Vᵀ)·A  (= Qᵀ_p A).
+        // The trailing block is packed out to a contiguous Mat and
+        // written back — O(mn) traffic per panel against the update's
+        // O(mn·nb) flops (the same pack cost every blocked kernel pays;
+        // updating in place would need leading-dimension strides the
+        // matmul drivers don't carry).
+        let jt = j0 + nb;
+        if jt < n {
+            let mut trail = r_work.slice(j0, m, jt, n); // (m−j0) × (n−jt)
+            apply_wy_transpose(&panel, &mut trail);
+            r_work.set_block(j0, jt, &trail);
         }
-        v[0] -= alpha;
-        let vnorm_sq: f64 = v.iter().map(|x| x * x).sum();
-        let beta = if vnorm_sq == 0.0 { 0.0 } else { 2.0 / vnorm_sq };
-
-        // Apply (I - beta v vᵀ) to the trailing submatrix of r_work.
-        for col in j..n {
-            let mut dot = 0.0;
-            for (t, i) in (j..m).enumerate() {
-                dot += v[t] * r_work[(i, col)];
-            }
-            let s = beta * dot;
-            if s != 0.0 {
-                for (t, i) in (j..m).enumerate() {
-                    r_work[(i, col)] -= s * v[t];
-                }
-            }
-        }
-        vs.push(v);
-        betas.push(beta);
+        panels.push(panel);
+        j0 += nb;
     }
 
-    // Extract R (k x n upper-triangular in its first k columns; thin R is k x k
-    // when n <= m, otherwise k x n).
-    let rc = n;
-    let mut r = Mat::zeros(k, rc);
+    // Extract R (k×n, upper trapezoidal).
+    let mut r = Mat::zeros(k, n);
     for i in 0..k {
-        for j in i..rc {
-            r[(i, j)] = r_work[(i, j)];
-        }
+        let src = &r_work.row(i)[i..n];
+        r.row_mut(i)[i..n].copy_from_slice(src);
     }
 
-    // Form thin Q by applying reflectors to the first k columns of I.
+    // Form thin Q by applying the panel reflectors to E_k in reverse
+    // panel order: Q[j0.., j0..] ← (I − V T Vᵀ)·Q[j0.., j0..]. Columns
+    // 0..j0 are untouched unit vectors at this point (their support lies
+    // above row j0), so each application is restricted to the trailing
+    // column block — the standard O(mnk) formation.
     let mut q = Mat::zeros(m, k);
     for i in 0..k {
         q[(i, i)] = 1.0;
     }
-    for j in (0..k).rev() {
-        let (v, beta) = (&vs[j], betas[j]);
+    for panel in panels.iter().rev() {
+        let j0 = panel.j0;
+        let mut qsub = q.slice(j0, m, j0, k);
+        apply_wy(panel, &mut qsub);
+        q.set_block(j0, j0, &qsub);
+    }
+
+    QrThin { q, r }
+}
+
+/// Unblocked Householder factorization of the panel `rows j0..m, cols
+/// j0..j0+nb` of `r_work`, on a column-major scratch copy so every
+/// reflector builds and applies over contiguous slices. Writes the
+/// reduced panel (R values on/above the diagonal, zeros below) back into
+/// `r_work` and returns the compact-WY pair (V, T).
+fn factor_panel(r_work: &mut Mat, j0: usize, nb: usize) -> WyPanel {
+    let m = r_work.rows();
+    let rows = m - j0;
+
+    // Column-major copy of the panel: pan[c*rows + r] = A[j0+r, j0+c].
+    let mut pan = vec![0.0f64; rows * nb];
+    for r in 0..rows {
+        let src = &r_work.row(j0 + r)[j0..j0 + nb];
+        for (c, &x) in src.iter().enumerate() {
+            pan[c * rows + r] = x;
+        }
+    }
+
+    // vbuf: column-major like pan; column i holds the (unnormalized)
+    // reflector v_i in rows i.., zeros above.
+    let mut vbuf = vec![0.0f64; rows * nb];
+    let mut betas = vec![0.0f64; nb];
+
+    for i in 0..nb {
+        // Build reflector i from pan column i, rows i..
+        let (head, tail) = pan.split_at_mut((i + 1) * rows);
+        let col = &mut head[i * rows + i..];
+        let norm = col.iter().map(|x| x * x).sum::<f64>().sqrt();
+        let alpha = if col[0] >= 0.0 { -norm } else { norm };
+        if alpha == 0.0 {
+            // Column already zero at and below the pivot: identity
+            // reflector (beta = 0, zero V column keeps WY consistent).
+            continue;
+        }
+        let v = &mut vbuf[i * rows + i..(i + 1) * rows];
+        v.copy_from_slice(col);
+        v[0] -= alpha;
+        let vnorm_sq: f64 = v.iter().map(|x| x * x).sum();
+        let beta = if vnorm_sq == 0.0 { 0.0 } else { 2.0 / vnorm_sq };
+        betas[i] = beta;
+        // Reduced column i: alpha on the diagonal, zeros below.
+        col[0] = alpha;
+        for x in col.iter_mut().skip(1) {
+            *x = 0.0;
+        }
         if beta == 0.0 {
             continue;
         }
-        for col in 0..k {
-            let mut dot = 0.0;
-            for (t, i) in (j..m).enumerate() {
-                dot += v[t] * q[(i, col)];
-            }
+        // Apply (I − beta v vᵀ) to the remaining panel columns — all
+        // contiguous column slices.
+        for c in i + 1..nb {
+            let colc = &mut tail[(c - i - 1) * rows + i..(c - i) * rows];
+            let v = &vbuf[i * rows + i..(i + 1) * rows];
+            let dot: f64 = v.iter().zip(colc.iter()).map(|(a, b)| a * b).sum();
             let s = beta * dot;
             if s != 0.0 {
-                for (t, i) in (j..m).enumerate() {
-                    q[(i, col)] -= s * v[t];
+                for (x, &vv) in colc.iter_mut().zip(v) {
+                    *x -= s * vv;
                 }
             }
         }
     }
 
-    QrThin { q, r }
+    // Write the reduced panel back (row-major r_work).
+    for r in 0..rows {
+        let dst = &mut r_work.row_mut(j0 + r)[j0..j0 + nb];
+        for (c, x) in dst.iter_mut().enumerate() {
+            *x = pan[c * rows + r];
+        }
+    }
+
+    // Build T (upper triangular): T[i][i] = beta_i and
+    // T[0..i, i] = −beta_i · T_{0..i,0..i} · (V_{:,0..i}ᵀ v_i).
+    // (The recurrence holds for unnormalized v — T absorbs the scaling.)
+    let mut t = Mat::zeros(nb, nb);
+    for i in 0..nb {
+        let beta = betas[i];
+        t[(i, i)] = beta;
+        if beta == 0.0 || i == 0 {
+            continue;
+        }
+        // w = Vᵀ_{cols 0..i} · v_i; column j of V is zero above row j and
+        // v_i is zero above row i, so the dot runs over rows i..rows.
+        let vi = &vbuf[i * rows + i..(i + 1) * rows];
+        let mut w = vec![0.0f64; i];
+        for (j, wj) in w.iter_mut().enumerate() {
+            let vj = &vbuf[j * rows + i..(j + 1) * rows];
+            *wj = vj.iter().zip(vi.iter()).map(|(a, b)| a * b).sum();
+        }
+        // t_col = −beta · T_{0..i,0..i} · w (upper-triangular matvec).
+        for r in 0..i {
+            let mut acc = 0.0;
+            for (c, &wc) in w.iter().enumerate().skip(r) {
+                acc += t[(r, c)] * wc;
+            }
+            t[(r, i)] = -beta * acc;
+        }
+    }
+
+    // Convert V to a row-major Mat for the matmul-driven updates.
+    let mut v = Mat::zeros(rows, nb);
+    for r in 0..rows {
+        let dst = v.row_mut(r);
+        for (c, x) in dst.iter_mut().enumerate() {
+            *x = vbuf[c * rows + r];
+        }
+    }
+
+    WyPanel { j0, nb, v, t }
+}
+
+/// `X ← (I − V Tᵀ Vᵀ)·X` — the Qᵀ-side block application used for the
+/// trailing update. Two dense products (`Vᵀ X` then `V·(Tᵀ W)`), both
+/// routed through the blocked/parallel matmul drivers.
+fn apply_wy_transpose(panel: &WyPanel, x: &mut Mat) {
+    debug_assert_eq!(x.rows(), panel.v.rows());
+    let w = matmul_at_b(&panel.v, x); // nb × nc
+    let mut tw = matmul_at_b(&panel.t, &w); // Tᵀ·W, nb × nc
+    tw.scale(-1.0);
+    matmul_acc(&panel.v, &tw, x); // X −= V·(Tᵀ W)
+}
+
+/// `X ← (I − V T Vᵀ)·X` — the Q-side block application used when
+/// forming the thin Q factor.
+fn apply_wy(panel: &WyPanel, x: &mut Mat) {
+    debug_assert_eq!(x.rows(), panel.v.rows());
+    let w = matmul_at_b(&panel.v, x); // nb × nc
+    let mut tw = Mat::zeros(panel.nb, w.cols());
+    matmul_acc(&panel.t, &w, &mut tw); // T·W
+    tw.scale(-1.0);
+    matmul_acc(&panel.v, &tw, x); // X −= V·(T W)
 }

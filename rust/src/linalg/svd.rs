@@ -1,13 +1,20 @@
 //! Singular value decompositions:
 //!
-//! * [`svd_jacobi`] — full thin SVD via one-sided Jacobi (small/medium
-//!   matrices, high accuracy; used for the core-matrix SVDs of
-//!   Algorithms 3–4 and for exact baselines on test-sized inputs).
+//! * [`svd_jacobi`] — full thin SVD via *round-robin parallel* one-sided
+//!   Jacobi (small/medium matrices, high accuracy; used for the
+//!   core-matrix SVDs of Algorithms 3–4 and for exact baselines on
+//!   test-sized inputs). Each sweep's n(n−1)/2 column pairs are
+//!   partitioned into n−1 rounds of disjoint pairs
+//!   ([`jacobi::ring_rounds`]); a round's rotations touch disjoint
+//!   column pairs, so they shard over the `crate::parallel` pool and are
+//!   **bitwise identical** between `threads = 1` and `threads = N`.
 //! * [`svd_randomized`] — randomized subspace-iteration top-k SVD
 //!   (Halko–Martinsson–Tropp) for the `‖A − A_k‖_F` denominators on
-//!   dataset-sized matrices.
+//!   dataset-sized matrices. Its three thin QRs per power iteration and
+//!   the small final SVD ride the blocked [`qr_thin`] and the parallel
+//!   Jacobi above.
 
-use super::{matmul, matmul_at_b, qr_thin, Mat};
+use super::{jacobi, matmul, matmul_at_b, qr_thin, Mat};
 use crate::rng::Pcg64;
 
 /// Thin SVD `A = U diag(s) Vᵀ`.
@@ -20,57 +27,89 @@ pub struct Svd {
     pub v: Mat,
 }
 
-/// One-sided Jacobi SVD (Hestenes). Works on `A` with m >= n by
-/// orthogonalizing columns; for m < n we factor the transpose and swap.
+/// One working pair for a Jacobi round: the two U columns and two V
+/// columns it may rotate, moved out of the column table so the pool can
+/// process the round's pairs concurrently without aliasing. The moves
+/// are `Vec` header swaps — no element copies.
+struct PairUnit {
+    up: Vec<f64>,
+    uq: Vec<f64>,
+    vp: Vec<f64>,
+    vq: Vec<f64>,
+    rotated: bool,
+}
+
+impl PairUnit {
+    /// Orthogonalize the pair: 2×2 Gram from the U columns, rotate U and
+    /// V columns when the off-diagonal coupling is above `tol`. Reads and
+    /// writes only this unit's own data — the independence that makes a
+    /// round's pairs bitwise schedule-invariant.
+    fn rotate(&mut self, tol: f64) {
+        let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+        for (x, y) in self.up.iter().zip(self.uq.iter()) {
+            app += x * x;
+            aqq += y * y;
+            apq += x * y;
+        }
+        if apq == 0.0 || apq.abs() <= tol * (app * aqq).sqrt() {
+            return;
+        }
+        self.rotated = true;
+        let (c, s) = jacobi::jacobi_cs(app, aqq, apq);
+        jacobi::rotate_pair(&mut self.up, &mut self.uq, c, s);
+        jacobi::rotate_pair(&mut self.vp, &mut self.vq, c, s);
+    }
+}
+
+/// One-sided Jacobi SVD (Hestenes), round-robin ordered and
+/// pool-parallel. Works on `A` with m >= n by orthogonalizing columns;
+/// for m < n we factor the transpose and swap.
 pub fn svd_jacobi(a: &Mat) -> Svd {
     let (m, n) = a.shape();
     if m < n {
         let Svd { u, s, v } = svd_jacobi(&a.transpose());
         return Svd { u: v, s, v: u };
     }
-    let mut u = a.clone(); // columns get orthogonalized in place
-    let mut v = Mat::eye(n);
+    if n == 0 {
+        return Svd { u: Mat::zeros(m, 0), s: Vec::new(), v: Mat::zeros(0, 0) };
+    }
+    // Columns as contiguous Vecs: rotations walk whole columns (the seed
+    // kernel's `(i, p)` walks were strided across every row), and a
+    // round's disjoint pairs move their columns into per-pair units for
+    // the pool.
+    let mut ucols: Vec<Vec<f64>> = (0..n).map(|j| a.col(j)).collect();
+    let mut vcols: Vec<Vec<f64>> = (0..n)
+        .map(|j| {
+            let mut e = vec![0.0; n];
+            e[j] = 1.0;
+            e
+        })
+        .collect();
     let tol = 1e-15;
     let max_sweeps = 64;
+    let rounds = jacobi::ring_rounds(n);
+    let pool = jacobi::jacobi_pool(m * n);
 
     for _sweep in 0..max_sweeps {
         let mut rotated = false;
-        for p in 0..n {
-            for q in (p + 1)..n {
-                // Compute the 2x2 Gram block of columns p, q.
-                let mut app = 0.0;
-                let mut aqq = 0.0;
-                let mut apq = 0.0;
-                for i in 0..m {
-                    let up = u[(i, p)];
-                    let uq = u[(i, q)];
-                    app += up * up;
-                    aqq += uq * uq;
-                    apq += up * uq;
-                }
-                if apq.abs() <= tol * (app * aqq).sqrt() || apq == 0.0 {
-                    continue;
-                }
-                rotated = true;
-                let theta = (aqq - app) / (2.0 * apq);
-                let t = {
-                    let sgn = if theta >= 0.0 { 1.0 } else { -1.0 };
-                    sgn / (theta.abs() + (theta * theta + 1.0).sqrt())
-                };
-                let c = 1.0 / (t * t + 1.0).sqrt();
-                let s = t * c;
-                for i in 0..m {
-                    let up = u[(i, p)];
-                    let uq = u[(i, q)];
-                    u[(i, p)] = c * up - s * uq;
-                    u[(i, q)] = s * up + c * uq;
-                }
-                for i in 0..n {
-                    let vp = v[(i, p)];
-                    let vq = v[(i, q)];
-                    v[(i, p)] = c * vp - s * vq;
-                    v[(i, q)] = s * vp + c * vq;
-                }
+        for round in &rounds {
+            let mut units: Vec<PairUnit> = round
+                .iter()
+                .map(|&(p, q)| PairUnit {
+                    up: std::mem::take(&mut ucols[p]),
+                    uq: std::mem::take(&mut ucols[q]),
+                    vp: std::mem::take(&mut vcols[p]),
+                    vq: std::mem::take(&mut vcols[q]),
+                    rotated: false,
+                })
+                .collect();
+            pool.for_each_mut(&mut units, |_, u| u.rotate(tol));
+            for (&(p, q), u) in round.iter().zip(units) {
+                ucols[p] = u.up;
+                ucols[q] = u.uq;
+                vcols[p] = u.vp;
+                vcols[q] = u.vq;
+                rotated |= u.rotated;
             }
         }
         if !rotated {
@@ -79,13 +118,12 @@ pub fn svd_jacobi(a: &Mat) -> Svd {
     }
 
     // Column norms are the singular values; normalize U's columns.
-    let mut sv: Vec<(f64, usize)> = (0..n)
-        .map(|j| {
-            let norm: f64 = (0..m).map(|i| u[(i, j)] * u[(i, j)]).sum::<f64>().sqrt();
-            (norm, j)
-        })
+    let mut sv: Vec<(f64, usize)> = ucols
+        .iter()
+        .enumerate()
+        .map(|(j, col)| (col.iter().map(|x| x * x).sum::<f64>().sqrt(), j))
         .collect();
-    sv.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    sv.sort_by(|a, b| b.0.total_cmp(&a.0)); // NaN-safe descending order
 
     let mut u_out = Mat::zeros(m, n);
     let mut v_out = Mat::zeros(n, n);
@@ -93,12 +131,12 @@ pub fn svd_jacobi(a: &Mat) -> Svd {
     for (oj, &(norm, j)) in sv.iter().enumerate() {
         s_out.push(norm);
         if norm > 0.0 {
-            for i in 0..m {
-                u_out[(i, oj)] = u[(i, j)] / norm;
+            for (i, &x) in ucols[j].iter().enumerate() {
+                u_out[(i, oj)] = x / norm;
             }
         }
-        for i in 0..n {
-            v_out[(i, oj)] = v[(i, j)];
+        for (i, &x) in vcols[j].iter().enumerate() {
+            v_out[(i, oj)] = x;
         }
     }
     Svd { u: u_out, s: s_out, v: v_out }

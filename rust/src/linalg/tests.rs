@@ -64,7 +64,20 @@ fn prop_matmul_associates_with_identity() {
 #[test]
 fn qr_reconstructs_and_is_orthonormal() {
     let mut r = rng(4);
-    for &(m, n) in &[(5, 3), (30, 7), (12, 12), (64, 20)] {
+    // Includes the compact-WY panel boundaries (PANEL = 32): one column
+    // short of a panel, exactly one/two panels, one column past.
+    for &(m, n) in &[
+        (5, 3),
+        (30, 7),
+        (12, 12),
+        (64, 20),
+        (33, 31),
+        (100, 32),
+        (97, 33),
+        (64, 64),
+        (130, 65),
+        (65, 65),
+    ] {
         let a = Mat::randn(m, n, &mut r);
         let QrThin { q, r: rr } = qr_thin(&a);
         assert_eq!(q.shape(), (m, n.min(m)));
@@ -86,11 +99,61 @@ fn qr_reconstructs_and_is_orthonormal() {
 #[test]
 fn qr_wide_matrix() {
     let mut r = rng(5);
-    let a = Mat::randn(4, 9, &mut r);
+    // Wide shapes, again straddling the panel width (k = m here).
+    for &(m, n) in &[(4, 9), (32, 65), (33, 100), (65, 129)] {
+        let a = Mat::randn(m, n, &mut r);
+        let QrThin { q, r: rr } = qr_thin(&a);
+        assert_eq!(q.shape(), (m, m));
+        assert_eq!(rr.shape(), (m, n));
+        assert_close(&matmul(&q, &rr), &a, 1e-9, &format!("wide {m}x{n} A = QR"));
+        let qtq = matmul_at_b(&q, &q);
+        assert_close(&qtq, &Mat::eye(m), 1e-10, &format!("wide {m}x{n} QᵀQ = I"));
+    }
+}
+
+/// Rank-deficient input: duplicate and zero columns exercise the
+/// zero-reflector (beta = 0) path inside a panel.
+#[test]
+fn qr_rank_deficient_columns() {
+    let mut r = rng(45);
+    let base = Mat::randn(40, 3, &mut r);
+    let mut a = Mat::zeros(40, 7);
+    for i in 0..40 {
+        a[(i, 0)] = base[(i, 0)];
+        a[(i, 1)] = base[(i, 1)];
+        a[(i, 2)] = base[(i, 0)]; // duplicate of col 0
+        // col 3 stays zero
+        a[(i, 4)] = base[(i, 2)];
+        a[(i, 5)] = 2.0 * base[(i, 1)]; // multiple of col 1
+        a[(i, 6)] = base[(i, 0)] + base[(i, 2)];
+    }
     let QrThin { q, r: rr } = qr_thin(&a);
-    assert_eq!(q.shape(), (4, 4));
-    assert_eq!(rr.shape(), (4, 9));
-    assert_close(&matmul(&q, &rr), &a, 1e-10, "wide A = QR");
+    assert_close(&matmul(&q, &rr), &a, 1e-9, "rank-deficient A = QR");
+    for i in 0..rr.rows() {
+        for j in 0..i.min(rr.cols()) {
+            assert!(rr[(i, j)].abs() < 1e-9, "R not upper triangular");
+        }
+    }
+}
+
+/// The ring (round-robin) schedule behind the parallel Jacobi kernels:
+/// rounds partition each sweep into disjoint pairs, and together they
+/// cover every unordered pair exactly once.
+#[test]
+fn ring_rounds_cover_all_pairs_disjointly() {
+    for n in [0usize, 1, 2, 3, 4, 5, 8, 13, 33, 64] {
+        let rounds = super::jacobi::ring_rounds(n);
+        let mut seen = std::collections::HashSet::new();
+        for round in &rounds {
+            let mut used = std::collections::HashSet::new();
+            for &(p, q) in round {
+                assert!(p < q && q < n, "bad pair ({p},{q}) for n={n}");
+                assert!(used.insert(p) && used.insert(q), "round reuses an index (n={n})");
+                assert!(seen.insert((p, q)), "pair ({p},{q}) repeated (n={n})");
+            }
+        }
+        assert_eq!(seen.len(), n * n.saturating_sub(1) / 2, "pair coverage for n={n}");
+    }
 }
 
 #[test]
@@ -151,24 +214,33 @@ fn triangular_solves() {
 #[test]
 fn eigh_reconstructs() {
     let mut r = rng(9);
-    let b = Mat::randn(18, 18, &mut r);
-    let a = &b + &b.transpose();
-    let EigH { values, vectors } = eigh(&a);
-    // Descending order.
-    for w in values.windows(2) {
-        assert!(w[0] >= w[1] - 1e-12);
-    }
-    // V diag(w) Vᵀ = A
-    let mut vd = vectors.clone();
-    for j in 0..18 {
-        for i in 0..18 {
-            vd[(i, j)] *= values[j];
+    // Odd sizes exercise the ring schedule's bye index; 33/65 straddle
+    // the pool-sharding chunk boundaries.
+    for &n in &[1usize, 2, 5, 18, 33, 65] {
+        let b = Mat::randn(n, n, &mut r);
+        let a = &b + &b.transpose();
+        let EigH { values, vectors } = eigh(&a);
+        // Descending order.
+        for w in values.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
         }
+        // V diag(w) Vᵀ = A
+        let mut vd = vectors.clone();
+        for j in 0..n {
+            for i in 0..n {
+                vd[(i, j)] *= values[j];
+            }
+        }
+        let rec = matmul_a_bt(&vd, &vectors);
+        assert_close(&rec, &a, 1e-7, &format!("eigh reconstruction n={n}"));
+        // VᵀV = I
+        assert_close(
+            &matmul_at_b(&vectors, &vectors),
+            &Mat::eye(n),
+            1e-9,
+            &format!("VᵀV = I n={n}"),
+        );
     }
-    let rec = matmul_a_bt(&vd, &vectors);
-    assert_close(&rec, &a, 1e-8, "eigh reconstruction");
-    // VᵀV = I
-    assert_close(&matmul_at_b(&vectors, &vectors), &Mat::eye(18), 1e-10, "VᵀV = I");
 }
 
 #[test]
@@ -193,7 +265,9 @@ fn project_psd_properties() {
 #[test]
 fn svd_jacobi_reconstructs() {
     let mut r = rng(11);
-    for &(m, n) in &[(10, 6), (6, 10), (15, 15)] {
+    // Tall, wide, square, and ring-schedule boundary sizes (odd n, and
+    // 33/64/65 around the panel/chunk widths).
+    for &(m, n) in &[(10, 6), (6, 10), (15, 15), (65, 33), (33, 65), (64, 64), (40, 1)] {
         let a = Mat::randn(m, n, &mut r);
         let Svd { u, s, v } = svd_jacobi(&a);
         // Descending singular values, nonnegative.
@@ -210,7 +284,16 @@ fn svd_jacobi_reconstructs() {
         }
         let rec = matmul_a_bt(&us, &v);
         assert_close(&rec, &a, 1e-8, &format!("svd reconstruction {m}x{n}"));
-
+        // Orthonormal factors on the thin side.
+        let k = m.min(n);
+        let ut_u = matmul_at_b(&u, &u);
+        let vt_v = matmul_at_b(&v, &v);
+        if m >= n {
+            assert_close(&ut_u, &Mat::eye(k), 1e-9, &format!("UᵀU = I {m}x{n}"));
+            assert_close(&vt_v, &Mat::eye(n), 1e-9, &format!("VᵀV = I {m}x{n}"));
+        } else {
+            assert_close(&vt_v.slice(0, k, 0, k), &Mat::eye(k), 1e-9, &format!("VᵀV {m}x{n}"));
+        }
     }
 }
 

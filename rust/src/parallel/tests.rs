@@ -140,7 +140,8 @@ fn sketch_apply_threads_agree() {
     }
 }
 
-/// The process-wide knob end-to-end: matmul dispatch, the CPU backend's
+/// The process-wide knob end-to-end: matmul dispatch, the factorization
+/// kernels (blocked QR, round-robin Jacobi SVD/eigh), the CPU backend's
 /// rbf_block/twoside/stream_update, and a full `solve_fast` call must
 /// agree between threads=1 and threads=4. Everything global-knob-touching
 /// lives in this one test so concurrent tests never observe a knob value
@@ -157,6 +158,16 @@ fn global_threads_knob_end_to_end() {
         let sc = crate::linalg::Mat::randn(40, 300, &mut r);
         let sr = crate::linalg::Mat::randn(44, 240, &mut r);
         let two = be.twoside_sketch(&sc, &a, &sr).unwrap();
+        // Factorization layer: sizes above the pool gates (the blocked
+        // QR's panel updates shard through the matmul drivers; the
+        // Jacobi rounds shard their disjoint pairs / row chunks).
+        let qr = crate::linalg::qr_thin(&a);
+        let svd = crate::linalg::svd_jacobi(&a.slice(0, 300, 0, 80));
+        let gram = {
+            let s = a.slice(0, 300, 0, 150);
+            crate::linalg::matmul_at_b(&s, &s)
+        };
+        let eig = crate::linalg::eigh(&gram);
         let mut rg = rng(6);
         let g_c = crate::linalg::Mat::randn(240, 12, &mut rg);
         let c = matmul(&a, &g_c);
@@ -171,18 +182,32 @@ fn global_threads_knob_end_to_end() {
         let mut rc = rng(8);
         let cur_cfg = crate::cur::CurConfig::fast(10, 10, 3);
         let cur = crate::cur::decompose(Input::Dense(&a), &cur_cfg, &mut rc);
-        (m, k, two, sol.x, sol_count.x, cur)
+        (m, k, two, qr, svd, eig, sol.x, sol_count.x, cur)
     };
 
     set_threads(1);
-    let (m1, k1, two1, x1, xc1, cur1) = run_all();
+    let (m1, k1, two1, qr1, svd1, eig1, x1, xc1, cur1) = run_all();
     set_threads(4);
-    let (m4, k4, two4, x4, xc4, cur4) = run_all();
+    let (m4, k4, two4, qr4, svd4, eig4, x4, xc4, cur4) = run_all();
     set_threads(0); // restore auto-detect
 
     assert_eq!(m1.data(), m4.data(), "matmul dispatch not bitwise across thread counts");
     assert_eq!(k1.data(), k4.data(), "rbf_block not bitwise across thread counts");
     assert_eq!(two1.data(), two4.data(), "twoside_sketch not bitwise across thread counts");
+    // Factorization contract: the blocked QR's bulk rides the bitwise
+    // matmul drivers, and the Jacobi rounds apply disjoint-pair
+    // rotations in fixed order — all three are bitwise across counts.
+    assert_eq!(qr1.q.data(), qr4.q.data(), "qr_thin Q not bitwise across thread counts");
+    assert_eq!(qr1.r.data(), qr4.r.data(), "qr_thin R not bitwise across thread counts");
+    assert_eq!(svd1.u.data(), svd4.u.data(), "svd_jacobi U not bitwise across thread counts");
+    assert_eq!(svd1.s, svd4.s, "svd_jacobi σ not bitwise across thread counts");
+    assert_eq!(svd1.v.data(), svd4.v.data(), "svd_jacobi V not bitwise across thread counts");
+    assert_eq!(eig1.values, eig4.values, "eigh values not bitwise across thread counts");
+    assert_eq!(
+        eig1.vectors.data(),
+        eig4.vectors.data(),
+        "eigh vectors not bitwise across thread counts"
+    );
     assert_close(&x4, &x1, 1e-12, "solve_fast (gaussian) threads=1 vs 4");
     assert_close(&xc4, &xc1, 1e-12, "solve_fast (count) threads=1 vs 4");
     // CUR contract: selection indices bitwise, core ≤ 1e-12 across counts.

@@ -7,7 +7,9 @@ use crate::linalg::{qr_thin, Mat};
 use crate::rng::Pcg64;
 
 /// Row leverage scores of `A` (m×n, m ≥ n typical): squared row norms of
-/// the thin-QR `Q` factor. Sums to rank(A).
+/// the thin-QR `Q` factor. Sums to rank(A). The QR is the blocked
+/// compact-WY kernel, so score computation on tall inputs rides the
+/// pool-parallel matmul drivers.
 pub fn row_leverage_scores(a: &Mat) -> Vec<f64> {
     let q = qr_thin(a).q;
     q.row_norms_sq()

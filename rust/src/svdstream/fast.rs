@@ -168,7 +168,10 @@ pub fn accumulate_block_with(
     *m_acc += &m_blk;
 }
 
-/// Steps 10–13: orthonormal bases, Fast-GMR core solve, small SVD.
+/// Steps 10–13: orthonormal bases, Fast-GMR core solve, small SVD. The
+/// two tall QRs are the blocked compact-WY kernel and the core SVD is
+/// the round-robin parallel Jacobi, so finalize shards over the pool
+/// end-to-end.
 pub fn finalize(
     cfg: &FastSpSvdConfig,
     sk: &FastSpSvdSketches,
