@@ -1,0 +1,155 @@
+//! Streaming-CUR figure — error ratio and throughput of the single-pass
+//! [`crate::cur::streaming`] driver vs the in-memory subspace-leverage
+//! CUR, across the Fast-GMR sketch-size multiplier.
+//!
+//! The in-memory path scores/selects once (the rank-k subspace scores
+//! cost a thin factorization of `A`) and re-solves the core per `mult`,
+//! exactly like `fig_cur`; the streaming path re-runs end-to-end per
+//! `mult` since its scoring rides the per-run sketch accumulators.
+//!
+//! Expected shape: both paths sit within a small constant of
+//! `‖A − A_k‖_F` once `mult ≥ 4`; the streaming path pays a modest error
+//! premium for its sketch-resolved rows (shrinking with `mult`, since
+//! `s_c = 2·mult·c` controls the one-pass reconstruction variance) while
+//! reading `A` exactly once — the OnePassStream wrapper panics if it
+//! does not.
+//!
+//! Emits `results/BENCH_curstream.json` (CI artifact next to
+//! `BENCH_linalg.json`) and `PERF`-prefixed stdout lines the CI bench
+//! step greps into the log. EXPERIMENTS.md §CUR-streaming tracks the
+//! numbers.
+
+use super::harness::{f4, secs, BenchCtx, Profile};
+use crate::coordinator::{PipelineConfig, StreamPipeline};
+use crate::cur::{self, SelectionStrategy, StreamingCurConfig, StreamingCurSketches};
+use crate::data::{synth_dense, SpectrumKind};
+use crate::gmr::Input;
+use crate::rng::rng;
+use crate::sketch::SketchKind;
+use crate::svdstream::{DenseColumnStream, OnePassStream};
+
+/// One measured row for the JSON artifact.
+struct Row {
+    mult: usize,
+    mem_ratio: f64,
+    stream_ratio: f64,
+    mem_s: f64,
+    stream_s: f64,
+    cols_per_s: f64,
+}
+
+pub fn run(ctx: &mut BenchCtx) {
+    let (m, n, k, block) = match ctx.profile {
+        Profile::Quick => (700, 900, 8, 128),
+        Profile::Full => (1600, 2400, 16, 512),
+    };
+    let sel = 3 * k;
+    let mut r = rng(0xC05);
+    let a = synth_dense(m, n, k, SpectrumKind::Exponential { base: 0.8 }, 0.02, &mut r);
+    let input = Input::Dense(&a);
+    let mut rak = rng(1);
+    let ak = crate::svdstream::ak_error(input, k, 6, &mut rak);
+    ctx.line(&format!(
+        "A: {m}x{n} rank-{k}+noise, c = r = {sel}, block = {block}, ‖A − A_k‖_F = {ak:.5}"
+    ));
+
+    // In-memory rank-k subspace-leverage selection, once (scores cost a
+    // thin factorization of A; the mult sweep only re-solves the core).
+    let strategy = SelectionStrategy::SubspaceLeverage { k };
+    let mut rs = rng(7);
+    let t0 = std::time::Instant::now();
+    let (_, cmat) = cur::select_columns(input, &strategy, sel, &mut rs);
+    let (_, rmat) = cur::select_rows(input, &strategy, sel, &mut rs);
+    let t_select = t0.elapsed().as_secs_f64();
+    ctx.line(&format!("in-memory subspace-leverage selection: {}", secs(t_select)));
+
+    let mut rows = Vec::new();
+    for mult in [2usize, 4, 6, 8] {
+        // In-memory Fast-GMR core at this sketch size.
+        let mut rm = rng(100 + mult as u64);
+        let t0 = std::time::Instant::now();
+        let u = cur::core_fast(
+            input,
+            &cmat,
+            &rmat,
+            SketchKind::Gaussian,
+            mult * sel,
+            mult * sel,
+            &mut rm,
+        );
+        let mem_s = t_select + t0.elapsed().as_secs_f64();
+        let mem_ratio = crate::gmr::residual(input, &cmat, &u, &rmat) / ak;
+
+        // Streaming: one pass through the concurrent pipeline.
+        let stream_cfg = StreamingCurConfig::fast(sel, sel, k, mult);
+        let mut rstream = rng(200 + mult as u64);
+        let sketches = StreamingCurSketches::draw(&stream_cfg, m, n, &mut rstream);
+        let pipeline = StreamPipeline::new(PipelineConfig::default());
+        let mut stream = OnePassStream::new(DenseColumnStream::new(&a, block));
+        let t0 = std::time::Instant::now();
+        let res = pipeline
+            .run_cur(&mut stream, &stream_cfg, &sketches, &mut rstream)
+            .expect("streaming CUR pipeline failed");
+        let stream_s = t0.elapsed().as_secs_f64();
+        assert_eq!(res.blocks, stream.blocks(), "pipeline must consume every block exactly once");
+        let stream_ratio = res.cur.residual(input) / ak;
+        rows.push(Row {
+            mult,
+            mem_ratio,
+            stream_ratio,
+            mem_s,
+            stream_s,
+            cols_per_s: n as f64 / stream_s,
+        });
+    }
+
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.mult.to_string(),
+                f4(r.mem_ratio),
+                f4(r.stream_ratio),
+                secs(r.mem_s),
+                secs(r.stream_s),
+                format!("{:.0}", r.cols_per_s),
+            ]
+        })
+        .collect();
+    ctx.line("");
+    ctx.table(&["mult", "mem_ratio", "stream_ratio", "t_mem", "t_stream", "cols/s"], &table);
+    for r in &rows {
+        ctx.line(&format!(
+            "PERF curstream mult={}: in-mem {} (ratio {}) -> stream {} (ratio {}, {:.0} cols/s)",
+            r.mult,
+            secs(r.mem_s),
+            f4(r.mem_ratio),
+            secs(r.stream_s),
+            f4(r.stream_ratio),
+            r.cols_per_s
+        ));
+    }
+    write_json(&rows);
+    ctx.line("\nshape check: stream_ratio within ~2x of mem_ratio at mult >= 4, one pass enforced.");
+}
+
+/// Hand-rolled JSON artifact (no serde in the offline vendor set).
+fn write_json(rows: &[Row]) {
+    let mut out = String::from("{\n");
+    out.push_str("  \"bench\": \"fig_curstream\",\n");
+    out.push_str(&format!("  \"threads\": {},\n", crate::parallel::threads()));
+    out.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        out.push_str(&format!(
+            "    {{\"mult\": {}, \"mem_ratio\": {:.6}, \"stream_ratio\": {:.6}, \"mem_seconds\": {:.6}, \"stream_seconds\": {:.6}, \"cols_per_second\": {:.1}}}{comma}\n",
+            r.mult, r.mem_ratio, r.stream_ratio, r.mem_s, r.stream_s, r.cols_per_s
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    let path = "results/BENCH_curstream.json";
+    match std::fs::write(path, &out) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

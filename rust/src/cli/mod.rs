@@ -9,6 +9,7 @@
 //! fastgmr pipeline [--config f.toml] [--threads N]
 //! fastgmr serve [--jobs N] [--threads N]
 //! fastgmr cur [--size MxN] [--rank K] [--selection S] [--sketch KIND]
+//! fastgmr cur --stream [--block B] …      # single-pass streaming CUR
 //! ```
 //!
 //! `--threads N` sets the process-wide worker count for the parallel
@@ -18,7 +19,7 @@
 
 use crate::config::Config;
 use crate::coordinator::{jobs::MatrixPayload, ApproxJob, PipelineConfig, Router, StreamPipeline};
-use crate::cur::{self, CurConfig, SelectionStrategy};
+use crate::cur::{self, CurConfig, SelectionStrategy, StreamingCurConfig};
 use crate::data::{synth_dense, SpectrumKind};
 use crate::error::{FgError, Result};
 use crate::linalg::Mat;
@@ -45,15 +46,26 @@ USAGE:
                                      CUR decomposition demo: compare the
                                      exact, Fast-GMR, and stabilized-QR
                                      cores on a synthetic rank-K matrix
-                                     (S: uniform|leverage|sketched)
+  fastgmr cur --stream [--block B] [--workers W] …
+                                     single-pass streaming CUR over a
+                                     column stream (rank-K subspace
+                                     leverage scores, reservoir column
+                                     retention), compared against the
+                                     in-memory path
   fastgmr help                       this message
 
-  --threads N   worker threads for the parallel layer (0 = auto-detect,
-                1 = bitwise single-threaded reproduction)
+  --selection S  one of: uniform | leverage (exact full-rank scores;
+                 provably uniform on square full-rank inputs) |
+                 subspace (rank-K restricted scores, a.k.a.
+                 subspace-leverage / lev-k) | sketched (approximate
+                 scores from a small sketch, a.k.a. sketched-leverage /
+                 approx); anything else is an error
+  --threads N    worker threads for the parallel layer (0 = auto-detect,
+                 1 = bitwise single-threaded reproduction)
 
-Bench targets: table1..table7, fig1, fig2, fig3, fig_cur, perf (see
-DESIGN.md §5). `bench --smoke` runs a reduced CI subset and writes
-results/bench_smoke.json.";
+Bench targets: table1..table7, fig1, fig2, fig3, fig_cur, fig_curstream,
+fig_linalg, perf (see DESIGN.md §5). `bench --smoke` runs a reduced CI
+subset and writes results/bench_smoke.json.";
 
 /// Main dispatch (called from `rust/src/main.rs`).
 pub fn main_entry() -> Result<()> {
@@ -242,8 +254,15 @@ fn cur_cmd(args: &[String]) -> Result<()> {
     let sketch = SketchKind::parse(flag_value(args, "--sketch").unwrap_or("gaussian"))
         .ok_or_else(|| FgError::Config("--sketch: unknown sketch kind".into()))?;
     let sel_tok = flag_value(args, "--selection").unwrap_or("leverage");
-    let selection = SelectionStrategy::parse(sel_tok, sketch, 4 * k)
-        .ok_or_else(|| FgError::Config(format!("--selection: unknown strategy `{sel_tok}`")))?;
+    // Unknown strategy names are a hard error (listing the accepted
+    // tokens), never a silent fallback.
+    let selection = SelectionStrategy::parse(sel_tok, sketch, 4 * k, k)?;
+    if args.iter().any(|a| a == "--stream") {
+        if flag_value(args, "--selection").is_some() {
+            println!("note: --selection is ignored with --stream (always subspace leverage)");
+        }
+        return cur_stream_cmd(args, m, n, k, c, r, mult, seed, sketch);
+    }
 
     println!(
         "cur: A {m}x{n} rank-{k}+noise, c={c} r={r}, selection={}, sketch={} (mult {mult}), \
@@ -285,6 +304,78 @@ fn cur_cmd(args: &[String]) -> Result<()> {
     let t0 = std::time::Instant::now();
     let u = cur::core_stabilized(input, &cmat, &rmat);
     report("stabilized-qr", u, t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+/// `fastgmr cur --stream` — single-pass streaming CUR through the
+/// double-buffered pipeline, compared against the in-memory
+/// subspace-leverage path on the same synthetic matrix.
+fn cur_stream_cmd(
+    args: &[String],
+    m: usize,
+    n: usize,
+    k: usize,
+    c: usize,
+    r: usize,
+    mult: usize,
+    seed: u64,
+    sketch: SketchKind,
+) -> Result<()> {
+    let block: usize = parse_flag(args, "--block", 256)?;
+    let workers: usize = parse_flag(args, "--workers", 0)?;
+    println!(
+        "cur --stream: A {m}x{n} rank-{k}+noise, c={c} r={r}, sketch={} (mult {mult}), \
+         block={block}, workers={workers} (0=auto), threads={}",
+        sketch.name(),
+        crate::parallel::threads()
+    );
+    let mut rs = rng(seed);
+    let a = synth_dense(m, n, k, SpectrumKind::Exponential { base: 0.85 }, 0.02, &mut rs);
+    let input = crate::gmr::Input::Dense(&a);
+    let mut rak = rng(seed + 1);
+    let ak = crate::svdstream::ak_error(input, k, 6, &mut rak);
+    println!("‖A − A_k‖_F = {ak:.5}");
+
+    // In-memory reference: subspace-leverage selection + Fast-GMR core.
+    let mem_cfg = CurConfig {
+        c,
+        r,
+        selection: SelectionStrategy::SubspaceLeverage { k },
+        core: crate::cur::CoreMethod::FastGmr,
+        sketch,
+        s_c: mult * c,
+        s_r: mult * r,
+    };
+    let mut rm = rng(seed + 2);
+    let t0 = std::time::Instant::now();
+    let mem = cur::decompose(input, &mem_cfg, &mut rm);
+    let t_mem = t0.elapsed().as_secs_f64();
+    let res_mem = mem.residual(input);
+    println!("in-memory:  {:.3}s  residual {res_mem:.5}  ratio {:.4}", t_mem, res_mem / ak);
+
+    // Streaming: one pass over the column stream (enforced by the
+    // OnePassStream wrapper) through the concurrent pipeline. Only the
+    // sketch family differs from the library default — the sizing rule
+    // (s_c = 2·s_r) stays in one place, StreamingCurConfig::fast.
+    let stream_cfg = StreamingCurConfig { kind: sketch, ..StreamingCurConfig::fast(c, r, k, mult) };
+    let mut rdraw = rng(seed + 3);
+    let sketches = crate::cur::StreamingCurSketches::draw(&stream_cfg, m, n, &mut rdraw);
+    let pipeline = StreamPipeline::new(PipelineConfig { workers, queue_depth: 4 });
+    let mut stream = crate::svdstream::OnePassStream::new(DenseColumnStream::new(&a, block.max(1)));
+    let t0 = std::time::Instant::now();
+    let res = pipeline.run_cur(&mut stream, &stream_cfg, &sketches, &mut rdraw)?;
+    let t_stream = t0.elapsed().as_secs_f64();
+    let res_stream = res.cur.residual(input);
+    println!(
+        "streaming:  {:.3}s  residual {res_stream:.5}  ratio {:.4}  ({} blocks, {} candidates, \
+         {:.0} cols/s)",
+        t_stream,
+        res_stream / ak,
+        res.blocks,
+        res.candidates,
+        n as f64 / t_stream
+    );
+    println!("\n{}", pipeline.metrics.report());
     Ok(())
 }
 

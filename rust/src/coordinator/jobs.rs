@@ -1,6 +1,6 @@
 //! Approximation jobs — the unit of work the router schedules.
 
-use crate::cur::{CurConfig, CurDecomposition};
+use crate::cur::{CurConfig, CurDecomposition, StreamingCurConfig};
 use crate::gmr::FastGmrConfig;
 use crate::linalg::Mat;
 use crate::sketch::SketchKind;
@@ -49,6 +49,10 @@ pub enum ApproxJob {
     GmrExact { a: MatrixPayload, c: Mat, r: Mat },
     /// CUR decomposition (column/row selection + Fast-GMR core).
     Cur { a: MatrixPayload, cfg: CurConfig, seed: u64 },
+    /// Single-pass streaming CUR over an owned matrix streamed in
+    /// `block`-column chunks (rank-k subspace leverage selection,
+    /// reservoir-retained columns, sketch-resolved core and rows).
+    StreamingCur { a: MatrixPayload, cfg: StreamingCurConfig, block: usize, seed: u64 },
 }
 
 impl ApproxJob {
@@ -60,6 +64,7 @@ impl ApproxJob {
             ApproxJob::StreamSvd { .. } => "svd",
             ApproxJob::GmrExact { .. } => "gmr_exact",
             ApproxJob::Cur { .. } => "cur",
+            ApproxJob::StreamingCur { .. } => "cur_stream",
         }
     }
 
@@ -75,6 +80,9 @@ impl ApproxJob {
                 a.rows() as u64 * a.cols() as u64 * (c.cols() + r.rows()) as u64
             }
             ApproxJob::Cur { a, cfg, .. } => {
+                (a.rows() + a.cols()) as u64 * (cfg.c + cfg.r + cfg.s_c + cfg.s_r) as u64
+            }
+            ApproxJob::StreamingCur { a, cfg, .. } => {
                 (a.rows() + a.cols()) as u64 * (cfg.c + cfg.r + cfg.s_c + cfg.s_r) as u64
             }
         }

@@ -1,11 +1,12 @@
 //! Layer-3 coordinator: the streaming orchestrator and approximation-job
 //! service that wrap the paper's algorithms into a deployable system.
 //!
-//! * [`pipeline`] — concurrent single-pass pipeline for Algorithm 3:
-//!   reader → bounded block batches dispatched on the
-//!   [`crate::parallel`] pool → deterministic slot-ordered accumulator
-//!   fold. Matches the single-threaded reference in
-//!   [`crate::svdstream`] (tested).
+//! * [`pipeline`] — concurrent single-pass pipelines for Algorithm 3
+//!   SVD and for streaming CUR: reader → bounded block batches
+//!   dispatched on the [`crate::parallel`] pool → deterministic
+//!   stream-ordered accumulator fold. Both match their single-threaded
+//!   references in [`crate::svdstream`] / [`crate::cur::streaming`]
+//!   (tested).
 //! * [`router`] — a job service: clients submit [`jobs::ApproxJob`]s,
 //!   worker threads execute them against a [`crate::compute::Backend`].
 //! * [`batcher`] — tiles kernel-entry requests into fixed-shape

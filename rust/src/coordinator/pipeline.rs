@@ -1,5 +1,6 @@
-//! Concurrent single-pass SVD pipeline (Algorithm 3 as a streaming
-//! system).
+//! Concurrent single-pass pipelines: Algorithm 3 as a streaming system
+//! ([`StreamPipeline::run`]) and streaming CUR on the same
+//! double-buffered reader ([`StreamPipeline::run_cur`]).
 //!
 //! ```text
 //! reader ──(batch of ≤ slots blocks)──▶ pool worker₀ ─┐
@@ -27,10 +28,14 @@
 //!   single-threaded reference). `workers = 1` reproduces the serial
 //!   fold bitwise.
 
+use crate::cur::streaming::{
+    self as curstream, StreamState, StreamingCurConfig, StreamingCurResult, StreamingCurSketches,
+};
 use crate::error::{FgError, Result};
 use crate::linalg::Mat;
 use crate::metrics::Metrics;
 use crate::parallel::{self, Pool};
+use crate::rng::Pcg64;
 use crate::svdstream::fast::{accumulate_block_with, finalize, FastSpSvdConfig, FastSpSvdSketches};
 use crate::svdstream::source::ColumnStream;
 use crate::svdstream::SpSvdResult;
@@ -217,6 +222,82 @@ impl StreamPipeline {
     /// prefetched batch).
     pub fn max_queue_depth(&self) -> u64 {
         self.metrics.get("pipeline.max_queue_depth")
+    }
+
+    /// Single-pass streaming CUR on the same double-buffered reader as
+    /// [`StreamPipeline::run`]: the current batch's blocks are sketched
+    /// concurrently on the pool (each slot splitting the thread budget
+    /// like the SVD path) while this thread prefetches the next batch.
+    ///
+    /// Unlike the SVD fold, the CUR fold is **driver-side and strictly
+    /// in stream order** — `Y` writes are disjoint, `Z` adds happen
+    /// block-by-block in stream position, and the reservoir's rng draws
+    /// consume `rng` in column order. The result is therefore *bitwise*
+    /// identical to [`crate::cur::streaming::streaming_cur_with`] for
+    /// every worker/thread count when the sketch family is bitwise
+    /// (Gaussian/SRHT), which the coordinator tests pin.
+    pub fn run_cur(
+        &self,
+        stream: &mut dyn ColumnStream,
+        cfg: &StreamingCurConfig,
+        sketches: &StreamingCurSketches,
+        rng: &mut Pcg64,
+    ) -> Result<StreamingCurResult> {
+        let (m, n) = (stream.rows(), stream.cols());
+        let slots = self.slots();
+        let pool = Pool::new(slots);
+        let mut state = StreamState::new(cfg, sketches, m, n);
+
+        // The calling thread's effective worker budget, captured once up
+        // front (thread-local — invisible from the compute thread).
+        let budget = parallel::threads();
+
+        let mut batch = read_batch(stream, slots);
+        while !batch.is_empty() {
+            let batch_cols: u64 = batch.iter().map(|(_, b)| b.cols() as u64).sum();
+            let batch_len = batch.len() as u64;
+            let used = batch.len();
+            // Sketch the batch's blocks on a scoped compute thread while
+            // this thread prefetches the next batch; fold after the join.
+            let (sketched, next) = self.metrics.time("pipeline.cur_batch", || {
+                std::thread::scope(|scope| {
+                    let compute = scope.spawn(move || {
+                        let mut work: Vec<(Option<curstream::BlockSketch>, (usize, Mat))> =
+                            batch.into_iter().map(|b| (None, b)).collect();
+                        pool.for_each_mut(&mut work, |slot, unit| {
+                            let inner = if used > 1 {
+                                Pool::new(
+                                    (budget / used + usize::from(slot < budget % used)).max(1),
+                                )
+                            } else {
+                                Pool::new(budget)
+                            };
+                            let (dst, (col_start, block)) = unit;
+                            let data = std::mem::replace(block, Mat::zeros(0, 0));
+                            *dst =
+                                Some(curstream::sketch_block(*col_start, data, sketches, &inner));
+                        });
+                        work
+                    });
+                    let next = read_batch(stream, slots);
+                    (compute.join(), next)
+                })
+            });
+            let sketched = sketched
+                .map_err(|_| FgError::Coordinator("worker panicked during block sketch".into()))?;
+            for (bs, _) in sketched {
+                state.fold(bs.expect("every batch entry is sketched"), rng);
+            }
+            self.metrics.add("pipeline.cur_blocks", batch_len);
+            self.metrics.add("pipeline.cur_cols", batch_cols);
+            batch = next;
+        }
+        self.metrics.set("pipeline.cur_reservoir_candidates", state.candidates() as u64);
+
+        let result = self
+            .metrics
+            .time("pipeline.cur_finalize", || curstream::finalize(cfg, sketches, state, rng));
+        Ok(result)
     }
 }
 

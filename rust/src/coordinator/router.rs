@@ -137,6 +137,22 @@ fn execute(job: ApproxJob) -> Result<JobResult> {
             let cur = crate::cur::decompose(a.as_input(), &cfg, &mut rr);
             Ok(JobResult::Cur { cur })
         }
+        ApproxJob::StreamingCur { a, cfg, block, seed } => {
+            // Single pass over the payload; the sketch applies inside
+            // run on this executor's budgeted pool share.
+            let mut rr = rng(seed);
+            let res = match &a {
+                MatrixPayload::Dense(m) => {
+                    let mut stream = DenseColumnStream::new(m, block);
+                    crate::cur::streaming_cur(&mut stream, &cfg, &mut rr)
+                }
+                MatrixPayload::Sparse(m) => {
+                    let mut stream = CsrColumnStream::new(m, block);
+                    crate::cur::streaming_cur(&mut stream, &cfg, &mut rr)
+                }
+            };
+            Ok(JobResult::Cur { cur: res.cur })
+        }
         ApproxJob::StreamSvd { a, cfg, block, seed } => {
             let mut rr = rng(seed);
             let res = match &a {

@@ -32,14 +32,62 @@ fn pipeline_matches_reference() {
 
     for workers in [1usize, 3] {
         let pipeline = StreamPipeline::new(PipelineConfig { workers, queue_depth: 2 });
-        let mut stream = DenseColumnStream::new(&a, 16);
+        // OnePassStream panics on any replay: the SVD pipeline must be
+        // single-pass just like the CUR one.
+        let mut stream = crate::svdstream::OnePassStream::new(DenseColumnStream::new(&a, 16));
         let result = pipeline.run(&mut stream, &cfg, &sketches).unwrap();
+        assert_eq!(result.blocks, stream.blocks());
         assert_close(&result.u, &reference.u, 1e-8, &format!("U ({workers} workers)"));
         assert_close(&result.v, &reference.v, 1e-8, &format!("V ({workers} workers)"));
         for (a_, b_) in result.sigma.iter().zip(&reference.sigma) {
             assert!((a_ - b_).abs() < 1e-8);
         }
         assert_eq!(result.blocks, reference.blocks);
+    }
+}
+
+/// The concurrent streaming-CUR pipeline must be *bitwise* identical to
+/// the single-threaded reference for every worker count: the fold is
+/// driver-side in stream order and the Gaussian applies are bitwise, so
+/// nothing may drift — indices, retained columns, core, resolved rows.
+#[test]
+fn pipeline_cur_matches_reference_bitwise() {
+    let a = test_matrix(150, 180, 20);
+    let cfg = crate::cur::StreamingCurConfig::fast(12, 12, 8, 3);
+    let mut rs = rng(31);
+    let sketches = crate::cur::StreamingCurSketches::draw(&cfg, 150, 180, &mut rs);
+
+    let mut ref_stream = DenseColumnStream::new(&a, 48);
+    let mut r1 = rng(32);
+    let reference = crate::cur::streaming_cur_with(&mut ref_stream, &cfg, &sketches, &mut r1);
+
+    for workers in [1usize, 3] {
+        let pipeline = StreamPipeline::new(PipelineConfig { workers, queue_depth: 4 });
+        let mut stream = crate::svdstream::OnePassStream::new(DenseColumnStream::new(&a, 48));
+        let mut r2 = rng(32);
+        let result = pipeline.run_cur(&mut stream, &cfg, &sketches, &mut r2).unwrap();
+        assert_eq!(result.blocks, reference.blocks);
+        assert_eq!(result.blocks, stream.blocks());
+        assert_eq!(result.candidates, reference.candidates);
+        assert_eq!(
+            result.cur.col_idx,
+            reference.cur.col_idx,
+            "column selection drifted at {workers} workers"
+        );
+        assert_eq!(
+            result.cur.row_idx,
+            reference.cur.row_idx,
+            "row selection drifted at {workers} workers"
+        );
+        assert_eq!(result.cur.c.data(), reference.cur.c.data());
+        assert_eq!(result.cur.u.data(), reference.cur.u.data());
+        assert_eq!(result.cur.r.data(), reference.cur.r.data());
+        assert_eq!(pipeline.metrics.get("pipeline.cur_blocks"), reference.blocks as u64);
+        assert_eq!(pipeline.metrics.get("pipeline.cur_cols"), 180);
+        assert_eq!(
+            pipeline.metrics.get("pipeline.cur_reservoir_candidates"),
+            reference.candidates as u64
+        );
     }
 }
 
@@ -105,6 +153,12 @@ fn router_executes_all_job_kinds() {
         cfg: crate::cur::CurConfig::fast(9, 7, 3),
         seed: 10,
     });
+    let h6 = router.submit(ApproxJob::StreamingCur {
+        a: MatrixPayload::Dense(a.clone()),
+        cfg: crate::cur::StreamingCurConfig::fast(9, 7, 4, 3),
+        block: 16,
+        seed: 11,
+    });
 
     match h1.wait().unwrap() {
         JobResult::Gmr { x } => assert_eq!(x.shape(), (6, 5)),
@@ -143,10 +197,21 @@ fn router_executes_all_job_kinds() {
         }
         _ => panic!("wrong result kind"),
     }
+    match h6.wait().unwrap() {
+        JobResult::Cur { cur } => {
+            assert_eq!(cur.c.shape(), (80, 9));
+            assert_eq!(cur.u.shape(), (9, 7));
+            assert_eq!(cur.r.shape(), (7, 60));
+            let res = cur.residual(crate::gmr::Input::Dense(&a));
+            assert!(res.is_finite() && res < a.fro_norm(), "streaming CUR residual {res} not sane");
+        }
+        _ => panic!("wrong result kind"),
+    }
     assert_eq!(router.metrics.get("router.gmr.completed"), 1);
     assert_eq!(router.metrics.get("router.spsd.completed"), 1);
     assert_eq!(router.metrics.get("router.svd.completed"), 1);
     assert_eq!(router.metrics.get("router.cur.completed"), 1);
+    assert_eq!(router.metrics.get("router.cur_stream.completed"), 1);
     router.shutdown();
 }
 

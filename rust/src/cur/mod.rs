@@ -9,11 +9,14 @@
 //! ```
 //!
 //! so the factors are *actual rows and columns* of `A` — interpretable
-//! and sparsity-preserving, unlike SVD factors. The pipeline is
+//! and sparsity-preserving, unlike SVD factors. The in-memory pipeline is
 //!
-//! 1. **select** ([`select`]) — uniform, exact leverage-score, or
+//! 1. **select** ([`select_columns`]/[`select_rows`]) — uniform, exact
+//!    leverage-score, rank-k subspace leverage
+//!    ([`SelectionStrategy::SubspaceLeverage`] — the right tool on
+//!    square-ish inputs where full-rank scores are provably uniform), or
 //!    sketched approximate-leverage column/row sampling;
-//! 2. **core** ([`core`]) — `U ≈ C† A R†` computed exactly (pinv
+//! 2. **core** ([`CoreMethod`]) — `U ≈ C† A R†` computed exactly (pinv
 //!    baseline), by the Fast-GMR sketched solve (Algorithm 1 — the
 //!    whole point: `U` costs sketch-sized work instead of a full pass),
 //!    or through a thin-QR-stabilized solve for ill-conditioned
@@ -22,6 +25,10 @@
 //!    with the residual either exact (blockwise, never materialized) or
 //!    count-sketch estimated via [`gmr::estimate_residual`].
 //!
+//! The single-pass form lives in [`streaming`]: one read of a
+//! [`crate::svdstream::ColumnStream`], sketch-sized state, and the same
+//! scoring module — see [`streaming::streaming_cur`].
+//!
 //! Selection scoring and the gathers shard over the [`crate::parallel`]
 //! pool with the usual contract: `threads = 1` is bitwise serial, and
 //! the selected index sets are identical for every thread count (index
@@ -29,6 +36,7 @@
 
 mod core;
 mod select;
+pub mod streaming;
 #[cfg(test)]
 mod tests;
 
@@ -37,6 +45,7 @@ pub use select::{
     column_scores, gather_columns, gather_rows, row_scores, select_columns, select_rows,
     SelectionStrategy,
 };
+pub use streaming::{streaming_cur, streaming_cur_with, StreamingCurConfig, StreamingCurSketches};
 
 use crate::gmr::{self, Input};
 use crate::linalg::Mat;
@@ -122,6 +131,18 @@ impl CurDecomposition {
 
 /// Compute a CUR decomposition: select columns and rows, then solve the
 /// core with the configured method.
+///
+/// ```
+/// use fastgmr::cur::{decompose, CurConfig};
+/// use fastgmr::linalg::Mat;
+/// use fastgmr::rng::rng;
+///
+/// let mut r = rng(1);
+/// let a = Mat::randn(60, 40, &mut r);
+/// let d = decompose((&a).into(), &CurConfig::fast(8, 8, 3), &mut r);
+/// assert_eq!((d.c.shape(), d.u.shape(), d.r.shape()), ((60, 8), (8, 8), (8, 40)));
+/// assert!(d.residual((&a).into()).is_finite());
+/// ```
 pub fn decompose(a: Input<'_>, cfg: &CurConfig, rng: &mut Pcg64) -> CurDecomposition {
     let (col_idx, c) = select::select_columns(a, &cfg.selection, cfg.c, rng);
     let (row_idx, r) = select::select_rows(a, &cfg.selection, cfg.r, rng);

@@ -1,52 +1,87 @@
 //! Column/row selection for CUR decomposition.
 //!
-//! Three strategies, all returning a sorted index set plus the gathered
+//! Four strategies, all returning a sorted index set plus the gathered
 //! submatrix (`C = A[:, idx]` for columns, `R = A[idx, :]` for rows):
 //!
 //! * **uniform** — indices without replacement, the cheapest baseline;
-//! * **leverage** — exact leverage-score sampling: column scores are
-//!   `sketch::leverage::column_leverage_scores` (thin-QR of `Aᵀ`), row
-//!   scores `row_leverage_scores` (thin-QR of `A`) — `O(mn·min(m,n))`;
+//! * **leverage** — exact full-rank leverage-score sampling: column
+//!   scores are `sketch::leverage::column_leverage_scores` (thin-QR of
+//!   `Aᵀ`), row scores `row_leverage_scores` (thin-QR of `A`) —
+//!   `O(mn·min(m,n))`;
+//! * **subspace leverage** — rank-`k` restricted scores
+//!   `‖U_k(i,:)‖²`/`‖V_k(j,:)‖²` from the top-`k` singular subspaces
+//!   (Wang & Zhang's near-optimal CUR sampling). On square-ish full-rank
+//!   inputs the full-rank scores above are *exactly* uniform (the thin-QR
+//!   `Q` is orthogonal), so only the subspace restriction can see which
+//!   columns carry the spectral mass;
 //! * **sketched leverage** — approximate scores from a small sketch of
 //!   the *opposite* side (Drineas et al. 2012 flavour): column scores
 //!   come from `S·A` with `S ∈ R^{s×m}`, so scoring is sublinear in `m`
 //!   (and `O(nnz)` for CSR inputs with CountSketch); row scores from
-//!   `A·Sᵀ`. The scores are the rank-`s` leverage proxy — exactly what
-//!   CUR wants when the full-rank scores degenerate to uniform.
+//!   `A·Sᵀ`. The scores are the rank-`s` leverage proxy.
 //!
 //! Leverage draws are *without replacement* (weights are zeroed as
 //! indices are taken), so the gathered factors are full-rank generically
 //! instead of carrying duplicate columns into the core solve.
+//!
+//! The streaming CUR driver ([`crate::cur::streaming`]) shares this
+//! module's scoring (`sketch::leverage`) and the weighted
+//! without-replacement draw, applied to its co-range accumulator instead
+//! of to `A` directly.
 
+use crate::error::{FgError, Result};
 use crate::gmr::Input;
 use crate::linalg::Mat;
 use crate::parallel::{self, Pool};
 use crate::rng::Pcg64;
-use crate::sketch::{column_leverage_scores, row_leverage_scores, Sketch, SketchKind};
+use crate::sketch::{
+    column_leverage_scores, row_leverage_scores, subspace_column_leverage_scores,
+    subspace_row_leverage_scores, Sketch, SketchKind,
+};
 
 /// How CUR picks its column/row index sets.
 #[derive(Clone, Debug)]
 pub enum SelectionStrategy {
     /// Uniform sampling without replacement.
     Uniform,
-    /// Exact leverage-score sampling (thin-QR of `A`/`Aᵀ`; densifies CSR
-    /// inputs — prefer [`SelectionStrategy::SketchedLeverage`] there).
+    /// Exact full-rank leverage-score sampling (thin-QR of `A`/`Aᵀ`;
+    /// densifies CSR inputs — prefer
+    /// [`SelectionStrategy::SketchedLeverage`] there). Degenerates to
+    /// uniform scores on square-ish full-rank inputs — use
+    /// [`SelectionStrategy::SubspaceLeverage`] then.
     Leverage,
+    /// Rank-`k` subspace leverage scores `‖U_k(i,:)‖²` / `‖V_k(j,:)‖²`
+    /// from the top-`k` singular subspaces of `A` (densifies CSR inputs).
+    SubspaceLeverage { k: usize },
     /// Leverage scores estimated from a `size`-row sketch of the
     /// opposite dimension; sublinear in the big dimension.
     SketchedLeverage { kind: SketchKind, size: usize },
 }
 
+/// The accepted CLI/config tokens, kept next to [`SelectionStrategy::parse`]
+/// so `--help` text and error messages cannot drift apart.
+pub const SELECTION_TOKENS: &str =
+    "uniform | leverage|lev | subspace|subspace-leverage|lev-k | sketched|sketched-leverage|approx";
+
 impl SelectionStrategy {
-    /// CLI/config token → strategy (`size` scales with the selection).
-    pub fn parse(s: &str, sketch: SketchKind, size: usize) -> Option<Self> {
-        Some(match s.to_ascii_lowercase().as_str() {
+    /// CLI/config token → strategy. `size` scales the sketched-leverage
+    /// sketch with the selection; `k` is the subspace rank. Unknown
+    /// tokens are a hard [`FgError::Config`] listing the accepted values
+    /// — a silent fallback would benchmark a strategy the user did not
+    /// ask for.
+    pub fn parse(s: &str, sketch: SketchKind, size: usize, k: usize) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
             "uniform" => Self::Uniform,
             "leverage" | "lev" => Self::Leverage,
+            "subspace" | "subspace-leverage" | "lev-k" => Self::SubspaceLeverage { k: k.max(1) },
             "sketched" | "sketched-leverage" | "approx" => {
                 Self::SketchedLeverage { kind: sketch, size }
             }
-            _ => return None,
+            other => {
+                return Err(FgError::Config(format!(
+                    "unknown selection strategy `{other}` (accepted: {SELECTION_TOKENS})"
+                )))
+            }
         })
     }
 
@@ -54,6 +89,7 @@ impl SelectionStrategy {
         match self {
             Self::Uniform => "uniform",
             Self::Leverage => "leverage",
+            Self::SubspaceLeverage { .. } => "subspace-leverage",
             Self::SketchedLeverage { .. } => "sketched-leverage",
         }
     }
@@ -71,6 +107,10 @@ pub fn column_scores(
             Input::Dense(m) => column_leverage_scores(m),
             Input::Sparse(m) => column_leverage_scores(&m.to_dense()),
         }),
+        SelectionStrategy::SubspaceLeverage { k } => Some(match a {
+            Input::Dense(m) => subspace_column_leverage_scores(m, *k),
+            Input::Sparse(m) => subspace_column_leverage_scores(&m.to_dense(), *k),
+        }),
         SelectionStrategy::SketchedLeverage { kind, size } => {
             let s = (*size).clamp(1, a.rows().max(1));
             let sk = Sketch::draw(oblivious(*kind), s, a.rows(), None, rng);
@@ -87,6 +127,10 @@ pub fn row_scores(a: Input<'_>, strategy: &SelectionStrategy, rng: &mut Pcg64) -
         SelectionStrategy::Leverage => Some(match a {
             Input::Dense(m) => row_leverage_scores(m),
             Input::Sparse(m) => row_leverage_scores(&m.to_dense()),
+        }),
+        SelectionStrategy::SubspaceLeverage { k } => Some(match a {
+            Input::Dense(m) => subspace_row_leverage_scores(m, *k),
+            Input::Sparse(m) => subspace_row_leverage_scores(&m.to_dense(), *k),
         }),
         SelectionStrategy::SketchedLeverage { kind, size } => {
             let s = (*size).clamp(1, a.cols().max(1));
@@ -146,10 +190,11 @@ fn uniform_indices(n: usize, count: usize, rng: &mut Pcg64) -> Vec<usize> {
 }
 
 /// Draw `count` distinct indices with probability proportional to the
-/// (nonnegative) weights, zeroing each taken weight. A tiny uniform
-/// floor (the same 1e-12 convention as `sketch::leverage`) keeps
-/// degenerate score vectors able to fill every slot.
-fn weighted_indices_without_replacement(
+/// (nonnegative) weights, zeroing each taken weight; returns them sorted
+/// ascending. A tiny uniform floor (the same 1e-12 convention as
+/// `sketch::leverage`) keeps degenerate score vectors able to fill every
+/// slot. Shared with the streaming driver's end-of-pass draws.
+pub(crate) fn weighted_indices_without_replacement(
     weights: &[f64],
     count: usize,
     rng: &mut Pcg64,

@@ -1,0 +1,384 @@
+//! Single-pass streaming CUR over a [`ColumnStream`] — CUR joins the
+//! §5 single-pass family next to `svdstream`.
+//!
+//! The in-memory path ([`crate::cur::decompose`]) reads `A` several
+//! times: once to score, once to gather, once per core sketch. This
+//! driver consumes the stream **exactly once** and keeps only
+//! sketch-sized state, following Tropp et al.'s *practical sketching*
+//! range/co-range recipe and Wang & Zhang's leverage-based CUR:
+//!
+//! * `Y = S_C·A` (s_c × n) — the **co-range accumulator**: block `A_L`
+//!   contributes the column slice `Y[:, c0..c1] = S_C A_L` (disjoint
+//!   writes, so the accumulation is exact and order-free). `Y` yields
+//!   the rank-`k` subspace column leverage scores `‖V_k(j,:)‖²`
+//!   ([`crate::sketch::subspace_column_leverage_scores`]) *and* the
+//!   Fast-GMR products `S_C C = Y[:, col_idx]`,
+//!   `Ã = S_C A S_Rᵀ = Y·S_Rᵀ`.
+//! * `Z = A·S_Rᵀ` (m × s_r) — the **range accumulator**:
+//!   `Z += A_L·(S_R[:, c0..c1])ᵀ`, folded in stream order. `Z` yields
+//!   the rank-`k` subspace row scores and `R S_Rᵀ = Z[row_idx, :]`.
+//! * a **weighted column reservoir** (Efraimidis–Spirakis keys
+//!   `u^{1/w}`, capacity `oversample·c`) retains *actual columns* of
+//!   `A` as they stream past, keyed on the provisional sketched column
+//!   norms `‖S_C a_j‖²`; the final `c` columns are drawn from the
+//!   retained candidates under the end-of-pass rank-`k` scores.
+//!
+//! After the pass everything resolves from the retained state — no
+//! second read: `C` from the reservoir, the Fast-GMR core
+//! `U = (S_C C)† Ã (R S_Rᵀ)†` ([`crate::gmr::solve_core`]) entirely
+//! from sketch products, and the row factor by the single-pass
+//! reconstruction `R̂ = (R S_Rᵀ)·Ã†·Y ≈ A[row_idx, :]` (Tropp et al.;
+//! needs `s_c` comfortably above `s_r`, see
+//! [`StreamingCurConfig::fast`]). With full-dimension sketch sizes both
+//! sketches degenerate to [`Sketch::identity`], and every resolved
+//! quantity reproduces the in-memory Fast-GMR CUR exactly.
+//!
+//! Determinism: the reservoir and the final draws consume the seeded
+//! rng on the driver thread in stream order, and the Gaussian/SRHT
+//! applies are bitwise thread-invariant — so the selected indices are
+//! bitwise identical across thread counts (the global threads-knob test
+//! pins this). The concurrent production form of the per-block work
+//! lives in [`crate::coordinator::pipeline`] (`run_cur`), which
+//! double-buffers batches exactly like the SVD pipeline.
+
+use super::select::weighted_indices_without_replacement;
+use super::CurDecomposition;
+use crate::gmr;
+use crate::linalg::{matmul, pinv, Mat};
+use crate::parallel::Pool;
+use crate::rng::Pcg64;
+use crate::sketch::{
+    subspace_column_leverage_scores, subspace_row_leverage_scores, Sketch, SketchKind,
+};
+use crate::svdstream::source::ColumnStream;
+
+/// Configuration for [`streaming_cur`].
+#[derive(Clone, Debug)]
+pub struct StreamingCurConfig {
+    /// Number of columns to select (`C` is m×c).
+    pub c: usize,
+    /// Number of rows to select (`R̂` is r×n).
+    pub r: usize,
+    /// Subspace rank for the rank-`k` leverage scores.
+    pub k: usize,
+    /// Sketch family. `S_C` uses it directly (Gaussian/SRHT are bitwise
+    /// thread-invariant); `S_R` must be input-sliceable per block, so
+    /// SRHT falls back to Gaussian there (and the data-dependent
+    /// Leverage family to uniform sampling on both sides).
+    pub kind: SketchKind,
+    /// Co-range sketch size (rows of `Y = S_C A`), clamped to `[c, m]`;
+    /// at `m` the sketch degenerates to the identity.
+    pub s_c: usize,
+    /// Range sketch size (columns of `Z = A S_Rᵀ`), clamped to `[r, n]`.
+    pub s_r: usize,
+    /// Column reservoir capacity multiplier: `oversample·c` candidate
+    /// columns are retained during the pass (clamped to `[c, n]`).
+    pub oversample: usize,
+}
+
+impl StreamingCurConfig {
+    /// The paper-flavoured default: Gaussian sketches with
+    /// `s_r = mult·r` and `s_c = 2·mult·c`. The co-range sketch is twice
+    /// the range sketch because the single-pass row reconstruction
+    /// `R̂ = (R S_Rᵀ)Ã†Y` is only stable when `s_c` dominates `s_r`
+    /// (Tropp et al. recommend a factor ≈ 2; at `s_c = s_r` its variance
+    /// blows up).
+    pub fn fast(c: usize, r: usize, k: usize, mult: usize) -> Self {
+        Self {
+            c,
+            r,
+            k,
+            kind: SketchKind::Gaussian,
+            s_c: 2 * mult * c,
+            s_r: mult * r,
+            oversample: 4,
+        }
+    }
+}
+
+/// The realized sketch pair, drawn before the pass (shared between the
+/// reference driver and the coordinator pipeline so both are
+/// bit-identical given the same rng seed).
+pub struct StreamingCurSketches {
+    /// `S_C` — s_c × m (co-range / leverage sketch).
+    pub s_c: Sketch,
+    /// `S_R` — s_r × n (range / core sketch; sliced per column block).
+    pub s_r: Sketch,
+}
+
+impl StreamingCurSketches {
+    /// Draw both sketches for an m×n stream. Sizes are clamped to
+    /// `[c, m]` / `[r, n]` (the core solve needs `s_c ≥ c`, `s_r ≥ r`);
+    /// a full-dimension size degenerates to [`Sketch::identity`], which
+    /// makes the whole driver reproduce the in-memory Fast-GMR CUR.
+    pub fn draw(cfg: &StreamingCurConfig, m: usize, n: usize, rng: &mut Pcg64) -> Self {
+        let sc_size = cfg.s_c.max(cfg.c).min(m);
+        let s_c = if sc_size >= m {
+            Sketch::identity(m)
+        } else {
+            Sketch::draw(oblivious(cfg.kind), sc_size, m, None, rng)
+        };
+        let sr_size = cfg.s_r.max(cfg.r).min(n);
+        let s_r = if sr_size >= n {
+            Sketch::identity(n)
+        } else {
+            Sketch::draw(sliceable(cfg.kind), sr_size, n, None, rng)
+        };
+        Self { s_c, s_r }
+    }
+}
+
+/// `S_C` must be data-oblivious (no scores exist yet mid-stream).
+fn oblivious(kind: SketchKind) -> SketchKind {
+    match kind {
+        SketchKind::Leverage => SketchKind::Uniform,
+        k => k,
+    }
+}
+
+/// `S_R` is additionally sliced per block, which SRHT's global mixing
+/// cannot support.
+fn sliceable(kind: SketchKind) -> SketchKind {
+    match kind {
+        SketchKind::Srht => SketchKind::Gaussian,
+        k => oblivious(k),
+    }
+}
+
+/// Weighted reservoir of actual columns (Efraimidis–Spirakis A-ES):
+/// a column with provisional weight `w` gets key `u^{1/w}` for a fresh
+/// uniform `u`, and the `cap` largest keys survive. One uniform is
+/// consumed per offered column whether or not it is admitted, so the
+/// rng stream — and with it the retained set — depends only on stream
+/// order, never on thread count.
+pub(crate) struct ColumnReservoir {
+    cap: usize,
+    entries: Vec<ReservoirEntry>,
+}
+
+struct ReservoirEntry {
+    key: f64,
+    idx: usize,
+    col: Vec<f64>,
+}
+
+impl ColumnReservoir {
+    fn new(cap: usize) -> Self {
+        Self { cap: cap.max(1), entries: Vec::new() }
+    }
+
+    /// Offer column `idx` with provisional weight `weight`; `col` is
+    /// called only when the column is admitted (so unretained columns
+    /// are never copied).
+    fn offer(&mut self, idx: usize, weight: f64, col: impl FnOnce() -> Vec<f64>, rng: &mut Pcg64) {
+        let u = rng.next_f64();
+        let key = u.powf(1.0 / weight.max(1e-300));
+        if self.entries.len() < self.cap {
+            self.entries.push(ReservoirEntry { key, idx, col: col() });
+            return;
+        }
+        let mut min_at = 0;
+        for (t, e) in self.entries.iter().enumerate() {
+            if e.key < self.entries[min_at].key {
+                min_at = t;
+            }
+        }
+        if key > self.entries[min_at].key {
+            self.entries[min_at] = ReservoirEntry { key, idx, col: col() };
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+/// The per-block sketch products, computed pool-parallel and folded
+/// serially in stream order (the split that lets the coordinator
+/// pipeline overlap block sketching with the stream read).
+pub struct BlockSketch {
+    pub(crate) col_start: usize,
+    pub(crate) data: Mat,
+    pub(crate) y_blk: Mat,
+    pub(crate) z_blk: Mat,
+    pub(crate) norms: Vec<f64>,
+}
+
+/// Sketch one column block: `Y` slice, `Z` contribution, and the
+/// provisional column weights `‖S_C a_j‖²`. Pure function of the block —
+/// safe to run concurrently for different blocks on any pool.
+pub fn sketch_block(
+    col_start: usize,
+    data: Mat,
+    sk: &StreamingCurSketches,
+    pool: &Pool,
+) -> BlockSketch {
+    let c1 = col_start + data.cols();
+    let y_blk = sk.s_c.apply_left_with(&data, pool);
+    let z_blk = sk.s_r.slice_input(col_start, c1).apply_right_with(&data, pool);
+    let mut norms = vec![0.0; y_blk.cols()];
+    for i in 0..y_blk.rows() {
+        for (o, &v) in norms.iter_mut().zip(y_blk.row(i)) {
+            *o += v * v;
+        }
+    }
+    BlockSketch { col_start, data, y_blk, z_blk, norms }
+}
+
+/// Accumulated single-pass state: the two sketch accumulators plus the
+/// column reservoir. Folding is driver-side and strictly in stream
+/// order, so the result is independent of how blocks were sketched.
+pub struct StreamState {
+    y: Mat,
+    z: Mat,
+    reservoir: ColumnReservoir,
+    blocks: usize,
+}
+
+impl StreamState {
+    /// Fresh state for an m×n stream.
+    pub fn new(cfg: &StreamingCurConfig, sk: &StreamingCurSketches, m: usize, n: usize) -> Self {
+        let cap = (cfg.oversample.max(1) * cfg.c.max(1)).min(n.max(1));
+        Self {
+            y: Mat::zeros(sk.s_c.out_dim(), n),
+            z: Mat::zeros(m, sk.s_r.out_dim()),
+            reservoir: ColumnReservoir::new(cap),
+            blocks: 0,
+        }
+    }
+
+    /// Fold one sketched block (must be called in stream order): write
+    /// the `Y` slice, add the `Z` contribution, and offer every column
+    /// to the reservoir. Consumes the block — the raw data is dropped
+    /// here unless the reservoir retained a column.
+    pub fn fold(&mut self, bs: BlockSketch, rng: &mut Pcg64) {
+        self.y.set_block(0, bs.col_start, &bs.y_blk);
+        self.z += &bs.z_blk;
+        for j in 0..bs.data.cols() {
+            self.reservoir.offer(bs.col_start + j, bs.norms[j], || bs.data.col(j), rng);
+        }
+        self.blocks += 1;
+    }
+
+    /// Blocks folded so far.
+    pub fn blocks(&self) -> usize {
+        self.blocks
+    }
+
+    /// Current reservoir occupancy (diagnostics/metrics).
+    pub fn candidates(&self) -> usize {
+        self.reservoir.len()
+    }
+}
+
+/// A completed streaming CUR run.
+pub struct StreamingCurResult {
+    /// The decomposition. `c` holds *actual columns* of `A` (retained by
+    /// the reservoir); `r` is the sketch-resolved `R̂ ≈ A[row_idx, :]`
+    /// (exact at full sketch sizes).
+    pub cur: CurDecomposition,
+    /// Column blocks consumed (diagnostics).
+    pub blocks: usize,
+    /// Candidate columns retained by the reservoir at finalize time.
+    pub candidates: usize,
+}
+
+/// End-of-pass resolution: rank-`k` scores from the accumulators, final
+/// column draw from the reservoir, row draw, and the core + row factor
+/// from the retained sketches alone.
+pub fn finalize(
+    cfg: &StreamingCurConfig,
+    sk: &StreamingCurSketches,
+    mut state: StreamState,
+    rng: &mut Pcg64,
+) -> StreamingCurResult {
+    let m = state.z.rows();
+    let blocks = state.blocks;
+
+    // Columns: rank-k subspace scores over all n columns from Y, then a
+    // weighted draw restricted to the retained candidates.
+    let col_scores = subspace_column_leverage_scores(&state.y, cfg.k);
+    state.reservoir.entries.sort_by_key(|e| e.idx);
+    let cand_weights: Vec<f64> =
+        state.reservoir.entries.iter().map(|e| col_scores[e.idx]).collect();
+    let candidates = state.reservoir.len();
+    let picks = weighted_indices_without_replacement(&cand_weights, cfg.c, rng);
+    let col_idx: Vec<usize> = picks.iter().map(|&p| state.reservoir.entries[p].idx).collect();
+    let mut c_mat = Mat::zeros(m, col_idx.len());
+    for (o, &p) in picks.iter().enumerate() {
+        for (i, &v) in state.reservoir.entries[p].col.iter().enumerate() {
+            c_mat[(i, o)] = v;
+        }
+    }
+
+    // Rows: rank-k subspace scores from the range accumulator Z.
+    let row_scores = subspace_row_leverage_scores(&state.z, cfg.k);
+    let row_idx = weighted_indices_without_replacement(&row_scores, cfg.r, rng);
+
+    // Fast-GMR core from sketch products only: S_C C = Y[:, col_idx],
+    // R S_Rᵀ = Z[row_idx, :], Ã = Y S_Rᵀ.
+    let sc_c = state.y.select_cols(&col_idx);
+    let r_sr = state.z.select_rows(&row_idx);
+    let a_tilde = sk.s_r.apply_right(&state.y);
+    let u = gmr::solve_core(&sc_c, &a_tilde, &r_sr);
+
+    // Row factor: single-pass reconstruction R̂ = (R S_Rᵀ)·Ã†·Y. Ã is
+    // *tall* (s_c ≈ 2·s_r by design), so `pinv_apply_right` — whose
+    // Cholesky path builds the rows×rows Gram, singular here — is the
+    // wrong tool; the SVD pseudoinverse handles the tall rank-s_r shape.
+    let r_hat = matmul(&matmul(&r_sr, &pinv(&a_tilde)), &state.y);
+
+    StreamingCurResult {
+        cur: CurDecomposition { col_idx, row_idx, c: c_mat, u, r: r_hat },
+        blocks,
+        candidates,
+    }
+}
+
+/// Single-pass streaming CUR (reference driver): draw the sketches,
+/// fold every block in stream order on the calling thread, resolve. The
+/// concurrent production form is
+/// [`crate::coordinator::StreamPipeline::run_cur`].
+///
+/// ```
+/// use fastgmr::cur::streaming::{streaming_cur, StreamingCurConfig};
+/// use fastgmr::linalg::Mat;
+/// use fastgmr::rng::rng;
+/// use fastgmr::svdstream::DenseColumnStream;
+///
+/// let mut r = rng(3);
+/// let a = Mat::randn(50, 64, &mut r);
+/// let cfg = StreamingCurConfig::fast(6, 6, 4, 2);
+/// let mut stream = DenseColumnStream::new(&a, 16);
+/// let res = streaming_cur(&mut stream, &cfg, &mut r);
+/// assert_eq!(res.blocks, 4);
+/// assert_eq!(res.cur.c.shape(), (50, 6));
+/// assert_eq!(res.cur.r.shape(), (6, 64));
+/// ```
+pub fn streaming_cur(
+    stream: &mut dyn ColumnStream,
+    cfg: &StreamingCurConfig,
+    rng: &mut Pcg64,
+) -> StreamingCurResult {
+    let (m, n) = (stream.rows(), stream.cols());
+    let sk = StreamingCurSketches::draw(cfg, m, n, rng);
+    streaming_cur_with(stream, cfg, &sk, rng)
+}
+
+/// [`streaming_cur`] with pre-drawn sketches (shared with the
+/// coordinator pipeline and with tests that pin reference agreement).
+pub fn streaming_cur_with(
+    stream: &mut dyn ColumnStream,
+    cfg: &StreamingCurConfig,
+    sk: &StreamingCurSketches,
+    rng: &mut Pcg64,
+) -> StreamingCurResult {
+    let (m, n) = (stream.rows(), stream.cols());
+    let mut state = StreamState::new(cfg, sk, m, n);
+    let pool = Pool::current();
+    while let Some(block) = stream.next_block() {
+        let bs = sketch_block(block.col_start, block.data, sk, &pool);
+        state.fold(bs, rng);
+    }
+    finalize(cfg, sk, state, rng)
+}

@@ -1,13 +1,16 @@
 //! CUR subsystem tests: the ISSUE acceptance bars (rank-k relative
-//! error, identity-sized agreement), stabilized-core behaviour on
-//! ill-conditioned selections, sparse/dense path agreement, and the
-//! SPSD cross-check against the Nyström baseline.
+//! error, identity-sized agreement, subspace-vs-full leverage on
+//! square-ish inputs, streaming-vs-in-memory agreement), stabilized-core
+//! behaviour on ill-conditioned selections, sparse/dense path agreement,
+//! and the SPSD cross-check against the Nyström baseline.
 
 use super::*;
 use crate::data::{rbf_kernel, synth_clustered, synth_dense, synth_sparse, SpectrumKind};
-use crate::linalg::fro_norm_diff;
+use crate::linalg::{fro_norm_diff, qr_thin};
 use crate::rng::rng;
+use crate::sketch::{column_leverage_scores, subspace_column_leverage_scores};
 use crate::sparse::Csr;
+use crate::svdstream::{DenseColumnStream, OnePassStream};
 use crate::testing::assert_close;
 
 fn rank_k_matrix(m: usize, n: usize, k: usize, noise: f64, seed: u64) -> Mat {
@@ -227,6 +230,146 @@ fn degenerate_configs_fall_back_gracefully() {
     let (idx, cmat) = select_columns(input, &strat, 12, &mut r);
     assert_eq!(cmat.shape(), (20, 12));
     assert_eq!(idx.len(), 12);
+}
+
+/// A square invertible matrix with `k` planted heavy columns: `Aᵀ`'s
+/// thin-QR `Q` is orthogonal, so every full-rank column leverage score
+/// is *exactly* 1 (provably uniform — selection is blind), while the
+/// rank-`k` subspace scores concentrate on the planted columns.
+fn planted_square(n: usize, k: usize, seed: u64) -> Mat {
+    let mut r = rng(seed);
+    let u = qr_thin(&Mat::randn(n, k, &mut r)).q;
+    let mut a = Mat::zeros(n, n);
+    for t in 0..k {
+        let w = 10.0 * (1.0 - 0.1 * t as f64);
+        for i in 0..n {
+            a[(i, t)] = w * u[(i, t)];
+        }
+    }
+    for i in 0..n {
+        for j in 0..n {
+            a[(i, j)] += 1e-3 * r.next_normal();
+        }
+    }
+    a
+}
+
+/// ISSUE acceptance bar: on the planted square-ish matrix the full-QR
+/// scores are uniform to fp noise, the rank-k subspace scores separate
+/// the planted heavy columns, and `SubspaceLeverage { k }` CUR beats
+/// full-QR `Leverage` CUR by a wide residual margin.
+#[test]
+fn subspace_leverage_beats_uniform_full_qr_scores_on_square_input() {
+    let (n, k) = (48, 5);
+    let a = planted_square(n, k, 0xAB);
+    let input = Input::Dense(&a);
+
+    let full = column_leverage_scores(&a);
+    for (j, &s) in full.iter().enumerate() {
+        assert!((s - 1.0).abs() < 1e-6, "full-rank score {s} at column {j} not uniform");
+    }
+    let sub = subspace_column_leverage_scores(&a, k);
+    let heavy: f64 = sub[..k].iter().sum();
+    assert!(heavy >= 0.9 * k as f64, "subspace scores miss the planted columns (sum {heavy})");
+    for (j, &s) in sub.iter().enumerate().skip(k) {
+        assert!(s < 1e-2, "light column {j} got subspace score {s}");
+    }
+
+    let mut rs = rng(0xAC);
+    let (idx, _) = select_columns(input, &SelectionStrategy::SubspaceLeverage { k }, k, &mut rs);
+    let hits = idx.iter().filter(|&&j| j < k).count();
+    assert!(hits + 1 >= k, "subspace selection found only {hits}/{k} planted columns: {idx:?}");
+
+    let exact = |sel: SelectionStrategy, seed: u64| {
+        let cfg = CurConfig { selection: sel, ..CurConfig::exact(k, k) };
+        let mut r = rng(seed);
+        decompose(input, &cfg, &mut r).residual(input)
+    };
+    let res_sub = exact(SelectionStrategy::SubspaceLeverage { k }, 0xAD);
+    let res_full = exact(SelectionStrategy::Leverage, 0xAD);
+    assert!(
+        res_sub < 0.25 * res_full,
+        "subspace CUR ({res_sub}) must beat uniform-score full-QR CUR ({res_full})"
+    );
+}
+
+/// At full sketch sizes both streaming sketches degenerate to the
+/// identity, so the single-pass driver must reproduce the in-memory
+/// Fast-GMR CUR exactly: actual columns in C, actual rows resolved in
+/// R̂, and the identity-degenerate core — all ≤ 1e-10.
+#[test]
+fn streaming_full_sketches_match_in_memory_fast_core() {
+    let a = rank_k_matrix(60, 50, 6, 0.05, 101);
+    let input = Input::Dense(&a);
+    let cfg = StreamingCurConfig {
+        c: 10,
+        r: 10,
+        k: 6,
+        kind: SketchKind::Gaussian,
+        s_c: 60,
+        s_r: 50,
+        oversample: 5,
+    };
+    let mut stream = DenseColumnStream::new(&a, 16);
+    let mut r = rng(102);
+    let res = streaming_cur(&mut stream, &cfg, &mut r);
+    assert_eq!(res.blocks, 4);
+    assert_eq!(res.candidates, 50, "full-capacity reservoir must retain every column");
+    assert_eq!(res.cur.col_idx.len(), 10);
+    assert_eq!(res.cur.row_idx.len(), 10);
+
+    let c_ref = gather_columns(input, &res.cur.col_idx);
+    let r_ref = gather_rows(input, &res.cur.row_idx);
+    assert_eq!(res.cur.c.data(), c_ref.data(), "reservoir columns differ from A's columns");
+    assert_close(&res.cur.r, &r_ref, 1e-10, "sketch-resolved rows at full sizes");
+
+    let mut rf = rng(0); // the identity-degenerate path consumes no rng
+    let u_ref = core_fast(input, &c_ref, &r_ref, SketchKind::Gaussian, 60, 50, &mut rf);
+    assert_close(&res.cur.u, &u_ref, 1e-10, "streaming core vs in-memory fast core");
+}
+
+/// Streaming CUR reads the stream exactly once (OnePassStream panics on
+/// any replay) and lands within a small constant of the best rank-k
+/// error with sketch-sized state.
+#[test]
+fn streaming_cur_single_pass_close_to_best_rank_k() {
+    let k = 6;
+    let a = rank_k_matrix(260, 220, k, 0.02, 55);
+    let input = Input::Dense(&a);
+    let cfg = StreamingCurConfig::fast(4 * k, 4 * k, k, 3);
+    let mut stream = OnePassStream::new(DenseColumnStream::new(&a, 40));
+    let mut r = rng(56);
+    let res = streaming_cur(&mut stream, &cfg, &mut r);
+    assert_eq!(res.blocks, stream.blocks());
+    assert_eq!(res.blocks, 6);
+    assert!(res.cur.col_idx.windows(2).all(|w| w[0] < w[1]), "column indices not sorted-unique");
+    assert!(res.cur.row_idx.windows(2).all(|w| w[0] < w[1]), "row indices not sorted-unique");
+    for (o, &j) in res.cur.col_idx.iter().enumerate() {
+        assert_eq!(res.cur.c.col(o), a.col(j), "C column {o} is not A[:, {j}]");
+    }
+    let mut re = rng(57);
+    let report = relative_error(input, &res.cur, k, None, &mut re);
+    assert!(report.ratio() <= 2.5, "streaming CUR ratio {} above the bar", report.ratio());
+}
+
+/// Unknown strategy tokens must be a hard config error listing the
+/// accepted values — never a silent fallback.
+#[test]
+fn selection_parse_rejects_unknown_strategies() {
+    for ok in ["uniform", "Leverage", "subspace", "lev-k", "sketched", "approx"] {
+        assert!(
+            SelectionStrategy::parse(ok, SketchKind::Gaussian, 8, 4).is_ok(),
+            "token `{ok}` must parse"
+        );
+    }
+    let err = match SelectionStrategy::parse("bogus", SketchKind::Gaussian, 8, 4) {
+        Err(e) => format!("{e}"),
+        Ok(_) => panic!("bogus strategy must be rejected"),
+    };
+    assert!(
+        err.contains("bogus") && err.contains("subspace") && err.contains("uniform"),
+        "error must name the offender and list accepted values: {err}"
+    );
 }
 
 /// Uniform selection and the Csr gather helpers behave on a plain

@@ -73,6 +73,20 @@ pub struct FastGmrSolution {
 /// the appropriate factor exactly as Table 2 prescribes: `S_C` w.r.t. the
 /// (column-space) leverage scores of `C`, `S_R` w.r.t. the (row-space)
 /// leverage scores of `R`.
+///
+/// ```
+/// use fastgmr::gmr::{residual, solve_fast, FastGmrConfig, Input};
+/// use fastgmr::linalg::Mat;
+/// use fastgmr::rng::rng;
+///
+/// let mut rand = rng(7);
+/// let a = Mat::randn(40, 30, &mut rand);
+/// let c = a.slice(0, 40, 0, 5); // any m×c / r×n factors work
+/// let r = a.slice(0, 5, 0, 30);
+/// let sol = solve_fast(Input::Dense(&a), &c, &r, &FastGmrConfig::gaussian(20, 20), &mut rand);
+/// assert_eq!(sol.x.shape(), (5, 5));
+/// assert!(residual(Input::Dense(&a), &c, &sol.x, &r).is_finite());
+/// ```
 pub fn solve_fast(a: Input<'_>, c: &Mat, r: &Mat, cfg: &FastGmrConfig, rng: &mut Pcg64) -> FastGmrSolution {
     let (m, n) = (a.rows(), a.cols());
     assert_eq!(c.rows(), m, "solve_fast: A/C row mismatch");

@@ -3,16 +3,16 @@
 //!
 //! * [`Mat`] — row-major dense matrix over `f64`.
 //! * blocked, register-tiled matmul ([`matmul`]),
-//! * blocked compact-WY Householder QR ([`qr::qr_thin`]) whose panel
+//! * blocked compact-WY Householder QR ([`qr_thin`]) whose panel
 //!   updates ride the matmul kernel and the `crate::parallel` pool,
-//! * Cholesky + triangular solves ([`chol`], [`solve`]),
+//! * Cholesky + triangular solves ([`cholesky`], [`solve_upper`]),
 //! * symmetric eigendecomposition via round-robin parallel Jacobi
-//!   ([`eig::eigh`]),
-//! * full SVD via pool-parallel one-sided Jacobi ([`svd::svd_jacobi`])
+//!   ([`eigh`]),
+//! * full SVD via pool-parallel one-sided Jacobi ([`svd_jacobi`])
 //!   and randomized top-k SVD via subspace iteration
-//!   ([`svd::svd_randomized`]),
-//! * Moore–Penrose pseudoinverse ([`pinv::pinv`]),
-//! * norms and projections ([`norms`], [`eig::project_psd`]).
+//!   ([`svd_randomized`]),
+//! * Moore–Penrose pseudoinverse ([`pinv`]),
+//! * norms and projections ([`fro_norm`], [`project_psd`]).
 //!
 //! Conventions: all factorizations are "thin"/economy size; matrices are
 //! row-major; row/column indices are zero-based.

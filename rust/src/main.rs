@@ -1,3 +1,7 @@
+//! `fastgmr` launcher binary — thin shell around [`fastgmr::cli`]: parse
+//! argv, dispatch the subcommand, map any [`fastgmr::FgError`] to a
+//! nonzero exit.
+
 fn main() {
     if let Err(e) = fastgmr::cli::main_entry() {
         eprintln!("error: {e}");

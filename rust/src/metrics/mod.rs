@@ -1,5 +1,11 @@
 //! Lightweight metrics: counters, gauges, wall-clock timers and
 //! histograms, shared across coordinator threads.
+//!
+//! Consumers: the job [`crate::coordinator::Router`] (per-kind
+//! submitted/completed counts and latency histograms, including the
+//! `cur_stream` kind) and the streaming pipelines (batch timings, block
+//! and column counts, reservoir occupancy gauges). `report()` renders
+//! the snapshot the `pipeline`/`serve` CLI subcommands print.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -28,6 +34,13 @@ impl Metrics {
     /// Add to a counter by name (convenience; takes the map lock).
     pub fn add(&self, name: &str, delta: u64) {
         self.counter(name).fetch_add(delta, Ordering::Relaxed);
+    }
+
+    /// Set a gauge-style counter to an absolute value (last write wins)
+    /// — for point-in-time facts like reservoir occupancy, as opposed to
+    /// the monotone [`Metrics::add`] counters.
+    pub fn set(&self, name: &str, value: u64) {
+        self.counter(name).store(value, Ordering::Relaxed);
     }
 
     /// Record a duration (seconds) into a histogram.
@@ -139,6 +152,16 @@ mod tests {
         m.add("blocks", 4);
         assert_eq!(m.get("blocks"), 7);
         assert_eq!(m.get("other"), 0);
+    }
+
+    #[test]
+    fn gauge_set_overwrites() {
+        let m = Metrics::new();
+        m.add("g", 5);
+        m.set("g", 3);
+        assert_eq!(m.get("g"), 3);
+        m.set("g", 9);
+        assert_eq!(m.get("g"), 9);
     }
 
     #[test]

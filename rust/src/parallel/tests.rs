@@ -182,13 +182,20 @@ fn global_threads_knob_end_to_end() {
         let mut rc = rng(8);
         let cur_cfg = crate::cur::CurConfig::fast(10, 10, 3);
         let cur = crate::cur::decompose(Input::Dense(&a), &cur_cfg, &mut rc);
-        (m, k, two, qr, svd, eig, sol.x, sol_count.x, cur)
+        let mut rsc = rng(9);
+        let mut stream = crate::svdstream::DenseColumnStream::new(&a, 64);
+        let scur = crate::cur::streaming_cur(
+            &mut stream,
+            &crate::cur::StreamingCurConfig::fast(10, 10, 6, 3),
+            &mut rsc,
+        );
+        (m, k, two, qr, svd, eig, sol.x, sol_count.x, cur, scur)
     };
 
     set_threads(1);
-    let (m1, k1, two1, qr1, svd1, eig1, x1, xc1, cur1) = run_all();
+    let (m1, k1, two1, qr1, svd1, eig1, x1, xc1, cur1, scur1) = run_all();
     set_threads(4);
-    let (m4, k4, two4, qr4, svd4, eig4, x4, xc4, cur4) = run_all();
+    let (m4, k4, two4, qr4, svd4, eig4, x4, xc4, cur4, scur4) = run_all();
     set_threads(0); // restore auto-detect
 
     assert_eq!(m1.data(), m4.data(), "matmul dispatch not bitwise across thread counts");
@@ -216,4 +223,25 @@ fn global_threads_knob_end_to_end() {
     assert_eq!(cur1.c.data(), cur4.c.data(), "CUR column gather not bitwise across thread counts");
     assert_eq!(cur1.r.data(), cur4.r.data(), "CUR row gather not bitwise across thread counts");
     assert_close(&cur4.u, &cur1.u, 1e-12, "CUR core threads=1 vs 4");
+    // Streaming CUR contract: the reservoir and all score draws consume
+    // the rng in stream order on the driver thread, and the Gaussian
+    // applies are bitwise — indices and retained columns must be bitwise
+    // across thread counts, core and resolved rows ≤ 1e-12.
+    assert_eq!(
+        scur1.cur.col_idx,
+        scur4.cur.col_idx,
+        "streaming CUR column selection not bitwise across thread counts"
+    );
+    assert_eq!(
+        scur1.cur.row_idx,
+        scur4.cur.row_idx,
+        "streaming CUR row selection not bitwise across thread counts"
+    );
+    assert_eq!(
+        scur1.cur.c.data(),
+        scur4.cur.c.data(),
+        "streaming CUR retained columns not bitwise across thread counts"
+    );
+    assert_close(&scur4.cur.u, &scur1.cur.u, 1e-12, "streaming CUR core threads=1 vs 4");
+    assert_close(&scur4.cur.r, &scur1.cur.r, 1e-12, "streaming CUR rows threads=1 vs 4");
 }

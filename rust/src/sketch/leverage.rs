@@ -1,9 +1,11 @@
 //! Row-sampling sketches (uniform and leverage-score), plus leverage
-//! score computation (Section 2.1: `ℓ_i = ‖Q_{i,:}‖²` for an orthonormal
-//! basis Q of the column space).
+//! score computation — Section 2.1: `ℓ_i = ‖Q_{i,:}‖²` for an orthonormal
+//! basis Q of the column space — and the rank-k *subspace* restriction
+//! `ℓ_i^{(k)} = ‖U_k(i,:)‖²` (Wang & Zhang 2013 flavour) that CUR
+//! selection uses when the full-rank scores degenerate to uniform.
 
 use super::{Op, Sketch};
-use crate::linalg::{qr_thin, Mat};
+use crate::linalg::{matmul, qr_thin, svd_jacobi, Mat};
 use crate::rng::Pcg64;
 
 /// Row leverage scores of `A` (m×n, m ≥ n typical): squared row norms of
@@ -18,6 +20,31 @@ pub fn row_leverage_scores(a: &Mat) -> Vec<f64> {
 /// Column leverage scores of `A` = row leverage scores of `Aᵀ`.
 pub fn column_leverage_scores(a: &Mat) -> Vec<f64> {
     row_leverage_scores(&a.transpose())
+}
+
+/// Rank-`k` (subspace-restricted) row leverage scores:
+/// `ℓ_i^{(k)} = ‖U_k(i,:)‖²` where `U_k` holds the top-`k` left singular
+/// vectors of `A`. Sums to ≈ k.
+///
+/// Full-rank scores are useless on square-ish full-rank inputs — the
+/// thin-QR `Q` is then orthogonal, so every score is exactly 1 — while
+/// the rank-`k` restriction still separates the directions that carry
+/// the spectral mass (the selection signal CUR needs). Computed as
+/// thin-QR of `A` followed by an SVD of the small triangular factor
+/// (`U_k = Q · Ū[:, :k]`), so the `O(mn²)` bulk rides the blocked
+/// compact-WY kernel. `k` is clamped to `[1, min(m, n)]`.
+pub fn subspace_row_leverage_scores(a: &Mat, k: usize) -> Vec<f64> {
+    let k = k.max(1).min(a.rows().min(a.cols()).max(1));
+    let fac = qr_thin(a);
+    let svd = svd_jacobi(&fac.r);
+    let uk = matmul(&fac.q, &svd.u.slice(0, svd.u.rows(), 0, k));
+    uk.row_norms_sq()
+}
+
+/// Rank-`k` column leverage scores of `A` = rank-`k` row scores of `Aᵀ`
+/// (`‖V_k(j,:)‖²` for the top-`k` right singular vectors).
+pub fn subspace_column_leverage_scores(a: &Mat, k: usize) -> Vec<f64> {
+    subspace_row_leverage_scores(&a.transpose(), k)
 }
 
 /// Sampling sketch with probabilities proportional to `weights`

@@ -24,7 +24,10 @@ mod osnap;
 mod srht;
 
 pub use combined::compose as compose_sketches;
-pub use leverage::{column_leverage_scores, row_leverage_scores};
+pub use leverage::{
+    column_leverage_scores, row_leverage_scores, subspace_column_leverage_scores,
+    subspace_row_leverage_scores,
+};
 
 use crate::linalg::Mat;
 use crate::parallel::Pool;
@@ -95,12 +98,12 @@ impl SketchKind {
 /// Internal realized operator.
 pub(crate) enum Op {
     Gaussian(Mat),
-    /// Row sampling: out row t = scale[t] * A[idx[t], :].
+    /// Row sampling: out row t = `scale[t] * A[idx[t], :]`.
     Sampling { idx: Vec<usize>, scale: Vec<f64> },
     /// SRHT: signs (±1, length m), sampled indices into the padded
     /// Hadamard domain, padded = next power of two >= m.
     Srht { signs: Vec<f64>, sample: Vec<usize>, padded: usize, scale: f64 },
-    /// CountSketch: for input coordinate i, add sign[i]*row_i to bucket[i].
+    /// CountSketch: for input coordinate i, add `sign[i]*row_i` to `bucket[i]`.
     Count { bucket: Vec<usize>, sign: Vec<f64> },
     /// OSNAP: p entries per input coordinate; flattened (m*p) arrays.
     Osnap { buckets: Vec<usize>, signs: Vec<f64>, p: usize },

@@ -20,7 +20,7 @@ pub mod source;
 
 pub use fast::{fast_sp_svd, fast_sp_svd_with, FastSpSvdConfig, FastSpSvdSketches, SpSvdResult};
 pub use practical::{practical_sp_svd, PracticalSpSvdConfig};
-pub use source::{ColumnStream, CsrColumnStream, DenseColumnStream};
+pub use source::{ColumnStream, CsrColumnStream, DenseColumnStream, OnePassStream};
 
 use crate::linalg::Mat;
 

@@ -67,6 +67,49 @@ impl<'a> ColumnStream for DenseColumnStream<'a> {
     }
 }
 
+/// Wrapper enforcing the single-pass contract: counts the blocks handed
+/// out and **panics on `reset()`** — wrap a source in tests (or
+/// paranoid callers) to prove an algorithm truly reads the stream once.
+/// [`crate::cur::streaming`] and the SVD pipeline are both validated
+/// through it.
+pub struct OnePassStream<S: ColumnStream> {
+    inner: S,
+    blocks: usize,
+}
+
+impl<S: ColumnStream> OnePassStream<S> {
+    pub fn new(inner: S) -> Self {
+        Self { inner, blocks: 0 }
+    }
+
+    /// Blocks handed out so far.
+    pub fn blocks(&self) -> usize {
+        self.blocks
+    }
+}
+
+impl<S: ColumnStream> ColumnStream for OnePassStream<S> {
+    fn rows(&self) -> usize {
+        self.inner.rows()
+    }
+
+    fn cols(&self) -> usize {
+        self.inner.cols()
+    }
+
+    fn next_block(&mut self) -> Option<ColumnBlock> {
+        let block = self.inner.next_block();
+        if block.is_some() {
+            self.blocks += 1;
+        }
+        block
+    }
+
+    fn reset(&mut self) {
+        panic!("OnePassStream: reset() called — the consumer must be single-pass");
+    }
+}
+
 /// Stream over an in-memory CSR matrix (densifies each block; the blocks
 /// are thin so this is the natural layout for the downstream sketches).
 pub struct CsrColumnStream<'a> {
