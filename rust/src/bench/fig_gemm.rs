@@ -1,0 +1,331 @@
+//! Packed-GEMM figure — single-core GFLOP/s of the BLIS-style packed
+//! kernels in `linalg::matmul` against the frozen pre-pack seed kernels,
+//! across square, tall-skinny, and sketch-shaped products.
+//!
+//! The seed kernels (i-k-j with 4-row A-blocking, the `Aᵀ·B` scatter,
+//! the `A·Bᵀ` 4-dot kernel — the PR-1 generation that measured
+//! ~8.7–10.9 GFLOP/s f64) are kept **here, frozen, bench-only** as the
+//! comparison baseline; every production caller goes through the packed
+//! drivers. Both sides are timed through the serial *panel* entry points
+//! so the numbers are genuinely single-core regardless of the process
+//! `threads` knob.
+//!
+//! Emits `results/BENCH_gemm.json` (uploaded as a CI artifact) and
+//! `PERF`-prefixed stdout lines the CI bench step greps into the log;
+//! the bench-smoke job additionally fails if the packed kernel is slower
+//! than the seed at the 512³ point (the ratio guard). Acceptance bar for
+//! the PR-5 pass: **≥ 2× the seed GFLOP/s on the 512–1024 squares**.
+//! The optimization log lives in EXPERIMENTS.md §Perf.
+
+use super::harness::{secs, BenchCtx, Profile};
+use crate::linalg::Mat;
+use crate::rng::rng;
+
+/// One measured row for the JSON artifact.
+struct Row {
+    kernel: &'static str,
+    shape: &'static str,
+    m: usize,
+    k: usize,
+    n: usize,
+    seed_s: f64,
+    new_s: f64,
+}
+
+impl Row {
+    fn flops(&self) -> f64 {
+        2.0 * self.m as f64 * self.k as f64 * self.n as f64
+    }
+    fn speedup(&self) -> f64 {
+        self.seed_s / self.new_s
+    }
+    fn gflops(&self) -> f64 {
+        self.flops() / self.new_s / 1e9
+    }
+    fn seed_gflops(&self) -> f64 {
+        self.flops() / self.seed_s / 1e9
+    }
+}
+
+/// Repetitions scaled so the cheap shapes average over noise without the
+/// big ones dominating wall clock.
+fn reps(m: usize, k: usize, n: usize) -> usize {
+    match m * k * n {
+        v if v <= 1 << 28 => 5,
+        v if v <= 1 << 31 => 3,
+        _ => 1,
+    }
+}
+
+pub fn run(ctx: &mut BenchCtx) {
+    let squares: &[usize] = match ctx.profile {
+        Profile::Quick => &[256, 512, 1024],
+        Profile::Full => &[256, 512, 1024, 2048],
+    };
+    let mut rows: Vec<Row> = Vec::new();
+    ctx.line("single-core panel kernels (threads knob bypassed on both sides)");
+
+    ctx.line("\n-- gemm: packed MRxNR microkernel vs seed 4-row i-k-j --");
+    for &d in squares {
+        rows.push(time_gemm(ctx, "square", d, d, d));
+    }
+    // Tall-skinny (thin-QR trailing-update shape) and sketch-shaped
+    // (S_C·C: small s times a long inner dimension) products.
+    rows.push(time_gemm(ctx, "tall-skinny", 4096, 512, 128));
+    rows.push(time_gemm(ctx, "sketch", 256, 4096, 512));
+
+    ctx.line("\n-- matmul_at_b: packed transpose-pack vs seed scatter --");
+    rows.push(time_at_b(ctx, 4096, 512, 256));
+
+    ctx.line("\n-- matmul_a_bt: packed transpose-pack vs seed 4-dot --");
+    rows.push(time_a_bt(ctx, 4096, 512, 256));
+
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.kernel.to_string(),
+                r.shape.to_string(),
+                format!("{}x{}x{}", r.m, r.k, r.n),
+                secs(r.seed_s),
+                secs(r.new_s),
+                format!("{:.2}", r.speedup()),
+                format!("{:.2}", r.seed_gflops()),
+                format!("{:.2}", r.gflops()),
+            ]
+        })
+        .collect();
+    ctx.line("");
+    ctx.table(
+        &["kernel", "shape", "m x k x n", "t_seed", "t_new", "speedup", "seed_GF/s", "GF/s"],
+        &table,
+    );
+    for r in &rows {
+        ctx.line(&format!(
+            "PERF gemm {} {} {}x{}x{}: seed {:.2} -> {:.2} GF/s ({:.2}x)",
+            r.kernel,
+            r.shape,
+            r.m,
+            r.k,
+            r.n,
+            r.seed_gflops(),
+            r.gflops(),
+            r.speedup()
+        ));
+    }
+    write_json(&rows);
+    ctx.line("\nshape check: packed >= 2x seed GF/s on the 512/1024 squares (acceptance bar);");
+    ctx.line("CI ratio guard fails the bench-smoke job if speedup < 1.0 at 512^3.");
+}
+
+fn time_gemm(ctx: &mut BenchCtx, shape: &'static str, m: usize, k: usize, n: usize) -> Row {
+    let mut r = rng(0x21);
+    let a = Mat::randn(m, k, &mut r);
+    let b = Mat::randn(k, n, &mut r);
+    let mut c = Mat::zeros(m, n);
+    let reps = reps(m, k, n);
+    let seed_s = ctx.time_n(&format!("seed gemm {shape} {m}x{k}x{n}"), reps, || {
+        c.data_mut().fill(0.0);
+        seed_matmul_acc_panel(a.data(), b.data(), c.data_mut(), m, k, n);
+        std::hint::black_box(c.data());
+    });
+    let new_s = ctx.time_n(&format!("packed gemm {shape} {m}x{k}x{n}"), reps, || {
+        c.data_mut().fill(0.0);
+        crate::linalg::matmul_acc_panel(a.data(), b.data(), c.data_mut(), m, k, n);
+        std::hint::black_box(c.data());
+    });
+    Row { kernel: "gemm", shape, m, k, n, seed_s, new_s }
+}
+
+fn time_at_b(ctx: &mut BenchCtx, k: usize, m: usize, n: usize) -> Row {
+    let mut r = rng(0x22);
+    let a = Mat::randn(k, m, &mut r);
+    let b = Mat::randn(k, n, &mut r);
+    let mut c = Mat::zeros(m, n);
+    let reps = reps(m, k, n);
+    let seed_s = ctx.time_n(&format!("seed at_b {m}x{k}x{n}"), reps, || {
+        c.data_mut().fill(0.0);
+        seed_matmul_at_b_panel(&a, &b, 0, m, c.data_mut());
+        std::hint::black_box(c.data());
+    });
+    let new_s = ctx.time_n(&format!("packed at_b {m}x{k}x{n}"), reps, || {
+        c.data_mut().fill(0.0);
+        crate::linalg::matmul_at_b_panel(&a, &b, 0, m, c.data_mut());
+        std::hint::black_box(c.data());
+    });
+    Row { kernel: "at_b", shape: "sketch", m, k, n, seed_s, new_s }
+}
+
+fn time_a_bt(ctx: &mut BenchCtx, m: usize, k: usize, n: usize) -> Row {
+    let mut r = rng(0x23);
+    let a = Mat::randn(m, k, &mut r);
+    let b = Mat::randn(n, k, &mut r);
+    let mut c = Mat::zeros(m, n);
+    let reps = reps(m, k, n);
+    let seed_s = ctx.time_n(&format!("seed a_bt {m}x{k}x{n}"), reps, || {
+        c.data_mut().fill(0.0);
+        seed_matmul_a_bt_panel(&a, &b, 0, m, c.data_mut());
+        std::hint::black_box(c.data());
+    });
+    let new_s = ctx.time_n(&format!("packed a_bt {m}x{k}x{n}"), reps, || {
+        c.data_mut().fill(0.0);
+        crate::linalg::matmul_a_bt_panel(&a, &b, 0, m, c.data_mut());
+        std::hint::black_box(c.data());
+    });
+    Row { kernel: "a_bt", shape: "sketch", m, k, n, seed_s, new_s }
+}
+
+/// Hand-rolled JSON artifact (no serde in the offline vendor set).
+fn write_json(rows: &[Row]) {
+    let mut out = String::from("{\n");
+    out.push_str("  \"bench\": \"fig_gemm\",\n");
+    out.push_str(&format!("  \"threads\": {},\n", crate::parallel::threads()));
+    out.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        out.push_str(&format!(
+            "    {{\"kernel\": \"{}\", \"shape\": \"{}\", \"m\": {}, \"k\": {}, \"n\": {}, \
+             \"seed_seconds\": {:.6}, \"seconds\": {:.6}, \"seed_gflops\": {:.3}, \
+             \"gflops\": {:.3}, \"speedup\": {:.3}}}{comma}\n",
+            r.kernel,
+            r.shape,
+            r.m,
+            r.k,
+            r.n,
+            r.seed_s,
+            r.new_s,
+            r.seed_gflops(),
+            r.gflops(),
+            r.speedup()
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    let path = "results/BENCH_gemm.json";
+    match std::fs::write(path, &out) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Frozen seed kernels (baseline for the speedup columns). These are the
+// pre-PR-5 implementations, kept verbatim and bench-local: production
+// code must never call them.
+// ---------------------------------------------------------------------------
+
+/// Seed cache block sizes.
+const MC: usize = 64;
+const KC: usize = 256;
+const NC: usize = 512;
+
+/// Seed serial kernel: unpacked i-k-j with 4-row A-blocking, `C += A·B`.
+fn seed_matmul_acc_panel(ad: &[f64], bd: &[f64], cd: &mut [f64], m: usize, k: usize, n: usize) {
+    for jc in (0..n).step_by(NC) {
+        let nb = NC.min(n - jc);
+        for pc in (0..k).step_by(KC) {
+            let kb = KC.min(k - pc);
+            for ic in (0..m).step_by(MC) {
+                let mb = MC.min(m - ic);
+                let mut i = ic;
+                while i + 4 <= ic + mb {
+                    let (a0, a1, a2, a3) = (
+                        &ad[i * k + pc..i * k + pc + kb],
+                        &ad[(i + 1) * k + pc..(i + 1) * k + pc + kb],
+                        &ad[(i + 2) * k + pc..(i + 2) * k + pc + kb],
+                        &ad[(i + 3) * k + pc..(i + 3) * k + pc + kb],
+                    );
+                    for p in 0..kb {
+                        let (v0, v1, v2, v3) = (a0[p], a1[p], a2[p], a3[p]);
+                        if v0 == 0.0 && v1 == 0.0 && v2 == 0.0 && v3 == 0.0 {
+                            continue;
+                        }
+                        let brow = &bd[(pc + p) * n + jc..(pc + p) * n + jc + nb];
+                        let (c01, c23) = cd[i * n..].split_at_mut(2 * n);
+                        let (c0, c1) = c01.split_at_mut(n);
+                        let (c2, c3) = c23.split_at_mut(n);
+                        let c0 = &mut c0[jc..jc + nb];
+                        let c1 = &mut c1[jc..jc + nb];
+                        let c2 = &mut c2[jc..jc + nb];
+                        let c3 = &mut c3[jc..jc + nb];
+                        for t in 0..nb {
+                            let bv = brow[t];
+                            c0[t] += v0 * bv;
+                            c1[t] += v1 * bv;
+                            c2[t] += v2 * bv;
+                            c3[t] += v3 * bv;
+                        }
+                    }
+                    i += 4;
+                }
+                for i in i..ic + mb {
+                    let arow = &ad[i * k + pc..i * k + pc + kb];
+                    let crow = &mut cd[i * n + jc..i * n + jc + nb];
+                    for (p, &aval) in arow.iter().enumerate() {
+                        if aval == 0.0 {
+                            continue;
+                        }
+                        let brow = &bd[(pc + p) * n + jc..(pc + p) * n + jc + nb];
+                        for (cv, &bv) in crow.iter_mut().zip(brow) {
+                            *cv += aval * bv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Seed `Aᵀ·B` scatter kernel over the output-row panel `c0..c1`.
+fn seed_matmul_at_b_panel(a: &Mat, b: &Mat, c0: usize, c1: usize, cd: &mut [f64]) {
+    let (m, k, n) = (a.cols(), a.rows(), b.cols());
+    debug_assert_eq!(cd.len(), (c1 - c0) * n);
+    let (ad, bd) = (a.data(), b.data());
+    for p in 0..k {
+        let arow = &ad[p * m + c0..p * m + c1];
+        let brow = &bd[p * n..(p + 1) * n];
+        for (i, &aval) in arow.iter().enumerate() {
+            if aval == 0.0 {
+                continue;
+            }
+            let crow = &mut cd[i * n..(i + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += aval * bv;
+            }
+        }
+    }
+}
+
+/// Seed `A·Bᵀ` kernel: four B-row dot products per A row.
+fn seed_matmul_a_bt_panel(a: &Mat, b: &Mat, r0: usize, r1: usize, cd: &mut [f64]) {
+    let n = b.rows();
+    debug_assert_eq!(cd.len(), (r1 - r0) * n);
+    for i in r0..r1 {
+        let arow = a.row(i);
+        let crow = &mut cd[(i - r0) * n..(i - r0 + 1) * n];
+        let mut j = 0;
+        while j + 4 <= n {
+            let (b0, b1, b2, b3) = (b.row(j), b.row(j + 1), b.row(j + 2), b.row(j + 3));
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0, 0.0, 0.0);
+            for t in 0..arow.len() {
+                let x = arow[t];
+                s0 += x * b0[t];
+                s1 += x * b1[t];
+                s2 += x * b2[t];
+                s3 += x * b3[t];
+            }
+            crow[j] = s0;
+            crow[j + 1] = s1;
+            crow[j + 2] = s2;
+            crow[j + 3] = s3;
+            j += 4;
+        }
+        for j in j..n {
+            let brow = b.row(j);
+            let mut acc = 0.0;
+            for (x, y) in arow.iter().zip(brow) {
+                acc += x * y;
+            }
+            crow[j] = acc;
+        }
+    }
+}

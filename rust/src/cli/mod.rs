@@ -60,12 +60,16 @@ USAGE:
                  subspace-leverage / lev-k) | sketched (approximate
                  scores from a small sketch, a.k.a. sketched-leverage /
                  approx); anything else is an error
+  --sketch KIND  sketch family for the Fast-GMR core / SVD pipeline:
+                 gaussian | uniform | leverage | srht | count | osnap |
+                 osnap-gaussian; anything else is an error listing the
+                 accepted tokens (also `[svd] sketch` in config files)
   --threads N    worker threads for the parallel layer (0 = auto-detect,
                  1 = bitwise single-threaded reproduction)
 
 Bench targets: table1..table7, fig1, fig2, fig3, fig_cur, fig_curstream,
-fig_linalg, perf (see DESIGN.md §5). `bench --smoke` runs a reduced CI
-subset and writes results/bench_smoke.json.";
+fig_gemm, fig_linalg, perf (see DESIGN.md §5). `bench --smoke` runs a
+reduced CI subset and writes results/bench_smoke.json.";
 
 /// Main dispatch (called from `rust/src/main.rs`).
 pub fn main_entry() -> Result<()> {
@@ -195,8 +199,9 @@ fn pipeline(args: &[String], cli_threads: bool) -> Result<()> {
     let depth = cfg.int_or("pipeline", "queue_depth", 4) as usize;
     let k = cfg.int_or("svd", "k", 10) as usize;
     let mult = cfg.int_or("svd", "mult", 4) as usize;
-    let kind = SketchKind::parse(cfg.str_or("svd", "sketch", "gaussian"))
-        .ok_or_else(|| FgError::Config("bad sketch kind".into()))?;
+    // Unknown sketch families are a hard error listing the accepted
+    // tokens (`[svd] sketch` in the config file), never a fallback.
+    let kind = SketchKind::parse(cfg.str_or("svd", "sketch", "gaussian"))?;
     let seed = cfg.int_or("pipeline", "seed", 0) as u64;
 
     println!(
@@ -251,8 +256,9 @@ fn cur_cmd(args: &[String]) -> Result<()> {
     let r: usize = parse_flag(args, "--r", 3 * k)?;
     let mult: usize = parse_flag(args, "--mult", 4)?;
     let seed: u64 = parse_flag(args, "--seed", 0)?;
-    let sketch = SketchKind::parse(flag_value(args, "--sketch").unwrap_or("gaussian"))
-        .ok_or_else(|| FgError::Config("--sketch: unknown sketch kind".into()))?;
+    // Unknown sketch families are a hard error listing the accepted
+    // tokens, never a silent fallback — same contract as `--selection`.
+    let sketch = SketchKind::parse(flag_value(args, "--sketch").unwrap_or("gaussian"))?;
     let sel_tok = flag_value(args, "--selection").unwrap_or("leverage");
     // Unknown strategy names are a hard error (listing the accepted
     // tokens), never a silent fallback.

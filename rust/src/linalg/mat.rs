@@ -262,6 +262,84 @@ impl Mat {
     }
 }
 
+/// 64-byte-aligned, growable `f64` scratch buffer.
+///
+/// Backing store for the packed-GEMM workspaces in `linalg::matmul`:
+/// panel packing wants cache-line/vector-register alignment so the
+/// microkernel's loads never straddle a cache line, and `Vec<f64>` only
+/// guarantees the allocator's 8/16-byte minimum. The buffer grows
+/// monotonically and never shrinks — thread-local workspaces reuse it
+/// across calls, which is the whole point (no per-call allocation on the
+/// hot path). Contents after [`AlignedBuf::ensure`] are whatever the last
+/// use left there (zeroed on first allocation); callers overwrite the
+/// prefix they asked for.
+pub(crate) struct AlignedBuf {
+    ptr: std::ptr::NonNull<f64>,
+    cap: usize,
+}
+
+impl AlignedBuf {
+    /// Cache-line (and AVX-512 register) alignment.
+    const ALIGN: usize = 64;
+
+    /// Empty buffer; allocates nothing until the first [`AlignedBuf::ensure`].
+    pub(crate) const fn new() -> Self {
+        Self { ptr: std::ptr::NonNull::dangling(), cap: 0 }
+    }
+
+    /// Borrow at least `len` elements, reallocating (aligned, zero-filled)
+    /// if the current capacity is smaller.
+    pub(crate) fn ensure(&mut self, len: usize) -> &mut [f64] {
+        if len > self.cap {
+            self.grow(len);
+        }
+        // SAFETY: `ptr` points to an allocation of `cap >= len` f64s that
+        // was zero-initialized at allocation time (or `len == 0`, for
+        // which the dangling-but-aligned pointer is valid), and `self` is
+        // mutably borrowed for the slice's lifetime.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), len) }
+    }
+
+    fn grow(&mut self, len: usize) {
+        let layout = Self::layout(len);
+        // SAFETY: `len > cap >= 0` so the layout is non-zero-sized.
+        let raw = unsafe { std::alloc::alloc_zeroed(layout) };
+        let Some(ptr) = std::ptr::NonNull::new(raw.cast::<f64>()) else {
+            std::alloc::handle_alloc_error(layout)
+        };
+        self.release();
+        self.ptr = ptr;
+        self.cap = len;
+    }
+
+    fn release(&mut self) {
+        if self.cap > 0 {
+            // SAFETY: `ptr`/`cap` describe a live allocation made by
+            // `grow` with this exact layout.
+            unsafe { std::alloc::dealloc(self.ptr.as_ptr().cast(), Self::layout(self.cap)) };
+            self.cap = 0;
+            self.ptr = std::ptr::NonNull::dangling();
+        }
+    }
+
+    fn layout(len: usize) -> std::alloc::Layout {
+        std::alloc::Layout::from_size_align(len * std::mem::size_of::<f64>(), Self::ALIGN)
+            .expect("AlignedBuf: layout overflow")
+    }
+}
+
+impl Default for AlignedBuf {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for AlignedBuf {
+    fn drop(&mut self) {
+        self.release();
+    }
+}
+
 impl std::ops::Index<(usize, usize)> for Mat {
     type Output = f64;
     #[inline]

@@ -1,25 +1,79 @@
-//! Blocked matrix multiplication.
+//! BLIS-style packed GEMM — the dense multiply layer under every hot
+//! path in the reproduction (sketch products `S_C·A` / `A·S_Rᵀ`,
+//! compact-WY trailing updates, CUR cores, SPSD approximation, streaming
+//! SVD folds).
 //!
-//! Cache-blocked and written so LLVM auto-vectorizes the inner loops
-//! (AVX-512 via `-C target-cpu=native` in `.cargo/config.toml`). Layout
-//! is row-major throughout; the serial kernel packs nothing but iterates
-//! i-k-j with 4-row A-blocking so each streamed B row is reused 4x.
-//! Measured ~8.7–10.9 GFLOP/s f64 single-core on the dev container's
-//! Xeon (vs ~3.5 before the perf pass); the optimization log lives in
-//! EXPERIMENTS.md §Perf.
+//! Layout is row-major throughout. The classic five-loop BLIS structure
+//! (Van Zee & van de Geijn) drives everything:
+//!
+//! * **packing** — per `KC`-deep panel, A blocks are repacked into
+//!   `MR`-row strips (strip-major, `MR` consecutive values per k step)
+//!   and B blocks into `NR`-column strips, both into 64-byte-aligned
+//!   thread-local scratch (`mat::AlignedBuf`, reused across
+//!   calls — no per-call allocation) so the microkernel streams both
+//!   operands contiguously with zero index arithmetic;
+//! * **microkernel** — an `MR×NR` register tile of f64 accumulators
+//!   (fixed-size arrays; 8×8 when the build has AVX-512, 4×8 otherwise
+//!   so the tile fits the 16 ymm registers of `x86-64-v2`) that LLVM
+//!   keeps entirely in vector registers under the `-C target-cpu` flags
+//!   from `.cargo/config.toml`; edge tiles are zero-padded at pack time
+//!   so the one microkernel serves every geometry;
+//! * **cache blocking** — `MC×KC` A blocks (~L2) and `KC×NC` B blocks
+//!   (~L3), C written once per `KC` panel instead of once per k step.
+//!
+//! Determinism contract (what the threads=1-vs-N bitwise suite in
+//! `crate::parallel::tests` pins): each output element accumulates its
+//! `k` products in **ascending k order** — a register-tile partial sum
+//! per `KC` block, blocks added to C in ascending block order — and that
+//! per-element chain depends only on `k`, never on which row panel,
+//! strip, or worker computed it. Row-sharded runs are therefore bitwise
+//! identical to serial ones at any thread count (validated against a
+//! transliterated reference during development, enforced by tests).
+//! Products are deliberately *not* fused (`mul_add`): FMA contraction
+//! would change results between hosts with and without the instruction,
+//! and the win here is packing + register tiling, not fusion.
+//!
+//! For small single-`KC`-block products (`k ≤ KC`) the per-element chain
+//! is *exactly* the naive ascending-k triple loop, which
+//! `linalg::tests` asserts bitwise. Measured numbers live in
+//! EXPERIMENTS.md §Perf; `bench fig_gemm` tracks packed-vs-seed GFLOP/s
+//! per PR with the pre-pack kernels frozen bench-local.
 //!
 //! Above `parallel::PAR_FLOP_MIN` the public entry points dispatch to
-//! `crate::parallel`'s row-panel drivers, which run this same kernel on
-//! disjoint row panels — one worker per panel, bitwise identical to the
-//! serial path (row iterations are independent; per-row accumulation
-//! order is unchanged).
+//! `crate::parallel`'s row-panel drivers, which run this same packed
+//! macro-kernel on disjoint row panels — one worker per panel, each
+//! packing its own strips into its own thread-local workspace.
 
+use super::mat::AlignedBuf;
 use super::Mat;
+use std::cell::RefCell;
 
-/// Cache block sizes (L1-ish for the k panel, L2-ish for the i panel).
-const MC: usize = 64;
-const KC: usize = 256;
+/// Microkernel rows: 8 keeps the accumulator tile in 8 zmm registers on
+/// AVX-512 builds; 4 keeps it in 8 ymm registers (of 16) on `x86-64-v2`
+/// CI builds, leaving room for the B row and broadcasts.
+pub(crate) const MR: usize = if cfg!(target_feature = "avx512f") { 8 } else { 4 };
+/// Microkernel columns: one 8-wide f64 AVX-512 vector (two ymm on AVX2).
+pub(crate) const NR: usize = 8;
+/// Cache blocks: `MC×KC` f64 A panel ≈ 256 KB (L2-resident),
+/// `KC×NC` B panel ≈ 1 MB (L3-resident). `MC % MR == 0`, `NC % NR == 0`
+/// so only the final strip of a block ever pads.
+const MC: usize = 128;
+pub(crate) const KC: usize = 256;
 const NC: usize = 512;
+
+/// Per-thread packing workspace. Long-lived threads (the main thread,
+/// router executors, pipeline workers) pay the two scratch allocations
+/// once and reuse them for every subsequent product; scoped pool workers
+/// allocate once per parallel region and amortize over their panels.
+struct Workspace {
+    a: AlignedBuf,
+    b: AlignedBuf,
+}
+
+thread_local! {
+    static WORKSPACE: RefCell<Workspace> =
+        const { RefCell::new(Workspace { a: AlignedBuf::new(), b: AlignedBuf::new() }) };
+}
 
 /// `C = A * B`.
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
@@ -59,71 +113,29 @@ pub fn matmul_acc(a: &Mat, b: &Mat, c: &mut Mat) {
     matmul_acc_panel(a.data(), b.data(), c.data_mut(), m, k, n);
 }
 
-/// The serial blocked kernel on raw row-major slices: `C += A * B` for
-/// an `m×k` panel of A and matching `m×n` panel of C. Callers (serial
+/// The serial packed kernel on raw row-major slices: `C += A * B` for an
+/// `m×k` panel of A and matching `m×n` panel of C. Callers (serial
 /// dispatch above, row-panel workers in `crate::parallel`) pass panel
 /// slices; the kernel itself never sees global row indices.
-pub(crate) fn matmul_acc_panel(ad: &[f64], bd: &[f64], cd: &mut [f64], m: usize, k: usize, n: usize) {
+pub(crate) fn matmul_acc_panel(
+    ad: &[f64],
+    bd: &[f64],
+    cd: &mut [f64],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
     debug_assert_eq!(ad.len(), m * k);
     debug_assert_eq!(bd.len(), k * n);
     debug_assert_eq!(cd.len(), m * n);
-    for jc in (0..n).step_by(NC) {
-        let nb = NC.min(n - jc);
-        for pc in (0..k).step_by(KC) {
-            let kb = KC.min(k - pc);
-            for ic in (0..m).step_by(MC) {
-                let mb = MC.min(m - ic);
-                // Macro kernel on the (mb x kb) * (kb x nb) panel.
-                // Rows of A are processed four at a time so each streamed
-                // B row is reused 4x from registers/L1 (≈1.6x measured).
-                let mut i = ic;
-                while i + 4 <= ic + mb {
-                    let (a0, a1, a2, a3) = (
-                        &ad[i * k + pc..i * k + pc + kb],
-                        &ad[(i + 1) * k + pc..(i + 1) * k + pc + kb],
-                        &ad[(i + 2) * k + pc..(i + 2) * k + pc + kb],
-                        &ad[(i + 3) * k + pc..(i + 3) * k + pc + kb],
-                    );
-                    for p in 0..kb {
-                        let (v0, v1, v2, v3) = (a0[p], a1[p], a2[p], a3[p]);
-                        if v0 == 0.0 && v1 == 0.0 && v2 == 0.0 && v3 == 0.0 {
-                            continue;
-                        }
-                        let brow = &bd[(pc + p) * n + jc..(pc + p) * n + jc + nb];
-                        // Split borrows: four disjoint C rows.
-                        let (c01, c23) = cd[i * n..].split_at_mut(2 * n);
-                        let (c0, c1) = c01.split_at_mut(n);
-                        let (c2, c3) = c23.split_at_mut(n);
-                        let c0 = &mut c0[jc..jc + nb];
-                        let c1 = &mut c1[jc..jc + nb];
-                        let c2 = &mut c2[jc..jc + nb];
-                        let c3 = &mut c3[jc..jc + nb];
-                        for t in 0..nb {
-                            let bv = brow[t];
-                            c0[t] += v0 * bv;
-                            c1[t] += v1 * bv;
-                            c2[t] += v2 * bv;
-                            c3[t] += v3 * bv;
-                        }
-                    }
-                    i += 4;
-                }
-                for i in i..ic + mb {
-                    let arow = &ad[i * k + pc..i * k + pc + kb];
-                    let crow = &mut cd[i * n + jc..i * n + jc + nb];
-                    for (p, &aval) in arow.iter().enumerate() {
-                        if aval == 0.0 {
-                            continue;
-                        }
-                        let brow = &bd[(pc + p) * n + jc..(pc + p) * n + jc + nb];
-                        for (cv, &bv) in crow.iter_mut().zip(brow) {
-                            *cv += aval * bv;
-                        }
-                    }
-                }
-            }
-        }
-    }
+    gemm_packed(
+        m,
+        n,
+        k,
+        cd,
+        |i0, mb, p0, kb, buf| pack_a_rows(ad, k, i0, mb, p0, kb, buf),
+        |p0, kb, j0, nb, buf| pack_b_rows(bd, n, p0, kb, j0, nb, buf),
+    );
 }
 
 /// Overwriting variant used by `matmul`.
@@ -144,29 +156,24 @@ pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
     c
 }
 
-/// Serial `Aᵀ · B` scatter kernel over the output-row panel `c0..c1`
-/// (columns `c0..c1` of A), writing the panel-local `(c1-c0)×b.cols()`
-/// slice. Row `p` of A contributes in ascending `p` order regardless of
-/// the panel bounds, so a sharded run accumulates every output row in
-/// exactly the serial order (bitwise equal for any shard count).
+/// Packed `Aᵀ · B` kernel over the output-row panel `c0..c1` (columns
+/// `c0..c1` of A), accumulating into the panel-local `(c1-c0)×b.cols()`
+/// slice (callers pass zeroed panels). The A-pack reads `A(p, c0+i)` —
+/// contiguous per k step in row-major A — and every output element's
+/// k-chain is independent of the panel bounds, so a sharded run is
+/// bitwise equal to the serial one for any shard count.
 pub(crate) fn matmul_at_b_panel(a: &Mat, b: &Mat, c0: usize, c1: usize, cd: &mut [f64]) {
-    let (m, k, n) = (a.cols(), a.rows(), b.cols());
+    let (k, n) = (a.rows(), b.cols());
     debug_assert_eq!(cd.len(), (c1 - c0) * n);
-    let (ad, bd) = (a.data(), b.data());
-    // aᵀ(i, p) = a(p, i): iterate p (rows of A/B), scatter into C rows.
-    for p in 0..k {
-        let arow = &ad[p * m + c0..p * m + c1];
-        let brow = &bd[p * n..(p + 1) * n];
-        for (i, &aval) in arow.iter().enumerate() {
-            if aval == 0.0 {
-                continue;
-            }
-            let crow = &mut cd[i * n..(i + 1) * n];
-            for (cv, &bv) in crow.iter_mut().zip(brow) {
-                *cv += aval * bv;
-            }
-        }
-    }
+    let (ad, bd, lda) = (a.data(), b.data(), a.cols());
+    gemm_packed(
+        c1 - c0,
+        n,
+        k,
+        cd,
+        |i0, mb, p0, kb, buf| pack_a_cols(ad, lda, c0 + i0, mb, p0, kb, buf),
+        |p0, kb, j0, nb, buf| pack_b_rows(bd, n, p0, kb, j0, nb, buf),
+    );
 }
 
 /// `C = A * Bᵀ` without materializing the transpose.
@@ -181,41 +188,236 @@ pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
     c
 }
 
-/// Serial `A · Bᵀ` kernel over the row panel `r0..r1` of A, writing the
-/// matching panel of C into `cd` (panel-local, `(r1-r0)×b.rows()`).
+/// Packed `A · Bᵀ` kernel over the row panel `r0..r1` of A, accumulating
+/// into the matching panel of C (panel-local, `(r1-r0)×b.rows()`;
+/// callers pass zeroed panels). The B-pack reads `B(j, p)` column walks —
+/// the per-element k-chain again never depends on the panel bounds.
 pub(crate) fn matmul_a_bt_panel(a: &Mat, b: &Mat, r0: usize, r1: usize, cd: &mut [f64]) {
-    let n = b.rows();
+    let (k, n) = (a.cols(), b.rows());
     debug_assert_eq!(cd.len(), (r1 - r0) * n);
-    for i in r0..r1 {
-        let arow = a.row(i);
-        let crow = &mut cd[(i - r0) * n..(i - r0 + 1) * n];
-        // Four B rows per pass: the A row streams from L1 once per four
-        // dot products, and the four accumulators break the reduction
-        // dependency chain so the loop vectorizes with multiple FMAs.
-        let mut j = 0;
-        while j + 4 <= n {
-            let (b0, b1, b2, b3) = (b.row(j), b.row(j + 1), b.row(j + 2), b.row(j + 3));
-            let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0, 0.0, 0.0);
-            for t in 0..arow.len() {
-                let x = arow[t];
-                s0 += x * b0[t];
-                s1 += x * b1[t];
-                s2 += x * b2[t];
-                s3 += x * b3[t];
+    let (ad, bd) = (&a.data()[r0 * k..], b.data());
+    gemm_packed(
+        r1 - r0,
+        n,
+        k,
+        cd,
+        |i0, mb, p0, kb, buf| pack_a_rows(ad, k, i0, mb, p0, kb, buf),
+        |p0, kb, j0, nb, buf| pack_b_cols(bd, k, p0, kb, j0, nb, buf),
+    );
+}
+
+/// The five-loop packed driver: `C += op_A · op_B` where the operand
+/// views are defined entirely by the two packing closures.
+///
+/// `pack_a(i0, mb, p0, kb, buf)` must fill `buf` with the `mb×kb` block
+/// of the (possibly transposed) A view at row `i0`, k offset `p0`, as
+/// `MR`-row strips (strip-major; within a strip, `MR` consecutive values
+/// per k step, zero-padded rows past `mb`). `pack_b(p0, kb, j0, nb,
+/// buf)` likewise packs the `kb×nb` B block as `NR`-column strips.
+///
+/// Loop order is `jc → pc → ic` (B panel reused across the ic loop), so
+/// for every output element the `pc` blocks arrive in ascending order —
+/// the determinism contract in the module header.
+fn gemm_packed(
+    m: usize,
+    n: usize,
+    k: usize,
+    cd: &mut [f64],
+    pack_a: impl Fn(usize, usize, usize, usize, &mut [f64]),
+    pack_b: impl Fn(usize, usize, usize, usize, &mut [f64]),
+) {
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    debug_assert_eq!(cd.len(), m * n);
+    WORKSPACE.with(|ws| {
+        let mut ws = ws.borrow_mut();
+        let Workspace { a, b } = &mut *ws;
+        let kc = KC.min(k);
+        let abuf = a.ensure(MC.min(m).div_ceil(MR) * MR * kc);
+        let bbuf = b.ensure(NC.min(n).div_ceil(NR) * NR * kc);
+        for jc in (0..n).step_by(NC) {
+            let nb = NC.min(n - jc);
+            for pc in (0..k).step_by(KC) {
+                let kb = KC.min(k - pc);
+                pack_b(pc, kb, jc, nb, &mut *bbuf);
+                for ic in (0..m).step_by(MC) {
+                    let mb = MC.min(m - ic);
+                    pack_a(ic, mb, pc, kb, &mut *abuf);
+                    macro_kernel(abuf, bbuf, &mut cd[ic * n + jc..], n, mb, nb, kb);
+                }
             }
-            crow[j] = s0;
-            crow[j + 1] = s1;
-            crow[j + 2] = s2;
-            crow[j + 3] = s3;
-            j += 4;
         }
-        for j in j..n {
-            let brow = b.row(j);
-            let mut acc = 0.0;
-            for (x, y) in arow.iter().zip(brow) {
-                acc += x * y;
+    });
+}
+
+/// Sweep the packed block with the register microkernel: `NR` strips of
+/// B against `MR` strips of A, each tile's partial sum added to C once.
+/// `cd` is the output slice starting at the block's top-left element,
+/// with row stride `ldc`.
+fn macro_kernel(
+    abuf: &[f64],
+    bbuf: &[f64],
+    cd: &mut [f64],
+    ldc: usize,
+    mb: usize,
+    nb: usize,
+    kb: usize,
+) {
+    let mut j0 = 0;
+    while j0 < nb {
+        let nr = NR.min(nb - j0);
+        let bp = &bbuf[(j0 / NR) * kb * NR..];
+        let mut i0 = 0;
+        while i0 < mb {
+            let mr = MR.min(mb - i0);
+            let ap = &abuf[(i0 / MR) * kb * MR..];
+            let acc = micro_tile(kb, ap, bp);
+            for (i, arow) in acc.iter().enumerate().take(mr) {
+                let off = (i0 + i) * ldc + j0;
+                for (cx, &v) in cd[off..off + nr].iter_mut().zip(&arow[..nr]) {
+                    *cx += v;
+                }
             }
-            crow[j] = acc;
+            i0 += MR;
         }
+        j0 += NR;
+    }
+}
+
+/// The `MR×NR` register tile: `acc[i][j] = Σ_p ap[p][i] · bp[p][j]` in
+/// ascending `p` order. Both operands stream contiguously from their
+/// packed strips; the fixed-size accumulator array is what lets LLVM
+/// keep the whole tile in vector registers.
+#[inline(always)]
+fn micro_tile(kb: usize, ap: &[f64], bp: &[f64]) -> [[f64; NR]; MR] {
+    let mut acc = [[0.0f64; NR]; MR];
+    for (av, bv) in ap[..kb * MR].chunks_exact(MR).zip(bp[..kb * NR].chunks_exact(NR)) {
+        for (arow, &a) in acc.iter_mut().zip(av) {
+            for (cx, &b) in arow.iter_mut().zip(bv) {
+                *cx += a * b;
+            }
+        }
+    }
+    acc
+}
+
+/// Pack the `mb×kb` block of a row-major `lda`-stride matrix view
+/// (rows `i0..`, k offset `p0..`) into `MR`-row strips. Each source row
+/// is read once, contiguously; lanes past `mb` in the final strip are
+/// zeroed so the microkernel needs no edge cases.
+fn pack_a_rows(
+    ad: &[f64],
+    lda: usize,
+    i0: usize,
+    mb: usize,
+    p0: usize,
+    kb: usize,
+    buf: &mut [f64],
+) {
+    let mut off = 0;
+    let mut s = 0;
+    while s < mb {
+        let mr = MR.min(mb - s);
+        for ii in 0..mr {
+            let base = (i0 + s + ii) * lda + p0;
+            for (p, &x) in ad[base..base + kb].iter().enumerate() {
+                buf[off + p * MR + ii] = x;
+            }
+        }
+        for ii in mr..MR {
+            for p in 0..kb {
+                buf[off + p * MR + ii] = 0.0;
+            }
+        }
+        off += kb * MR;
+        s += MR;
+    }
+}
+
+/// Pack the transposed view `A'(i, p) = A(p, c0+i)` of a row-major
+/// `lda`-stride matrix into `MR`-row strips — the `Aᵀ·B` operand. Both
+/// the read (a row segment of A per k step) and the write are
+/// contiguous.
+fn pack_a_cols(
+    ad: &[f64],
+    lda: usize,
+    c0: usize,
+    mb: usize,
+    p0: usize,
+    kb: usize,
+    buf: &mut [f64],
+) {
+    let mut off = 0;
+    let mut s = 0;
+    while s < mb {
+        let mr = MR.min(mb - s);
+        for p in 0..kb {
+            let base = (p0 + p) * lda + c0 + s;
+            let dst = &mut buf[off + p * MR..off + (p + 1) * MR];
+            dst[..mr].copy_from_slice(&ad[base..base + mr]);
+            dst[mr..].fill(0.0);
+        }
+        off += kb * MR;
+        s += MR;
+    }
+}
+
+/// Pack the `kb×nb` block of row-major B (k offset `p0..`, columns
+/// `j0..`) into `NR`-column strips; row segments copy contiguously.
+fn pack_b_rows(
+    bd: &[f64],
+    ldb: usize,
+    p0: usize,
+    kb: usize,
+    j0: usize,
+    nb: usize,
+    buf: &mut [f64],
+) {
+    let mut off = 0;
+    let mut s = 0;
+    while s < nb {
+        let nr = NR.min(nb - s);
+        for p in 0..kb {
+            let base = (p0 + p) * ldb + j0 + s;
+            let dst = &mut buf[off + p * NR..off + (p + 1) * NR];
+            dst[..nr].copy_from_slice(&bd[base..base + nr]);
+            dst[nr..].fill(0.0);
+        }
+        off += kb * NR;
+        s += NR;
+    }
+}
+
+/// Pack the transposed view `B'(p, j) = B(j0+j, p)` of row-major B
+/// (shape `n×k`, stride `ldb = k`) into `NR`-column strips — the `A·Bᵀ`
+/// operand. Each source row (a column of the view) is read once,
+/// contiguously.
+fn pack_b_cols(
+    bd: &[f64],
+    ldb: usize,
+    p0: usize,
+    kb: usize,
+    j0: usize,
+    nb: usize,
+    buf: &mut [f64],
+) {
+    let mut off = 0;
+    let mut s = 0;
+    while s < nb {
+        let nr = NR.min(nb - s);
+        for jj in 0..nr {
+            let base = (j0 + s + jj) * ldb + p0;
+            for (p, &x) in bd[base..base + kb].iter().enumerate() {
+                buf[off + p * NR + jj] = x;
+            }
+        }
+        for jj in nr..NR {
+            for p in 0..kb {
+                buf[off + p * NR + jj] = 0.0;
+            }
+        }
+        off += kb * NR;
+        s += NR;
     }
 }

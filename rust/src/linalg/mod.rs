@@ -2,7 +2,10 @@
 //! the offline image). Everything the paper's algorithms need:
 //!
 //! * [`Mat`] — row-major dense matrix over `f64`.
-//! * blocked, register-tiled matmul ([`matmul`]),
+//! * BLIS-style packed GEMM ([`matmul`] and the `Aᵀ·B` / `A·Bᵀ`
+//!   variants): MR×NR register microkernel over panels packed into
+//!   aligned thread-local scratch — see `matmul`'s module docs for the
+//!   determinism contract,
 //! * blocked compact-WY Householder QR ([`qr_thin`]) whose panel
 //!   updates ride the matmul kernel and the `crate::parallel` pool,
 //! * Cholesky + triangular solves ([`cholesky`], [`solve_upper`]),

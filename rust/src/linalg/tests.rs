@@ -30,6 +30,86 @@ fn matmul_matches_naive() {
     }
 }
 
+/// Single-`KC`-block products (`k ≤ KC`): the packed kernel's
+/// per-element chain — one register-tile partial sum, added to a zeroed
+/// C — is exactly the naive ascending-k triple loop, so the outputs must
+/// be **bitwise** identical. Sizes cover m/n/k below the MR×NR register
+/// tile, 1×1, primes straddling the pack-panel boundaries (33/65/127),
+/// an MC straddle (129 rows), an NC straddle (513 cols), and k exactly
+/// at the KC boundary.
+#[test]
+fn packed_gemm_bitwise_matches_naive_single_block() {
+    let mut r = rng(21);
+    for &(m, k, n) in &[
+        (1, 1, 1),
+        (3, 2, 5),
+        (7, 7, 7),
+        (8, 8, 8),
+        (9, 9, 9),
+        (33, 65, 127),
+        (65, 33, 64),
+        (127, 127, 33),
+        (129, 16, 9),
+        (8, 40, 513),
+        (130, 256, 130),
+    ] {
+        assert!(k <= super::matmul::KC, "exact-equality sizes must stay single-KC-block");
+        let a = Mat::randn(m, k, &mut r);
+        let b = Mat::randn(k, n, &mut r);
+        let got = matmul(&a, &b);
+        let want = naive_matmul(&a, &b);
+        assert_eq!(got.data(), want.data(), "packed vs naive not bitwise at {m}x{k}x{n}");
+    }
+}
+
+/// The transposed-operand entry points share the exact-chain property on
+/// single-block sizes: `Aᵀ·B` and `A·Bᵀ` must be bitwise equal to the
+/// naive triple loop over the materialized transpose.
+#[test]
+fn packed_at_b_and_a_bt_bitwise_match_naive_single_block() {
+    let mut r = rng(22);
+    for &(k, m, n) in &[(1, 1, 1), (9, 5, 7), (83, 53, 31), (129, 33, 65)] {
+        let a = Mat::randn(k, m, &mut r);
+        let b = Mat::randn(k, n, &mut r);
+        let got = matmul_at_b(&a, &b);
+        let want = naive_matmul(&a.transpose(), &b);
+        assert_eq!(got.data(), want.data(), "at_b vs naive not bitwise at k={k} {m}x{n}");
+    }
+    for &(m, k, n) in &[(1, 1, 1), (9, 5, 7), (61, 40, 29), (65, 127, 33)] {
+        let a = Mat::randn(m, k, &mut r);
+        let b = Mat::randn(n, k, &mut r);
+        let got = matmul_a_bt(&a, &b);
+        let want = naive_matmul(&a, &b.transpose());
+        assert_eq!(got.data(), want.data(), "a_bt vs naive not bitwise at {m}x{k}x{n}");
+    }
+}
+
+/// Above `KC` each element's chain groups into per-block partial sums —
+/// no longer the naive chain bitwise, but within 1e-12 relative. (The
+/// bitwise properties that *are* promised across k blocks — serial vs
+/// sharded, repeat runs — live in `crate::parallel::tests`.)
+#[test]
+fn packed_gemm_multi_block_close_to_naive() {
+    let mut r = rng(23);
+    let (m, k, n) = (7, 2 * super::matmul::KC + 37, 9);
+    let a = Mat::randn(m, k, &mut r);
+    let b = Mat::randn(k, n, &mut r);
+    assert_close(&matmul(&a, &b), &naive_matmul(&a, &b), 1e-12, "multi-KC-block gemm");
+}
+
+/// Degenerate shapes: empty inner or outer dimensions produce the
+/// correctly shaped all-zero output without touching the workspace.
+#[test]
+fn packed_gemm_degenerate_dims() {
+    let c = matmul(&Mat::zeros(4, 0), &Mat::zeros(0, 3));
+    assert_eq!(c.shape(), (4, 3));
+    assert!(c.data().iter().all(|&v| v == 0.0), "k=0 product must be zero");
+    assert_eq!(matmul(&Mat::zeros(0, 5), &Mat::zeros(5, 0)).shape(), (0, 0));
+    let c2 = matmul(&Mat::zeros(5, 0), &Mat::zeros(0, 5));
+    assert_eq!(c2.shape(), (5, 5));
+    assert!(c2.data().iter().all(|&v| v == 0.0));
+}
+
 #[test]
 fn matmul_at_b_matches_transpose() {
     let mut r = rng(2);

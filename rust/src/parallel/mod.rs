@@ -15,8 +15,12 @@
 //!   results bitwise.
 //!
 //! Determinism: matmul row panels partition an `i`-loop whose iterations
-//! are independent, so sharded products are **bitwise identical** to the
-//! serial kernel for every thread count. Scatter-style sketch applies
+//! are independent, and the packed GEMM underneath (`linalg::matmul`)
+//! accumulates every output element in an ascending-k chain that never
+//! depends on panel bounds — so sharded products are **bitwise
+//! identical** to the serial kernel for every thread count. The sparse
+//! `Csr::spmm`/`spmm_t` products shard the same way (disjoint output-row
+//! panels, fixed scan order). Scatter-style sketch applies
 //! (CountSketch/OSNAP) accumulate per-shard partials and reduce them in
 //! fixed shard order — deterministic for a given thread count and within
 //! ~1e-15/element of the serial order (the `tests` module pins ≤ 1e-12).
@@ -40,6 +44,23 @@ pub(crate) const PAR_MIN_WORK: usize = 1 << 14;
 /// True when a `m×k · k×n` product is big enough to shard at all.
 pub(crate) fn worth_sharding(m: usize, k: usize, n: usize) -> bool {
     m >= 2 && m.saturating_mul(k).saturating_mul(n) >= PAR_FLOP_MIN
+}
+
+/// Minimum C rows per sharded matmul worker. Each worker re-packs the
+/// shared B panels into its own thread-local workspace — the packed
+/// kernel's one duplicated cost, `O(k·n)` against the worker's
+/// `O(rows·k·n)` compute — so a panel must hold enough rows to amortize
+/// it: 16 rows (≥ 2 microkernel strips) keeps the duplicate pack under
+/// ~7% of a worker's flops. Short-m products simply use fewer workers
+/// (down to the serial inline path), which changes nothing numerically:
+/// sharded runs are bitwise equal to serial at every worker count.
+const MIN_PANEL_ROWS: usize = 16;
+
+/// Worker count for an `m`-output-row sharded product on `pool`: the
+/// pool's threads, capped so no panel falls below [`MIN_PANEL_ROWS`]
+/// (1 = run the serial kernel inline).
+fn panel_workers(pool: &Pool, m: usize) -> usize {
+    pool.threads().min((m / MIN_PANEL_ROWS).max(1))
 }
 
 /// Dispatch predicate used by `linalg::matmul`/`matmul_a_bt`: shard when
@@ -71,19 +92,25 @@ pub fn par_matmul_with(pool: &Pool, a: &Mat, b: &Mat) -> Mat {
 }
 
 /// `C += A · B` with deterministic row-panel sharding: worker `s` owns
-/// rows `bounds[s]..bounds[s+1]` of C and runs the serial blocked kernel
-/// on them, so every output row accumulates in exactly the serial order.
+/// rows `bounds[s]..bounds[s+1]` of C and runs the serial packed kernel
+/// on them (each worker packs its disjoint A strips — and its own copy
+/// of the shared B panels — into its own thread-local workspace), so
+/// every output row accumulates in exactly the serial k-order. Worker
+/// count is capped so each panel keeps at least `MIN_PANEL_ROWS` rows
+/// (amortizing the duplicated B pack); the cap never changes results,
+/// only how many workers produce them.
 pub fn par_matmul_acc(pool: &Pool, a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(a.cols(), b.rows(), "par_matmul_acc: inner dims mismatch");
     assert_eq!(c.rows(), a.rows(), "par_matmul_acc: output rows mismatch");
     assert_eq!(c.cols(), b.cols(), "par_matmul_acc: output cols mismatch");
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
-    if pool.threads() <= 1 || m < 2 {
+    let workers = panel_workers(pool, m);
+    if workers <= 1 {
         matmul_acc_panel(a.data(), b.data(), c.data_mut(), m, k, n);
         return;
     }
     let (ad, bd) = (a.data(), b.data());
-    pool.run_row_panels(m, n, c.data_mut(), |r0, r1, cpanel| {
+    Pool::new(workers).run_row_panels(m, n, c.data_mut(), |r0, r1, cpanel| {
         matmul_acc_panel(&ad[r0 * k..r1 * k], bd, cpanel, r1 - r0, k, n);
     });
 }
@@ -99,11 +126,12 @@ pub fn par_matmul_a_bt_with(pool: &Pool, a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols(), b.cols(), "par_matmul_a_bt: dims mismatch");
     let (m, n) = (a.rows(), b.rows());
     let mut c = Mat::zeros(m, n);
-    if pool.threads() <= 1 || m < 2 {
+    let workers = panel_workers(pool, m);
+    if workers <= 1 {
         matmul_a_bt_panel(a, b, 0, m, c.data_mut());
         return c;
     }
-    pool.run_row_panels(m, n, c.data_mut(), |r0, r1, cpanel| {
+    Pool::new(workers).run_row_panels(m, n, c.data_mut(), |r0, r1, cpanel| {
         matmul_a_bt_panel(a, b, r0, r1, cpanel);
     });
     c
@@ -122,11 +150,12 @@ pub fn par_matmul_at_b_with(pool: &Pool, a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.rows(), b.rows(), "par_matmul_at_b: dims mismatch");
     let (m, n) = (a.cols(), b.cols());
     let mut c = Mat::zeros(m, n);
-    if pool.threads() <= 1 || m < 2 {
+    let workers = panel_workers(pool, m);
+    if workers <= 1 {
         matmul_at_b_panel(a, b, 0, m, c.data_mut());
         return c;
     }
-    pool.run_row_panels(m, n, c.data_mut(), |r0, r1, panel| {
+    Pool::new(workers).run_row_panels(m, n, c.data_mut(), |r0, r1, panel| {
         matmul_at_b_panel(a, b, r0, r1, panel);
     });
     c

@@ -142,7 +142,8 @@ fn sketch_apply_threads_agree() {
 
 /// The process-wide knob end-to-end: matmul dispatch, the factorization
 /// kernels (blocked QR, round-robin Jacobi SVD/eigh), the CPU backend's
-/// rbf_block/twoside/stream_update, and a full `solve_fast` call must
+/// rbf_block/twoside/stream_update, the sharded sparse products
+/// (`Csr::spmm`/`spmm_t`), and a full `solve_fast` call must
 /// agree between threads=1 and threads=4. Everything global-knob-touching
 /// lives in this one test so concurrent tests never observe a knob value
 /// they didn't set.
@@ -189,16 +190,29 @@ fn global_threads_knob_end_to_end() {
             &crate::cur::StreamingCurConfig::fast(10, 10, 6, 3),
             &mut rsc,
         );
-        (m, k, two, qr, svd, eig, sol.x, sol_count.x, cur, scur)
+        // Sparse products above the nnz·n sharding floor (~10k nnz × 40
+        // cols ≥ 2^18), so threads=4 actually shards the row panels.
+        let mut rsp = rng(10);
+        let sp = crate::data::synth_sparse(500, 400, 0.05, 12, &mut rsp);
+        let bs = crate::linalg::Mat::randn(400, 40, &mut rsp);
+        let bst = crate::linalg::Mat::randn(500, 40, &mut rsp);
+        let spmm = sp.spmm(&bs);
+        let spmm_t = sp.spmm_t(&bst);
+        (m, k, two, qr, svd, eig, sol.x, sol_count.x, cur, scur, spmm, spmm_t)
     };
 
     set_threads(1);
-    let (m1, k1, two1, qr1, svd1, eig1, x1, xc1, cur1, scur1) = run_all();
+    let (m1, k1, two1, qr1, svd1, eig1, x1, xc1, cur1, scur1, sp1, spt1) = run_all();
     set_threads(4);
-    let (m4, k4, two4, qr4, svd4, eig4, x4, xc4, cur4, scur4) = run_all();
+    let (m4, k4, two4, qr4, svd4, eig4, x4, xc4, cur4, scur4, sp4, spt4) = run_all();
     set_threads(0); // restore auto-detect
 
     assert_eq!(m1.data(), m4.data(), "matmul dispatch not bitwise across thread counts");
+    // Sparse contract: spmm rows are independent gathers; spmm_t workers
+    // scan sparse rows in the serial ascending order over their private
+    // output panels — both bitwise across thread counts.
+    assert_eq!(sp1.data(), sp4.data(), "Csr::spmm not bitwise across thread counts");
+    assert_eq!(spt1.data(), spt4.data(), "Csr::spmm_t not bitwise across thread counts");
     assert_eq!(k1.data(), k4.data(), "rbf_block not bitwise across thread counts");
     assert_eq!(two1.data(), two4.data(), "twoside_sketch not bitwise across thread counts");
     // Factorization contract: the blocked QR's bulk rides the bitwise

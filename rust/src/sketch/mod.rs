@@ -29,6 +29,7 @@ pub use leverage::{
     subspace_row_leverage_scores,
 };
 
+use crate::error::{FgError, Result};
 use crate::linalg::Mat;
 use crate::parallel::Pool;
 use crate::rng::Pcg64;
@@ -54,10 +55,18 @@ pub enum SketchKind {
     OsnapGaussian,
 }
 
+/// The accepted CLI/config tokens, kept next to [`SketchKind::parse`] so
+/// `--help` text and error messages cannot drift apart (the same pattern
+/// as `cur::SELECTION_TOKENS`).
+pub const SKETCH_TOKENS: &str = "gaussian|gauss | uniform | leverage|lev | srht|hadamard | \
+                                 count|countsketch | osnap | osnap-gaussian|osnapgaussian|combined";
+
 impl SketchKind {
-    /// Parse from a CLI/config token.
-    pub fn parse(s: &str) -> Option<Self> {
-        Some(match s.to_ascii_lowercase().as_str() {
+    /// CLI/config token → sketch family. Unknown tokens are a hard
+    /// [`FgError::Config`] listing the accepted values — a silent
+    /// fallback would benchmark a family the user did not ask for.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
             "gaussian" | "gauss" => Self::Gaussian,
             "uniform" => Self::Uniform,
             "leverage" | "lev" => Self::Leverage,
@@ -65,7 +74,11 @@ impl SketchKind {
             "count" | "countsketch" => Self::Count,
             "osnap" => Self::Osnap,
             "osnap-gaussian" | "osnapgaussian" | "combined" => Self::OsnapGaussian,
-            _ => return None,
+            other => {
+                return Err(FgError::Config(format!(
+                    "unknown sketch kind `{other}` (accepted: {SKETCH_TOKENS})"
+                )))
+            }
         })
     }
 

@@ -286,3 +286,31 @@ fn dimension_mismatch_panics() {
     let a = Mat::zeros(11, 3);
     let _ = sk.apply_left(&a);
 }
+
+/// Every accepted token round-trips through `parse`, and unknown tokens
+/// are a hard `FgError::Config` that lists the accepted values (so the
+/// CLI error is self-documenting, same contract as `--selection`).
+#[test]
+fn sketch_kind_parse_accepts_tokens_and_rejects_unknown() {
+    for (tok, want) in [
+        ("gaussian", SketchKind::Gaussian),
+        ("GAUSS", SketchKind::Gaussian),
+        ("uniform", SketchKind::Uniform),
+        ("lev", SketchKind::Leverage),
+        ("srht", SketchKind::Srht),
+        ("hadamard", SketchKind::Srht),
+        ("countsketch", SketchKind::Count),
+        ("osnap", SketchKind::Osnap),
+        ("osnap-gaussian", SketchKind::OsnapGaussian),
+        ("combined", SketchKind::OsnapGaussian),
+    ] {
+        assert_eq!(SketchKind::parse(tok).unwrap(), want, "token `{tok}`");
+    }
+    for kind in SketchKind::all() {
+        assert_eq!(SketchKind::parse(kind.name()).unwrap(), kind, "name() must round-trip");
+    }
+    let err = SketchKind::parse("bogus").unwrap_err().to_string();
+    assert!(err.contains("bogus"), "error names the bad token: {err}");
+    assert!(err.contains("accepted:"), "error lists accepted tokens: {err}");
+    assert!(err.contains("osnap-gaussian"), "error lists the full token set: {err}");
+}

@@ -1,4 +1,9 @@
 //! CSR sparse matrix.
+//!
+//! The dense products [`Csr::spmm`] / [`Csr::spmm_t`] shard over
+//! contiguous output-row panels on the process-wide `crate::parallel`
+//! pool when `nnz · B.cols()` clears the flop floor — bitwise identical
+//! to serial at any thread count (same contract as the dense drivers).
 
 use crate::linalg::Mat;
 
@@ -116,14 +121,43 @@ impl Csr {
         out
     }
 
+    /// True when an `O(nnz · n)` sparse product is big enough to shard
+    /// over the pool (same flop floor as the dense drivers).
+    fn spmm_should_shard(&self, n: usize, out_rows: usize) -> bool {
+        crate::parallel::threads() > 1
+            && out_rows >= 2
+            && self.nnz().saturating_mul(n) >= crate::parallel::PAR_FLOP_MIN
+    }
+
     /// `self * B` with dense B — O(nnz(self) * B.cols).
+    ///
+    /// Above the sharding floor the output rows split into contiguous
+    /// panels on the process-wide pool; each output row is a gather over
+    /// its own sparse row in the serial order, so the sharded product is
+    /// **bitwise identical** to the serial one at any thread count
+    /// (pinned by the threads-knob suite in `crate::parallel::tests`).
     pub fn spmm(&self, b: &Mat) -> Mat {
         assert_eq!(self.cols, b.rows(), "spmm: dim mismatch");
         let n = b.cols();
         let mut out = Mat::zeros(self.rows, n);
-        for i in 0..self.rows {
+        if self.spmm_should_shard(n, self.rows) {
+            let pool = crate::parallel::Pool::current();
+            pool.run_row_panels(self.rows, n, out.data_mut(), |r0, r1, panel| {
+                self.spmm_panel(b, r0, r1, panel);
+            });
+        } else {
+            self.spmm_panel(b, 0, self.rows, out.data_mut());
+        }
+        out
+    }
+
+    /// Serial `self · B` kernel over the sparse-row panel `r0..r1`,
+    /// writing the panel-local `(r1-r0)×b.cols()` slice.
+    fn spmm_panel(&self, b: &Mat, r0: usize, r1: usize, panel: &mut [f64]) {
+        let n = b.cols();
+        for i in r0..r1 {
             let (cols, vals) = self.row(i);
-            let orow = out.row_mut(i);
+            let orow = &mut panel[(i - r0) * n..(i - r0 + 1) * n];
             for (&k, &v) in cols.iter().zip(vals) {
                 let brow = b.row(k);
                 for (o, &bv) in orow.iter_mut().zip(brow) {
@@ -131,25 +165,49 @@ impl Csr {
                 }
             }
         }
-        out
     }
 
     /// `selfᵀ * B` with dense B (B has self.rows rows) — O(nnz * B.cols).
+    ///
+    /// The scatter shards over *output*-row panels (columns of `self`):
+    /// every worker streams the sparse rows in the same ascending order
+    /// and keeps only the entries that land in its panel, so each output
+    /// row accumulates in exactly the serial order — bitwise identical
+    /// at any thread count. Workers re-scan the index array (`O(nnz)`
+    /// each), which the `nnz·n` flop floor keeps amortized.
     pub fn spmm_t(&self, b: &Mat) -> Mat {
         assert_eq!(self.rows, b.rows(), "spmm_t: dim mismatch");
         let n = b.cols();
         let mut out = Mat::zeros(self.cols, n);
+        // The n >= 16 floor keeps each worker's O(nnz) index re-scan
+        // small next to its O(nnz·n / workers) useful flops.
+        if n >= 16 && self.spmm_should_shard(n, self.cols) {
+            let pool = crate::parallel::Pool::current();
+            pool.run_row_panels(self.cols, n, out.data_mut(), |k0, k1, panel| {
+                self.spmm_t_panel(b, k0, k1, panel);
+            });
+        } else {
+            self.spmm_t_panel(b, 0, self.cols, out.data_mut());
+        }
+        out
+    }
+
+    /// Serial `selfᵀ · B` scatter restricted to output rows `k0..k1`.
+    fn spmm_t_panel(&self, b: &Mat, k0: usize, k1: usize, panel: &mut [f64]) {
+        let n = b.cols();
         for i in 0..self.rows {
             let (cols, vals) = self.row(i);
             let brow = b.row(i);
             for (&k, &v) in cols.iter().zip(vals) {
-                let orow = out.row_mut(k);
+                if k < k0 || k >= k1 {
+                    continue;
+                }
+                let orow = &mut panel[(k - k0) * n..(k - k0 + 1) * n];
                 for (o, &bv) in orow.iter_mut().zip(brow) {
                     *o += v * bv;
                 }
             }
         }
-        out
     }
 
     /// `S * self` with dense S (S.cols == self.rows) — iterates the sparse
