@@ -1,0 +1,166 @@
+//! Serving figure — cold vs warm latency and throughput of the
+//! [`crate::coordinator::Router`] serving layer on a mixed job stream.
+//!
+//! A client replays the same request set twice against one daemon. The
+//! **cold** phase computes every approximation (every cache key is new);
+//! the **warm** phase resubmits the identical requests, so every one is
+//! answered from the fingerprint-keyed artifact cache — the paper's
+//! one-sketch-many-queries amortization measured across requests instead
+//! of inside one algorithm. Expected shape: warm p50 sits orders of
+//! magnitude under cold p50 (a fingerprint pass plus a clone vs a
+//! factorization), and warm hits equal the request count.
+//!
+//! Emits `results/BENCH_serve.json` (CI artifact) and `PERF`-prefixed
+//! stdout lines; the CI bench step fails if the warm phase records no
+//! cache hits or its p50 is not under the cold p50. EXPERIMENTS.md
+//! §Serving tracks the numbers.
+
+use super::harness::{f4, secs, BenchCtx, Profile};
+use crate::coordinator::{ApproxJob, MatrixPayload, Router, ServeConfig};
+use crate::cur::CurConfig;
+use crate::data::{synth_dense, SpectrumKind};
+use crate::linalg::Mat;
+use crate::rng::rng;
+use crate::sketch::SketchKind;
+use crate::svdstream::FastSpSvdConfig;
+
+/// One measured phase for the JSON artifact.
+struct Phase {
+    name: &'static str,
+    seconds: f64,
+    jobs_per_s: f64,
+    p50: f64,
+    p95: f64,
+    p99: f64,
+    cache_hits: u64,
+}
+
+pub fn run(ctx: &mut BenchCtx) {
+    let (m, n, jobs, ndata) = match ctx.profile {
+        Profile::Quick => (320, 260, 24, 4),
+        Profile::Full => (840, 700, 96, 6),
+    };
+    let mut r = rng(0x5E4E);
+    let datasets: Vec<Mat> = (0..ndata)
+        .map(|_| synth_dense(m, n, 12, SpectrumKind::Exponential { base: 0.85 }, 0.02, &mut r))
+        .collect();
+    let points: Vec<Mat> = (0..ndata).map(|_| Mat::randn(m, 8, &mut r)).collect();
+    // One job per (kind, dataset, seed) triple — all keys distinct, so
+    // the cold phase computes everything and the warm replay hits
+    // everything.
+    let job = |j: usize| -> ApproxJob {
+        let d = j % ndata;
+        let seed = j as u64;
+        match j % 3 {
+            0 => ApproxJob::Cur {
+                a: MatrixPayload::Dense(datasets[d].clone()),
+                cfg: CurConfig::fast(12, 12, 3),
+                seed,
+            },
+            1 => ApproxJob::SpsdKernel { x: points[d].clone(), sigma: 0.5, c: 12, s: 60, seed },
+            _ => ApproxJob::StreamSvd {
+                a: MatrixPayload::Dense(datasets[d].clone()),
+                cfg: FastSpSvdConfig::paper(6, 4, SketchKind::Gaussian),
+                block: 64,
+                seed,
+            },
+        }
+    };
+
+    let router = Router::with_config(&ServeConfig {
+        workers: 2,
+        cache_bytes: 256 << 20,
+        ..ServeConfig::service(2)
+    });
+    ctx.line(&format!(
+        "serve: {jobs} mixed CUR/SPSD/SVD jobs over {ndata} datasets ({m}x{n}), workers=2, \
+         cache=256 MB, threads={}",
+        crate::parallel::threads()
+    ));
+
+    let mut phases = Vec::new();
+    let mut hits_before = 0;
+    for name in ["cold", "warm"] {
+        let t0 = std::time::Instant::now();
+        let handles: Vec<_> = (0..jobs)
+            .map(|j| router.submit(job(j)).expect("unbounded queue must not shed"))
+            .collect();
+        for h in handles {
+            h.wait().expect("serve bench job failed");
+        }
+        let seconds = t0.elapsed().as_secs_f64();
+        // Draining the histogram isolates this phase's percentiles.
+        let hist = router.metrics.take_histogram("serve.latency");
+        let hits = router.metrics.get("serve.cache.hits") - hits_before;
+        hits_before += hits;
+        assert_eq!(hist.count(), jobs as u64, "every job must record one serve latency");
+        phases.push(Phase {
+            name,
+            seconds,
+            jobs_per_s: jobs as f64 / seconds,
+            p50: hist.quantile(0.5),
+            p95: hist.quantile(0.95),
+            p99: hist.quantile(0.99),
+            cache_hits: hits,
+        });
+    }
+    let warm = phases.last().expect("two phases");
+    assert_eq!(warm.cache_hits, jobs as u64, "warm replay must hit on every request");
+
+    let table: Vec<Vec<String>> = phases
+        .iter()
+        .map(|p| {
+            vec![
+                p.name.to_string(),
+                secs(p.seconds),
+                format!("{:.1}", p.jobs_per_s),
+                secs(p.p50),
+                secs(p.p95),
+                secs(p.p99),
+                p.cache_hits.to_string(),
+            ]
+        })
+        .collect();
+    ctx.line("");
+    ctx.table(&["phase", "wall", "jobs/s", "p50", "p95", "p99", "hits"], &table);
+    for p in &phases {
+        ctx.line(&format!(
+            "PERF serve {}: {jobs} jobs in {} ({:.1} jobs/s), p50 {} p95 {} p99 {}, hits {}",
+            p.name,
+            secs(p.seconds),
+            p.jobs_per_s,
+            secs(p.p50),
+            secs(p.p95),
+            secs(p.p99),
+            p.cache_hits
+        ));
+    }
+    let speedup = phases[0].p50 / warm.p50.max(1e-9);
+    ctx.line(&format!("PERF serve warm/cold p50 speedup: {}x", f4(speedup)));
+    write_json(jobs, &phases);
+    ctx.line("\nshape check: warm hits == jobs, warm p50 far below cold p50 (enforced in CI).");
+    router.shutdown();
+}
+
+/// Hand-rolled JSON artifact (no serde in the offline vendor set).
+fn write_json(jobs: usize, phases: &[Phase]) {
+    let mut out = String::from("{\n");
+    out.push_str("  \"bench\": \"fig_serve\",\n");
+    out.push_str(&format!("  \"threads\": {},\n", crate::parallel::threads()));
+    out.push_str(&format!("  \"jobs\": {jobs},\n"));
+    out.push_str("  \"phases\": [\n");
+    for (i, p) in phases.iter().enumerate() {
+        let comma = if i + 1 < phases.len() { "," } else { "" };
+        out.push_str(&format!(
+            "    {{\"phase\": \"{}\", \"seconds\": {:.6}, \"jobs_per_second\": {:.1}, \
+             \"p50\": {:.9}, \"p95\": {:.9}, \"p99\": {:.9}, \"cache_hits\": {}}}{comma}\n",
+            p.name, p.seconds, p.jobs_per_s, p.p50, p.p95, p.p99, p.cache_hits
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    let path = "results/BENCH_serve.json";
+    match std::fs::write(path, &out) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

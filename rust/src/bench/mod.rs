@@ -22,6 +22,7 @@ pub mod fig_cur;
 pub mod fig_curstream;
 pub mod fig_gemm;
 pub mod fig_linalg;
+pub mod fig_serve;
 pub mod harness;
 pub mod perf;
 pub mod tables;
@@ -45,6 +46,7 @@ pub fn targets() -> Vec<(&'static str, fn(&mut BenchCtx))> {
         ("fig_curstream", fig_curstream::run),
         ("fig_gemm", fig_gemm::run),
         ("fig_linalg", fig_linalg::run),
+        ("fig_serve", fig_serve::run),
         ("perf", perf::run),
     ]
 }
@@ -53,10 +55,11 @@ pub fn targets() -> Vec<(&'static str, fn(&mut BenchCtx))> {
 /// the figures that track per-PR perf (fig_cur for the CUR workload,
 /// fig_curstream for streaming-vs-in-memory CUR, fig_gemm for the packed
 /// GEMM vs its frozen seed kernels, fig_linalg for the factorization
-/// kernels vs theirs), and the microbenchmarks — enough to catch a perf
-/// regression without paper-scale runtimes.
-const SMOKE_TARGETS: [&str; 7] =
-    ["table1", "fig1", "fig_cur", "fig_curstream", "fig_gemm", "fig_linalg", "perf"];
+/// kernels vs theirs, fig_serve for warm-cache serving latency), and the
+/// microbenchmarks — enough to catch a perf regression without
+/// paper-scale runtimes.
+const SMOKE_TARGETS: [&str; 8] =
+    ["table1", "fig1", "fig_cur", "fig_curstream", "fig_gemm", "fig_linalg", "fig_serve", "perf"];
 
 /// Entry point used by `rust/benches/bench_main.rs`.
 ///

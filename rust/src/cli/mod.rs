@@ -7,7 +7,8 @@
 //! fastgmr verify                       # run artifact golden self-checks
 //! fastgmr bench <target> [--full|--smoke] [--threads N]
 //! fastgmr pipeline [--config f.toml] [--threads N]
-//! fastgmr serve [--jobs N] [--threads N]
+//! fastgmr serve [--jobs N] [--workers W] [--queue-depth D] [--cache-mb M]
+//!               [--batch-window MS] [--deadline MS] [--threads N]
 //! fastgmr cur [--size MxN] [--rank K] [--selection S] [--sketch KIND]
 //! fastgmr cur --stream [--block B] …      # single-pass streaming CUR
 //! ```
@@ -18,7 +19,9 @@
 //! same knob as `[parallel] threads`.
 
 use crate::config::Config;
-use crate::coordinator::{jobs::MatrixPayload, ApproxJob, PipelineConfig, Router, StreamPipeline};
+use crate::coordinator::{
+    jobs::MatrixPayload, ApproxJob, PipelineConfig, Router, ServeConfig, StreamPipeline,
+};
 use crate::cur::{self, CurConfig, SelectionStrategy, StreamingCurConfig};
 use crate::data::{synth_dense, SpectrumKind};
 use crate::error::{FgError, Result};
@@ -39,8 +42,15 @@ USAGE:
                                      regenerate paper tables/figures
   fastgmr pipeline [--config FILE] [--threads N]
                                      run the streaming SP-SVD pipeline
-  fastgmr serve [--jobs N] [--threads N]
-                                     demo the approximation-job router
+  fastgmr serve [--jobs N] [--workers W] [--queue-depth D] [--cache-mb M]
+                [--batch-window MS] [--deadline MS] [--threads N]
+                                     demo the serving daemon: mixed jobs
+                                     through admission control (D=0
+                                     unbounded), the coalescing batcher
+                                     (MS=0 off), and the fingerprint-
+                                     keyed artifact cache (M=0 off);
+                                     prints the serve.* metrics report
+                                     and the cache inventory
   fastgmr cur [--size MxN] [--rank K] [--c C] [--r R] [--selection S]
               [--sketch KIND] [--mult A] [--seed N] [--threads N]
                                      CUR decomposition demo: compare the
@@ -68,8 +78,8 @@ USAGE:
                  1 = bitwise single-threaded reproduction)
 
 Bench targets: table1..table7, fig1, fig2, fig3, fig_cur, fig_curstream,
-fig_gemm, fig_linalg, perf (see DESIGN.md §5). `bench --smoke` runs a
-reduced CI subset and writes results/bench_smoke.json.";
+fig_gemm, fig_linalg, fig_serve, perf (see DESIGN.md §5). `bench --smoke`
+runs a reduced CI subset and writes results/bench_smoke.json.";
 
 /// Main dispatch (called from `rust/src/main.rs`).
 pub fn main_entry() -> Result<()> {
@@ -385,50 +395,83 @@ fn cur_stream_cmd(
     Ok(())
 }
 
+/// `fastgmr serve` — demo the serving daemon on a mixed job stream with
+/// a repeating (kind, dataset, seed) period of 12, so every request
+/// beyond the first period repeats an earlier cache key and a warm
+/// artifact cache answers it without recomputing (the paper's
+/// one-sketch-many-queries amortization, served across requests).
 fn serve(args: &[String]) -> Result<()> {
-    let jobs: usize = flag_value(args, "--jobs").and_then(|v| v.parse().ok()).unwrap_or(8);
-    let router = Router::new(2);
+    let jobs: usize = parse_flag(args, "--jobs", 24)?;
+    let workers: usize = parse_flag(args, "--workers", 2)?;
+    let queue_depth: usize = parse_flag(args, "--queue-depth", 0)?;
+    let cache_mb: usize = parse_flag(args, "--cache-mb", 64)?;
+    let batch_ms: u64 = parse_flag(args, "--batch-window", 0)?;
+    let deadline_ms: u64 = parse_flag(args, "--deadline", 0)?;
+    let cfg = ServeConfig {
+        workers,
+        queue_depth,
+        cache_bytes: cache_mb << 20,
+        batch_window: std::time::Duration::from_millis(batch_ms),
+        default_deadline: (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms)),
+    };
+    let router = Router::with_config(&cfg);
+    println!(
+        "serve: {jobs} jobs, workers={workers}, queue-depth={queue_depth} (0=unbounded), \
+         cache={cache_mb} MB, batch-window={batch_ms} ms, deadline={deadline_ms} ms (0=none), \
+         threads={}",
+        crate::parallel::threads()
+    );
+
     let mut r = rng(42);
+    let datasets: Vec<Mat> = (0..2)
+        .map(|_| synth_dense(300, 240, 20, SpectrumKind::Exponential { base: 0.9 }, 0.02, &mut r))
+        .collect();
+    let points: Vec<Mat> = (0..2).map(|_| Mat::randn(400, 8, &mut r)).collect();
+
     let mut handles = Vec::new();
-    println!("submitting {jobs} mixed jobs…");
-    for seed in 0..jobs as u64 {
-        let a = synth_dense(300, 240, 20, SpectrumKind::Exponential { base: 0.9 }, 0.02, &mut r);
-        match seed % 4 {
+    let mut shed = 0usize;
+    for j in 0..jobs {
+        let dataset = (j / 3) % 2;
+        let a = &datasets[dataset];
+        let seed = (j / 6) as u64 % 2;
+        let job = match j % 3 {
             0 => {
-                let g_c = Mat::randn(240, 10, &mut r);
-                let c = crate::linalg::matmul(&a, &g_c);
-                let g_r = Mat::randn(10, 300, &mut r);
-                let rr = crate::linalg::matmul(&g_r, &a);
-                handles.push(router.submit(ApproxJob::Gmr {
-                    a: MatrixPayload::Dense(a),
-                    c,
-                    r: rr,
-                    cfg: crate::gmr::FastGmrConfig::gaussian(80, 80),
-                    seed,
-                }));
+                let x = points[dataset].clone();
+                ApproxJob::SpsdKernel { x, sigma: 0.4, c: 12, s: 60, seed }
             }
-            1 => {
-                let x = Mat::randn(400, 8, &mut r);
-                handles.push(router.submit(ApproxJob::SpsdKernel { x, sigma: 0.4, c: 12, s: 60, seed }));
-            }
-            2 => handles.push(router.submit(ApproxJob::StreamSvd {
-                a: MatrixPayload::Dense(a),
+            1 => ApproxJob::StreamSvd {
+                a: MatrixPayload::Dense(a.clone()),
                 cfg: FastSpSvdConfig::paper(5, 4, SketchKind::Gaussian),
                 block: 64,
                 seed,
-            })),
-            _ => handles.push(router.submit(ApproxJob::Cur {
-                a: MatrixPayload::Dense(a),
+            },
+            _ => ApproxJob::Cur {
+                a: MatrixPayload::Dense(a.clone()),
                 cfg: CurConfig::fast(12, 12, 3),
                 seed,
-            })),
+            },
+        };
+        match router.submit(job) {
+            Ok(h) => handles.push((j, h)),
+            // Shedding at a bounded queue is the design working, not a
+            // launcher failure.
+            Err(FgError::Overloaded { .. }) => shed += 1,
+            Err(e) => return Err(e),
         }
     }
-    for (i, h) in handles.into_iter().enumerate() {
-        let res = h.wait()?;
-        println!("job {i}: {} done", res.kind());
+    for (j, h) in handles {
+        match h.wait() {
+            Ok(res) => println!("job {j}: {} done", res.kind()),
+            Err(e) => println!("job {j}: failed ({e})"),
+        }
+    }
+    if shed > 0 {
+        println!("{shed} requests shed at admission (queue depth {queue_depth})");
     }
     println!("\n{}", router.metrics.report());
+    if let Some(manifest) = router.cache_manifest() {
+        println!("{manifest}");
+    }
     router.shutdown();
     Ok(())
 }

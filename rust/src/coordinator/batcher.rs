@@ -1,18 +1,124 @@
-//! Tiled kernel-entry oracle — the production form of Algorithm 2's
-//! "observe O(c²/ε) entries" step.
+//! Batching: coalescing identical work into one execution.
 //!
-//! The SPSD algorithms request arbitrary `K[rows, cols]` blocks; this
-//! oracle tiles each request into fixed-shape [`Backend::rbf_block`]
-//! executions (padding the ragged edges), so on the PJRT backend every
-//! kernel-entry computation runs through the AOT Pallas artifact. Entry
-//! accounting matches [`crate::spsd::CountingOracle`] semantics: we count
-//! *requested* entries (padding is overhead the §Perf bench measures, not
-//! observation).
+//! Two batching roles live here, both instances of the paper's
+//! amortization story (one sketch serves many consumers):
+//!
+//! * [`Batcher`] — *cross-request* coalescing for the serving layer.
+//!   Jobs submitted within a configurable window that share a
+//!   [`CacheKey`] (same dataset fingerprint, same config, same seed) are
+//!   collapsed onto one in-flight execution: the first submitter leads
+//!   and computes, later identical submitters attach as waiters and
+//!   receive clones of the leader's result. The sketch/factorization is
+//!   computed once per burst instead of once per request.
+//! * [`TiledKernelOracle`] — *intra-request* batching of kernel-entry
+//!   observations into fixed-shape backend tiles (Algorithm 2's
+//!   "observe O(c²/ε) entries" step through the AOT Pallas artifact).
 
 use crate::compute::Backend;
+use crate::coordinator::cache::CacheKey;
+use crate::coordinator::jobs::JobResult;
+use crate::error::{FgError, Result};
 use crate::linalg::Mat;
 use crate::spsd::KernelOracle;
 use std::cell::Cell;
+use std::collections::HashMap;
+use std::sync::mpsc::Sender;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// What [`Batcher::join`] decided about a submission.
+pub enum Admission {
+    /// First in-flight submission for this key within the window: the
+    /// caller must enqueue the job and, on completion, fan the result
+    /// out via [`Batcher::complete`] (or release waiters with
+    /// [`Batcher::abort`] if the job is shed before enqueueing).
+    Lead,
+    /// An identical job is already in flight and the window is open: the
+    /// caller's reply sender has been attached to it, nothing to enqueue.
+    Coalesced,
+    /// An identical job is in flight but its window has closed: run this
+    /// one independently (it is *not* registered, so its completion must
+    /// not call [`Batcher::complete`]).
+    Solo,
+}
+
+struct Pending {
+    opened: Instant,
+    waiters: Vec<(Sender<Result<JobResult>>, Instant)>,
+}
+
+/// Cross-request coalescer: identical in-flight jobs within a time
+/// window share one execution.
+///
+/// Invariants (what makes the accounting race-free): an entry is
+/// registered only by a `Lead` admission and removed only by that
+/// leader's [`Batcher::complete`]/[`Batcher::abort`]; duplicates that
+/// arrive after the window closes run `Solo` without touching the entry.
+pub struct Batcher {
+    window: Duration,
+    inflight: Mutex<HashMap<CacheKey, Pending>>,
+}
+
+impl Batcher {
+    /// A coalescer with the given window. `Duration::ZERO` disables
+    /// coalescing: every join answers [`Admission::Lead`] or
+    /// [`Admission::Solo`], never attaches waiters.
+    pub fn new(window: Duration) -> Self {
+        Self { window, inflight: Mutex::new(HashMap::new()) }
+    }
+
+    /// Admit a submission: lead, attach to an in-flight leader, or run
+    /// solo. `submitted` is the waiter's arrival time (its end-to-end
+    /// latency clock, returned by [`Batcher::complete`]).
+    pub fn join(
+        &self,
+        key: CacheKey,
+        reply: &Sender<Result<JobResult>>,
+        submitted: Instant,
+    ) -> Admission {
+        let mut map = self.inflight.lock().unwrap();
+        match map.get_mut(&key) {
+            Some(p) if self.window > Duration::ZERO && p.opened.elapsed() < self.window => {
+                p.waiters.push((reply.clone(), submitted));
+                Admission::Coalesced
+            }
+            Some(_) => Admission::Solo,
+            None => {
+                map.insert(key, Pending { opened: Instant::now(), waiters: Vec::new() });
+                Admission::Lead
+            }
+        }
+    }
+
+    /// Release a leader's entry without a result (the job was shed at
+    /// admission): waiters coalesced in the meantime are failed with
+    /// [`FgError::Overloaded`] at the given queue depth.
+    pub fn abort(&self, key: &CacheKey, depth: usize) {
+        if let Some(p) = self.inflight.lock().unwrap().remove(key) {
+            for (tx, _) in p.waiters {
+                let _ = tx.send(Err(FgError::Overloaded { depth }));
+            }
+        }
+    }
+
+    /// Fan a leader's result out to every coalesced waiter (clones on
+    /// success, a [`FgError::Coordinator`] echo on failure) and return
+    /// the waiters' submission instants so the caller can record their
+    /// end-to-end latencies.
+    pub fn complete(&self, key: &CacheKey, result: &Result<JobResult>) -> Vec<Instant> {
+        let Some(p) = self.inflight.lock().unwrap().remove(key) else { return Vec::new() };
+        let mut submitted = Vec::with_capacity(p.waiters.len());
+        for (tx, t0) in p.waiters {
+            let echo = match result {
+                Ok(r) => Ok(r.clone()),
+                Err(e) => Err(FgError::Coordinator(format!("coalesced leader failed: {e}"))),
+            };
+            let _ = tx.send(echo);
+            submitted.push(t0);
+        }
+        submitted
+    }
+}
 
 /// Kernel oracle that computes RBF entries through a compute backend in
 /// fixed-size tiles.

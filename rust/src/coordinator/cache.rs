@@ -1,0 +1,458 @@
+//! Fingerprint-keyed artifact cache — the amortization layer of the
+//! serving daemon.
+//!
+//! The paper's economics are amortization: one pair of sketches serves
+//! many downstream approximations — the same sketched factors back CUR
+//! (§3), SPSD (§4), and single-pass SVD (§5) queries over the same
+//! dataset. In a serving setting that sharing happens *across requests*:
+//! repeated queries against a dataset the daemon has already factorized
+//! should hit a cached artifact instead of recomputing it. This module
+//! provides the key — a 64-bit fingerprint of the dataset bytes paired
+//! with a digest of the job configuration (sketch family, sizes, seed) —
+//! and an LRU store with a byte budget holding completed [`JobResult`]s.
+//!
+//! Because every job is deterministic given its seed, a cache hit is
+//! *bitwise identical* to a cold compute (pinned in `coordinator::tests`),
+//! so caching is transparent to callers. The inventory listing reuses the
+//! [`crate::runtime::artifacts::ManifestEntry`] line shape, so cached
+//! factorizations and AOT-compiled graphs read the same way.
+
+use crate::coordinator::jobs::{ApproxJob, JobResult, MatrixPayload};
+use crate::cur::{CoreMethod, SelectionStrategy};
+use crate::linalg::Mat;
+use crate::runtime::artifacts::ManifestEntry;
+use crate::sparse::Csr;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// Word-folded FNV-1a: the classic byte-wise FNV-1a constants applied
+/// per 64-bit word (one xor + multiply per `f64`/`usize`), which keeps
+/// fingerprinting a large matrix cheap relative to any factorization of
+/// it while still mixing every bit of every entry into the digest.
+pub struct Fnv64(u64);
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv64 {
+    pub fn new() -> Self {
+        Fnv64(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn write_u64(&mut self, word: u64) {
+        self.0 ^= word;
+        self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+
+    pub fn write_usize(&mut self, x: usize) {
+        self.write_u64(x as u64);
+    }
+
+    /// Fold in an `f64` by bit pattern (so `-0.0` and `0.0` differ —
+    /// the cache contract is bitwise, not numeric).
+    pub fn write_f64(&mut self, x: f64) {
+        self.write_u64(x.to_bits());
+    }
+
+    pub fn write_str(&mut self, s: &str) {
+        self.write_u64(s.len() as u64);
+        for b in s.as_bytes() {
+            self.write_u64(u64::from(*b));
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Fingerprint of a dense matrix: dimensions plus every entry's bit
+/// pattern, in storage order.
+pub fn fingerprint_dense(a: &Mat) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_str("dense");
+    h.write_usize(a.rows());
+    h.write_usize(a.cols());
+    for &x in a.data() {
+        h.write_f64(x);
+    }
+    h.finish()
+}
+
+/// Fingerprint of a CSR matrix: dimensions plus the full sparsity
+/// structure and values (`O(nnz)`, never densified).
+pub fn fingerprint_sparse(a: &Csr) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_str("csr");
+    h.write_usize(a.rows());
+    h.write_usize(a.cols());
+    for i in 0..a.rows() {
+        let (idx, vals) = a.row(i);
+        h.write_usize(idx.len());
+        for &j in idx {
+            h.write_usize(j);
+        }
+        for &v in vals {
+            h.write_f64(v);
+        }
+    }
+    h.finish()
+}
+
+/// Fingerprint of a job payload (the dataset half of a [`CacheKey`]).
+pub fn fingerprint_payload(p: &MatrixPayload) -> u64 {
+    match p {
+        MatrixPayload::Dense(a) => fingerprint_dense(a),
+        MatrixPayload::Sparse(a) => fingerprint_sparse(a),
+    }
+}
+
+/// Key of one cached artifact: dataset fingerprint × config digest.
+///
+/// Two jobs share a key exactly when they would compute the same factor:
+/// same input bytes, same algorithm, same sketch configuration, same
+/// seed. [`job_key`] derives both halves from an [`ApproxJob`].
+///
+/// ```
+/// use fastgmr::coordinator::CacheKey;
+/// let key = CacheKey::new(0x5eed_da7a, 0xc0ffee);
+/// assert_eq!(key, CacheKey::new(0x5eed_da7a, 0xc0ffee));
+/// assert_ne!(key, CacheKey::new(0x5eed_da7a, 0xc0ffef));   // config differs
+/// assert_ne!(key, CacheKey::new(0x5eed_da7b, 0xc0ffee));   // dataset differs
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    /// Fingerprint of the dataset bytes (payload matrices).
+    pub dataset: u64,
+    /// Digest of the job kind + configuration + seed.
+    pub config: u64,
+}
+
+impl CacheKey {
+    pub fn new(dataset: u64, config: u64) -> Self {
+        Self { dataset, config }
+    }
+}
+
+fn sketch_tag(h: &mut Fnv64, kind: crate::sketch::SketchKind) {
+    h.write_str(kind.name());
+}
+
+fn selection_tag(h: &mut Fnv64, s: &SelectionStrategy) {
+    match s {
+        SelectionStrategy::Uniform => h.write_str("uniform"),
+        SelectionStrategy::Leverage => h.write_str("leverage"),
+        SelectionStrategy::SubspaceLeverage { k } => {
+            h.write_str("subspace");
+            h.write_usize(*k);
+        }
+        SelectionStrategy::SketchedLeverage { kind, size } => {
+            h.write_str("sketched");
+            sketch_tag(h, *kind);
+            h.write_usize(*size);
+        }
+    }
+}
+
+fn core_tag(h: &mut Fnv64, c: &CoreMethod) {
+    match c {
+        CoreMethod::Exact => h.write_str("exact"),
+        CoreMethod::FastGmr => h.write_str("fast_gmr"),
+        CoreMethod::StabilizedQr => h.write_str("stabilized_qr"),
+    }
+}
+
+/// Derive the cache key of a job: the dataset fingerprint over every
+/// input matrix, and a config digest over the job kind, every
+/// algorithmic parameter, and the seed (jobs are deterministic given
+/// their seed, so equal keys imply bitwise-equal results).
+pub fn job_key(job: &ApproxJob) -> CacheKey {
+    let mut cfg = Fnv64::new();
+    cfg.write_str(job.kind());
+    let dataset = match job {
+        ApproxJob::Gmr { a, c, r, cfg: f, seed } => {
+            sketch_tag(&mut cfg, f.kind_c);
+            sketch_tag(&mut cfg, f.kind_r);
+            cfg.write_usize(f.s_c);
+            cfg.write_usize(f.s_r);
+            cfg.write_u64(*seed);
+            let mut d = Fnv64::new();
+            d.write_u64(fingerprint_payload(a));
+            d.write_u64(fingerprint_dense(c));
+            d.write_u64(fingerprint_dense(r));
+            d.finish()
+        }
+        ApproxJob::GmrExact { a, c, r } => {
+            let mut d = Fnv64::new();
+            d.write_u64(fingerprint_payload(a));
+            d.write_u64(fingerprint_dense(c));
+            d.write_u64(fingerprint_dense(r));
+            d.finish()
+        }
+        ApproxJob::SpsdKernel { x, sigma, c, s, seed } => {
+            cfg.write_f64(*sigma);
+            cfg.write_usize(*c);
+            cfg.write_usize(*s);
+            cfg.write_u64(*seed);
+            fingerprint_dense(x)
+        }
+        ApproxJob::StreamSvd { a, cfg: f, block, seed } => {
+            cfg.write_usize(f.k);
+            cfg.write_usize(f.c);
+            cfg.write_usize(f.r);
+            cfg.write_usize(f.s_c);
+            cfg.write_usize(f.s_r);
+            cfg.write_usize(f.osnap_mult);
+            sketch_tag(&mut cfg, f.core_kind);
+            cfg.write_usize(*block);
+            cfg.write_u64(*seed);
+            fingerprint_payload(a)
+        }
+        ApproxJob::Cur { a, cfg: f, seed } => {
+            cfg.write_usize(f.c);
+            cfg.write_usize(f.r);
+            selection_tag(&mut cfg, &f.selection);
+            core_tag(&mut cfg, &f.core);
+            sketch_tag(&mut cfg, f.sketch);
+            cfg.write_usize(f.s_c);
+            cfg.write_usize(f.s_r);
+            cfg.write_u64(*seed);
+            fingerprint_payload(a)
+        }
+        ApproxJob::StreamingCur { a, cfg: f, block, seed } => {
+            cfg.write_usize(f.c);
+            cfg.write_usize(f.r);
+            cfg.write_usize(f.k);
+            sketch_tag(&mut cfg, f.kind);
+            cfg.write_usize(f.s_c);
+            cfg.write_usize(f.s_r);
+            cfg.write_usize(f.oversample);
+            cfg.write_usize(*block);
+            cfg.write_u64(*seed);
+            fingerprint_payload(a)
+        }
+    };
+    CacheKey::new(dataset, cfg.finish())
+}
+
+struct Entry {
+    result: JobResult,
+    bytes: usize,
+    /// Last-touched logical time (monotone per cache op) — the LRU order.
+    tick: u64,
+    kind: &'static str,
+}
+
+/// LRU artifact store with a byte budget.
+///
+/// Holds completed [`JobResult`]s keyed by [`CacheKey`]; `get` refreshes
+/// recency, `insert` evicts least-recently-used entries until the new
+/// artifact fits. A result larger than the whole budget is not admitted
+/// (churning every resident artifact for one oversized one is never a
+/// win). Purely a data structure — the [`crate::coordinator::Router`]
+/// owns the locking and translates hits/misses/evictions into `serve.*`
+/// metrics.
+pub struct ArtifactCache {
+    budget: usize,
+    bytes: usize,
+    tick: u64,
+    map: HashMap<CacheKey, Entry>,
+}
+
+impl ArtifactCache {
+    /// An empty cache with the given byte budget.
+    pub fn new(budget_bytes: usize) -> Self {
+        Self { budget: budget_bytes, bytes: 0, tick: 0, map: HashMap::new() }
+    }
+
+    /// Look up an artifact, refreshing its recency on hit.
+    pub fn get(&mut self, key: &CacheKey) -> Option<JobResult> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.get_mut(key).map(|e| {
+            e.tick = tick;
+            e.result.clone()
+        })
+    }
+
+    /// Store an artifact, evicting LRU entries until it fits; returns
+    /// how many residents were evicted (0 if the artifact was oversized
+    /// and not admitted, or simply fit).
+    pub fn insert(&mut self, key: CacheKey, result: &JobResult) -> usize {
+        let bytes = result.approx_bytes();
+        if bytes > self.budget {
+            return 0;
+        }
+        if let Some(old) = self.map.remove(&key) {
+            self.bytes -= old.bytes;
+        }
+        let mut evicted = 0;
+        while self.bytes + bytes > self.budget {
+            let Some((&victim, _)) = self.map.iter().min_by_key(|(_, e)| e.tick) else { break };
+            let gone = self.map.remove(&victim).expect("victim key just observed");
+            self.bytes -= gone.bytes;
+            evicted += 1;
+        }
+        self.tick += 1;
+        self.bytes += bytes;
+        let entry = Entry { result: result.clone(), bytes, tick: self.tick, kind: result.kind() };
+        self.map.insert(key, entry);
+        evicted
+    }
+
+    /// Resident artifact count.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Resident bytes (always ≤ the budget).
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// The configured byte budget.
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Render the resident artifacts in the `manifest.txt` line format
+    /// of [`ManifestEntry::to_line`], LRU first — the serving inventory
+    /// the `fastgmr serve` subcommand prints.
+    pub fn manifest(&self) -> String {
+        let mut rows: Vec<(u64, String)> = self
+            .map
+            .iter()
+            .map(|(key, e)| {
+                let entry = ManifestEntry {
+                    name: format!("{}_{:016x}_{:016x}", e.kind, key.dataset, key.config),
+                    hlo_path: PathBuf::from("cache"),
+                    input_shapes: Vec::new(),
+                    output_shapes: e.result.output_shapes(),
+                    golden_path: None,
+                };
+                (e.tick, entry.to_line())
+            })
+            .collect();
+        rows.sort();
+        let mut out = format!(
+            "# artifact cache: {} entries, {} / {} bytes (LRU first)\n",
+            self.map.len(),
+            self.bytes,
+            self.budget
+        );
+        for (_, line) in rows {
+            out.push_str(&line);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result_of(rows: usize, cols: usize) -> JobResult {
+        JobResult::Gmr { x: Mat::zeros(rows, cols) }
+    }
+
+    #[test]
+    fn fingerprint_is_content_sensitive() {
+        let a = Mat::from_fn(5, 4, |i, j| (i * 4 + j) as f64);
+        let mut b = a.clone();
+        assert_eq!(fingerprint_dense(&a), fingerprint_dense(&b));
+        b.data_mut()[7] += 1e-12;
+        assert_ne!(fingerprint_dense(&a), fingerprint_dense(&b));
+        // Same bytes, different shape ⇒ different fingerprint.
+        let c = Mat::from_vec(4, 5, a.data().to_vec());
+        assert_ne!(fingerprint_dense(&a), fingerprint_dense(&c));
+    }
+
+    #[test]
+    fn sparse_and_dense_fingerprints_are_tagged_apart() {
+        let d = Mat::zeros(3, 3);
+        let s = Csr::from_dense(&d, 0.0);
+        assert_ne!(
+            fingerprint_payload(&MatrixPayload::Dense(d)),
+            fingerprint_payload(&MatrixPayload::Sparse(s))
+        );
+    }
+
+    #[test]
+    fn job_key_separates_seed_config_and_data() {
+        let a = Mat::from_fn(10, 8, |i, j| ((i * 31 + j * 7) % 13) as f64);
+        let job = |seed, c| ApproxJob::Cur {
+            a: MatrixPayload::Dense(a.clone()),
+            cfg: crate::cur::CurConfig::fast(c, 4, 2),
+            seed,
+        };
+        let base = job_key(&job(1, 4));
+        assert_eq!(base, job_key(&job(1, 4)), "key must be a pure function of the job");
+        assert_ne!(base, job_key(&job(2, 4)), "seed must enter the config digest");
+        assert_ne!(base, job_key(&job(1, 5)), "config must enter the digest");
+        assert_eq!(base.dataset, job_key(&job(2, 4)).dataset, "dataset half ignores config");
+        let mut b = a.clone();
+        b.data_mut()[0] += 1.0;
+        let other = job_key(&ApproxJob::Cur {
+            a: MatrixPayload::Dense(b),
+            cfg: crate::cur::CurConfig::fast(4, 4, 2),
+            seed: 1,
+        });
+        assert_ne!(base.dataset, other.dataset, "data bytes must enter the dataset half");
+    }
+
+    #[test]
+    fn lru_eviction_respects_byte_budget() {
+        // 3 entries of 800 bytes each against a 2000-byte budget.
+        let mut cache = ArtifactCache::new(2000);
+        let (k1, k2, k3) = (CacheKey::new(1, 1), CacheKey::new(2, 2), CacheKey::new(3, 3));
+        let r = result_of(10, 10); // 800 bytes
+        assert_eq!(r.approx_bytes(), 800);
+        assert_eq!(cache.insert(k1, &r), 0);
+        assert_eq!(cache.insert(k2, &r), 0);
+        assert_eq!(cache.bytes(), 1600);
+        // Touch k1 so k2 is the LRU victim.
+        assert!(cache.get(&k1).is_some());
+        assert_eq!(cache.insert(k3, &r), 1, "one eviction to fit the third entry");
+        assert_eq!(cache.len(), 2);
+        assert!(cache.bytes() <= cache.budget());
+        assert!(cache.get(&k2).is_none(), "LRU entry k2 must be the victim");
+        assert!(cache.get(&k1).is_some() && cache.get(&k3).is_some());
+    }
+
+    #[test]
+    fn oversized_artifacts_are_not_admitted() {
+        let mut cache = ArtifactCache::new(100);
+        let key = CacheKey::new(7, 7);
+        assert_eq!(cache.insert(key, &result_of(10, 10)), 0);
+        assert!(cache.is_empty(), "an artifact larger than the budget must not evict residents");
+        assert!(cache.get(&key).is_none());
+    }
+
+    #[test]
+    fn reinsert_replaces_in_place() {
+        let mut cache = ArtifactCache::new(2000);
+        let key = CacheKey::new(9, 9);
+        cache.insert(key, &result_of(10, 10));
+        cache.insert(key, &result_of(5, 10));
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.bytes(), 400);
+    }
+
+    #[test]
+    fn manifest_lists_entries_in_manifest_line_format() {
+        let mut cache = ArtifactCache::new(10_000);
+        cache.insert(CacheKey::new(0xAB, 0xCD), &result_of(4, 3));
+        let listing = cache.manifest();
+        assert!(listing.starts_with("# artifact cache: 1 entries"));
+        assert!(listing.contains("file=cache"), "reuses the manifest line shape: {listing}");
+        assert!(listing.contains("outputs=4x3"), "{listing}");
+    }
+}

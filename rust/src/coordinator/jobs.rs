@@ -89,7 +89,10 @@ impl ApproxJob {
     }
 }
 
-/// Result of a completed job.
+/// Result of a completed job (clonable: the artifact cache hands copies
+/// of a stored result to repeated queries, and the batcher fans one
+/// computation out to every coalesced waiter).
+#[derive(Clone)]
 pub enum JobResult {
     /// GMR core matrix X̃ (c×r) plus the sketch sizes used.
     Gmr { x: Mat },
@@ -110,6 +113,32 @@ impl JobResult {
             JobResult::Svd { .. } => "svd",
             JobResult::Cur { .. } => "cur",
         }
+    }
+
+    /// Output shapes per factor, in the `rows×cols` convention of
+    /// [`crate::runtime::artifacts::ManifestEntry`] (index/singular-value
+    /// vectors count as `n×1`) — what the artifact cache renders in its
+    /// manifest-style inventory.
+    pub fn output_shapes(&self) -> Vec<(usize, usize)> {
+        match self {
+            JobResult::Gmr { x } => vec![x.shape()],
+            JobResult::Spsd { idx, c, x, .. } => vec![(idx.len(), 1), c.shape(), x.shape()],
+            JobResult::Svd { u, sigma, v } => vec![u.shape(), (sigma.len(), 1), v.shape()],
+            JobResult::Cur { cur } => vec![
+                (cur.col_idx.len(), 1),
+                (cur.row_idx.len(), 1),
+                cur.c.shape(),
+                cur.u.shape(),
+                cur.r.shape(),
+            ],
+        }
+    }
+
+    /// Approximate heap size of the result payload — the unit the
+    /// artifact cache's byte budget is accounted in (8 bytes per stored
+    /// scalar/index; struct overhead is noise at matrix scale).
+    pub fn approx_bytes(&self) -> usize {
+        self.output_shapes().iter().map(|(r, c)| r * c * 8).sum()
     }
 }
 

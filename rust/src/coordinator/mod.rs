@@ -1,5 +1,6 @@
 //! Layer-3 coordinator: the streaming orchestrator and approximation-job
-//! service that wrap the paper's algorithms into a deployable system.
+//! serving layer that wrap the paper's algorithms into a deployable
+//! system.
 //!
 //! * [`pipeline`] — concurrent single-pass pipelines for Algorithm 3
 //!   SVD and for streaming CUR: reader → bounded block batches
@@ -7,21 +8,30 @@
 //!   stream-ordered accumulator fold. Both match their single-threaded
 //!   references in [`crate::svdstream`] / [`crate::cur::streaming`]
 //!   (tested).
-//! * [`router`] — a job service: clients submit [`jobs::ApproxJob`]s,
-//!   worker threads execute them against a [`crate::compute::Backend`].
-//! * [`batcher`] — tiles kernel-entry requests into fixed-shape
-//!   `rbf_block` executions (the Algorithm 2 entry oracle, production
-//!   form) with per-tile padding and entry accounting.
+//! * [`router`] — the serving daemon: clients submit
+//!   [`jobs::ApproxJob`]s through admission control (bounded queue,
+//!   load shedding, deadlines), cross-request batching, and a
+//!   fingerprint-keyed artifact cache; worker threads execute misses
+//!   against a [`crate::compute::Backend`].
+//! * [`cache`] — dataset/config fingerprints ([`cache::CacheKey`]) and
+//!   the LRU byte-budgeted [`cache::ArtifactCache`] of completed
+//!   [`jobs::JobResult`]s.
+//! * [`batcher`] — coalesces work: identical in-flight serving requests
+//!   onto one execution ([`batcher::Batcher`]), and kernel-entry
+//!   requests into fixed-shape `rbf_block` tiles (the Algorithm 2 entry
+//!   oracle, production form).
 
 pub mod batcher;
+pub mod cache;
 pub mod jobs;
 pub mod pipeline;
 pub mod router;
 
-pub use batcher::TiledKernelOracle;
-pub use jobs::{ApproxJob, JobResult};
+pub use batcher::{Batcher, TiledKernelOracle};
+pub use cache::{job_key, ArtifactCache, CacheKey};
+pub use jobs::{ApproxJob, JobResult, MatrixPayload};
 pub use pipeline::{PipelineConfig, StreamPipeline};
-pub use router::{JobHandle, Router};
+pub use router::{JobHandle, Router, ServeConfig};
 
 #[cfg(test)]
 mod tests;

@@ -1,9 +1,36 @@
-//! Job router: a small multi-worker service executing [`ApproxJob`]s.
+//! Job router and serving layer: a long-lived multi-worker service
+//! executing [`ApproxJob`]s behind admission control, cross-request
+//! batching, and a fingerprint-keyed artifact cache.
 //!
-//! Jobs are submitted from any thread; each returns a [`JobHandle`] whose
-//! `wait()` blocks for the result. Workers pull from a shared queue
-//! (work-stealing by contention — single consumer lock on the receiver),
-//! run the algorithm, and report per-kind latency into [`Metrics`].
+//! The paper's algorithms are built to be *amortized*: one pair of
+//! sketches answers many downstream queries (CUR, SPSD, streaming SVD).
+//! A daemon serving approximation requests should therefore never
+//! recompute what an earlier request already paid for. The submit path
+//! enforces that, in order:
+//!
+//! ```text
+//! submit ──► artifact cache ──► batcher ──► admission ──► queue ──► executor
+//!             (hit: done)     (coalesce)    (or shed)
+//! ```
+//!
+//! * **Cache** — completed factorizations keyed by
+//!   [`CacheKey`] = dataset fingerprint × config digest
+//!   ([`super::cache`]); a hit returns a bitwise-identical clone without
+//!   touching the queue.
+//! * **Batcher** — identical jobs in flight within the batch window
+//!   share one execution ([`super::batcher::Batcher`]).
+//! * **Admission** — a bounded submit queue sheds excess load with
+//!   [`FgError::Overloaded`] instead of letting latency grow without
+//!   bound; per-job deadlines fail stale work with
+//!   [`FgError::DeadlineExceeded`] before it wastes an executor.
+//!
+//! Workers pull from a shared queue (single consumer lock on the
+//! receiver), run the algorithm under `catch_unwind` (a panicking job
+//! fails that job, not the daemon), and report per-kind latency into
+//! [`Metrics`] — `router.<kind>.*` for executor-side counts and compute
+//! latency, `serve.*` for the serving layer (hits, misses, evictions,
+//! shed, coalesced, queue depth, end-to-end latency; naming convention
+//! in the README §Serving).
 //!
 //! Each executor thread installs its share of the process-wide `threads`
 //! knob as a per-thread pool budget
@@ -13,13 +40,18 @@
 //! them. Without the cap, N workers running pool-hungry jobs would
 //! oversubscribe the machine N×.
 
+use super::batcher::{Admission, Batcher};
+use super::cache::{job_key, ArtifactCache, CacheKey};
 use super::jobs::{ApproxJob, JobResult, MatrixPayload};
 use crate::error::{FgError, Result};
 use crate::metrics::Metrics;
 use crate::rng::rng;
 use crate::spsd::{CountingOracle, RbfOracle};
 use crate::svdstream::source::{CsrColumnStream, DenseColumnStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// Handle to a submitted job.
 pub struct JobHandle {
@@ -33,28 +65,134 @@ impl JobHandle {
             .recv()
             .map_err(|_| FgError::Coordinator("router shut down before job completed".into()))?
     }
+
+    /// Block until the job completes or `timeout` elapses, whichever
+    /// comes first (elapsing maps to [`FgError::DeadlineExceeded`]; the
+    /// job itself keeps running to completion on its executor).
+    pub fn wait_timeout(self, timeout: Duration) -> Result<JobResult> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(result) => result,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                Err(FgError::DeadlineExceeded { waited_ms: timeout.as_millis() as u64 })
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Err(FgError::Coordinator("router shut down before job completed".into()))
+            }
+        }
+    }
 }
 
-type QueueItem = (ApproxJob, mpsc::Sender<Result<JobResult>>);
+/// Serving-layer configuration for [`Router::with_config`].
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Executor threads (≥ 1).
+    pub workers: usize,
+    /// Submit-queue bound; `0` = unbounded (no load shedding).
+    pub queue_depth: usize,
+    /// Artifact-cache byte budget; `0` disables the cache.
+    pub cache_bytes: usize,
+    /// Coalescing window for identical in-flight jobs;
+    /// `Duration::ZERO` disables batching.
+    pub batch_window: Duration,
+    /// Deadline applied to every [`Router::submit`]; `None` = jobs
+    /// never expire in the queue.
+    pub default_deadline: Option<Duration>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self::service(2)
+    }
+}
+
+impl ServeConfig {
+    /// Plain job-router behavior (what [`Router::new`] uses): no cache,
+    /// no batching, unbounded queue, no deadlines.
+    pub fn service(workers: usize) -> Self {
+        Self {
+            workers,
+            queue_depth: 0,
+            cache_bytes: 0,
+            batch_window: Duration::ZERO,
+            default_deadline: None,
+        }
+    }
+}
+
+/// State shared between the submit path and the executor threads.
+struct Shared {
+    metrics: Arc<Metrics>,
+    cache: Option<Mutex<ArtifactCache>>,
+    batcher: Batcher,
+    batching: bool,
+    queue_depth: usize,
+    queued: AtomicUsize,
+    peak: AtomicUsize,
+    default_deadline: Option<Duration>,
+}
+
+impl Shared {
+    /// Whether submissions need a [`CacheKey`] at all (fingerprinting
+    /// costs a pass over the payload — skip it for the plain router).
+    fn keyed(&self) -> bool {
+        self.cache.is_some() || self.batching
+    }
+
+    /// Record one end-to-end serve latency (submit → result in hand).
+    fn observe_latency(&self, kind: &str, submitted: Instant) {
+        let secs = submitted.elapsed().as_secs_f64();
+        self.metrics.observe("serve.latency", secs);
+        self.metrics.observe(&format!("serve.{kind}.latency"), secs);
+    }
+}
+
+struct QueueItem {
+    job: ApproxJob,
+    key: Option<CacheKey>,
+    /// Whether this submission leads a batch (must fan out on completion).
+    lead: bool,
+    reply: mpsc::Sender<Result<JobResult>>,
+    submitted: Instant,
+    deadline: Option<Instant>,
+}
 
 /// The router service.
 pub struct Router {
     tx: Option<mpsc::Sender<QueueItem>>,
     workers: Vec<std::thread::JoinHandle<()>>,
+    shared: Arc<Shared>,
     pub metrics: Arc<Metrics>,
 }
 
 impl Router {
-    /// Spawn `workers` executor threads.
+    /// Spawn `workers` executor threads with plain-router behavior
+    /// (no cache, no batching, no admission bound) — see
+    /// [`Router::with_config`] for the serving layer.
     pub fn new(workers: usize) -> Self {
-        assert!(workers >= 1);
+        Self::with_config(&ServeConfig::service(workers))
+    }
+
+    /// Spawn the serving layer described by `cfg`.
+    pub fn with_config(cfg: &ServeConfig) -> Self {
+        assert!(cfg.workers >= 1);
         let (tx, rx) = mpsc::channel::<QueueItem>();
         let rx = Arc::new(Mutex::new(rx));
         let metrics = Arc::new(Metrics::new());
-        let mut handles = Vec::with_capacity(workers);
-        for w in 0..workers {
+        let shared = Arc::new(Shared {
+            metrics: metrics.clone(),
+            cache: (cfg.cache_bytes > 0).then(|| Mutex::new(ArtifactCache::new(cfg.cache_bytes))),
+            batcher: Batcher::new(cfg.batch_window),
+            batching: cfg.batch_window > Duration::ZERO,
+            queue_depth: cfg.queue_depth,
+            queued: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
+            default_deadline: cfg.default_deadline,
+        });
+        let mut handles = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers {
             let rx = rx.clone();
-            let metrics = metrics.clone();
+            let shared = shared.clone();
+            let workers = cfg.workers;
             handles.push(std::thread::spawn(move || {
                 // This executor's share of the `threads` knob: nested
                 // pool regions opened by its jobs stay within it, so
@@ -63,27 +201,107 @@ impl Router {
                 crate::parallel::set_thread_budget(budget);
                 loop {
                     let item = rx.lock().unwrap().recv();
-                    let Ok((job, reply)) = item else { break };
-                    let kind = job.kind();
-                    metrics.add(&format!("router.{kind}.submitted"), 1);
-                    let result = metrics.time(&format!("router.{kind}.latency"), || execute(job));
-                    metrics.add(&format!("router.{kind}.completed"), 1);
-                    let _ = reply.send(result);
+                    let Ok(item) = item else { break };
+                    run_item(&shared, item);
                 }
             }));
         }
-        Self { tx: Some(tx), workers: handles, metrics }
+        Self { tx: Some(tx), workers: handles, shared, metrics }
     }
 
-    /// Submit a job; returns immediately.
-    pub fn submit(&self, job: ApproxJob) -> JobHandle {
+    /// Submit a job through the serving path (cache → batcher →
+    /// admission → queue); returns immediately with a [`JobHandle`]
+    /// unless the submit queue is full, in which case the request is
+    /// shed with [`FgError::Overloaded`].
+    ///
+    /// ```
+    /// use fastgmr::coordinator::{ApproxJob, JobResult, MatrixPayload, Router};
+    /// use fastgmr::cur::CurConfig;
+    /// use fastgmr::linalg::Mat;
+    ///
+    /// let router = Router::new(2);
+    /// let a = Mat::from_fn(24, 18, |i, j| ((i * 7 + j * 3) % 11) as f64);
+    /// let job =
+    ///     ApproxJob::Cur { a: MatrixPayload::Dense(a), cfg: CurConfig::fast(4, 4, 2), seed: 7 };
+    /// let JobResult::Cur { cur } = router.submit(job)?.wait()? else { unreachable!() };
+    /// assert_eq!((cur.c.shape(), cur.u.shape(), cur.r.shape()), ((24, 4), (4, 4), (4, 18)));
+    /// # Ok::<(), fastgmr::FgError>(())
+    /// ```
+    pub fn submit(&self, job: ApproxJob) -> Result<JobHandle> {
+        self.submit_with_deadline(job, self.shared.default_deadline)
+    }
+
+    /// [`Router::submit`] with an explicit per-job deadline override
+    /// (`None` = never expires). A job whose deadline passes while it is
+    /// still queued is failed with [`FgError::DeadlineExceeded`] at
+    /// dequeue, without occupying an executor.
+    pub fn submit_with_deadline(
+        &self,
+        job: ApproxJob,
+        deadline: Option<Duration>,
+    ) -> Result<JobHandle> {
+        let shared = &self.shared;
+        let submitted = Instant::now();
+        let kind = job.kind();
         let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx
-            .as_ref()
-            .expect("router already shut down")
-            .send((job, reply_tx))
-            .expect("router workers exited");
-        JobHandle { rx: reply_rx }
+        let handle = JobHandle { rx: reply_rx };
+
+        let key = shared.keyed().then(|| job_key(&job));
+
+        // 1. Artifact cache: a hit is the whole request.
+        if let (Some(key), Some(cache)) = (&key, &shared.cache) {
+            let hit = cache.lock().unwrap().get(key);
+            if let Some(result) = hit {
+                shared.metrics.add("serve.cache.hits", 1);
+                shared.observe_latency(kind, submitted);
+                let _ = reply_tx.send(Ok(result));
+                return Ok(handle);
+            }
+            shared.metrics.add("serve.cache.misses", 1);
+        }
+
+        // 2. Batcher: attach to an identical in-flight job if one opened
+        //    a window; otherwise lead (and fan out on completion).
+        let mut lead = false;
+        if let (Some(key), true) = (&key, shared.batching) {
+            match shared.batcher.join(*key, &reply_tx, submitted) {
+                Admission::Coalesced => {
+                    shared.metrics.add("serve.batch.coalesced", 1);
+                    return Ok(handle);
+                }
+                Admission::Lead => lead = true,
+                Admission::Solo => {}
+            }
+        }
+
+        // 3. Admission: bound the queue, shedding excess load.
+        let depth = shared.queued.fetch_add(1, Ordering::SeqCst) + 1;
+        if shared.queue_depth > 0 && depth > shared.queue_depth {
+            shared.queued.fetch_sub(1, Ordering::SeqCst);
+            shared.metrics.add("serve.shed", 1);
+            if let (Some(key), true) = (&key, lead) {
+                shared.batcher.abort(key, shared.queue_depth);
+            }
+            return Err(FgError::Overloaded { depth: shared.queue_depth });
+        }
+        shared.peak.fetch_max(depth, Ordering::SeqCst);
+        shared.metrics.set("serve.queue.depth", depth as u64);
+        shared.metrics.set("serve.queue.peak", shared.peak.load(Ordering::SeqCst) as u64);
+        shared.metrics.add(&format!("router.{kind}.submitted"), 1);
+
+        let deadline = deadline.map(|d| submitted + d);
+        let item = QueueItem { job, key, lead, reply: reply_tx, submitted, deadline };
+        self.tx.as_ref().expect("router already shut down").send(item).map_err(|_| {
+            FgError::Coordinator("router workers exited before job could be queued".into())
+        })?;
+        Ok(handle)
+    }
+
+    /// Inventory of cached artifacts in the `manifest.txt` line format
+    /// (see [`ArtifactCache::manifest`]); `None` when the cache is
+    /// disabled.
+    pub fn cache_manifest(&self) -> Option<String> {
+        self.shared.cache.as_ref().map(|c| c.lock().unwrap().manifest())
     }
 
     /// Drain and join workers.
@@ -102,6 +320,54 @@ impl Drop for Router {
             let _ = h.join();
         }
     }
+}
+
+/// Executor body for one dequeued item: deadline check, guarded
+/// execution, cache fill, batch fan-out, latency accounting.
+fn run_item(shared: &Shared, item: QueueItem) {
+    let QueueItem { job, key, lead, reply, submitted, deadline } = item;
+    let depth = shared.queued.fetch_sub(1, Ordering::SeqCst).saturating_sub(1);
+    shared.metrics.set("serve.queue.depth", depth as u64);
+    let kind = job.kind();
+
+    if let Some(d) = deadline {
+        if Instant::now() >= d {
+            shared.metrics.add("serve.deadline_expired", 1);
+            let waited_ms = submitted.elapsed().as_millis() as u64;
+            if let (Some(key), true) = (&key, lead) {
+                shared.batcher.complete(key, &Err(FgError::DeadlineExceeded { waited_ms }));
+            }
+            let _ = reply.send(Err(FgError::DeadlineExceeded { waited_ms }));
+            return;
+        }
+    }
+
+    // A panicking job must fail that job, not take down the executor:
+    // the daemon serves many independent requests.
+    let guarded = || catch_unwind(AssertUnwindSafe(|| execute(job)));
+    let result = shared
+        .metrics
+        .time(&format!("router.{kind}.latency"), guarded)
+        .unwrap_or_else(|_| Err(FgError::Runtime(format!("{kind} job panicked in executor"))));
+    shared.metrics.add(&format!("router.{kind}.completed"), 1);
+
+    if let (Some(key), Some(cache), Ok(res)) = (&key, &shared.cache, &result) {
+        let mut cache = cache.lock().unwrap();
+        let evicted = cache.insert(*key, res);
+        if evicted > 0 {
+            shared.metrics.add("serve.cache.evictions", evicted as u64);
+        }
+        shared.metrics.set("serve.cache.bytes", cache.bytes() as u64);
+        shared.metrics.set("serve.cache.entries", cache.len() as u64);
+    }
+
+    if let (Some(key), true) = (&key, lead) {
+        for waiter_submitted in shared.batcher.complete(key, &result) {
+            shared.observe_latency(kind, waiter_submitted);
+        }
+    }
+    shared.observe_latency(kind, submitted);
+    let _ = reply.send(result);
 }
 
 /// Execute one job (the worker body).

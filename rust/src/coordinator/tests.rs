@@ -128,37 +128,49 @@ fn router_executes_all_job_kinds() {
     let g_r = Mat::randn(5, 80, &mut r);
     let rr = crate::linalg::matmul(&g_r, &a);
 
-    let h1 = router.submit(ApproxJob::Gmr {
-        a: MatrixPayload::Dense(a.clone()),
-        c: c.clone(),
-        r: rr.clone(),
-        cfg: crate::gmr::FastGmrConfig::gaussian(48, 40),
-        seed: 7,
-    });
-    let h2 = router.submit(ApproxJob::GmrExact {
-        a: MatrixPayload::Dense(a.clone()),
-        c: c.clone(),
-        r: rr.clone(),
-    });
+    let h1 = router
+        .submit(ApproxJob::Gmr {
+            a: MatrixPayload::Dense(a.clone()),
+            c: c.clone(),
+            r: rr.clone(),
+            cfg: crate::gmr::FastGmrConfig::gaussian(48, 40),
+            seed: 7,
+        })
+        .unwrap();
+    let h2 = router
+        .submit(ApproxJob::GmrExact {
+            a: MatrixPayload::Dense(a.clone()),
+            c: c.clone(),
+            r: rr.clone(),
+        })
+        .unwrap();
     let x_pts = Mat::randn(100, 6, &mut r);
-    let h3 = router.submit(ApproxJob::SpsdKernel { x: x_pts, sigma: 0.4, c: 8, s: 40, seed: 8 });
-    let h4 = router.submit(ApproxJob::StreamSvd {
-        a: MatrixPayload::Dense(a.clone()),
-        cfg: FastSpSvdConfig::paper(4, 3, SketchKind::Gaussian),
-        block: 16,
-        seed: 9,
-    });
-    let h5 = router.submit(ApproxJob::Cur {
-        a: MatrixPayload::Dense(a.clone()),
-        cfg: crate::cur::CurConfig::fast(9, 7, 3),
-        seed: 10,
-    });
-    let h6 = router.submit(ApproxJob::StreamingCur {
-        a: MatrixPayload::Dense(a.clone()),
-        cfg: crate::cur::StreamingCurConfig::fast(9, 7, 4, 3),
-        block: 16,
-        seed: 11,
-    });
+    let h3 = router
+        .submit(ApproxJob::SpsdKernel { x: x_pts, sigma: 0.4, c: 8, s: 40, seed: 8 })
+        .unwrap();
+    let h4 = router
+        .submit(ApproxJob::StreamSvd {
+            a: MatrixPayload::Dense(a.clone()),
+            cfg: FastSpSvdConfig::paper(4, 3, SketchKind::Gaussian),
+            block: 16,
+            seed: 9,
+        })
+        .unwrap();
+    let h5 = router
+        .submit(ApproxJob::Cur {
+            a: MatrixPayload::Dense(a.clone()),
+            cfg: crate::cur::CurConfig::fast(9, 7, 3),
+            seed: 10,
+        })
+        .unwrap();
+    let h6 = router
+        .submit(ApproxJob::StreamingCur {
+            a: MatrixPayload::Dense(a.clone()),
+            cfg: crate::cur::StreamingCurConfig::fast(9, 7, 4, 3),
+            block: 16,
+            seed: 11,
+        })
+        .unwrap();
 
     match h1.wait().unwrap() {
         JobResult::Gmr { x } => assert_eq!(x.shape(), (6, 5)),
@@ -226,13 +238,14 @@ fn router_many_concurrent_jobs() {
         let c = crate::linalg::matmul(&a, &g_c);
         let g_r = Mat::randn(3, 40, &mut r);
         let rr = crate::linalg::matmul(&g_r, &a);
-        handles.push(router.submit(ApproxJob::Gmr {
+        let h = router.submit(ApproxJob::Gmr {
             a: MatrixPayload::Dense(a),
             c,
             r: rr,
             cfg: crate::gmr::FastGmrConfig::gaussian(24, 24),
             seed,
-        }));
+        });
+        handles.push(h.unwrap());
     }
     for h in handles {
         assert!(matches!(h.wait().unwrap(), JobResult::Gmr { .. }));
@@ -286,4 +299,188 @@ fn payload_helpers() {
     assert_eq!(jobs::default_kind_for(&p).name(), "gaussian");
     let sp = MatrixPayload::Sparse(crate::sparse::Csr::from_triplets(4, 4, vec![]));
     assert_eq!(jobs::default_kind_for(&sp).name(), "count");
+}
+
+// ---- serving layer: admission, deadlines, cache, batching -----------
+
+use crate::coordinator::router::ServeConfig;
+use crate::error::FgError;
+use std::time::Duration;
+
+/// A job heavy enough (hundreds-of-ms scale) to occupy a single worker
+/// while the test submits fast follow-ups — the timing anchor for the
+/// admission/deadline/batching tests.
+fn slow_job(seed: u64) -> ApproxJob {
+    ApproxJob::StreamSvd {
+        a: MatrixPayload::Dense(test_matrix(260, 240, seed)),
+        cfg: FastSpSvdConfig::paper(10, 8, SketchKind::Gaussian),
+        block: 32,
+        seed,
+    }
+}
+
+fn quick_cur_job(a: &Mat, seed: u64) -> ApproxJob {
+    ApproxJob::Cur {
+        a: MatrixPayload::Dense(a.clone()),
+        cfg: crate::cur::CurConfig::fast(6, 5, 3),
+        seed,
+    }
+}
+
+#[test]
+fn submit_sheds_with_overloaded_when_queue_full() {
+    let router = Router::with_config(&ServeConfig {
+        workers: 1,
+        queue_depth: 2,
+        ..ServeConfig::service(1)
+    });
+    let a = test_matrix(50, 40, 60);
+    // Occupy the single worker, then overfill the bounded queue.
+    let occupier = router.submit(slow_job(61)).unwrap();
+    let mut accepted = Vec::new();
+    let mut shed = 0;
+    for seed in 0..3u64 {
+        match router.submit(quick_cur_job(&a, seed)) {
+            Ok(h) => accepted.push(h),
+            Err(FgError::Overloaded { depth }) => {
+                assert_eq!(depth, 2, "shed error must report the configured bound");
+                shed += 1;
+            }
+            Err(e) => panic!("unexpected error kind: {e}"),
+        }
+    }
+    assert!(shed >= 1, "a 3rd submit against a depth-2 queue must shed");
+    assert_eq!(router.metrics.get("serve.shed"), shed);
+    // Shedding must not corrupt the queue: everything accepted completes.
+    assert!(matches!(occupier.wait().unwrap(), JobResult::Svd { .. }));
+    let accepted_n = accepted.len() as u64;
+    for h in accepted {
+        assert!(matches!(h.wait().unwrap(), JobResult::Cur { .. }));
+    }
+    assert_eq!(router.metrics.get("router.cur.completed"), accepted_n);
+    assert!(router.metrics.get("serve.queue.peak") <= 2);
+}
+
+#[test]
+fn deadline_expired_jobs_fail_cleanly() {
+    let router = Router::with_config(&ServeConfig::service(1));
+    let a = test_matrix(50, 40, 62);
+    let occupier = router.submit(slow_job(63)).unwrap();
+    // Expires in the queue while the occupier holds the worker.
+    let doomed = router.submit_with_deadline(quick_cur_job(&a, 0), Some(Duration::from_millis(1)));
+    let alive = router.submit(quick_cur_job(&a, 1)).unwrap();
+    match doomed.unwrap().wait() {
+        Err(FgError::DeadlineExceeded { waited_ms }) => {
+            assert!(waited_ms >= 1, "expired job must report its queue wait");
+        }
+        Err(e) => panic!("expected DeadlineExceeded, got error: {e}"),
+        Ok(_) => panic!("expected DeadlineExceeded, got a result"),
+    }
+    // The executor survives: jobs behind the expired one still complete.
+    assert!(matches!(alive.wait().unwrap(), JobResult::Cur { .. }));
+    assert!(matches!(occupier.wait().unwrap(), JobResult::Svd { .. }));
+    assert_eq!(router.metrics.get("serve.deadline_expired"), 1);
+    assert_eq!(router.metrics.get("router.cur.completed"), 1, "expired jobs never execute");
+
+    // Caller-side timeout: waiting stops, the job itself still runs.
+    let slow = router.submit(slow_job(64)).unwrap();
+    match slow.wait_timeout(Duration::from_millis(1)) {
+        Err(FgError::DeadlineExceeded { waited_ms }) => assert_eq!(waited_ms, 1),
+        Err(e) => panic!("expected wait_timeout to expire, got error: {e}"),
+        Ok(_) => panic!("expected wait_timeout to expire, got a result"),
+    }
+    router.shutdown();
+}
+
+#[test]
+fn panicking_job_does_not_poison_the_executor() {
+    let router = Router::with_config(&ServeConfig::service(1));
+    let a = test_matrix(40, 30, 65);
+    // C has the wrong row count: solve_exact asserts, the job panics.
+    let bad = ApproxJob::GmrExact {
+        a: MatrixPayload::Dense(a.clone()),
+        c: Mat::zeros(12, 4),
+        r: Mat::zeros(3, 30),
+    };
+    let h_bad = router.submit(bad).unwrap();
+    match h_bad.wait() {
+        Err(FgError::Runtime(msg)) => {
+            assert!(msg.contains("panicked"), "panic must surface as a Runtime error: {msg}")
+        }
+        Err(e) => panic!("expected a Runtime error from the panicking job, got: {e}"),
+        Ok(_) => panic!("expected a Runtime error from the panicking job, got a result"),
+    }
+    // Same worker thread keeps serving.
+    let h_ok = router.submit(quick_cur_job(&a, 2)).unwrap();
+    assert!(matches!(h_ok.wait().unwrap(), JobResult::Cur { .. }));
+    assert_eq!(router.metrics.get("router.gmr_exact.completed"), 1);
+    assert_eq!(router.metrics.get("router.cur.completed"), 1);
+}
+
+#[test]
+fn cache_hit_returns_bitwise_identical_result() {
+    let router = Router::with_config(&ServeConfig {
+        workers: 2,
+        cache_bytes: 64 << 20,
+        ..ServeConfig::service(2)
+    });
+    let a = test_matrix(80, 60, 66);
+    let job = |seed| ApproxJob::Cur {
+        a: MatrixPayload::Dense(a.clone()),
+        cfg: crate::cur::CurConfig::fast(8, 6, 3),
+        seed,
+    };
+    let JobResult::Cur { cur: cold } = router.submit(job(5)).unwrap().wait().unwrap() else {
+        panic!("wrong result kind")
+    };
+    let JobResult::Cur { cur: warm } = router.submit(job(5)).unwrap().wait().unwrap() else {
+        panic!("wrong result kind")
+    };
+    assert_eq!(router.metrics.get("serve.cache.hits"), 1);
+    assert_eq!(router.metrics.get("serve.cache.misses"), 1);
+    assert_eq!(router.metrics.get("router.cur.completed"), 1, "the hit must not execute");
+    // The serving contract: a hit is a clone of the stored artifact, so
+    // it is *bitwise* identical to the cold compute.
+    assert_eq!(cold.col_idx, warm.col_idx);
+    assert_eq!(cold.row_idx, warm.row_idx);
+    assert_eq!(cold.c.data(), warm.c.data());
+    assert_eq!(cold.u.data(), warm.u.data());
+    assert_eq!(cold.r.data(), warm.r.data());
+    // A different seed is a different key: miss, not a stale hit.
+    assert!(matches!(router.submit(job(6)).unwrap().wait().unwrap(), JobResult::Cur { .. }));
+    assert_eq!(router.metrics.get("serve.cache.hits"), 1);
+    assert_eq!(router.metrics.get("serve.cache.misses"), 2);
+    assert_eq!(router.metrics.get("serve.cache.entries"), 2);
+    let manifest = router.cache_manifest().expect("cache enabled");
+    assert!(manifest.contains("2 entries"), "{manifest}");
+    assert!(manifest.contains("cur_"), "{manifest}");
+}
+
+#[test]
+fn batch_window_coalesces_identical_inflight_jobs() {
+    let router = Router::with_config(&ServeConfig {
+        workers: 1,
+        batch_window: Duration::from_secs(5),
+        ..ServeConfig::service(1)
+    });
+    let a = test_matrix(70, 50, 67);
+    // The occupier pins the single worker, so the leader below stays
+    // in-flight (queued) while the two followers coalesce onto it.
+    let occupier = router.submit(slow_job(68)).unwrap();
+    let leader = router.submit(quick_cur_job(&a, 9)).unwrap();
+    let follower1 = router.submit(quick_cur_job(&a, 9)).unwrap();
+    let follower2 = router.submit(quick_cur_job(&a, 9)).unwrap();
+    assert_eq!(router.metrics.get("serve.batch.coalesced"), 2);
+    assert!(matches!(occupier.wait().unwrap(), JobResult::Svd { .. }));
+    let JobResult::Cur { cur: lead } = leader.wait().unwrap() else { panic!("wrong kind") };
+    let JobResult::Cur { cur: f1 } = follower1.wait().unwrap() else { panic!("wrong kind") };
+    let JobResult::Cur { cur: f2 } = follower2.wait().unwrap() else { panic!("wrong kind") };
+    // One execution fanned out to all three waiters, bitwise.
+    assert_eq!(router.metrics.get("router.cur.completed"), 1);
+    for got in [&f1, &f2] {
+        assert_eq!(lead.col_idx, got.col_idx);
+        assert_eq!(lead.c.data(), got.c.data());
+        assert_eq!(lead.u.data(), got.u.data());
+        assert_eq!(lead.r.data(), got.r.data());
+    }
 }

@@ -100,7 +100,9 @@ impl CurConfig {
     }
 }
 
-/// A computed CUR decomposition `A ≈ C U R`.
+/// A computed CUR decomposition `A ≈ C U R` (clonable so the serving
+/// layer's artifact cache can hand copies to repeated queries).
+#[derive(Clone)]
 pub struct CurDecomposition {
     /// Selected column indices (sorted ascending).
     pub col_idx: Vec<usize>,

@@ -13,6 +13,13 @@ pub enum FgError {
     Config(String),
     Data(String),
     Coordinator(String),
+    /// The serving layer's bounded submit queue is at capacity: the
+    /// request was shed at admission (load-shedding backpressure)
+    /// instead of being queued behind work it would only slow down.
+    Overloaded { depth: usize },
+    /// A job's deadline elapsed before an executor could complete it —
+    /// either it expired while queued or the caller stopped waiting.
+    DeadlineExceeded { waited_ms: u64 },
     Io(std::io::Error),
 }
 
@@ -32,6 +39,12 @@ impl fmt::Display for FgError {
             FgError::Config(msg) => write!(f, "config error: {msg}"),
             FgError::Data(msg) => write!(f, "data error: {msg}"),
             FgError::Coordinator(msg) => write!(f, "coordinator error: {msg}"),
+            FgError::Overloaded { depth } => {
+                write!(f, "server overloaded: submit queue full at depth {depth}; request shed")
+            }
+            FgError::DeadlineExceeded { waited_ms } => {
+                write!(f, "deadline exceeded: job waited {waited_ms} ms without completing")
+            }
             FgError::Io(e) => e.fmt(f),
         }
     }

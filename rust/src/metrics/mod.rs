@@ -3,9 +3,12 @@
 //!
 //! Consumers: the job [`crate::coordinator::Router`] (per-kind
 //! submitted/completed counts and latency histograms, including the
-//! `cur_stream` kind) and the streaming pipelines (batch timings, block
+//! `cur_stream` kind), the serving layer (the `serve.*` counters,
+//! gauges, and end-to-end latency histograms — naming convention in the
+//! README §Serving), and the streaming pipelines (batch timings, block
 //! and column counts, reservoir occupancy gauges). `report()` renders
-//! the snapshot the `pipeline`/`serve` CLI subcommands print.
+//! the snapshot the `pipeline`/`serve` CLI subcommands print, with
+//! p50/p95/p99 per histogram.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -65,10 +68,11 @@ impl Metrics {
         }
         for (name, h) in self.histograms.lock().unwrap().iter() {
             out.push_str(&format!(
-                "{name}: n={} mean={:.6}s p50={:.6}s p99={:.6}s max={:.6}s\n",
+                "{name}: n={} mean={:.6}s p50={:.6}s p95={:.6}s p99={:.6}s max={:.6}s\n",
                 h.count,
                 h.mean(),
                 h.quantile(0.5),
+                h.quantile(0.95),
                 h.quantile(0.99),
                 h.max
             ));
@@ -79,6 +83,21 @@ impl Metrics {
     /// Read a counter's current value.
     pub fn get(&self, name: &str) -> u64 {
         self.counter(name).load(Ordering::Relaxed)
+    }
+
+    /// Read a histogram quantile by name. Both a missing histogram and
+    /// an empty one report `0.0` — the "no samples yet" convention (see
+    /// [`Histogram::quantile`]) — so idle serve loops can feed p99
+    /// gauges from this without ever reading a garbage boundary value.
+    pub fn quantile(&self, name: &str, q: f64) -> f64 {
+        self.histograms.lock().unwrap().get(name).map_or(0.0, |h| h.quantile(q))
+    }
+
+    /// Remove and return a histogram (empty if it was never recorded),
+    /// so a bench can read one phase's percentiles — cold vs warm cache,
+    /// say — without the next phase's samples mixing in.
+    pub fn take_histogram(&self, name: &str) -> Histogram {
+        self.histograms.lock().unwrap().remove(name).unwrap_or_default()
     }
 }
 
@@ -124,12 +143,29 @@ impl Histogram {
         }
     }
 
-    /// Approximate quantile from bucket boundaries.
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Largest recorded sample (0.0 when empty).
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Approximate quantile from the log-bucket boundaries.
+    ///
+    /// Convention: an **empty histogram returns `0.0` for every `q`** —
+    /// never a bucket boundary or stale `max` — so percentile gauges
+    /// computed on idle serve loops read as "no samples", not garbage
+    /// (pinned by `empty_histogram_quantile_is_zero`). On a non-empty
+    /// histogram `q ≤ 0` clamps to the smallest observed bucket and
+    /// `q ≥ 1` to the largest.
     pub fn quantile(&self, q: f64) -> f64 {
         if self.count == 0 {
             return 0.0;
         }
-        let target = (q * self.count as f64).ceil() as u64;
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
         let mut seen = 0;
         for (i, &b) in self.buckets.iter().enumerate() {
             seen += b;
@@ -183,6 +219,39 @@ mod tests {
         let v = m.time("op", || 42);
         assert_eq!(v, 42);
         assert!(m.report().contains("op:"));
+        assert!(m.report().contains("p95="), "report must surface p95 alongside p50/p99");
+    }
+
+    /// The serving loop reads p99 gauges even when nothing has been
+    /// recorded yet — empty and missing histograms must report 0.0,
+    /// never a bucket boundary or a stale max.
+    #[test]
+    fn empty_histogram_quantile_is_zero() {
+        let h = Histogram::default();
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 0.0, "empty histogram q={q}");
+        }
+        let m = Metrics::new();
+        assert_eq!(m.quantile("never.recorded", 0.99), 0.0);
+        // Non-empty: q <= 0 clamps to the smallest observed bucket
+        // instead of reporting the 1 ns floor for a 10 ms sample.
+        let mut h = Histogram::default();
+        h.record(0.01);
+        assert_eq!(h.quantile(0.0), h.quantile(1.0));
+        assert!(h.quantile(0.0) > 1e-9);
+    }
+
+    #[test]
+    fn take_histogram_separates_phases() {
+        let m = Metrics::new();
+        m.observe("lat", 0.5);
+        let cold = m.take_histogram("lat");
+        assert_eq!(cold.count(), 1);
+        m.observe("lat", 0.001);
+        let warm = m.take_histogram("lat");
+        assert_eq!(warm.count(), 1);
+        assert!(warm.quantile(0.5) < cold.quantile(0.5));
+        assert_eq!(m.take_histogram("lat").count(), 0);
     }
 
     #[test]

@@ -198,13 +198,41 @@ fn global_threads_knob_end_to_end() {
         let bst = crate::linalg::Mat::randn(500, 40, &mut rsp);
         let spmm = sp.spmm(&bs);
         let spmm_t = sp.spmm_t(&bst);
-        (m, k, two, qr, svd, eig, sol.x, sol_count.x, cur, scur, spmm, spmm_t)
+        // Served CUR through the caching router: executors install
+        // budget shares of the knob, and the artifact-cache hit must be
+        // a bitwise clone of the cold compute it amortizes.
+        let router = crate::coordinator::Router::with_config(&crate::coordinator::ServeConfig {
+            workers: 2,
+            cache_bytes: 64 << 20,
+            ..crate::coordinator::ServeConfig::service(2)
+        });
+        let serve_job = || crate::coordinator::ApproxJob::Cur {
+            a: crate::coordinator::MatrixPayload::Dense(a.clone()),
+            cfg: cur_cfg.clone(),
+            seed: 21,
+        };
+        let crate::coordinator::JobResult::Cur { cur: served_cold } =
+            router.submit(serve_job()).unwrap().wait().unwrap()
+        else {
+            panic!("wrong result kind")
+        };
+        let crate::coordinator::JobResult::Cur { cur: served } =
+            router.submit(serve_job()).unwrap().wait().unwrap()
+        else {
+            panic!("wrong result kind")
+        };
+        assert_eq!(router.metrics.get("serve.cache.hits"), 1, "second submit must hit the cache");
+        assert_eq!(served_cold.col_idx, served.col_idx, "cache hit not bitwise vs cold compute");
+        assert_eq!(served_cold.c.data(), served.c.data(), "cache hit not bitwise vs cold compute");
+        assert_eq!(served_cold.u.data(), served.u.data(), "cache hit not bitwise vs cold compute");
+        assert_eq!(served_cold.r.data(), served.r.data(), "cache hit not bitwise vs cold compute");
+        (m, k, two, qr, svd, eig, sol.x, sol_count.x, cur, scur, spmm, spmm_t, served)
     };
 
     set_threads(1);
-    let (m1, k1, two1, qr1, svd1, eig1, x1, xc1, cur1, scur1, sp1, spt1) = run_all();
+    let (m1, k1, two1, qr1, svd1, eig1, x1, xc1, cur1, scur1, sp1, spt1, served1) = run_all();
     set_threads(4);
-    let (m4, k4, two4, qr4, svd4, eig4, x4, xc4, cur4, scur4, sp4, spt4) = run_all();
+    let (m4, k4, two4, qr4, svd4, eig4, x4, xc4, cur4, scur4, sp4, spt4, served4) = run_all();
     set_threads(0); // restore auto-detect
 
     assert_eq!(m1.data(), m4.data(), "matmul dispatch not bitwise across thread counts");
@@ -258,4 +286,28 @@ fn global_threads_knob_end_to_end() {
     );
     assert_close(&scur4.cur.u, &scur1.cur.u, 1e-12, "streaming CUR core threads=1 vs 4");
     assert_close(&scur4.cur.r, &scur1.cur.r, 1e-12, "streaming CUR rows threads=1 vs 4");
+    // Served CUR contract across thread counts mirrors the direct one:
+    // the routed job runs under per-executor budget shares of the knob,
+    // so its selection/gathers stay bitwise and the core stays ≤ 1e-12.
+    assert_eq!(
+        served1.col_idx,
+        served4.col_idx,
+        "served CUR column selection not bitwise across thread counts"
+    );
+    assert_eq!(
+        served1.row_idx,
+        served4.row_idx,
+        "served CUR row selection not bitwise across thread counts"
+    );
+    assert_eq!(
+        served1.c.data(),
+        served4.c.data(),
+        "served CUR column gather not bitwise across thread counts"
+    );
+    assert_eq!(
+        served1.r.data(),
+        served4.r.data(),
+        "served CUR row gather not bitwise across thread counts"
+    );
+    assert_close(&served4.u, &served1.u, 1e-12, "served CUR core threads=1 vs 4");
 }

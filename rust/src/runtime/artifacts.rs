@@ -23,6 +23,36 @@ pub struct ManifestEntry {
     pub golden_path: Option<PathBuf>,
 }
 
+impl ManifestEntry {
+    /// Render back to the one-line `manifest.txt` format that
+    /// [`Manifest::load`] parses (paths reduce to their file names,
+    /// which `load` re-joins onto the manifest directory). The serving
+    /// layer's artifact cache reuses this shape for its inventory
+    /// listing, so cached factorizations and AOT graphs read the same.
+    pub fn to_line(&self) -> String {
+        fn fname(p: &Path) -> String {
+            match p.file_name() {
+                Some(s) => s.to_string_lossy().into_owned(),
+                None => p.display().to_string(),
+            }
+        }
+        fn shapes(s: &[(usize, usize)]) -> String {
+            s.iter().map(|(r, c)| format!("{r}x{c}")).collect::<Vec<_>>().join(",")
+        }
+        let mut line = format!("graph {} file={}", self.name, fname(&self.hlo_path));
+        if !self.input_shapes.is_empty() {
+            line.push_str(&format!(" inputs={}", shapes(&self.input_shapes)));
+        }
+        if !self.output_shapes.is_empty() {
+            line.push_str(&format!(" outputs={}", shapes(&self.output_shapes)));
+        }
+        if let Some(g) = &self.golden_path {
+            line.push_str(&format!(" golden={}", fname(g)));
+        }
+        line
+    }
+}
+
 /// Parsed manifest.
 #[derive(Clone, Debug, Default)]
 pub struct Manifest {
@@ -129,6 +159,19 @@ mod tests {
         assert!(g2.golden_path.is_none());
         assert!(m.get("missing").is_err());
         std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn to_line_roundtrips_through_parse() {
+        let dir = Path::new("/tmp/fastgmr_manifest_roundtrip");
+        let line = "graph g1 file=g1.hlo.txt inputs=4x3,3x2 outputs=4x2 golden=g1.golden";
+        let entry = Manifest::parse_line(dir, line).unwrap();
+        assert_eq!(entry.to_line(), line);
+        let bare = Manifest::parse_line(dir, "graph g2 file=g2.hlo.txt outputs=8x8").unwrap();
+        assert_eq!(bare.to_line(), "graph g2 file=g2.hlo.txt outputs=8x8");
+        let again = Manifest::parse_line(dir, &bare.to_line()).unwrap();
+        assert_eq!(again.output_shapes, bare.output_shapes);
+        assert!(again.golden_path.is_none());
     }
 
     #[test]
