@@ -10,19 +10,30 @@
 //! magnitude under cold p50 (a fingerprint pass plus a clone vs a
 //! factorization), and warm hits equal the request count.
 //!
+//! A third **traced** phase replays the cold workload against a fresh
+//! daemon with a [`crate::obs::TraceCollector`] installed, measuring the
+//! overhead of span tracing on a fully-cold request stream and deriving
+//! the per-phase attribution (sketch/solve/gather/... self-time shares)
+//! from the recorded spans. The Chrome trace and the Prometheus metrics
+//! exposition are written as CI artifacts (`results/TRACE_serve.json`,
+//! `results/METRICS_serve.prom`).
+//!
 //! Emits `results/BENCH_serve.json` (CI artifact) and `PERF`-prefixed
 //! stdout lines; the CI bench step fails if the warm phase records no
-//! cache hits or its p50 is not under the cold p50. EXPERIMENTS.md
-//! §Serving tracks the numbers.
+//! cache hits, its p50 is not under the cold p50, or the traced p50
+//! regresses more than 10% over the cold p50. EXPERIMENTS.md §Serving
+//! tracks the numbers.
 
 use super::harness::{f4, secs, BenchCtx, Profile};
 use crate::coordinator::{ApproxJob, MatrixPayload, Router, ServeConfig};
 use crate::cur::CurConfig;
 use crate::data::{synth_dense, SpectrumKind};
 use crate::linalg::Mat;
+use crate::obs::TraceCollector;
 use crate::rng::rng;
 use crate::sketch::SketchKind;
 use crate::svdstream::FastSpSvdConfig;
+use std::sync::Arc;
 
 /// One measured phase for the JSON artifact.
 struct Phase {
@@ -104,7 +115,49 @@ pub fn run(ctx: &mut BenchCtx) {
             cache_hits: hits,
         });
     }
-    let warm = phases.last().expect("two phases");
+    router.shutdown();
+
+    // Traced phase: a fresh daemon (empty cache, so every request is
+    // cold again) with a span collector installed — traced p50 vs cold
+    // p50 is the tracing overhead, guarded at ≤ 10% in CI.
+    let trace = Arc::new(TraceCollector::new());
+    let traced_router = Router::with_config(&ServeConfig {
+        workers: 2,
+        cache_bytes: 256 << 20,
+        trace: Some(trace.clone()),
+        ..ServeConfig::service(2)
+    });
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..jobs)
+        .map(|j| traced_router.submit(job(j)).expect("unbounded queue must not shed"))
+        .collect();
+    for h in handles {
+        h.wait().expect("serve bench job failed");
+    }
+    let seconds = t0.elapsed().as_secs_f64();
+    let hist = traced_router.metrics.take_histogram("serve.latency");
+    assert_eq!(hist.count(), jobs as u64, "every traced job must record one serve latency");
+    phases.push(Phase {
+        name: "traced",
+        seconds,
+        jobs_per_s: jobs as f64 / seconds,
+        p50: hist.quantile(0.5),
+        p95: hist.quantile(0.95),
+        p99: hist.quantile(0.99),
+        cache_hits: traced_router.metrics.get("serve.cache.hits"),
+    });
+    let prom = traced_router.metrics.prometheus();
+    // Join the executors before exporting so every span tree is closed.
+    traced_router.shutdown();
+
+    let by_cat = trace.seconds_by_category();
+    let total_self: f64 = by_cat.values().sum();
+    let attribution: Vec<(String, f64)> = by_cat
+        .iter()
+        .map(|(cat, s)| (cat.to_string(), if total_self > 0.0 { s / total_self } else { 0.0 }))
+        .collect();
+
+    let warm = &phases[1];
     assert_eq!(warm.cache_hits, jobs as u64, "warm replay must hit on every request");
 
     let table: Vec<Vec<String>> = phases
@@ -137,13 +190,23 @@ pub fn run(ctx: &mut BenchCtx) {
     }
     let speedup = phases[0].p50 / warm.p50.max(1e-9);
     ctx.line(&format!("PERF serve warm/cold p50 speedup: {}x", f4(speedup)));
-    write_json(jobs, &phases);
+    let overhead = phases[2].p50 / phases[0].p50.max(1e-9);
+    ctx.line(&format!("PERF serve traced/cold p50 ratio: {}", f4(overhead)));
+    let shares: Vec<String> =
+        attribution.iter().map(|(cat, f)| format!("{cat} {:.1}%", 100.0 * f)).collect();
+    ctx.line(&format!(
+        "PERF serve traced attribution ({} spans, self-time): {}",
+        trace.len(),
+        shares.join(", ")
+    ));
+    write_json(jobs, &phases, &attribution);
+    write_artifact("results/TRACE_serve.json", &trace.to_chrome_json());
+    write_artifact("results/METRICS_serve.prom", &prom);
     ctx.line("\nshape check: warm hits == jobs, warm p50 far below cold p50 (enforced in CI).");
-    router.shutdown();
 }
 
 /// Hand-rolled JSON artifact (no serde in the offline vendor set).
-fn write_json(jobs: usize, phases: &[Phase]) {
+fn write_json(jobs: usize, phases: &[Phase], attribution: &[(String, f64)]) {
     let mut out = String::from("{\n");
     out.push_str("  \"bench\": \"fig_serve\",\n");
     out.push_str(&format!("  \"threads\": {},\n", crate::parallel::threads()));
@@ -157,9 +220,25 @@ fn write_json(jobs: usize, phases: &[Phase]) {
             p.name, p.seconds, p.jobs_per_s, p.p50, p.p95, p.p99, p.cache_hits
         ));
     }
-    out.push_str("  ]\n}\n");
+    out.push_str("  ],\n");
+    // Self-time share of each span category in the traced phase — the
+    // per-phase attribution the serving figure tracks over time.
+    out.push_str("  \"traced_attribution\": {\n");
+    for (i, (cat, f)) in attribution.iter().enumerate() {
+        let comma = if i + 1 < attribution.len() { "," } else { "" };
+        out.push_str(&format!("    \"{cat}\": {f:.6}{comma}\n"));
+    }
+    out.push_str("  }\n}\n");
     let path = "results/BENCH_serve.json";
     match std::fs::write(path, &out) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+/// Write an exported observability artifact next to the bench JSON.
+fn write_artifact(path: &str, data: &str) {
+    match std::fs::write(path, data) {
         Ok(()) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write {path}: {e}"),
     }

@@ -17,6 +17,12 @@
 //! sketch/matmul layer (`crate::parallel`); `0` auto-detects, `1`
 //! reproduces single-threaded results bitwise. Config files can set the
 //! same knob as `[parallel] threads`.
+//!
+//! `serve`, `pipeline`, and `cur` additionally accept the observability
+//! flags `--trace-out FILE` (span trace: Chrome trace-event JSON, or
+//! JSONL when `FILE` ends in `.jsonl` — see [`crate::obs`]) and
+//! `--metrics-out FILE` (Prometheus text exposition of the run's
+//! metrics registry).
 
 use crate::config::Config;
 use crate::coordinator::{
@@ -26,11 +32,14 @@ use crate::cur::{self, CurConfig, SelectionStrategy, StreamingCurConfig};
 use crate::data::{synth_dense, SpectrumKind};
 use crate::error::{FgError, Result};
 use crate::linalg::Mat;
+use crate::metrics::Metrics;
+use crate::obs::TraceCollector;
 use crate::rng::rng;
 use crate::sketch::SketchKind;
 use crate::svdstream::fast::FastSpSvdSketches;
 use crate::svdstream::source::DenseColumnStream;
 use crate::svdstream::FastSpSvdConfig;
+use std::sync::Arc;
 
 const USAGE: &str = "\
 fastgmr — Fast Generalized Matrix Regression (paper reproduction)
@@ -76,6 +85,13 @@ USAGE:
                  accepted tokens (also `[svd] sketch` in config files)
   --threads N    worker threads for the parallel layer (0 = auto-detect,
                  1 = bitwise single-threaded reproduction)
+  --trace-out F  (serve | pipeline | cur) write the run's span trace to F
+                 on exit: Chrome trace-event JSON for chrome://tracing /
+                 Perfetto, or line-oriented JSONL events when F ends in
+                 .jsonl; tracing is off (zero cost) without this flag
+  --metrics-out F  (serve | pipeline | cur) write the run's metrics
+                 registry to F as Prometheus text exposition (counters,
+                 gauges, and latency histograms with cumulative buckets)
 
 Bench targets: table1..table7, fig1, fig2, fig3, fig_cur, fig_curstream,
 fig_gemm, fig_linalg, fig_serve, perf (see DESIGN.md §5). `bench --smoke`
@@ -180,6 +196,55 @@ fn take_flag_value(args: &[String], flag: &str) -> (Vec<String>, Option<String>)
     (rest, value)
 }
 
+/// Observability flags shared by `serve`, `pipeline`, and `cur`:
+/// `--trace-out FILE` (span trace export) and `--metrics-out FILE`
+/// (Prometheus text exposition). Parsed and stripped up front so the
+/// subcommands' positional parsing never sees the file paths.
+struct ObsFlags {
+    trace_out: Option<String>,
+    metrics_out: Option<String>,
+    collector: Option<Arc<TraceCollector>>,
+}
+
+fn take_obs_flags(args: &[String]) -> Result<(Vec<String>, ObsFlags)> {
+    let (rest, trace_out) = take_flag_value(args, "--trace-out");
+    let (rest, metrics_out) = take_flag_value(&rest, "--metrics-out");
+    for (flag, v) in [("--trace-out", &trace_out), ("--metrics-out", &metrics_out)] {
+        if v.as_deref() == Some("") {
+            return Err(FgError::Config(format!("{flag}: expected a file path")));
+        }
+    }
+    // The collector only exists when tracing was requested — `None`
+    // keeps every span site on its zero-cost disabled path.
+    let collector = trace_out.as_ref().map(|_| Arc::new(TraceCollector::new()));
+    Ok((rest, ObsFlags { trace_out, metrics_out, collector }))
+}
+
+impl ObsFlags {
+    /// Collector handle for `ServeConfig::trace` / `obs::install`.
+    fn collector(&self) -> Option<Arc<TraceCollector>> {
+        self.collector.clone()
+    }
+
+    /// Write the requested export files. Called after the traced work
+    /// has completed (for `serve`, after `shutdown()` joined the
+    /// executors), so every span has been recorded.
+    fn write_outputs(&self, metrics: &Metrics) -> Result<()> {
+        if let (Some(path), Some(c)) = (&self.trace_out, &self.collector) {
+            let data = if path.ends_with(".jsonl") { c.to_jsonl() } else { c.to_chrome_json() };
+            std::fs::write(path, data)
+                .map_err(|e| FgError::Runtime(format!("--trace-out {path}: {e}")))?;
+            println!("wrote {path} ({} spans)", c.len());
+        }
+        if let Some(path) = &self.metrics_out {
+            std::fs::write(path, metrics.prometheus())
+                .map_err(|e| FgError::Runtime(format!("--metrics-out {path}: {e}")))?;
+            println!("wrote {path}");
+        }
+        Ok(())
+    }
+}
+
 /// Apply a `--threads N` override to the process-wide pool knob.
 fn apply_threads(spec: Option<&str>) -> Result<()> {
     if let Some(s) = spec {
@@ -192,6 +257,8 @@ fn apply_threads(spec: Option<&str>) -> Result<()> {
 }
 
 fn pipeline(args: &[String], cli_threads: bool) -> Result<()> {
+    let (args, obs_flags) = take_obs_flags(args)?;
+    let args = &args[..];
     let cfg = match flag_value(args, "--config") {
         Some(path) => Config::load(path)?,
         None => Config::default(),
@@ -226,7 +293,13 @@ fn pipeline(args: &[String], cli_threads: bool) -> Result<()> {
     let pipeline = StreamPipeline::new(PipelineConfig { workers, queue_depth: depth });
     let start = std::time::Instant::now();
     let mut stream = DenseColumnStream::new(&a, block);
-    let res = pipeline.run(&mut stream, &svd_cfg, &sketches)?;
+    // Install on this thread: the pipeline's stream/finalize spans are
+    // recorded on the driver thread (compute workers stay span-free so
+    // the trace structure is independent of the worker count).
+    crate::obs::install(obs_flags.collector());
+    let run = pipeline.run(&mut stream, &svd_cfg, &sketches);
+    crate::obs::install(None);
+    let res = run?;
     let secs = start.elapsed().as_secs_f64();
 
     let mut r2 = rng(seed + 1);
@@ -235,6 +308,7 @@ fn pipeline(args: &[String], cli_threads: bool) -> Result<()> {
     println!("blocks={} time={secs:.2}s throughput={:.1} cols/s", res.blocks, n as f64 / secs);
     println!("error ratio vs ‖A−A_k‖: {ratio:.4}");
     println!("{}", pipeline.metrics.report());
+    obs_flags.write_outputs(&pipeline.metrics)?;
     Ok(())
 }
 
@@ -253,6 +327,8 @@ fn parse_flag<T: std::str::FromStr>(args: &[String], flag: &str, default: T) -> 
 /// `fastgmr cur` — decompose a synthetic rank-`k` + noise matrix and
 /// compare the three core solvers against `‖A − A_k‖_F`.
 fn cur_cmd(args: &[String]) -> Result<()> {
+    let (args, obs_flags) = take_obs_flags(args)?;
+    let args = &args[..];
     let (m, n) = match flag_value(args, "--size").unwrap_or("1200x900").split_once('x') {
         Some((ms, ns)) => {
             let m = ms.parse().map_err(|_| FgError::Config(format!("--size: bad rows `{ms}`")))?;
@@ -277,7 +353,7 @@ fn cur_cmd(args: &[String]) -> Result<()> {
         if flag_value(args, "--selection").is_some() {
             println!("note: --selection is ignored with --stream (always subspace leverage)");
         }
-        return cur_stream_cmd(args, m, n, k, c, r, mult, seed, sketch);
+        return cur_stream_cmd(args, &obs_flags, m, n, k, c, r, mult, seed, sketch);
     }
 
     println!(
@@ -290,10 +366,13 @@ fn cur_cmd(args: &[String]) -> Result<()> {
     let mut rs = rng(seed);
     let a = synth_dense(m, n, k, SpectrumKind::Exponential { base: 0.85 }, 0.02, &mut rs);
     let input = crate::gmr::Input::Dense(&a);
+    let metrics = Metrics::new();
+    crate::obs::install(obs_flags.collector());
 
     let start = std::time::Instant::now();
     let (col_idx, cmat) = cur::select_columns(input, &selection, c, &mut rs);
     let (row_idx, rmat) = cur::select_rows(input, &selection, r, &mut rs);
+    metrics.observe("cur.select", start.elapsed().as_secs_f64());
     println!(
         "selected {} columns / {} rows in {:.3}s",
         col_idx.len(),
@@ -307,6 +386,7 @@ fn cur_cmd(args: &[String]) -> Result<()> {
 
     println!("{:>14}  {:>10}  {:>10}  {:>8}", "core", "residual", "vs ‖A−A_k‖", "t_core");
     let report = |name: &str, u: Mat, secs: f64| {
+        metrics.observe(&format!("cur.core.{name}"), secs);
         let res = crate::gmr::residual(input, &cmat, &u, &rmat);
         println!("{:>14}  {:>10.5}  {:>10.4}  {:>7.3}s", name, res, res / ak, secs);
     };
@@ -320,6 +400,8 @@ fn cur_cmd(args: &[String]) -> Result<()> {
     let t0 = std::time::Instant::now();
     let u = cur::core_stabilized(input, &cmat, &rmat);
     report("stabilized-qr", u, t0.elapsed().as_secs_f64());
+    crate::obs::install(None);
+    obs_flags.write_outputs(&metrics)?;
     Ok(())
 }
 
@@ -328,6 +410,7 @@ fn cur_cmd(args: &[String]) -> Result<()> {
 /// subspace-leverage path on the same synthetic matrix.
 fn cur_stream_cmd(
     args: &[String],
+    obs_flags: &ObsFlags,
     m: usize,
     n: usize,
     k: usize,
@@ -339,6 +422,9 @@ fn cur_stream_cmd(
 ) -> Result<()> {
     let block: usize = parse_flag(args, "--block", 256)?;
     let workers: usize = parse_flag(args, "--workers", 0)?;
+    // Traces both the in-memory reference (cur.select.*/cur.core) and
+    // the streaming pass (pipeline.stream, curstream.*) on this thread.
+    crate::obs::install(obs_flags.collector());
     println!(
         "cur --stream: A {m}x{n} rank-{k}+noise, c={c} r={r}, sketch={} (mult {mult}), \
          block={block}, workers={workers} (0=auto), threads={}",
@@ -379,7 +465,9 @@ fn cur_stream_cmd(
     let pipeline = StreamPipeline::new(PipelineConfig { workers, queue_depth: 4 });
     let mut stream = crate::svdstream::OnePassStream::new(DenseColumnStream::new(&a, block.max(1)));
     let t0 = std::time::Instant::now();
-    let res = pipeline.run_cur(&mut stream, &stream_cfg, &sketches, &mut rdraw)?;
+    let run = pipeline.run_cur(&mut stream, &stream_cfg, &sketches, &mut rdraw);
+    crate::obs::install(None);
+    let res = run?;
     let t_stream = t0.elapsed().as_secs_f64();
     let res_stream = res.cur.residual(input);
     println!(
@@ -392,6 +480,7 @@ fn cur_stream_cmd(
         n as f64 / t_stream
     );
     println!("\n{}", pipeline.metrics.report());
+    obs_flags.write_outputs(&pipeline.metrics)?;
     Ok(())
 }
 
@@ -401,6 +490,8 @@ fn cur_stream_cmd(
 /// artifact cache answers it without recomputing (the paper's
 /// one-sketch-many-queries amortization, served across requests).
 fn serve(args: &[String]) -> Result<()> {
+    let (args, obs_flags) = take_obs_flags(args)?;
+    let args = &args[..];
     let jobs: usize = parse_flag(args, "--jobs", 24)?;
     let workers: usize = parse_flag(args, "--workers", 2)?;
     let queue_depth: usize = parse_flag(args, "--queue-depth", 0)?;
@@ -413,6 +504,7 @@ fn serve(args: &[String]) -> Result<()> {
         cache_bytes: cache_mb << 20,
         batch_window: std::time::Duration::from_millis(batch_ms),
         default_deadline: (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms)),
+        trace: obs_flags.collector(),
     };
     let router = Router::with_config(&cfg);
     println!(
@@ -472,6 +564,10 @@ fn serve(args: &[String]) -> Result<()> {
     if let Some(manifest) = router.cache_manifest() {
         println!("{manifest}");
     }
+    let metrics = router.metrics.clone();
+    // Join the executors first so every job's span tree is recorded
+    // before the trace file is written.
     router.shutdown();
+    obs_flags.write_outputs(&metrics)?;
     Ok(())
 }

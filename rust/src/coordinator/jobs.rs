@@ -56,6 +56,11 @@ pub enum ApproxJob {
 }
 
 impl ApproxJob {
+    /// Every kind tag [`ApproxJob::kind`] can return, in variant order.
+    /// The router pre-creates per-kind counter handles from this list so
+    /// its hot path never touches the metrics registry lock.
+    pub const KINDS: [&'static str; 6] = ["gmr", "spsd", "svd", "gmr_exact", "cur", "cur_stream"];
+
     /// Job kind tag (metrics/routing).
     pub fn kind(&self) -> &'static str {
         match self {
@@ -65,6 +70,19 @@ impl ApproxJob {
             ApproxJob::GmrExact { .. } => "gmr_exact",
             ApproxJob::Cur { .. } => "cur",
             ApproxJob::StreamingCur { .. } => "cur_stream",
+        }
+    }
+
+    /// Input dimensions `(rows, cols)` — trace-span metadata. Kernel
+    /// jobs report the implicit n×n kernel matrix of their point set.
+    pub fn dims(&self) -> (usize, usize) {
+        match self {
+            ApproxJob::Gmr { a, .. }
+            | ApproxJob::StreamSvd { a, .. }
+            | ApproxJob::GmrExact { a, .. }
+            | ApproxJob::Cur { a, .. }
+            | ApproxJob::StreamingCur { a, .. } => (a.rows(), a.cols()),
+            ApproxJob::SpsdKernel { x, .. } => (x.rows(), x.rows()),
         }
     }
 

@@ -128,6 +128,10 @@ impl StreamPipeline {
         // the compute thread the double-buffered loop spawns.
         let budget = parallel::threads();
 
+        // One span per run, opened on this (driver) thread: the batch
+        // slot updates run on scoped compute threads with no installed
+        // collector, so span structure stays knob-invariant.
+        let mut stream_span = crate::obs::span("pipeline.stream", crate::obs::cat::STREAM);
         let mut sent = 0usize;
         let mut max_inflight = 0usize;
         let mut batch = read_batch(stream, slots);
@@ -195,6 +199,8 @@ impl StreamPipeline {
             self.metrics.add("pipeline.cols", batch_cols);
             batch = next;
         }
+        stream_span.meta("blocks", sent);
+        drop(stream_span);
         self.metrics.add("pipeline.blocks_sent", sent as u64);
         self.metrics.add("pipeline.max_queue_depth", max_inflight as u64);
 
@@ -211,9 +217,11 @@ impl StreamPipeline {
         }
         debug_assert_eq!(blocks, sent);
 
+        let fin_span = crate::obs::span("pipeline.finalize", crate::obs::cat::STREAM);
         let (u, sigma, v) = self
             .metrics
             .time("pipeline.finalize", || finalize(cfg, sketches, &c_acc, &r_acc, &m_acc));
+        drop(fin_span);
         Ok(SpSvdResult { u, sigma, v, blocks })
     }
 
@@ -252,8 +260,13 @@ impl StreamPipeline {
         // front (thread-local — invisible from the compute thread).
         let budget = parallel::threads();
 
+        // Driver-side span (compute threads have no collector), so the
+        // recorded structure is identical at every knob setting.
+        let mut stream_span = crate::obs::span("pipeline.stream", crate::obs::cat::STREAM);
+        let mut sent = 0usize;
         let mut batch = read_batch(stream, slots);
         while !batch.is_empty() {
+            sent += batch.len();
             let batch_cols: u64 = batch.iter().map(|(_, b)| b.cols() as u64).sum();
             let batch_len = batch.len() as u64;
             let used = batch.len();
@@ -292,11 +305,15 @@ impl StreamPipeline {
             self.metrics.add("pipeline.cur_cols", batch_cols);
             batch = next;
         }
+        stream_span.meta("blocks", sent);
+        drop(stream_span);
         self.metrics.set("pipeline.cur_reservoir_candidates", state.candidates() as u64);
 
+        let fin_span = crate::obs::span("pipeline.finalize", crate::obs::cat::STREAM);
         let result = self
             .metrics
             .time("pipeline.cur_finalize", || curstream::finalize(cfg, sketches, state, rng));
+        drop(fin_span);
         Ok(result)
     }
 }

@@ -45,11 +45,12 @@ use super::cache::{job_key, ArtifactCache, CacheKey};
 use super::jobs::{ApproxJob, JobResult, MatrixPayload};
 use crate::error::{FgError, Result};
 use crate::metrics::Metrics;
+use crate::obs::{self, TraceCollector};
 use crate::rng::rng;
 use crate::spsd::{CountingOracle, RbfOracle};
 use crate::svdstream::source::{CsrColumnStream, DenseColumnStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -97,6 +98,9 @@ pub struct ServeConfig {
     /// Deadline applied to every [`Router::submit`]; `None` = jobs
     /// never expire in the queue.
     pub default_deadline: Option<Duration>,
+    /// Trace collector installed on every executor thread; `None`
+    /// (the default) disables tracing at zero cost on the span path.
+    pub trace: Option<Arc<TraceCollector>>,
 }
 
 impl Default for ServeConfig {
@@ -115,8 +119,55 @@ impl ServeConfig {
             cache_bytes: 0,
             batch_window: Duration::ZERO,
             default_deadline: None,
+            trace: None,
         }
     }
+}
+
+/// Pre-resolved `Arc<AtomicU64>` handles for every serving-layer
+/// counter and gauge the submit/executor hot paths touch.
+/// [`Metrics::add`] takes the registry map lock per increment; these
+/// handles are the same atomics fetched once at router construction, so
+/// per-job accounting is a lock-free `fetch_add`/`store`.
+struct ServeCounters {
+    cache_hits: Arc<AtomicU64>,
+    cache_misses: Arc<AtomicU64>,
+    cache_evictions: Arc<AtomicU64>,
+    cache_bytes: Arc<AtomicU64>,
+    cache_entries: Arc<AtomicU64>,
+    coalesced: Arc<AtomicU64>,
+    shed: Arc<AtomicU64>,
+    deadline_expired: Arc<AtomicU64>,
+    queue_depth: Arc<AtomicU64>,
+    queue_peak: Arc<AtomicU64>,
+}
+
+impl ServeCounters {
+    fn new(metrics: &Metrics) -> Self {
+        Self {
+            cache_hits: metrics.counter("serve.cache.hits"),
+            cache_misses: metrics.counter("serve.cache.misses"),
+            cache_evictions: metrics.counter("serve.cache.evictions"),
+            cache_bytes: metrics.counter("serve.cache.bytes"),
+            cache_entries: metrics.counter("serve.cache.entries"),
+            coalesced: metrics.counter("serve.batch.coalesced"),
+            shed: metrics.counter("serve.shed"),
+            deadline_expired: metrics.counter("serve.deadline_expired"),
+            queue_depth: metrics.counter("serve.queue.depth"),
+            queue_peak: metrics.counter("serve.queue.peak"),
+        }
+    }
+}
+
+/// Per-kind counter handles plus pre-formatted histogram names (the
+/// histogram path locks anyway, but the `format!` per job does not need
+/// to happen on it).
+struct KindCounters {
+    kind: &'static str,
+    submitted: Arc<AtomicU64>,
+    completed: Arc<AtomicU64>,
+    router_latency: String,
+    serve_latency: String,
 }
 
 /// State shared between the submit path and the executor threads.
@@ -129,6 +180,9 @@ struct Shared {
     queued: AtomicUsize,
     peak: AtomicUsize,
     default_deadline: Option<Duration>,
+    serve: ServeCounters,
+    kinds: Vec<KindCounters>,
+    trace: Option<Arc<TraceCollector>>,
 }
 
 impl Shared {
@@ -138,11 +192,19 @@ impl Shared {
         self.cache.is_some() || self.batching
     }
 
+    /// The pre-resolved counter handles for a job kind.
+    fn kind_counters(&self, kind: &str) -> &KindCounters {
+        self.kinds
+            .iter()
+            .find(|k| k.kind == kind)
+            .expect("job kind missing from ApproxJob::KINDS")
+    }
+
     /// Record one end-to-end serve latency (submit → result in hand).
-    fn observe_latency(&self, kind: &str, submitted: Instant) {
+    fn observe_latency(&self, kc: &KindCounters, submitted: Instant) {
         let secs = submitted.elapsed().as_secs_f64();
         self.metrics.observe("serve.latency", secs);
-        self.metrics.observe(&format!("serve.{kind}.latency"), secs);
+        self.metrics.observe(&kc.serve_latency, secs);
     }
 }
 
@@ -178,6 +240,16 @@ impl Router {
         let (tx, rx) = mpsc::channel::<QueueItem>();
         let rx = Arc::new(Mutex::new(rx));
         let metrics = Arc::new(Metrics::new());
+        let kinds = ApproxJob::KINDS
+            .iter()
+            .map(|&kind| KindCounters {
+                kind,
+                submitted: metrics.counter(&format!("router.{kind}.submitted")),
+                completed: metrics.counter(&format!("router.{kind}.completed")),
+                router_latency: format!("router.{kind}.latency"),
+                serve_latency: format!("serve.{kind}.latency"),
+            })
+            .collect();
         let shared = Arc::new(Shared {
             metrics: metrics.clone(),
             cache: (cfg.cache_bytes > 0).then(|| Mutex::new(ArtifactCache::new(cfg.cache_bytes))),
@@ -187,6 +259,9 @@ impl Router {
             queued: AtomicUsize::new(0),
             peak: AtomicUsize::new(0),
             default_deadline: cfg.default_deadline,
+            serve: ServeCounters::new(&metrics),
+            kinds,
+            trace: cfg.trace.clone(),
         });
         let mut handles = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers {
@@ -199,6 +274,7 @@ impl Router {
                 // `workers × threads` never oversubscribes the machine.
                 let budget = crate::parallel::share_budget(crate::parallel::threads(), workers, w);
                 crate::parallel::set_thread_budget(budget);
+                obs::install(shared.trace.clone());
                 loop {
                     let item = rx.lock().unwrap().recv();
                     let Ok(item) = item else { break };
@@ -242,7 +318,7 @@ impl Router {
     ) -> Result<JobHandle> {
         let shared = &self.shared;
         let submitted = Instant::now();
-        let kind = job.kind();
+        let kc = shared.kind_counters(job.kind());
         let (reply_tx, reply_rx) = mpsc::channel();
         let handle = JobHandle { rx: reply_rx };
 
@@ -252,12 +328,12 @@ impl Router {
         if let (Some(key), Some(cache)) = (&key, &shared.cache) {
             let hit = cache.lock().unwrap().get(key);
             if let Some(result) = hit {
-                shared.metrics.add("serve.cache.hits", 1);
-                shared.observe_latency(kind, submitted);
+                shared.serve.cache_hits.fetch_add(1, Ordering::Relaxed);
+                shared.observe_latency(kc, submitted);
                 let _ = reply_tx.send(Ok(result));
                 return Ok(handle);
             }
-            shared.metrics.add("serve.cache.misses", 1);
+            shared.serve.cache_misses.fetch_add(1, Ordering::Relaxed);
         }
 
         // 2. Batcher: attach to an identical in-flight job if one opened
@@ -266,7 +342,7 @@ impl Router {
         if let (Some(key), true) = (&key, shared.batching) {
             match shared.batcher.join(*key, &reply_tx, submitted) {
                 Admission::Coalesced => {
-                    shared.metrics.add("serve.batch.coalesced", 1);
+                    shared.serve.coalesced.fetch_add(1, Ordering::Relaxed);
                     return Ok(handle);
                 }
                 Admission::Lead => lead = true,
@@ -278,16 +354,16 @@ impl Router {
         let depth = shared.queued.fetch_add(1, Ordering::SeqCst) + 1;
         if shared.queue_depth > 0 && depth > shared.queue_depth {
             shared.queued.fetch_sub(1, Ordering::SeqCst);
-            shared.metrics.add("serve.shed", 1);
+            shared.serve.shed.fetch_add(1, Ordering::Relaxed);
             if let (Some(key), true) = (&key, lead) {
                 shared.batcher.abort(key, shared.queue_depth);
             }
             return Err(FgError::Overloaded { depth: shared.queue_depth });
         }
         shared.peak.fetch_max(depth, Ordering::SeqCst);
-        shared.metrics.set("serve.queue.depth", depth as u64);
-        shared.metrics.set("serve.queue.peak", shared.peak.load(Ordering::SeqCst) as u64);
-        shared.metrics.add(&format!("router.{kind}.submitted"), 1);
+        shared.serve.queue_depth.store(depth as u64, Ordering::Relaxed);
+        shared.serve.queue_peak.store(shared.peak.load(Ordering::SeqCst) as u64, Ordering::Relaxed);
+        kc.submitted.fetch_add(1, Ordering::Relaxed);
 
         let deadline = deadline.map(|d| submitted + d);
         let item = QueueItem { job, key, lead, reply: reply_tx, submitted, deadline };
@@ -327,12 +403,13 @@ impl Drop for Router {
 fn run_item(shared: &Shared, item: QueueItem) {
     let QueueItem { job, key, lead, reply, submitted, deadline } = item;
     let depth = shared.queued.fetch_sub(1, Ordering::SeqCst).saturating_sub(1);
-    shared.metrics.set("serve.queue.depth", depth as u64);
+    shared.serve.queue_depth.store(depth as u64, Ordering::Relaxed);
     let kind = job.kind();
+    let kc = shared.kind_counters(kind);
 
     if let Some(d) = deadline {
         if Instant::now() >= d {
-            shared.metrics.add("serve.deadline_expired", 1);
+            shared.serve.deadline_expired.fetch_add(1, Ordering::Relaxed);
             let waited_ms = submitted.elapsed().as_millis() as u64;
             if let (Some(key), true) = (&key, lead) {
                 shared.batcher.complete(key, &Err(FgError::DeadlineExceeded { waited_ms }));
@@ -342,31 +419,45 @@ fn run_item(shared: &Shared, item: QueueItem) {
         }
     }
 
+    // Job-scoped root span: every phase the algorithm opens below nests
+    // under it, so one job is one tree in the exported trace.
+    let mut root = obs::span("router.dispatch", obs::cat::DISPATCH);
+    if root.active() {
+        let (rows, cols) = job.dims();
+        root.meta("kind", kind);
+        root.meta("rows", rows);
+        root.meta("cols", cols);
+        root.meta("weight", job.weight());
+    }
+
     // A panicking job must fail that job, not take down the executor:
     // the daemon serves many independent requests.
     let guarded = || catch_unwind(AssertUnwindSafe(|| execute(job)));
     let result = shared
         .metrics
-        .time(&format!("router.{kind}.latency"), guarded)
+        .time(&kc.router_latency, guarded)
         .unwrap_or_else(|_| Err(FgError::Runtime(format!("{kind} job panicked in executor"))));
-    shared.metrics.add(&format!("router.{kind}.completed"), 1);
+    kc.completed.fetch_add(1, Ordering::Relaxed);
 
     if let (Some(key), Some(cache), Ok(res)) = (&key, &shared.cache, &result) {
         let mut cache = cache.lock().unwrap();
         let evicted = cache.insert(*key, res);
         if evicted > 0 {
-            shared.metrics.add("serve.cache.evictions", evicted as u64);
+            shared.serve.cache_evictions.fetch_add(evicted as u64, Ordering::Relaxed);
         }
-        shared.metrics.set("serve.cache.bytes", cache.bytes() as u64);
-        shared.metrics.set("serve.cache.entries", cache.len() as u64);
+        shared.serve.cache_bytes.store(cache.bytes() as u64, Ordering::Relaxed);
+        shared.serve.cache_entries.store(cache.len() as u64, Ordering::Relaxed);
     }
+    // Close the job's span tree before the reply is observable: a test
+    // that waits on the handle must find the full tree recorded.
+    drop(root);
 
     if let (Some(key), true) = (&key, lead) {
         for waiter_submitted in shared.batcher.complete(key, &result) {
-            shared.observe_latency(kind, waiter_submitted);
+            shared.observe_latency(kc, waiter_submitted);
         }
     }
-    shared.observe_latency(kind, submitted);
+    shared.observe_latency(kc, submitted);
     let _ = reply.send(result);
 }
 

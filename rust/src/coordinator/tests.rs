@@ -227,6 +227,56 @@ fn router_executes_all_job_kinds() {
     router.shutdown();
 }
 
+/// [`ApproxJob::KINDS`] is the list the router pre-builds its per-kind
+/// counter handles from — a variant missing from it would panic
+/// executor-side on first dispatch, so pin it against the enum here.
+#[test]
+fn approx_job_kinds_list_is_exhaustive() {
+    let a = test_matrix(10, 8, 1);
+    let mut r = rng(2);
+    let c = Mat::randn(10, 3, &mut r);
+    let rr = Mat::randn(2, 8, &mut r);
+    let jobs = [
+        ApproxJob::Gmr {
+            a: MatrixPayload::Dense(a.clone()),
+            c: c.clone(),
+            r: rr.clone(),
+            cfg: crate::gmr::FastGmrConfig::gaussian(6, 6),
+            seed: 0,
+        },
+        ApproxJob::SpsdKernel { x: Mat::randn(10, 2, &mut r), sigma: 0.4, c: 2, s: 4, seed: 0 },
+        ApproxJob::StreamSvd {
+            a: MatrixPayload::Dense(a.clone()),
+            cfg: FastSpSvdConfig::paper(2, 2, SketchKind::Gaussian),
+            block: 4,
+            seed: 0,
+        },
+        ApproxJob::GmrExact { a: MatrixPayload::Dense(a.clone()), c, r: rr },
+        ApproxJob::Cur {
+            a: MatrixPayload::Dense(a.clone()),
+            cfg: crate::cur::CurConfig::fast(3, 3, 2),
+            seed: 0,
+        },
+        ApproxJob::StreamingCur {
+            a: MatrixPayload::Dense(a.clone()),
+            cfg: crate::cur::StreamingCurConfig::fast(3, 3, 2, 2),
+            block: 4,
+            seed: 0,
+        },
+    ];
+    let kinds: Vec<&str> = jobs.iter().map(|j| j.kind()).collect();
+    assert_eq!(kinds, ApproxJob::KINDS, "ApproxJob::KINDS out of sync with the enum variants");
+    for j in &jobs {
+        let (rows, cols) = j.dims();
+        if j.kind() == "spsd" {
+            assert_eq!((rows, cols), (10, 10), "SPSD dims are the implicit n x n kernel");
+        } else {
+            assert_eq!((rows, cols), (10, 8), "dims must report the payload shape");
+        }
+        assert!(j.weight() > 0, "{} weight must be positive", j.kind());
+    }
+}
+
 #[test]
 fn router_many_concurrent_jobs() {
     let router = Router::new(3);

@@ -146,12 +146,24 @@ impl CurDecomposition {
 /// assert!(d.residual((&a).into()).is_finite());
 /// ```
 pub fn decompose(a: Input<'_>, cfg: &CurConfig, rng: &mut Pcg64) -> CurDecomposition {
-    let (col_idx, c) = select::select_columns(a, &cfg.selection, cfg.c, rng);
-    let (row_idx, r) = select::select_rows(a, &cfg.selection, cfg.r, rng);
-    let u = match cfg.core {
-        CoreMethod::Exact => core::core_exact(a, &c, &r),
-        CoreMethod::StabilizedQr => core::core_stabilized(a, &c, &r),
-        CoreMethod::FastGmr => core::core_fast(a, &c, &r, cfg.sketch, cfg.s_c, cfg.s_r, rng),
+    let (col_idx, c) = {
+        let mut sp = crate::obs::span("cur.select.columns", crate::obs::cat::GATHER);
+        sp.meta("c", cfg.c);
+        select::select_columns(a, &cfg.selection, cfg.c, rng)
+    };
+    let (row_idx, r) = {
+        let mut sp = crate::obs::span("cur.select.rows", crate::obs::cat::GATHER);
+        sp.meta("r", cfg.r);
+        select::select_rows(a, &cfg.selection, cfg.r, rng)
+    };
+    let u = {
+        let mut sp = crate::obs::span("cur.core", crate::obs::cat::SOLVE);
+        sp.meta("method", cfg.core.name());
+        match cfg.core {
+            CoreMethod::Exact => core::core_exact(a, &c, &r),
+            CoreMethod::StabilizedQr => core::core_stabilized(a, &c, &r),
+            CoreMethod::FastGmr => core::core_fast(a, &c, &r, cfg.sketch, cfg.s_c, cfg.s_r, rng),
+        }
     };
     CurDecomposition { col_idx, row_idx, c, u, r }
 }

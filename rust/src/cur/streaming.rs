@@ -297,6 +297,8 @@ pub fn finalize(
 
     // Columns: rank-k subspace scores over all n columns from Y, then a
     // weighted draw restricted to the retained candidates.
+    let mut select_span = crate::obs::span("curstream.select", crate::obs::cat::GATHER);
+    select_span.meta("candidates", state.reservoir.len());
     let col_scores = subspace_column_leverage_scores(&state.y, cfg.k);
     state.reservoir.entries.sort_by_key(|e| e.idx);
     let cand_weights: Vec<f64> =
@@ -314,19 +316,26 @@ pub fn finalize(
     // Rows: rank-k subspace scores from the range accumulator Z.
     let row_scores = subspace_row_leverage_scores(&state.z, cfg.k);
     let row_idx = weighted_indices_without_replacement(&row_scores, cfg.r, rng);
+    drop(select_span);
 
     // Fast-GMR core from sketch products only: S_C C = Y[:, col_idx],
     // R S_Rᵀ = Z[row_idx, :], Ã = Y S_Rᵀ.
+    let mut core_span = crate::obs::span("curstream.core", crate::obs::cat::SOLVE);
+    core_span.meta("s_c", sk.s_c.out_dim());
+    core_span.meta("s_r", sk.s_r.out_dim());
     let sc_c = state.y.select_cols(&col_idx);
     let r_sr = state.z.select_rows(&row_idx);
     let a_tilde = sk.s_r.apply_right(&state.y);
     let u = gmr::solve_core(&sc_c, &a_tilde, &r_sr);
+    drop(core_span);
 
     // Row factor: single-pass reconstruction R̂ = (R S_Rᵀ)·Ã†·Y. Ã is
     // *tall* (s_c ≈ 2·s_r by design), so `pinv_apply_right` — whose
     // Cholesky path builds the rows×rows Gram, singular here — is the
     // wrong tool; the SVD pseudoinverse handles the tall rank-s_r shape.
+    let rows_span = crate::obs::span("curstream.rows", crate::obs::cat::SOLVE);
     let r_hat = matmul(&matmul(&r_sr, &pinv(&a_tilde)), &state.y);
+    drop(rows_span);
 
     StreamingCurResult {
         cur: CurDecomposition { col_idx, row_idx, c: c_mat, u, r: r_hat },
@@ -361,7 +370,12 @@ pub fn streaming_cur(
     rng: &mut Pcg64,
 ) -> StreamingCurResult {
     let (m, n) = (stream.rows(), stream.cols());
-    let sk = StreamingCurSketches::draw(cfg, m, n, rng);
+    let sk = {
+        let mut sp = crate::obs::span("curstream.sketch.draw", crate::obs::cat::SKETCH);
+        sp.meta("s_c", cfg.s_c);
+        sp.meta("s_r", cfg.s_r);
+        StreamingCurSketches::draw(cfg, m, n, rng)
+    };
     streaming_cur_with(stream, cfg, &sk, rng)
 }
 
@@ -377,6 +391,9 @@ pub fn streaming_cur_with(
     let mut state = StreamState::new(cfg, sk, m, n);
     let pool = Pool::current();
     while let Some(block) = stream.next_block() {
+        let mut sp = crate::obs::span("curstream.block", crate::obs::cat::STREAM);
+        sp.meta("col_start", block.col_start);
+        sp.meta("cols", block.data.cols());
         let bs = sketch_block(block.col_start, block.data, sk, &pool);
         state.fold(bs, rng);
     }

@@ -94,6 +94,9 @@ pub fn solve_fast(a: Input<'_>, c: &Mat, r: &Mat, cfg: &FastGmrConfig, rng: &mut
     assert!(cfg.s_c >= c.cols(), "s_c must be >= c (got {} < {})", cfg.s_c, c.cols());
     assert!(cfg.s_r >= r.rows(), "s_r must be >= r (got {} < {})", cfg.s_r, r.rows());
 
+    let mut draw_span = crate::obs::span("gmr.sketch.draw", crate::obs::cat::SKETCH);
+    draw_span.meta("s_c", cfg.s_c);
+    draw_span.meta("s_r", cfg.s_r);
     let scores_c;
     let s_c = match cfg.kind_c {
         SketchKind::Leverage => {
@@ -110,6 +113,7 @@ pub fn solve_fast(a: Input<'_>, c: &Mat, r: &Mat, cfg: &FastGmrConfig, rng: &mut
         }
         kind => Sketch::draw(kind, cfg.s_r, n, None, rng),
     };
+    drop(draw_span);
 
     solve_fast_with(a, c, r, &s_c, &s_r)
 }
@@ -117,11 +121,26 @@ pub fn solve_fast(a: Input<'_>, c: &Mat, r: &Mat, cfg: &FastGmrConfig, rng: &mut
 /// Algorithm 1 with caller-supplied sketches (used when the coordinator
 /// has already streamed `Ã` or when sketches must be shared across calls).
 pub fn solve_fast_with(a: Input<'_>, c: &Mat, r: &Mat, s_c: &Sketch, s_r: &Sketch) -> FastGmrSolution {
+    let (m, n) = (a.rows(), a.cols());
+    let mut apply_span = crate::obs::span("gmr.sketch.apply", crate::obs::cat::SKETCH);
+    if apply_span.active() {
+        // Dense-equivalent multiply cost of the four products below —
+        // the basis for the span's derived GFLOP/s.
+        let flops = 2.0
+            * (s_c.out_dim() * m * c.cols()
+                + r.rows() * n * s_r.out_dim()
+                + s_c.out_dim() * m * n
+                + s_c.out_dim() * n * s_r.out_dim()) as f64;
+        apply_span.meta("m", m);
+        apply_span.meta("n", n);
+        apply_span.meta("flops", flops);
+    }
     // Step 3: the three sketched products.
     let sc_c = s_c.apply_left(c); // s_c x c
     let r_sr = s_r.apply_right(r); // r x s_r  (R S_Rᵀ)
     let sc_a = a.sketch_left(s_c); // s_c x n
     let a_tilde = s_r.apply_right(&sc_a); // s_c x s_r
+    drop(apply_span);
 
     // Step 4: X̃ = (S_C C)† Ã (R S_Rᵀ)†.
     let x = solve_core(&sc_c, &a_tilde, &r_sr);
@@ -132,6 +151,7 @@ pub fn solve_fast_with(a: Input<'_>, c: &Mat, r: &Mat, s_c: &Sketch, s_r: &Sketc
 /// (shared by the CPU backend and the PJRT-artifact path, which computes
 /// the same quantity inside the AOT graph).
 pub fn solve_core(sc_c: &Mat, a_tilde: &Mat, r_sr: &Mat) -> Mat {
+    let _sp = crate::obs::span("gmr.core.solve", crate::obs::cat::SOLVE);
     let left = pinv_apply_left(sc_c, a_tilde); // c x s_r
     pinv_apply_right(&left, r_sr) // c x r
 }

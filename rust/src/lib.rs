@@ -30,6 +30,7 @@ pub mod error;
 pub mod gmr;
 pub mod linalg;
 pub mod metrics;
+pub mod obs;
 pub mod parallel;
 pub mod rng;
 pub mod runtime;

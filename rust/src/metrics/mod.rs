@@ -60,22 +60,72 @@ impl Metrics {
         out
     }
 
-    /// Render a human-readable snapshot.
+    /// Render a human-readable snapshot, grouping monotone counters,
+    /// point-in-time gauges (detected by the [`is_gauge`] naming
+    /// convention), and histograms under separate headings.
     pub fn report(&self) -> String {
+        let counters = self.counters.lock().unwrap();
+        let monotone: Vec<_> = counters.iter().filter(|(n, _)| !is_gauge(n)).collect();
+        let gauges: Vec<_> = counters.iter().filter(|(n, _)| is_gauge(n)).collect();
+        let mut out = String::new();
+        if !monotone.is_empty() {
+            out.push_str("counters:\n");
+            for (name, c) in &monotone {
+                out.push_str(&format!("  {name}: {}\n", c.load(Ordering::Relaxed)));
+            }
+        }
+        if !gauges.is_empty() {
+            out.push_str("gauges:\n");
+            for (name, c) in &gauges {
+                out.push_str(&format!("  {name}: {}\n", c.load(Ordering::Relaxed)));
+            }
+        }
+        drop(counters);
+        let histograms = self.histograms.lock().unwrap();
+        if !histograms.is_empty() {
+            out.push_str("histograms:\n");
+            for (name, h) in histograms.iter() {
+                out.push_str(&format!(
+                    "  {name}: n={} mean={:.6}s p50={:.6}s p95={:.6}s p99={:.6}s max={:.6}s\n",
+                    h.count,
+                    h.mean(),
+                    h.quantile(0.5),
+                    h.quantile(0.95),
+                    h.quantile(0.99),
+                    h.max
+                ));
+            }
+        }
+        out
+    }
+
+    /// Prometheus text exposition of the full registry: counters and
+    /// gauges as scalar samples, histograms as cumulative
+    /// `_bucket{le="..."}` series with `_sum` and `_count` — the
+    /// standard scrape format, written by `--metrics-out`.
+    pub fn prometheus(&self) -> String {
         let mut out = String::new();
         for (name, c) in self.counters.lock().unwrap().iter() {
-            out.push_str(&format!("{name}: {}\n", c.load(Ordering::Relaxed)));
+            let kind = if is_gauge(name) { "gauge" } else { "counter" };
+            let pname = prom_name(name);
+            out.push_str(&format!("# TYPE {pname} {kind}\n"));
+            out.push_str(&format!("{pname} {}\n", c.load(Ordering::Relaxed)));
         }
         for (name, h) in self.histograms.lock().unwrap().iter() {
-            out.push_str(&format!(
-                "{name}: n={} mean={:.6}s p50={:.6}s p95={:.6}s p99={:.6}s max={:.6}s\n",
-                h.count,
-                h.mean(),
-                h.quantile(0.5),
-                h.quantile(0.95),
-                h.quantile(0.99),
-                h.max
-            ));
+            let pname = prom_name(name);
+            out.push_str(&format!("# TYPE {pname} histogram\n"));
+            let mut cumulative = 0u64;
+            for (i, &b) in h.bucket_counts().iter().enumerate() {
+                if b == 0 {
+                    continue;
+                }
+                cumulative += b;
+                let (_, hi) = Histogram::bucket_bounds(i);
+                out.push_str(&format!("{pname}_bucket{{le=\"{hi:.3e}\"}} {cumulative}\n"));
+            }
+            out.push_str(&format!("{pname}_bucket{{le=\"+Inf\"}} {}\n", h.count()));
+            out.push_str(&format!("{pname}_sum {:.9}\n", h.sum()));
+            out.push_str(&format!("{pname}_count {}\n", h.count()));
         }
         out
     }
@@ -101,9 +151,31 @@ impl Metrics {
     }
 }
 
+/// Registry naming convention: a counter is a **gauge** (point-in-time,
+/// set with [`Metrics::set`]) when its last dot-segment is, or ends in
+/// `_` + one of, the gauge suffixes — `depth`, `peak`, `bytes`,
+/// `entries`, `candidates` (`serve.queue.depth`,
+/// `pipeline.max_queue_depth`, `serve.cache.bytes`, ...). Everything
+/// else is a monotone counter. `report()` and `prometheus()` group and
+/// type by this predicate.
+pub fn is_gauge(name: &str) -> bool {
+    const SUFFIXES: [&str; 5] = ["depth", "peak", "bytes", "entries", "candidates"];
+    let last = name.rsplit('.').next().unwrap_or(name);
+    SUFFIXES.iter().any(|s| {
+        last == *s
+            || (last.ends_with(s) && last.as_bytes().get(last.len() - s.len() - 1) == Some(&b'_'))
+    })
+}
+
+/// Sanitize a dotted metric name into the Prometheus charset
+/// (`[a-zA-Z0-9_]`).
+fn prom_name(name: &str) -> String {
+    name.chars().map(|c| if c.is_ascii_alphanumeric() { c } else { '_' }).collect()
+}
+
 /// Fixed-size log-bucketed histogram of seconds.
 pub struct Histogram {
-    /// Buckets: [1ns, ~1000s) in half-decade steps.
+    /// Buckets: [1ns, ...) in half-decade steps.
     buckets: Vec<u64>,
     count: u64,
     sum: f64,
@@ -112,18 +184,42 @@ pub struct Histogram {
 
 impl Default for Histogram {
     fn default() -> Self {
-        Self { buckets: vec![0; 48], count: 0, sum: 0.0, max: 0.0 }
+        Self { buckets: vec![0; Self::NUM_BUCKETS], count: 0, sum: 0.0, max: 0.0 }
     }
 }
 
 impl Histogram {
+    /// Number of half-decade buckets, covering 1 ns up through ~10^14 s.
+    pub const NUM_BUCKETS: usize = 48;
+
     fn bucket_index(seconds: f64) -> usize {
         // bucket i covers [1e-9 * sqrt(10)^i, ...): i = 2*log10(s/1e-9)
         if seconds <= 1e-9 {
             return 0;
         }
         let i = (2.0 * (seconds / 1e-9).log10()).floor() as isize;
-        i.clamp(0, 47) as usize
+        i.clamp(0, Self::NUM_BUCKETS as isize - 1) as usize
+    }
+
+    /// The `[lower, upper)` bounds of bucket `i` in seconds. Bucket 0
+    /// additionally absorbs everything below 1 ns, so its lower bound
+    /// is reported as `0.0`; the top bucket absorbs everything above
+    /// its lower bound.
+    pub fn bucket_bounds(i: usize) -> (f64, f64) {
+        assert!(i < Self::NUM_BUCKETS, "bucket {i} out of range");
+        let lo = if i == 0 { 0.0 } else { 1e-9 * 10f64.powf(i as f64 / 2.0) };
+        let hi = 1e-9 * 10f64.powf((i + 1) as f64 / 2.0);
+        (lo, hi)
+    }
+
+    /// Per-bucket sample counts (length [`Histogram::NUM_BUCKETS`]).
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.buckets
+    }
+
+    /// Sum of all recorded samples, seconds.
+    pub fn sum(&self) -> f64 {
+        self.sum
     }
 
     pub fn record(&mut self, seconds: f64) {
@@ -252,6 +348,114 @@ mod tests {
         assert_eq!(warm.count(), 1);
         assert!(warm.quantile(0.5) < cold.quantile(0.5));
         assert_eq!(m.take_histogram("lat").count(), 0);
+    }
+
+    /// The contention-shaped handle test: the serve loop must bump
+    /// cached `Arc<AtomicU64>` handles, never re-take the registry map
+    /// lock per increment — the handle and the registry slot are the
+    /// same atomic, so everything stays visible through `get`.
+    #[test]
+    fn counter_handles_bypass_the_registry_lock() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let h = m.counter("hot");
+        assert!(
+            std::sync::Arc::ptr_eq(&h, &m.counter("hot")),
+            "counter() must hand out the registry's own atomic"
+        );
+        let mut threads = vec![];
+        for _ in 0..4 {
+            let h = h.clone();
+            threads.push(std::thread::spawn(move || {
+                for _ in 0..10_000 {
+                    h.fetch_add(1, Ordering::Relaxed);
+                }
+            }));
+        }
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(m.get("hot"), 40_000);
+    }
+
+    /// Pins the half-decade bucket geometry the Prometheus exposition
+    /// publishes: bucket i covers [1e-9·10^(i/2), 1e-9·10^((i+1)/2)),
+    /// with bucket 0 absorbing the sub-nanosecond tail.
+    #[test]
+    fn histogram_bucket_geometry_is_half_decade() {
+        // Mid-bucket samples (away from boundaries, where log10
+        // rounding is exact): 2.0 s -> bucket 18, 2e-3 s -> bucket 12.
+        let mut h = Histogram::default();
+        h.record(2.0);
+        h.record(2e-3);
+        assert_eq!(h.bucket_counts().len(), Histogram::NUM_BUCKETS);
+        assert_eq!(h.bucket_counts()[18], 1);
+        assert_eq!(h.bucket_counts()[12], 1);
+        assert_eq!(h.bucket_counts().iter().sum::<u64>(), 2);
+        assert!((h.sum() - 2.002).abs() < 1e-12);
+        // Bounds: bucket 0 starts at 0.0; consecutive buckets tile the
+        // axis; each spans a factor of sqrt(10).
+        assert_eq!(Histogram::bucket_bounds(0).0, 0.0);
+        for i in 0..Histogram::NUM_BUCKETS - 1 {
+            let (_, hi) = Histogram::bucket_bounds(i);
+            let (lo_next, hi_next) = Histogram::bucket_bounds(i + 1);
+            assert_eq!(hi, lo_next, "buckets {i}/{} must tile", i + 1);
+            assert!((hi_next / lo_next - 10f64.sqrt()).abs() < 1e-9);
+        }
+        // A sample lands inside its bucket's bounds.
+        let (lo, hi) = Histogram::bucket_bounds(18);
+        assert!(lo <= 2.0 && 2.0 < hi, "2.0 s outside bucket 18 [{lo}, {hi})");
+    }
+
+    #[test]
+    fn report_groups_gauges_separately_from_counters() {
+        assert!(is_gauge("serve.queue.depth"));
+        assert!(is_gauge("serve.queue.peak"));
+        assert!(is_gauge("serve.cache.bytes"));
+        assert!(is_gauge("serve.cache.entries"));
+        assert!(is_gauge("pipeline.max_queue_depth"));
+        assert!(is_gauge("pipeline.cur_reservoir_candidates"));
+        assert!(!is_gauge("serve.cache.hits"));
+        assert!(!is_gauge("router.cur.completed"));
+        assert!(!is_gauge("pipeline.blocks"));
+
+        let m = Metrics::new();
+        m.add("router.cur.completed", 2);
+        m.set("serve.queue.depth", 5);
+        m.observe("serve.latency", 0.01);
+        let r = m.report();
+        let counters_at = r.find("counters:").expect("counters heading");
+        let gauges_at = r.find("gauges:").expect("gauges heading");
+        let hists_at = r.find("histograms:").expect("histograms heading");
+        assert!(counters_at < gauges_at && gauges_at < hists_at);
+        // Each name sits in its own section.
+        assert!(r[counters_at..gauges_at].contains("router.cur.completed: 2"));
+        assert!(r[gauges_at..hists_at].contains("serve.queue.depth: 5"));
+        assert!(r[hists_at..].contains("serve.latency: n=1"));
+    }
+
+    #[test]
+    fn prometheus_exposition_has_typed_series_and_cumulative_buckets() {
+        let m = Metrics::new();
+        m.add("serve.cache.hits", 3);
+        m.set("serve.queue.depth", 2);
+        m.observe("serve.latency", 2e-3);
+        m.observe("serve.latency", 2e-3);
+        m.observe("serve.latency", 2.0);
+        let p = m.prometheus();
+        assert!(p.contains("# TYPE serve_cache_hits counter\nserve_cache_hits 3\n"));
+        assert!(p.contains("# TYPE serve_queue_depth gauge\nserve_queue_depth 2\n"));
+        assert!(p.contains("# TYPE serve_latency histogram\n"));
+        // Cumulative buckets: 2 samples by the end of bucket 12, 3 by
+        // bucket 18, 3 at +Inf; le boundaries are the upper bounds.
+        let hi12 = Histogram::bucket_bounds(12).1;
+        let hi18 = Histogram::bucket_bounds(18).1;
+        let le12 = format!("serve_latency_bucket{{le=\"{hi12:.3e}\"}} 2");
+        let le18 = format!("serve_latency_bucket{{le=\"{hi18:.3e}\"}} 3");
+        assert!(p.contains(&le12), "missing {le12} in:\n{p}");
+        assert!(p.contains(&le18), "missing {le18} in:\n{p}");
+        assert!(p.contains("serve_latency_bucket{le=\"+Inf\"} 3\n"));
+        assert!(p.contains("serve_latency_count 3\n"));
+        assert!(p.contains("serve_latency_sum 2.004"));
     }
 
     #[test]

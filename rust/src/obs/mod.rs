@@ -1,0 +1,518 @@
+//! Span-based tracing for the serving daemon and the approximation
+//! pipelines.
+//!
+//! The paper's Fast GMR algorithms decompose into distinct stages —
+//! sketch draw, sketch apply, core solve — and the serving layer adds
+//! its own (dispatch, cache, fan-out). This module makes those stage
+//! boundaries first-class: a [`TraceCollector`] records job-scoped span
+//! trees with per-span metadata (shapes, sketch sizes, flop estimates),
+//! exportable as Chrome trace-event JSON (`chrome://tracing`, Perfetto)
+//! or line-oriented JSONL.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Zero-cost when disabled.** Instrumented code calls [`span`]
+//!    unconditionally; with no collector installed on the thread it does
+//!    one thread-local borrow, allocates nothing, and returns an inert
+//!    guard. The disabled path is pinned by an allocation-counting test.
+//! 2. **Deterministic structure.** Span *trees* (names + nesting) must
+//!    be identical at any `threads` knob setting, so tracing folds into
+//!    the global determinism test. Spans are therefore only opened on
+//!    sequential driver/executor threads — never inside pool workers —
+//!    and never keyed on anything timing-dependent.
+//! 3. **No dependencies.** Like the rest of the crate, the exporters
+//!    hand-roll their JSON.
+//!
+//! # Usage
+//!
+//! ```
+//! use fastgmr::obs::{self, TraceCollector};
+//! use std::sync::Arc;
+//!
+//! let trace = Arc::new(TraceCollector::new());
+//! obs::install(Some(trace.clone()));
+//! {
+//!     let mut root = obs::span("job", obs::cat::DISPATCH);
+//!     root.meta("rows", 128usize);
+//!     let _child = obs::span("job.phase", obs::cat::SOLVE);
+//! }
+//! obs::install(None);
+//! assert_eq!(trace.root_structures(), vec!["job{job.phase}".to_string()]);
+//! let json = trace.to_chrome_json();
+//! assert!(json.contains("\"ph\":\"B\""));
+//! ```
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+#[cfg(test)]
+mod tests;
+
+/// Span categories — coarse phase classes used for per-category time
+/// attribution (`fig_serve` phase shares) and Chrome trace colouring.
+pub mod cat {
+    /// Router dispatch / job-scoped root spans.
+    pub const DISPATCH: &str = "dispatch";
+    /// Sketch draw + sketch apply (the paper's compression stage).
+    pub const SKETCH: &str = "sketch";
+    /// Dense factorizations: QR, SVD, eigendecomposition, PSD project.
+    pub const FACTORIZE: &str = "factorize";
+    /// Core solves: pseudoinverse applies producing the small core.
+    pub const SOLVE: &str = "solve";
+    /// Row/column selection and gathers.
+    pub const GATHER: &str = "gather";
+    /// Streaming block ingestion.
+    pub const STREAM: &str = "stream";
+}
+
+/// A metadata value attached to a span. Only cheap, statically-named
+/// payloads — no owned strings on the span path.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MetaValue {
+    /// Integer payload (shapes, sketch sizes, counts).
+    Int(u64),
+    /// Float payload (flop estimates).
+    Float(f64),
+    /// Static label (job kind, core method).
+    Label(&'static str),
+}
+
+impl From<u64> for MetaValue {
+    fn from(v: u64) -> Self {
+        MetaValue::Int(v)
+    }
+}
+
+impl From<usize> for MetaValue {
+    fn from(v: usize) -> Self {
+        MetaValue::Int(v as u64)
+    }
+}
+
+impl From<f64> for MetaValue {
+    fn from(v: f64) -> Self {
+        MetaValue::Float(v)
+    }
+}
+
+impl From<&'static str> for MetaValue {
+    fn from(v: &'static str) -> Self {
+        MetaValue::Label(v)
+    }
+}
+
+/// One completed span: a named interval with parent/child nesting,
+/// recording thread id and metadata.
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    /// Collector-unique id (> 0).
+    pub id: u64,
+    /// Parent span id, or 0 for a root.
+    pub parent: u64,
+    /// Static span name, dot-separated by convention
+    /// (`gmr.sketch.apply`).
+    pub name: &'static str,
+    /// Category from [`cat`].
+    pub cat: &'static str,
+    /// Collector-scoped thread id (dense, starting at 0).
+    pub tid: u32,
+    /// Start offset from the collector epoch, nanoseconds.
+    pub start_ns: u64,
+    /// End offset from the collector epoch, nanoseconds.
+    pub end_ns: u64,
+    /// Metadata key/value pairs in attachment order.
+    pub meta: Vec<(&'static str, MetaValue)>,
+}
+
+impl SpanRecord {
+    /// Span duration in seconds.
+    pub fn seconds(&self) -> f64 {
+        self.end_ns.saturating_sub(self.start_ns) as f64 / 1e9
+    }
+
+    /// Derived GFLOP/s when the span carries a `flops` estimate and a
+    /// positive duration.
+    pub fn gflops(&self) -> Option<f64> {
+        let secs = self.seconds();
+        if secs <= 0.0 {
+            return None;
+        }
+        self.meta.iter().find(|(k, _)| *k == "flops").map(|(_, v)| {
+            let flops = match v {
+                MetaValue::Int(x) => *x as f64,
+                MetaValue::Float(x) => *x,
+                MetaValue::Label(_) => 0.0,
+            };
+            flops / secs / 1e9
+        })
+    }
+}
+
+/// Thread-safe span sink. One collector per traced workload; threads
+/// participate by [`install`]ing an `Arc` handle, and completed spans
+/// are appended under a single mutex at span *close* (one lock per
+/// span, nothing on open).
+pub struct TraceCollector {
+    epoch: Instant,
+    next_id: AtomicU64,
+    next_tid: AtomicU32,
+    spans: Mutex<Vec<SpanRecord>>,
+}
+
+impl std::fmt::Debug for TraceCollector {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceCollector").field("spans", &self.len()).finish()
+    }
+}
+
+impl Default for TraceCollector {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TraceCollector {
+    /// New empty collector; its epoch (timestamp zero) is now.
+    pub fn new() -> Self {
+        TraceCollector {
+            epoch: Instant::now(),
+            next_id: AtomicU64::new(1),
+            next_tid: AtomicU32::new(0),
+            spans: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    fn alloc_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn alloc_tid(&self) -> u32 {
+        self.next_tid.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn record(&self, span: SpanRecord) {
+        self.spans.lock().unwrap().push(span);
+    }
+
+    /// Snapshot of all completed spans (unordered — threads race to the
+    /// sink; exporters sort).
+    pub fn spans(&self) -> Vec<SpanRecord> {
+        self.spans.lock().unwrap().clone()
+    }
+
+    /// Number of completed spans.
+    pub fn len(&self) -> usize {
+        self.spans.lock().unwrap().len()
+    }
+
+    /// True when no span has completed.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Chrome trace-event JSON (`{"traceEvents": [...]}` with duration
+    /// `B`/`E` pairs, timestamps in microseconds). Events are emitted by
+    /// depth-first walk over the span forest, so B/E events are balanced
+    /// per thread by construction and loadable in `chrome://tracing` or
+    /// Perfetto.
+    pub fn to_chrome_json(&self) -> String {
+        let spans = self.spans();
+        let order = sorted_forest(&spans);
+        let mut events = Vec::new();
+        for root in &order.roots {
+            emit_chrome(&spans, &order.children, *root, &mut events);
+        }
+        if events.is_empty() {
+            return "{\"traceEvents\":[]}\n".to_string();
+        }
+        format!("{{\"traceEvents\":[\n{}\n]}}\n", events.join(",\n"))
+    }
+
+    /// Line-oriented JSONL export: one span per line, sorted by start
+    /// time, with derived `gflops` when the span carries a flop
+    /// estimate. Friendlier to `grep`/`jq` pipelines than the Chrome
+    /// format.
+    pub fn to_jsonl(&self) -> String {
+        let mut spans = self.spans();
+        spans.sort_by_key(|s| (s.start_ns, s.id));
+        let mut out = String::new();
+        for s in &spans {
+            out.push_str(&format!(
+                "{{\"id\":{},\"parent\":{},\"name\":\"{}\",\"cat\":\"{}\",\"tid\":{},\
+                 \"ts_us\":{:.3},\"dur_us\":{:.3}",
+                s.id,
+                s.parent,
+                s.name,
+                s.cat,
+                s.tid,
+                s.start_ns as f64 / 1e3,
+                s.end_ns.saturating_sub(s.start_ns) as f64 / 1e3
+            ));
+            if let Some(g) = s.gflops() {
+                out.push_str(&format!(",\"gflops\":{}", format_f64(g)));
+            }
+            for (k, v) in &s.meta {
+                out.push_str(&format!(",\"{}\":{}", k, json_value(*v)));
+            }
+            out.push_str("}\n");
+        }
+        out
+    }
+
+    /// Canonical structure strings for every root span: `name{c1,c2}`
+    /// with children in start order, rendered recursively and sorted.
+    /// Timing-free, so equal across thread counts — the determinism
+    /// test compares these.
+    pub fn root_structures(&self) -> Vec<String> {
+        let spans = self.spans();
+        let order = sorted_forest(&spans);
+        let mut out: Vec<String> =
+            order.roots.iter().map(|r| render_structure(&spans, &order.children, *r)).collect();
+        out.sort();
+        out
+    }
+
+    /// Self-time (own duration minus direct children) summed per
+    /// category, in seconds. The basis for `fig_serve`'s per-phase
+    /// attribution shares.
+    pub fn seconds_by_category(&self) -> BTreeMap<&'static str, f64> {
+        let spans = self.spans();
+        let order = sorted_forest(&spans);
+        let mut by_cat: BTreeMap<&'static str, f64> = BTreeMap::new();
+        for (i, s) in spans.iter().enumerate() {
+            let child_ns: u64 = order
+                .children
+                .get(&s.id)
+                .map(|c| {
+                    c.iter().map(|&j| spans[j].end_ns.saturating_sub(spans[j].start_ns)).sum()
+                })
+                .unwrap_or(0);
+            let own = spans[i].end_ns.saturating_sub(spans[i].start_ns).saturating_sub(child_ns);
+            *by_cat.entry(s.cat).or_insert(0.0) += own as f64 / 1e9;
+        }
+        by_cat
+    }
+}
+
+/// Deterministically ordered view of the span forest: root indices
+/// sorted by (tid, start, id) and a children map sorted by (start, id).
+struct Forest {
+    roots: Vec<usize>,
+    children: BTreeMap<u64, Vec<usize>>,
+}
+
+fn sorted_forest(spans: &[SpanRecord]) -> Forest {
+    let mut roots = Vec::new();
+    let mut children: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
+    for (i, s) in spans.iter().enumerate() {
+        if s.parent == 0 {
+            roots.push(i);
+        } else {
+            children.entry(s.parent).or_default().push(i);
+        }
+    }
+    roots.sort_by_key(|&i| (spans[i].tid, spans[i].start_ns, spans[i].id));
+    for c in children.values_mut() {
+        c.sort_by_key(|&i| (spans[i].start_ns, spans[i].id));
+    }
+    Forest { roots, children }
+}
+
+fn emit_chrome(
+    spans: &[SpanRecord],
+    children: &BTreeMap<u64, Vec<usize>>,
+    i: usize,
+    events: &mut Vec<String>,
+) {
+    let s = &spans[i];
+    events.push(format!(
+        "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"B\",\"ts\":{:.3},\"pid\":1,\"tid\":{}}}",
+        s.name,
+        s.cat,
+        s.start_ns as f64 / 1e3,
+        s.tid
+    ));
+    if let Some(kids) = children.get(&s.id) {
+        for &k in kids {
+            emit_chrome(spans, children, k, events);
+        }
+    }
+    let mut end = format!(
+        "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"E\",\"ts\":{:.3},\"pid\":1,\"tid\":{}",
+        s.name,
+        s.cat,
+        s.end_ns as f64 / 1e3,
+        s.tid
+    );
+    if !s.meta.is_empty() {
+        end.push_str(",\"args\":{");
+        for (j, (k, v)) in s.meta.iter().enumerate() {
+            if j > 0 {
+                end.push(',');
+            }
+            end.push_str(&format!("\"{}\":{}", k, json_value(*v)));
+        }
+        end.push('}');
+    }
+    end.push('}');
+    events.push(end);
+}
+
+fn render_structure(
+    spans: &[SpanRecord],
+    children: &BTreeMap<u64, Vec<usize>>,
+    i: usize,
+) -> String {
+    let s = &spans[i];
+    match children.get(&s.id) {
+        None => s.name.to_string(),
+        Some(kids) => {
+            let inner: Vec<String> =
+                kids.iter().map(|&k| render_structure(spans, children, k)).collect();
+            format!("{}{{{}}}", s.name, inner.join(","))
+        }
+    }
+}
+
+fn json_value(v: MetaValue) -> String {
+    match v {
+        MetaValue::Int(x) => x.to_string(),
+        MetaValue::Float(x) => format_f64(x),
+        MetaValue::Label(x) => format!("\"{x}\""),
+    }
+}
+
+fn format_f64(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.6}")
+    } else {
+        "null".to_string()
+    }
+}
+
+// ---- thread-local span context --------------------------------------
+
+struct ThreadCtx {
+    collector: Arc<TraceCollector>,
+    tid: u32,
+    stack: Vec<u64>,
+}
+
+thread_local! {
+    static CTX: RefCell<Option<ThreadCtx>> = const { RefCell::new(None) };
+}
+
+/// Install (or clear, with `None`) the trace collector for the current
+/// thread. Router executors install the shared collector at spawn;
+/// CLI drivers install it around the traced region. Installing does
+/// not affect other threads, and spans opened on a thread without a
+/// collector are silently inert.
+pub fn install(collector: Option<Arc<TraceCollector>>) {
+    CTX.with(|ctx| {
+        *ctx.borrow_mut() = collector.map(|c| {
+            let tid = c.alloc_tid();
+            ThreadCtx { collector: c, tid, stack: Vec::new() }
+        });
+    });
+}
+
+/// True when a collector is installed on this thread.
+pub fn enabled() -> bool {
+    CTX.with(|ctx| ctx.borrow().is_some())
+}
+
+/// Open a span. With no collector installed this is one thread-local
+/// borrow and returns an inert guard — no allocation, no clock read.
+/// The span closes (and is recorded) when the guard drops, so bind it
+/// to a named variable (`let _sp = ...`), never `_`.
+pub fn span(name: &'static str, category: &'static str) -> SpanGuard {
+    CTX.with(|ctx| {
+        let mut ctx = ctx.borrow_mut();
+        let Some(tc) = ctx.as_mut() else {
+            return SpanGuard { open: None };
+        };
+        let id = tc.collector.alloc_id();
+        let parent = tc.stack.last().copied().unwrap_or(0);
+        tc.stack.push(id);
+        let start_ns = tc.collector.now_ns();
+        SpanGuard {
+            open: Some(OpenSpan {
+                collector: tc.collector.clone(),
+                id,
+                parent,
+                name,
+                cat: category,
+                tid: tc.tid,
+                start_ns,
+                meta: Vec::new(),
+            }),
+        }
+    })
+}
+
+struct OpenSpan {
+    collector: Arc<TraceCollector>,
+    id: u64,
+    parent: u64,
+    name: &'static str,
+    cat: &'static str,
+    tid: u32,
+    start_ns: u64,
+    meta: Vec<(&'static str, MetaValue)>,
+}
+
+/// RAII guard for an open span; records the span on drop. Inert (all
+/// methods no-ops) when tracing is disabled.
+pub struct SpanGuard {
+    open: Option<OpenSpan>,
+}
+
+impl SpanGuard {
+    /// Attach a metadata key/value pair. No-op when inert — guard meta
+    /// computations behind [`SpanGuard::active`] if they are not free.
+    pub fn meta(&mut self, key: &'static str, value: impl Into<MetaValue>) {
+        if let Some(open) = self.open.as_mut() {
+            open.meta.push((key, value.into()));
+        }
+    }
+
+    /// True when this guard belongs to an installed collector.
+    pub fn active(&self) -> bool {
+        self.open.is_some()
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(open) = self.open.take() else { return };
+        let end_ns = open.collector.now_ns();
+        CTX.with(|ctx| {
+            if let Some(tc) = ctx.borrow_mut().as_mut() {
+                // Pop through any spans abandoned by panic unwinds so
+                // the stack stays consistent with recorded nesting.
+                while let Some(top) = tc.stack.pop() {
+                    if top == open.id {
+                        break;
+                    }
+                }
+            }
+        });
+        open.collector.record(SpanRecord {
+            id: open.id,
+            parent: open.parent,
+            name: open.name,
+            cat: open.cat,
+            tid: open.tid,
+            start_ns: open.start_ns,
+            end_ns,
+            meta: open.meta,
+        });
+    }
+}

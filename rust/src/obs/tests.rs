@@ -1,0 +1,236 @@
+//! Tracing tests: disabled-path zero-allocation, Chrome-trace validity
+//! (balanced B/E, monotone per-thread timestamps), and span nesting
+//! pinned against the known phase structure of a CUR job.
+
+use super::*;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+/// Counting wrapper around the system allocator. The count is
+/// per-thread so parallel test threads don't pollute each other;
+/// `try_with` keeps allocation during thread teardown safe.
+struct CountingAlloc;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs_now() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+#[test]
+fn disabled_span_path_allocates_nothing() {
+    install(None);
+    // Warm the thread-local slot so lazy TLS setup is not charged to
+    // the measured region.
+    {
+        let _warm = span("warm", cat::DISPATCH);
+    }
+    let before = allocs_now();
+    for _ in 0..1000 {
+        let mut sp = span("gmr.core.solve", cat::SOLVE);
+        sp.meta("rows", 128usize);
+        assert!(!sp.active());
+    }
+    let after = allocs_now();
+    assert_eq!(after - before, 0, "disabled span path must not allocate");
+}
+
+#[test]
+fn fresh_collector_exports_are_empty() {
+    let tc = TraceCollector::new();
+    assert!(tc.is_empty());
+    assert_eq!(tc.to_chrome_json(), "{\"traceEvents\":[]}\n");
+    assert_eq!(tc.to_jsonl(), "");
+    assert!(tc.root_structures().is_empty());
+    assert!(tc.seconds_by_category().is_empty());
+}
+
+#[test]
+fn spans_nest_and_render_structure() {
+    let tc = Arc::new(TraceCollector::new());
+    install(Some(tc.clone()));
+    {
+        let _job = span("job", cat::DISPATCH);
+        {
+            let _a = span("a", cat::SKETCH);
+            let _b = span("b", cat::SOLVE);
+        }
+        let _c = span("c", cat::GATHER);
+    }
+    install(None);
+    // b opened inside a's lifetime, so it nests under a; c is a's
+    // sibling under the root.
+    assert_eq!(tc.root_structures(), vec!["job{a{b},c}".to_string()]);
+    let spans = tc.spans();
+    assert_eq!(spans.len(), 4);
+    let job = spans.iter().find(|s| s.name == "job").unwrap();
+    let a = spans.iter().find(|s| s.name == "a").unwrap();
+    let b = spans.iter().find(|s| s.name == "b").unwrap();
+    assert_eq!(job.parent, 0);
+    assert_eq!(a.parent, job.id);
+    assert_eq!(b.parent, a.id);
+    // All on one installed thread.
+    assert!(spans.iter().all(|s| s.tid == spans[0].tid));
+    // Containment: children close no later than their parent closes.
+    assert!(a.start_ns >= job.start_ns && a.end_ns <= job.end_ns);
+    assert!(b.start_ns >= a.start_ns && b.end_ns <= a.end_ns);
+}
+
+/// The end-to-end tentpole check: a CUR job through the router yields
+/// exactly the paper's phase tree — selection (with leverage-score
+/// factorizations), then the Fast GMR core (sketch draw, sketch apply,
+/// core solve) — nested under the dispatch root.
+#[test]
+fn router_traces_cur_job_phases() {
+    use crate::coordinator::router::{Router, ServeConfig};
+    use crate::coordinator::{ApproxJob, MatrixPayload};
+    use crate::linalg::Mat;
+    use crate::rng::rng;
+
+    let trace = Arc::new(TraceCollector::new());
+    let router = Router::with_config(&ServeConfig {
+        workers: 1,
+        trace: Some(trace.clone()),
+        ..ServeConfig::service(1)
+    });
+    let mut r = rng(7);
+    let a = Mat::randn(60, 40, &mut r);
+    let job = ApproxJob::Cur {
+        a: MatrixPayload::Dense(a),
+        cfg: crate::cur::CurConfig::fast(6, 6, 3),
+        seed: 3,
+    };
+    router.submit(job).unwrap().wait().unwrap();
+    router.shutdown();
+
+    let want = "router.dispatch{cur.select.columns{leverage.scores},\
+                cur.select.rows{leverage.scores},\
+                cur.core{gmr.sketch.draw,gmr.sketch.apply,gmr.core.solve}}"
+        .replace(" ", "");
+    assert_eq!(trace.root_structures(), vec![want]);
+
+    // The root span carries the job's identity metadata.
+    let spans = trace.spans();
+    let root = spans.iter().find(|s| s.name == "router.dispatch").unwrap();
+    let get = |key: &str| root.meta.iter().find(|(k, _)| *k == key).map(|(_, v)| *v);
+    assert_eq!(get("kind"), Some(MetaValue::Label("cur")));
+    assert_eq!(get("rows"), Some(MetaValue::Int(60)));
+    assert_eq!(get("cols"), Some(MetaValue::Int(40)));
+    // The sketch-apply span carries a flop estimate, so GFLOP/s derives.
+    let apply = spans.iter().find(|s| s.name == "gmr.sketch.apply").unwrap();
+    assert!(apply.meta.iter().any(|(k, _)| *k == "flops"));
+}
+
+/// Minimal field extractors for self-parsing the hand-rolled exports.
+fn field_str<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":\"");
+    let start = line.find(&pat)? + pat.len();
+    let end = line[start..].find('"')?;
+    Some(&line[start..start + end])
+}
+
+fn field_num(line: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\":");
+    let start = line.find(&pat)? + pat.len();
+    let rest = &line[start..];
+    let end = rest.find([',', '}']).unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+#[test]
+fn chrome_trace_is_balanced_with_monotone_timestamps_per_thread() {
+    let tc = Arc::new(TraceCollector::new());
+    install(Some(tc.clone()));
+    {
+        let _job = span("job", cat::DISPATCH);
+        let _inner = span("job.solve", cat::SOLVE);
+    }
+    // A second traced thread interleaves with the first in the sink.
+    let tc2 = tc.clone();
+    std::thread::spawn(move || {
+        install(Some(tc2));
+        let _other = span("other", cat::STREAM);
+    })
+    .join()
+    .unwrap();
+    install(None);
+
+    let json = tc.to_chrome_json();
+    assert!(json.starts_with("{\"traceEvents\":["));
+    assert!(json.trim_end().ends_with("]}"));
+    let lines: Vec<&str> = json.lines().filter(|l| l.contains("\"ph\"")).collect();
+    assert_eq!(lines.len(), 6, "3 spans -> 3 B + 3 E events");
+    // Per-thread: phases balance as a stack and timestamps never go
+    // backwards — exactly what chrome://tracing requires to load.
+    let mut stacks: BTreeMap<u64, Vec<String>> = BTreeMap::new();
+    let mut last_ts: BTreeMap<u64, f64> = BTreeMap::new();
+    for line in &lines {
+        let name = field_str(line, "name").unwrap().to_string();
+        let ph = field_str(line, "ph").unwrap();
+        let tid = field_num(line, "tid").unwrap() as u64;
+        let ts = field_num(line, "ts").unwrap();
+        assert_eq!(field_num(line, "pid"), Some(1.0));
+        let prev = last_ts.entry(tid).or_insert(0.0);
+        assert!(ts >= *prev, "timestamps must be monotone per thread: {line}");
+        *prev = ts;
+        let stack = stacks.entry(tid).or_default();
+        match ph {
+            "B" => stack.push(name),
+            "E" => assert_eq!(stack.pop().as_deref(), Some(name.as_str()), "unbalanced: {line}"),
+            other => panic!("unexpected phase {other}"),
+        }
+    }
+    for (tid, stack) in &stacks {
+        assert!(stack.is_empty(), "tid {tid} left unbalanced B events: {stack:?}");
+    }
+}
+
+#[test]
+fn jsonl_export_carries_meta_and_derived_gflops() {
+    let tc = Arc::new(TraceCollector::new());
+    install(Some(tc.clone()));
+    {
+        let mut sp = span("gmr.sketch.apply", cat::SKETCH);
+        sp.meta("flops", 2.0e6);
+        sp.meta("m", 100usize);
+        sp.meta("method", "gaussian");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    install(None);
+    let jsonl = tc.to_jsonl();
+    let line = jsonl.lines().next().unwrap();
+    assert_eq!(field_str(line, "name"), Some("gmr.sketch.apply"));
+    assert_eq!(field_str(line, "cat"), Some("sketch"));
+    assert_eq!(field_str(line, "method"), Some("gaussian"));
+    assert_eq!(field_num(line, "m"), Some(100.0));
+    assert_eq!(field_num(line, "parent"), Some(0.0));
+    let dur = field_num(line, "dur_us").unwrap();
+    assert!(dur >= 2000.0, "2 ms sleep must show in dur_us: {dur}");
+    let gflops = field_num(line, "gflops").unwrap();
+    let expect = 2.0e6 / (dur * 1e-6) / 1e9;
+    assert!((gflops - expect).abs() / expect < 1e-3, "gflops {gflops} vs {expect}");
+    // Self-time attribution sums to the span's own duration.
+    let by_cat = tc.seconds_by_category();
+    assert!((by_cat["sketch"] - dur * 1e-6).abs() < 1e-9);
+}

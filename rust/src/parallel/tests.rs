@@ -200,10 +200,14 @@ fn global_threads_knob_end_to_end() {
         let spmm_t = sp.spmm_t(&bst);
         // Served CUR through the caching router: executors install
         // budget shares of the knob, and the artifact-cache hit must be
-        // a bitwise clone of the cold compute it amortizes.
+        // a bitwise clone of the cold compute it amortizes. A trace
+        // collector rides along — the span structure the job records is
+        // part of the thread-count-invariance contract below.
+        let trace = std::sync::Arc::new(crate::obs::TraceCollector::new());
         let router = crate::coordinator::Router::with_config(&crate::coordinator::ServeConfig {
             workers: 2,
             cache_bytes: 64 << 20,
+            trace: Some(trace.clone()),
             ..crate::coordinator::ServeConfig::service(2)
         });
         let serve_job = || crate::coordinator::ApproxJob::Cur {
@@ -226,13 +230,20 @@ fn global_threads_knob_end_to_end() {
         assert_eq!(served_cold.c.data(), served.c.data(), "cache hit not bitwise vs cold compute");
         assert_eq!(served_cold.u.data(), served.u.data(), "cache hit not bitwise vs cold compute");
         assert_eq!(served_cold.r.data(), served.r.data(), "cache hit not bitwise vs cold compute");
-        (m, k, two, qr, svd, eig, sol.x, sol_count.x, cur, scur, spmm, spmm_t, served)
+        // Canonical structure strings of the recorded span forest: one
+        // root (the second submit is a cache hit and never dispatches),
+        // with the CUR phases nested under it. Spans live only on the
+        // sequential executor thread, so the rendering must be identical
+        // at any worker/thread count.
+        let ts = trace.root_structures().join(";");
+        assert!(ts.contains("cur.core"), "served CUR trace missing the core-solve span: {ts}");
+        (m, k, two, qr, svd, eig, sol.x, sol_count.x, cur, scur, spmm, spmm_t, served, ts)
     };
 
     set_threads(1);
-    let (m1, k1, two1, qr1, svd1, eig1, x1, xc1, cur1, scur1, sp1, spt1, served1) = run_all();
+    let (m1, k1, two1, qr1, svd1, eig1, x1, xc1, cur1, scur1, sp1, spt1, served1, ts1) = run_all();
     set_threads(4);
-    let (m4, k4, two4, qr4, svd4, eig4, x4, xc4, cur4, scur4, sp4, spt4, served4) = run_all();
+    let (m4, k4, two4, qr4, svd4, eig4, x4, xc4, cur4, scur4, sp4, spt4, served4, ts4) = run_all();
     set_threads(0); // restore auto-detect
 
     assert_eq!(m1.data(), m4.data(), "matmul dispatch not bitwise across thread counts");
@@ -310,4 +321,5 @@ fn global_threads_knob_end_to_end() {
         "served CUR row gather not bitwise across thread counts"
     );
     assert_close(&served4.u, &served1.u, 1e-12, "served CUR core threads=1 vs 4");
+    assert_eq!(ts1, ts4, "served CUR span structure not identical across thread counts");
 }

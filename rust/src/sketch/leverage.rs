@@ -13,6 +13,9 @@ use crate::rng::Pcg64;
 /// compact-WY kernel, so score computation on tall inputs rides the
 /// pool-parallel matmul drivers.
 pub fn row_leverage_scores(a: &Mat) -> Vec<f64> {
+    let mut sp = crate::obs::span("leverage.scores", crate::obs::cat::FACTORIZE);
+    sp.meta("rows", a.rows());
+    sp.meta("cols", a.cols());
     let q = qr_thin(a).q;
     q.row_norms_sq()
 }
@@ -34,6 +37,10 @@ pub fn column_leverage_scores(a: &Mat) -> Vec<f64> {
 /// (`U_k = Q · Ū[:, :k]`), so the `O(mn²)` bulk rides the blocked
 /// compact-WY kernel. `k` is clamped to `[1, min(m, n)]`.
 pub fn subspace_row_leverage_scores(a: &Mat, k: usize) -> Vec<f64> {
+    let mut sp = crate::obs::span("leverage.subspace_scores", crate::obs::cat::FACTORIZE);
+    sp.meta("rows", a.rows());
+    sp.meta("cols", a.cols());
+    sp.meta("k", k);
     let k = k.max(1).min(a.rows().min(a.cols()).max(1));
     let fac = qr_thin(a);
     let svd = svd_jacobi(&fac.r);

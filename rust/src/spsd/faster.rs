@@ -47,6 +47,8 @@ pub fn faster_spsd_core<O: KernelOracle + ?Sized>(
 ) -> Mat {
     let n = oracle.n();
     assert_eq!(c.rows(), n, "C must have n rows");
+    let mut sketch_span = crate::obs::span("spsd.sketch", crate::obs::cat::SKETCH);
+    sketch_span.meta("s", s);
     // Step 3: leverage scores of C.
     let scores = row_leverage_scores(c);
     let total: f64 = scores.iter().sum();
@@ -79,8 +81,11 @@ pub fn faster_spsd_core<O: KernelOracle + ?Sized>(
         }
     }
 
+    drop(sketch_span);
+
     // Step 5: Fast GMR core; steps 6–7: PSD projection.
     let x_raw = solve_core(&s1c, &s1ks2, &s2c.transpose());
+    let _sp = crate::obs::span("spsd.psd_project", crate::obs::cat::FACTORIZE);
     project_psd(&x_raw)
 }
 
@@ -92,8 +97,13 @@ pub fn faster_spsd<O: KernelOracle + ?Sized>(
 ) -> SpsdApproximation {
     let n = oracle.n();
     // Step 2: sample c distinct columns uniformly and observe them.
-    let idx = rng.sample_without_replacement(n, cfg.c);
-    let c = oracle.columns(&idx);
+    let (idx, c) = {
+        let mut sp = crate::obs::span("spsd.sample_columns", crate::obs::cat::GATHER);
+        sp.meta("c", cfg.c);
+        let idx = rng.sample_without_replacement(n, cfg.c);
+        let c = oracle.columns(&idx);
+        (idx, c)
+    };
     let x = faster_spsd_core(oracle, &c, cfg.s, rng);
     SpsdApproximation { idx, c, x }
 }

@@ -97,7 +97,12 @@ pub fn fast_sp_svd(
     rng: &mut Pcg64,
 ) -> SpSvdResult {
     let (m, n) = (stream.rows(), stream.cols());
-    let sketches = FastSpSvdSketches::draw(cfg, m, n, rng);
+    let sketches = {
+        let mut sp = crate::obs::span("svd.sketch.draw", crate::obs::cat::SKETCH);
+        sp.meta("c", cfg.c);
+        sp.meta("s_c", cfg.s_c);
+        FastSpSvdSketches::draw(cfg, m, n, rng)
+    };
     fast_sp_svd_with(stream, cfg, &sketches)
 }
 
@@ -117,7 +122,10 @@ pub fn fast_sp_svd_with(
     while let Some(block) = stream.next_block() {
         let a_l = &block.data;
         let (c0, c1) = (block.col_start, block.col_start + a_l.cols());
+        let mut sp = crate::obs::span("svd.block", crate::obs::cat::STREAM);
+        sp.meta("cols", a_l.cols());
         accumulate_block(a_l, c0, c1, sk, &mut c_acc, &mut r_acc, &mut m_acc);
+        drop(sp);
         blocks += 1;
     }
 
@@ -180,13 +188,21 @@ pub fn finalize(
     m_acc: &Mat,
 ) -> (Mat, Vec<f64>, Mat) {
     let _ = cfg;
-    let u_c = qr_thin(c_acc).q; // m x c
-    let v_r = qr_thin(&r_acc.transpose()).q; // n x r
+    let (u_c, v_r) = {
+        let _sp = crate::obs::span("svd.finalize.qr", crate::obs::cat::FACTORIZE);
+        let u_c = qr_thin(c_acc).q; // m x c
+        let v_r = qr_thin(&r_acc.transpose()).q; // n x r
+        (u_c, v_r)
+    };
     // N = (S_C U_C)† M (V_Rᵀ S_Rᵀ)†
-    let sc_uc = sk.s_c.apply_left(&u_c); // s_c x c
-    let vr_sr = sk.s_r.apply_right(&v_r.transpose()); // r x s_r  (V_Rᵀ S_Rᵀ)
-    let left = pinv_apply_left(&sc_uc, m_acc); // c x s_r
-    let n_core = pinv_apply_right(&left, &vr_sr); // c x r
+    let n_core = {
+        let _sp = crate::obs::span("svd.finalize.core", crate::obs::cat::SOLVE);
+        let sc_uc = sk.s_c.apply_left(&u_c); // s_c x c
+        let vr_sr = sk.s_r.apply_right(&v_r.transpose()); // r x s_r  (V_Rᵀ S_Rᵀ)
+        let left = pinv_apply_left(&sc_uc, m_acc); // c x s_r
+        pinv_apply_right(&left, &vr_sr) // c x r
+    };
+    let _sp = crate::obs::span("svd.finalize.svd", crate::obs::cat::FACTORIZE);
     let Svd { u: u_n, s: sigma, v: v_n } = svd_jacobi(&n_core);
     let u = matmul(&u_c, &u_n);
     let v = matmul(&v_r, &v_n);
