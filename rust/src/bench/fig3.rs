@@ -88,9 +88,9 @@ pub fn run(ctx: &mut BenchCtx) {
 
 fn run_stream<F>(data: &Dataset, block: usize, f: F) -> crate::svdstream::SpSvdResult
 where
-    F: FnOnce(&mut dyn ColumnStream) -> crate::svdstream::SpSvdResult,
+    F: FnOnce(&mut dyn ColumnStream) -> crate::error::Result<crate::svdstream::SpSvdResult>,
 {
-    match data {
+    let res = match data {
         Dataset::Dense(a) => {
             let mut s = DenseColumnStream::new(a, block);
             f(&mut s)
@@ -99,5 +99,6 @@ where
             let mut s = CsrColumnStream::new(a, block);
             f(&mut s)
         }
-    }
+    };
+    res.expect("in-memory bench stream cannot fail")
 }

@@ -18,11 +18,20 @@
 //! exposition are written as CI artifacts (`results/TRACE_serve.json`,
 //! `results/METRICS_serve.prom`).
 //!
-//! Emits `results/BENCH_serve.json` (CI artifact) and `PERF`-prefixed
-//! stdout lines; the CI bench step fails if the warm phase records no
-//! cache hits, its p50 is not under the cold p50, or the traced p50
-//! regresses more than 10% over the cold p50. EXPERIMENTS.md §Serving
-//! tracks the numbers.
+//! Two **robustness** phases close the run: `fault_off` replays the cold
+//! workload with the full fault-tolerance stack (retry policy, degraded
+//! admission, circuit breakers) configured but no fault plan — measuring
+//! that the plumbing is ~free — and `chaos` replays it under a
+//! fixed-seed [`crate::faults::FaultPlan`] (transient stream reads, one
+//! executor panic per kind, admission pressure). Every chaos job must
+//! complete via retry or a verified degraded tier.
+//!
+//! Emits `results/BENCH_serve.json` and `results/BENCH_chaos.json` (CI
+//! artifacts) and `PERF`-prefixed stdout lines; the CI bench step fails
+//! if the warm phase records no cache hits, its p50 is not under the
+//! cold p50, the traced p50 regresses more than 10% over the cold p50,
+//! any chaos job hard-fails, or the fault-off p50 regresses more than 5%
+//! over cold. EXPERIMENTS.md §Serving and §Robustness track the numbers.
 
 use super::harness::{f4, secs, BenchCtx, Profile};
 use crate::coordinator::{ApproxJob, MatrixPayload, Router, ServeConfig};
@@ -150,6 +159,89 @@ pub fn run(ctx: &mut BenchCtx) {
     // Join the executors before exporting so every span tree is closed.
     traced_router.shutdown();
 
+    // Robustness phases (chaos engineering): the same cold workload
+    // against (a) a daemon with the full fault-tolerance stack
+    // configured but no fault plan installed — the plumbing must cost
+    // ~nothing — and (b) a chaos daemon replaying a **fixed** fault
+    // seed: transient stream-read faults healed by in-place retry, one
+    // injected executor panic per kind healed by job-level retry, and
+    // admission pressure that re-plans the first requests at a degraded
+    // tier. Every chaos job must complete (zero hard failures); CI
+    // fails the smoke run otherwise, or if the fault-off p50 regresses
+    // more than 5% over the plain cold phase.
+    //
+    // The seed is chosen so the stream-read schedule has no run of ≥ 4
+    // consecutive trips in its first 4000 occurrences: a 5-attempt
+    // retry therefore heals every injected read fault no matter how
+    // the executors interleave on the shared occurrence counter.
+    const FAULT_SEED: u64 = 0x5EED_C405;
+    let retry = crate::faults::RetryPolicy {
+        max_attempts: 5,
+        base_backoff: std::time::Duration::from_millis(1),
+        cap: std::time::Duration::from_millis(20),
+    };
+    let chaos_plan = || {
+        Arc::new(
+            crate::faults::FaultPlan::new(FAULT_SEED)
+                .with_site(crate::faults::site::STREAM_READ, 0.1, 12)
+                .with_site(crate::faults::site::executor("cur"), 1.0, 1)
+                .with_site(crate::faults::site::executor("spsd"), 1.0, 1)
+                .with_site(crate::faults::site::executor("svd"), 1.0, 1)
+                .with_site(crate::faults::site::QUEUE_ADMISSION, 1.0, 3),
+        )
+    };
+    let mut chaos_stats = (0u64, 0u64, 0u64, 0u64); // hard, degraded, retries, injected
+    for (name, plan) in [("fault_off", None), ("chaos", Some(chaos_plan()))] {
+        let router = Router::with_config(&ServeConfig {
+            workers: 2,
+            cache_bytes: 256 << 20,
+            retry,
+            degrade: true,
+            breaker_threshold: 5,
+            faults: plan,
+            ..ServeConfig::service(2)
+        });
+        let t0 = std::time::Instant::now();
+        let handles: Vec<_> = (0..jobs)
+            .map(|j| router.submit(job(j)).expect("degrading admission must not shed"))
+            .collect();
+        let mut hard_failures = 0u64;
+        let mut degraded_seen = 0u64;
+        for h in handles {
+            match h.wait() {
+                Ok(res) if res.is_degraded() => degraded_seen += 1,
+                Ok(_) => {}
+                Err(_) => hard_failures += 1,
+            }
+        }
+        let seconds = t0.elapsed().as_secs_f64();
+        let hist = router.metrics.take_histogram("serve.latency");
+        assert_eq!(hist.count(), jobs as u64, "every {name} job must record one serve latency");
+        if name == "chaos" {
+            chaos_stats = (
+                hard_failures,
+                degraded_seen,
+                router.metrics.get("serve.retries"),
+                router.metrics.get("faults.injected"),
+            );
+            assert!(router.metrics.get("faults.injected") > 0, "the chaos plan must inject");
+        } else {
+            assert_eq!(hard_failures, 0, "the fault-off phase must not fail any job");
+        }
+        phases.push(Phase {
+            name,
+            seconds,
+            jobs_per_s: jobs as f64 / seconds,
+            p50: hist.quantile(0.5),
+            p95: hist.quantile(0.95),
+            p99: hist.quantile(0.99),
+            cache_hits: router.metrics.get("serve.cache.hits"),
+        });
+        router.shutdown();
+    }
+    let (hard_failures, degraded, chaos_retries, injected) = chaos_stats;
+    assert_eq!(hard_failures, 0, "chaos replay must complete every job via retry/degradation");
+
     let by_cat = trace.seconds_by_category();
     let total_self: f64 = by_cat.values().sum();
     let attribution: Vec<(String, f64)> = by_cat
@@ -192,6 +284,12 @@ pub fn run(ctx: &mut BenchCtx) {
     ctx.line(&format!("PERF serve warm/cold p50 speedup: {}x", f4(speedup)));
     let overhead = phases[2].p50 / phases[0].p50.max(1e-9);
     ctx.line(&format!("PERF serve traced/cold p50 ratio: {}", f4(overhead)));
+    let fault_off_ratio = phases[3].p50 / phases[0].p50.max(1e-9);
+    ctx.line(&format!("PERF serve fault_off/cold p50 ratio: {}", f4(fault_off_ratio)));
+    ctx.line(&format!(
+        "PERF serve chaos: {hard_failures} hard failures, {degraded} degraded, \
+         {chaos_retries} retries, {injected} injected (seed {FAULT_SEED:#x})"
+    ));
     let shares: Vec<String> =
         attribution.iter().map(|(cat, f)| format!("{cat} {:.1}%", 100.0 * f)).collect();
     ctx.line(&format!(
@@ -200,9 +298,11 @@ pub fn run(ctx: &mut BenchCtx) {
         shares.join(", ")
     ));
     write_json(jobs, &phases, &attribution);
+    write_chaos_json(jobs, FAULT_SEED, &phases, hard_failures, degraded, chaos_retries, injected);
     write_artifact("results/TRACE_serve.json", &trace.to_chrome_json());
     write_artifact("results/METRICS_serve.prom", &prom);
-    ctx.line("\nshape check: warm hits == jobs, warm p50 far below cold p50 (enforced in CI).");
+    ctx.line("\nshape check: warm hits == jobs, warm p50 far below cold p50, chaos completes \
+              every job (enforced in CI).");
 }
 
 /// Hand-rolled JSON artifact (no serde in the offline vendor set).
@@ -230,6 +330,41 @@ fn write_json(jobs: usize, phases: &[Phase], attribution: &[(String, f64)]) {
     }
     out.push_str("  }\n}\n");
     let path = "results/BENCH_serve.json";
+    match std::fs::write(path, &out) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+/// Chaos artifact for the CI robustness guard: zero hard failures and a
+/// fault-off p50 within 5% of the plain cold p50 are enforced against
+/// this file by the bench-smoke workflow.
+#[allow(clippy::too_many_arguments)]
+fn write_chaos_json(
+    jobs: usize,
+    fault_seed: u64,
+    phases: &[Phase],
+    hard_failures: u64,
+    degraded: u64,
+    retries: u64,
+    injected: u64,
+) {
+    let p = |name: &str| phases.iter().find(|p| p.name == name).expect("phase recorded");
+    let (cold, fault_off, chaos) = (p("cold"), p("fault_off"), p("chaos"));
+    let mut out = String::from("{\n");
+    out.push_str("  \"bench\": \"fig_serve_chaos\",\n");
+    out.push_str(&format!("  \"threads\": {},\n", crate::parallel::threads()));
+    out.push_str(&format!("  \"jobs\": {jobs},\n"));
+    out.push_str(&format!("  \"fault_seed\": {fault_seed},\n"));
+    out.push_str(&format!("  \"hard_failures\": {hard_failures},\n"));
+    out.push_str(&format!("  \"degraded\": {degraded},\n"));
+    out.push_str(&format!("  \"retries\": {retries},\n"));
+    out.push_str(&format!("  \"injected\": {injected},\n"));
+    out.push_str(&format!("  \"cold_p50\": {:.9},\n", cold.p50));
+    out.push_str(&format!("  \"fault_off_p50\": {:.9},\n", fault_off.p50));
+    out.push_str(&format!("  \"chaos_p50\": {:.9}\n", chaos.p50));
+    out.push_str("}\n");
+    let path = "results/BENCH_chaos.json";
     match std::fs::write(path, &out) {
         Ok(()) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write {path}: {e}"),

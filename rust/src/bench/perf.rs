@@ -123,9 +123,13 @@ fn pipeline_overhead(ctx: &mut BenchCtx) {
 
     let t_direct = ctx.time_n("direct loop", 3, || {
         let mut s = DenseColumnStream::new(&a, 256);
-        std::hint::black_box(fast_sp_svd_with(&mut s, &cfg, &sketches));
+        std::hint::black_box(fast_sp_svd_with(&mut s, &cfg, &sketches).unwrap());
     });
-    let pipeline = StreamPipeline::new(PipelineConfig { workers: 1, queue_depth: 4 });
+    let pipeline = StreamPipeline::new(PipelineConfig {
+        workers: 1,
+        queue_depth: 4,
+        ..PipelineConfig::default()
+    });
     let t_pipe = ctx.time_n("pipeline (1 worker)", 3, || {
         let mut s = DenseColumnStream::new(&a, 256);
         std::hint::black_box(pipeline.run(&mut s, &cfg, &sketches).unwrap());

@@ -53,13 +53,23 @@ USAGE:
                                      run the streaming SP-SVD pipeline
   fastgmr serve [--jobs N] [--workers W] [--queue-depth D] [--cache-mb M]
                 [--batch-window MS] [--deadline MS] [--threads N]
+                [--retry-max R] [--degrade] [--cache-dir DIR]
                                      demo the serving daemon: mixed jobs
                                      through admission control (D=0
                                      unbounded), the coalescing batcher
                                      (MS=0 off), and the fingerprint-
                                      keyed artifact cache (M=0 off);
                                      prints the serve.* metrics report
-                                     and the cache inventory
+                                     and the cache inventory.
+                                     --retry-max R retries transient
+                                     failures and executor panics up to
+                                     R attempts (1 = fail fast);
+                                     --degrade re-plans jobs at a
+                                     smaller sketch tier under admission
+                                     pressure instead of shedding;
+                                     --cache-dir DIR persists the
+                                     artifact cache crash-safely on
+                                     shutdown and warm-starts from it
   fastgmr cur [--size MxN] [--rank K] [--c C] [--r R] [--selection S]
               [--sketch KIND] [--mult A] [--seed N] [--threads N]
                                      CUR decomposition demo: compare the
@@ -290,7 +300,11 @@ fn pipeline(args: &[String], cli_threads: bool) -> Result<()> {
     let a = synth_dense(m, n, 3 * k, SpectrumKind::Exponential { base: 0.85 }, 0.02, &mut r);
     let svd_cfg = FastSpSvdConfig::paper(k, mult, kind);
     let sketches = FastSpSvdSketches::draw(&svd_cfg, m, n, &mut r);
-    let pipeline = StreamPipeline::new(PipelineConfig { workers, queue_depth: depth });
+    let pipeline = StreamPipeline::new(PipelineConfig {
+        workers,
+        queue_depth: depth,
+        ..PipelineConfig::default()
+    });
     let start = std::time::Instant::now();
     let mut stream = DenseColumnStream::new(&a, block);
     // Install on this thread: the pipeline's stream/finalize spans are
@@ -462,7 +476,11 @@ fn cur_stream_cmd(
     let stream_cfg = StreamingCurConfig { kind: sketch, ..StreamingCurConfig::fast(c, r, k, mult) };
     let mut rdraw = rng(seed + 3);
     let sketches = crate::cur::StreamingCurSketches::draw(&stream_cfg, m, n, &mut rdraw);
-    let pipeline = StreamPipeline::new(PipelineConfig { workers, queue_depth: 4 });
+    let pipeline = StreamPipeline::new(PipelineConfig {
+        workers,
+        queue_depth: 4,
+        ..PipelineConfig::default()
+    });
     let mut stream = crate::svdstream::OnePassStream::new(DenseColumnStream::new(&a, block.max(1)));
     let t0 = std::time::Instant::now();
     let run = pipeline.run_cur(&mut stream, &stream_cfg, &sketches, &mut rdraw);
@@ -498,6 +516,25 @@ fn serve(args: &[String]) -> Result<()> {
     let cache_mb: usize = parse_flag(args, "--cache-mb", 64)?;
     let batch_ms: u64 = parse_flag(args, "--batch-window", 0)?;
     let deadline_ms: u64 = parse_flag(args, "--deadline", 0)?;
+    let retry_max: u32 = parse_flag(args, "--retry-max", 1)?;
+    let degrade = args.iter().any(|a| a == "--degrade");
+    let cache_dir = flag_value(args, "--cache-dir").map(str::to_string);
+    if let Some(d) = &cache_dir {
+        std::fs::create_dir_all(d)
+            .map_err(|e| FgError::Config(format!("--cache-dir {d}: {e}")))?;
+    }
+    let cache_path = cache_dir
+        .as_ref()
+        .map(|d| std::path::Path::new(d).join("artifact_cache.txt"));
+    let retry = if retry_max > 1 {
+        crate::faults::RetryPolicy {
+            max_attempts: retry_max,
+            base_backoff: std::time::Duration::from_millis(10),
+            cap: std::time::Duration::from_millis(200),
+        }
+    } else {
+        crate::faults::RetryPolicy::none()
+    };
     let cfg = ServeConfig {
         workers,
         queue_depth,
@@ -505,12 +542,17 @@ fn serve(args: &[String]) -> Result<()> {
         batch_window: std::time::Duration::from_millis(batch_ms),
         default_deadline: (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms)),
         trace: obs_flags.collector(),
+        retry,
+        degrade,
+        cache_path,
+        ..ServeConfig::service(workers)
     };
     let router = Router::with_config(&cfg);
     println!(
         "serve: {jobs} jobs, workers={workers}, queue-depth={queue_depth} (0=unbounded), \
          cache={cache_mb} MB, batch-window={batch_ms} ms, deadline={deadline_ms} ms (0=none), \
-         threads={}",
+         retry-max={retry_max}, degrade={degrade}, cache-dir={}, threads={}",
+        cache_dir.as_deref().unwrap_or("-"),
         crate::parallel::threads()
     );
 
@@ -553,6 +595,9 @@ fn serve(args: &[String]) -> Result<()> {
     }
     for (j, h) in handles {
         match h.wait() {
+            Ok(res) if res.is_degraded() => {
+                println!("job {j}: {} done (degraded tier)", res.kind())
+            }
             Ok(res) => println!("job {j}: {} done", res.kind()),
             Err(e) => println!("job {j}: failed ({e})"),
         }

@@ -102,16 +102,18 @@ impl Batcher {
     }
 
     /// Fan a leader's result out to every coalesced waiter (clones on
-    /// success, a [`FgError::Coordinator`] echo on failure) and return
-    /// the waiters' submission instants so the caller can record their
-    /// end-to-end latencies.
+    /// success, a variant-preserving [`FgError::echo`] on failure — a
+    /// follower of a panicked leader sees the same `Runtime` error the
+    /// leader's submitter does, not a generic coordinator failure) and
+    /// return the waiters' submission instants so the caller can record
+    /// their end-to-end latencies.
     pub fn complete(&self, key: &CacheKey, result: &Result<JobResult>) -> Vec<Instant> {
         let Some(p) = self.inflight.lock().unwrap().remove(key) else { return Vec::new() };
         let mut submitted = Vec::with_capacity(p.waiters.len());
         for (tx, t0) in p.waiters {
             let echo = match result {
                 Ok(r) => Ok(r.clone()),
-                Err(e) => Err(FgError::Coordinator(format!("coalesced leader failed: {e}"))),
+                Err(e) => Err(e.echo()),
             };
             let _ = tx.send(echo);
             submitted.push(t0);

@@ -19,11 +19,13 @@
 
 use crate::coordinator::jobs::{ApproxJob, JobResult, MatrixPayload};
 use crate::cur::{CoreMethod, SelectionStrategy};
+use crate::error::Result;
 use crate::linalg::Mat;
-use crate::runtime::artifacts::ManifestEntry;
+use crate::runtime::artifacts::{Manifest, ManifestEntry};
 use crate::sparse::Csr;
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::fs;
+use std::path::{Path, PathBuf};
 
 /// Word-folded FNV-1a: the classic byte-wise FNV-1a constants applied
 /// per 64-bit word (one xor + multiply per `f64`/`usize`), which keeps
@@ -246,6 +248,35 @@ struct Entry {
     kind: &'static str,
 }
 
+/// First line of the on-disk cache inventory (format version gate).
+const PERSIST_HEADER: &str = "# fastgmr artifact cache v1";
+
+/// Outcome of [`ArtifactCache::warm_start_from`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WarmStartStats {
+    /// Entries restored into the cache.
+    pub loaded: usize,
+    /// Records skipped because they failed to parse, their checksum did
+    /// not match their payload, or their payload disagreed with the
+    /// recorded shapes — logged to stderr, never fatal.
+    pub skipped_corrupt: usize,
+}
+
+/// Split a persisted entry name (`{kind}_{dataset:016x}_{config:016x}`)
+/// back into its kind tag and [`CacheKey`]. Kind tags may themselves
+/// contain underscores (`gmr_exact`, `cur_stream`), so the two 16-digit
+/// hex halves are peeled off the *end*.
+fn parse_cache_name(name: &str) -> Option<(&str, CacheKey)> {
+    let (rest, config) = name.rsplit_once('_')?;
+    let (kind, dataset) = rest.rsplit_once('_')?;
+    if dataset.len() != 16 || config.len() != 16 {
+        return None;
+    }
+    let dataset = u64::from_str_radix(dataset, 16).ok()?;
+    let config = u64::from_str_radix(config, 16).ok()?;
+    Some((kind, CacheKey::new(dataset, config)))
+}
+
 /// LRU artifact store with a byte budget.
 ///
 /// Holds completed [`JobResult`]s keyed by [`CacheKey`]; `get` refreshes
@@ -326,20 +357,8 @@ impl ArtifactCache {
     /// of [`ManifestEntry::to_line`], LRU first — the serving inventory
     /// the `fastgmr serve` subcommand prints.
     pub fn manifest(&self) -> String {
-        let mut rows: Vec<(u64, String)> = self
-            .map
-            .iter()
-            .map(|(key, e)| {
-                let entry = ManifestEntry {
-                    name: format!("{}_{:016x}_{:016x}", e.kind, key.dataset, key.config),
-                    hlo_path: PathBuf::from("cache"),
-                    input_shapes: Vec::new(),
-                    output_shapes: e.result.output_shapes(),
-                    golden_path: None,
-                };
-                (e.tick, entry.to_line())
-            })
-            .collect();
+        let mut rows: Vec<(u64, String)> =
+            self.map.iter().map(|(key, e)| (e.tick, manifest_entry(key, e).to_line())).collect();
         rows.sort();
         let mut out = format!(
             "# artifact cache: {} entries, {} / {} bytes (LRU first)\n",
@@ -352,6 +371,150 @@ impl ArtifactCache {
             out.push('\n');
         }
         out
+    }
+
+    /// Write the resident artifacts to disk, crash-safely: the full
+    /// inventory is rendered to `<path>.tmp` and atomically renamed over
+    /// `path`, so a crash mid-write leaves the previous inventory (or no
+    /// file) intact — never a torn one.
+    ///
+    /// Each record is three lines: the [`ManifestEntry::to_line`] header
+    /// (name `{kind}_{dataset}_{config}`, outputs = factor shapes), a
+    /// `words <count> <fnv64>` checksum line, and the
+    /// [`JobResult::to_words`] payload as one line of hex words. Records
+    /// are written LRU first so a warm start replays them in recency
+    /// order and reproduces the eviction order. Degraded results are
+    /// never resident (the router does not cache them), so every record
+    /// is a full-fidelity artifact.
+    pub fn persist_to(&self, path: &Path) -> Result<()> {
+        let mut rows: Vec<(u64, &CacheKey, &Entry)> =
+            self.map.iter().map(|(key, e)| (e.tick, key, e)).collect();
+        rows.sort_by_key(|(tick, ..)| *tick);
+        let mut out = String::with_capacity(64 + self.bytes * 3);
+        out.push_str(PERSIST_HEADER);
+        out.push('\n');
+        for (_, key, e) in rows {
+            let words = e.result.to_words();
+            let mut h = Fnv64::new();
+            for &w in &words {
+                h.write_u64(w);
+            }
+            out.push_str(&manifest_entry(key, e).to_line());
+            out.push('\n');
+            out.push_str(&format!("words {} {:016x}\n", words.len(), h.finish()));
+            for (i, w) in words.iter().enumerate() {
+                if i > 0 {
+                    out.push(' ');
+                }
+                out.push_str(&format!("{w:016x}"));
+            }
+            out.push('\n');
+        }
+        let tmp = path.with_extension("tmp");
+        fs::write(&tmp, &out)?;
+        fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Restore artifacts persisted by [`ArtifactCache::persist_to`],
+    /// inserting each record through the normal LRU/byte-budget path.
+    /// A missing file is a cold start (zero stats, no error); a file
+    /// whose first line is not the expected format header is refused
+    /// with a config error. Individual records that fail to parse,
+    /// fail their checksum, or decode to the wrong word count are
+    /// skipped and counted (and logged to stderr) — one corrupt record
+    /// never poisons the rest of the inventory.
+    pub fn warm_start_from(&mut self, path: &Path) -> Result<WarmStartStats> {
+        let text = match fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(WarmStartStats::default())
+            }
+            Err(e) => return Err(e.into()),
+        };
+        let mut lines = text.lines();
+        if lines.next().map(str::trim) != Some(PERSIST_HEADER) {
+            return Err(crate::error::FgError::Config(format!(
+                "{} is not a fastgmr artifact cache inventory (missing `{PERSIST_HEADER}`)",
+                path.display()
+            )));
+        }
+        let mut stats = WarmStartStats::default();
+        let mut lines = lines.peekable();
+        while let Some(line) = lines.next() {
+            if !line.starts_with("graph ") {
+                continue; // resync: records always open with a manifest line
+            }
+            match Self::parse_record(line, &mut lines) {
+                Some((key, result)) => {
+                    self.insert(key, &result);
+                    // A record oversized for this budget is valid but not
+                    // admitted — neither loaded nor corrupt.
+                    if self.map.contains_key(&key) {
+                        stats.loaded += 1;
+                    }
+                }
+                None => {
+                    stats.skipped_corrupt += 1;
+                    eprintln!(
+                        "warm-start: skipping corrupt cache record at `{}`",
+                        line.split_whitespace().nth(1).unwrap_or("?")
+                    );
+                }
+            }
+        }
+        Ok(stats)
+    }
+
+    /// Parse one persisted record (manifest line + checksum line + hex
+    /// payload line). Consumes the two follow-up lines only when they
+    /// are structurally plausible, so a truncated record cannot swallow
+    /// the next record's header.
+    fn parse_record(
+        header: &str,
+        lines: &mut std::iter::Peekable<std::str::Lines<'_>>,
+    ) -> Option<(CacheKey, JobResult)> {
+        let entry = Manifest::parse_line(Path::new(""), header)?;
+        let (kind, key) = parse_cache_name(&entry.name)?;
+        let meta = lines.peek().copied()?;
+        if !meta.starts_with("words ") {
+            return None;
+        }
+        lines.next();
+        let mut parts = meta.split_whitespace().skip(1);
+        let count: usize = parts.next()?.parse().ok()?;
+        let checksum = u64::from_str_radix(parts.next()?, 16).ok()?;
+        let data = lines.peek().copied()?;
+        if data.starts_with("graph ") {
+            return None;
+        }
+        lines.next();
+        let words: Vec<u64> = data
+            .split_whitespace()
+            .map(|w| u64::from_str_radix(w, 16).ok())
+            .collect::<Option<_>>()?;
+        if words.len() != count {
+            return None;
+        }
+        let mut h = Fnv64::new();
+        for &w in &words {
+            h.write_u64(w);
+        }
+        if h.finish() != checksum {
+            return None;
+        }
+        JobResult::from_words(kind, &entry.output_shapes, &words).map(|r| (key, r))
+    }
+}
+
+/// Render one resident entry as the shared manifest-line shape.
+fn manifest_entry(key: &CacheKey, e: &Entry) -> ManifestEntry {
+    ManifestEntry {
+        name: format!("{}_{:016x}_{:016x}", e.kind, key.dataset, key.config),
+        hlo_path: PathBuf::from("cache"),
+        input_shapes: Vec::new(),
+        output_shapes: e.result.output_shapes(),
+        golden_path: None,
     }
 }
 
@@ -454,5 +617,122 @@ mod tests {
         assert!(listing.starts_with("# artifact cache: 1 entries"));
         assert!(listing.contains("file=cache"), "reuses the manifest line shape: {listing}");
         assert!(listing.contains("outputs=4x3"), "{listing}");
+    }
+
+    /// One result of every kind, with distinctive (irrational) entries so
+    /// a bitwise round-trip failure cannot hide behind round numbers.
+    fn one_of_each() -> Vec<(CacheKey, JobResult)> {
+        let m = |r, c, salt: f64| Mat::from_fn(r, c, |i, j| ((i * 7 + j) as f64 + salt).sin());
+        vec![
+            (CacheKey::new(0x11, 0xA1), JobResult::Gmr { x: m(4, 3, 0.1) }),
+            (
+                CacheKey::new(0x22, 0xA2),
+                JobResult::Spsd {
+                    idx: vec![3, 1, 4, 1, 5],
+                    c: m(6, 5, 0.2),
+                    x: m(5, 5, 0.3),
+                    entries_observed: 271828,
+                },
+            ),
+            (
+                CacheKey::new(0x33, 0xA3),
+                JobResult::Svd { u: m(6, 2, 0.4), sigma: vec![2.5, 0.125], v: m(5, 2, 0.5) },
+            ),
+            (
+                CacheKey::new(0x44, 0xA4),
+                JobResult::Cur {
+                    cur: crate::cur::CurDecomposition {
+                        col_idx: vec![0, 2, 3],
+                        row_idx: vec![1, 4],
+                        c: m(5, 3, 0.6),
+                        u: m(3, 2, 0.7),
+                        r: m(2, 6, 0.8),
+                    },
+                },
+            ),
+        ]
+    }
+
+    #[test]
+    fn persist_and_warm_start_round_trip_every_kind_bitwise() {
+        let path = Path::new("/tmp/fastgmr_cache_roundtrip_test.txt");
+        let mut cache = ArtifactCache::new(1 << 20);
+        for (key, result) in &one_of_each() {
+            cache.insert(*key, result);
+        }
+        cache.persist_to(path).unwrap();
+        let mut warmed = ArtifactCache::new(1 << 20);
+        let stats = warmed.warm_start_from(path).unwrap();
+        assert_eq!(stats, WarmStartStats { loaded: 4, skipped_corrupt: 0 });
+        for (key, expected) in &one_of_each() {
+            let got = warmed.get(key).expect("entry survives the round trip");
+            assert_eq!(got.kind(), expected.kind());
+            assert_eq!(got.output_shapes(), expected.output_shapes());
+            let label = format!("bitwise round trip for {}", got.kind());
+            assert_eq!(got.to_words(), expected.to_words(), "{label}");
+        }
+        let _ = fs::remove_file(path);
+    }
+
+    #[test]
+    fn warm_start_skips_corrupt_records_and_keeps_the_rest() {
+        let path = Path::new("/tmp/fastgmr_cache_corrupt_test.txt");
+        let mut cache = ArtifactCache::new(1 << 20);
+        for (key, result) in &one_of_each() {
+            cache.insert(*key, result);
+        }
+        cache.persist_to(path).unwrap();
+        // Mangle the checksum of the second record only.
+        let text = fs::read_to_string(path).unwrap();
+        let mut seen = 0;
+        let mangled: Vec<String> = text
+            .lines()
+            .map(|l| {
+                if l.starts_with("words ") {
+                    seen += 1;
+                    if seen == 2 {
+                        let mut parts: Vec<&str> = l.split_whitespace().collect();
+                        parts[2] = "0000000000000000";
+                        return parts.join(" ");
+                    }
+                }
+                l.to_string()
+            })
+            .collect();
+        fs::write(path, mangled.join("\n")).unwrap();
+        let mut warmed = ArtifactCache::new(1 << 20);
+        let stats = warmed.warm_start_from(path).unwrap();
+        assert_eq!(stats.loaded, 3, "the three intact records load");
+        assert_eq!(stats.skipped_corrupt, 1, "the mangled record is skipped, not fatal");
+        let _ = fs::remove_file(path);
+    }
+
+    #[test]
+    fn warm_start_from_missing_file_is_a_cold_start() {
+        let mut cache = ArtifactCache::new(1000);
+        let stats =
+            cache.warm_start_from(Path::new("/tmp/fastgmr_no_such_cache_file.txt")).unwrap();
+        assert_eq!(stats, WarmStartStats::default());
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn warm_start_refuses_a_file_without_the_format_header() {
+        let path = Path::new("/tmp/fastgmr_cache_bad_header_test.txt");
+        fs::write(path, "not a cache inventory\n").unwrap();
+        let err = ArtifactCache::new(1000).warm_start_from(path).unwrap_err();
+        assert!(err.to_string().contains("artifact cache"), "{err}");
+        let _ = fs::remove_file(path);
+    }
+
+    #[test]
+    fn cache_names_parse_back_including_underscored_kinds() {
+        for kind in ApproxJob::KINDS {
+            let name = format!("{}_{:016x}_{:016x}", kind, 0xdead_beefu64, 7u64);
+            let (parsed, key) = parse_cache_name(&name).expect("name round-trips");
+            assert_eq!(parsed, kind);
+            assert_eq!(key, CacheKey::new(0xdead_beef, 7));
+        }
+        assert!(parse_cache_name("gmr_0123_0456").is_none(), "short hex halves are rejected");
     }
 }

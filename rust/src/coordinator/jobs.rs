@@ -86,6 +86,46 @@ impl ApproxJob {
         }
     }
 
+    /// Re-plan this job at a smaller sketch-size tier: every accuracy
+    /// knob (core sketch sizes) is halved, clamped to its structural
+    /// minimum (the core solve needs `s_c ≥ c`, `s_r ≥ r`). Output
+    /// shapes are untouched — a degraded job answers the same query,
+    /// less accurately. Returns `false` when nothing could shrink
+    /// (already at minimum, or the kind has no sketch knob — the exact
+    /// baseline).
+    pub fn degrade_in_place(&mut self) -> bool {
+        fn shrink(v: &mut usize, floor: usize) -> bool {
+            let next = (*v / 2).max(floor.max(1));
+            let changed = next < *v;
+            *v = next;
+            changed
+        }
+        match self {
+            ApproxJob::Gmr { c, r, cfg, .. } => {
+                let sc = shrink(&mut cfg.s_c, c.cols());
+                let sr = shrink(&mut cfg.s_r, r.rows());
+                sc | sr
+            }
+            ApproxJob::SpsdKernel { c, s, .. } => shrink(s, *c),
+            ApproxJob::StreamSvd { cfg, .. } => {
+                let sc = shrink(&mut cfg.s_c, cfg.c);
+                let sr = shrink(&mut cfg.s_r, cfg.r);
+                sc | sr
+            }
+            ApproxJob::GmrExact { .. } => false,
+            ApproxJob::Cur { cfg, .. } => {
+                let sc = shrink(&mut cfg.s_c, cfg.c);
+                let sr = shrink(&mut cfg.s_r, cfg.r);
+                sc | sr
+            }
+            ApproxJob::StreamingCur { cfg, .. } => {
+                let sc = shrink(&mut cfg.s_c, cfg.c);
+                let sr = shrink(&mut cfg.s_r, cfg.r);
+                sc | sr
+            }
+        }
+    }
+
     /// Rough FLOP weight used by the router's load-aware dispatch.
     pub fn weight(&self) -> u64 {
         match self {
@@ -121,6 +161,14 @@ pub enum JobResult {
     Svd { u: Mat, sigma: Vec<f64>, v: Mat },
     /// CUR factors (selected indices + C, U, R).
     Cur { cur: CurDecomposition },
+    /// A result computed at a reduced sketch-size tier under load
+    /// (graceful degradation), verified with the sketched residual
+    /// estimator. `est_rel_residual` is the estimated relative residual
+    /// `‖A − CXR‖_F / ‖A‖_F` of the degraded factors (`NaN` when the
+    /// kind has no residual estimator). Degraded results are never
+    /// cached or persisted — a later uncontended request for the same
+    /// key must recompute at full fidelity.
+    Degraded { est_rel_residual: f64, inner: Box<JobResult> },
 }
 
 impl JobResult {
@@ -130,7 +178,13 @@ impl JobResult {
             JobResult::Spsd { .. } => "spsd",
             JobResult::Svd { .. } => "svd",
             JobResult::Cur { .. } => "cur",
+            JobResult::Degraded { inner, .. } => inner.kind(),
         }
+    }
+
+    /// Whether this result came from the degraded tier.
+    pub fn is_degraded(&self) -> bool {
+        matches!(self, JobResult::Degraded { .. })
     }
 
     /// Output shapes per factor, in the `rows×cols` convention of
@@ -149,6 +203,7 @@ impl JobResult {
                 cur.u.shape(),
                 cur.r.shape(),
             ],
+            JobResult::Degraded { inner, .. } => inner.output_shapes(),
         }
     }
 
@@ -157,6 +212,116 @@ impl JobResult {
     /// scalar/index; struct overhead is noise at matrix scale).
     pub fn approx_bytes(&self) -> usize {
         self.output_shapes().iter().map(|(r, c)| r * c * 8).sum()
+    }
+
+    /// Flatten the payload to 64-bit words, factor by factor in
+    /// [`JobResult::output_shapes`] order: floats as IEEE-754 bits
+    /// (`f64::to_bits`), indices as plain `u64`, plus one trailing word
+    /// for `entries_observed` on SPSD results. Shapes travel separately
+    /// (via the cache's manifest line), so the encoding is exactly
+    /// `Σ rows·cols` words (+1 for SPSD) — the round-trip partner of
+    /// [`JobResult::from_words`]. `Degraded` results are never
+    /// persisted; encoding one encodes its inner result.
+    pub fn to_words(&self) -> Vec<u64> {
+        fn mat(out: &mut Vec<u64>, m: &Mat) {
+            out.extend(m.data().iter().map(|v| v.to_bits()));
+        }
+        let mut w = Vec::new();
+        match self {
+            JobResult::Gmr { x } => mat(&mut w, x),
+            JobResult::Spsd { idx, c, x, entries_observed } => {
+                w.extend(idx.iter().map(|&i| i as u64));
+                mat(&mut w, c);
+                mat(&mut w, x);
+                w.push(*entries_observed);
+            }
+            JobResult::Svd { u, sigma, v } => {
+                mat(&mut w, u);
+                w.extend(sigma.iter().map(|s| s.to_bits()));
+                mat(&mut w, v);
+            }
+            JobResult::Cur { cur } => {
+                w.extend(cur.col_idx.iter().map(|&i| i as u64));
+                w.extend(cur.row_idx.iter().map(|&i| i as u64));
+                mat(&mut w, &cur.c);
+                mat(&mut w, &cur.u);
+                mat(&mut w, &cur.r);
+            }
+            JobResult::Degraded { inner, .. } => return inner.to_words(),
+        }
+        w
+    }
+
+    /// Rebuild a result from its [`JobResult::to_words`] encoding given
+    /// the kind tag and per-factor shapes. Returns `None` on any
+    /// mismatch (unknown kind, wrong factor count, word count that
+    /// disagrees with the shapes) — the warm-start loader treats `None`
+    /// as a corrupt entry and skips it.
+    pub fn from_words(kind: &str, shapes: &[(usize, usize)], words: &[u64]) -> Option<JobResult> {
+        fn mat(words: &mut &[u64], shape: (usize, usize)) -> Option<Mat> {
+            let n = shape.0.checked_mul(shape.1)?;
+            if words.len() < n {
+                return None;
+            }
+            let (head, tail) = words.split_at(n);
+            *words = tail;
+            Some(Mat::from_vec(shape.0, shape.1, head.iter().map(|&w| f64::from_bits(w)).collect()))
+        }
+        fn idx(words: &mut &[u64], n: usize) -> Option<Vec<usize>> {
+            if words.len() < n {
+                return None;
+            }
+            let (head, tail) = words.split_at(n);
+            *words = tail;
+            Some(head.iter().map(|&w| w as usize).collect())
+        }
+        let mut w = words;
+        let result = match kind {
+            "gmr" => {
+                let [sx] = shapes else { return None };
+                JobResult::Gmr { x: mat(&mut w, *sx)? }
+            }
+            "spsd" => {
+                let [si, sc, sx] = shapes else { return None };
+                if si.1 != 1 {
+                    return None;
+                }
+                let idx = idx(&mut w, si.0)?;
+                let c = mat(&mut w, *sc)?;
+                let x = mat(&mut w, *sx)?;
+                let [entries_observed] = w else { return None };
+                let entries_observed = *entries_observed;
+                w = &[];
+                JobResult::Spsd { idx, c, x, entries_observed }
+            }
+            "svd" => {
+                let [su, ss, sv] = shapes else { return None };
+                if ss.1 != 1 {
+                    return None;
+                }
+                let u = mat(&mut w, *su)?;
+                let sigma = mat(&mut w, (ss.0, 1))?.data().to_vec();
+                let v = mat(&mut w, *sv)?;
+                JobResult::Svd { u, sigma, v }
+            }
+            "cur" => {
+                let [sci, sri, sc, su, sr] = shapes else { return None };
+                if sci.1 != 1 || sri.1 != 1 {
+                    return None;
+                }
+                JobResult::Cur {
+                    cur: CurDecomposition {
+                        col_idx: idx(&mut w, sci.0)?,
+                        row_idx: idx(&mut w, sri.0)?,
+                        c: mat(&mut w, *sc)?,
+                        u: mat(&mut w, *su)?,
+                        r: mat(&mut w, *sr)?,
+                    },
+                }
+            }
+            _ => return None,
+        };
+        if w.is_empty() { Some(result) } else { None }
     }
 }
 

@@ -31,7 +31,8 @@
 use crate::cur::streaming::{
     self as curstream, StreamState, StreamingCurConfig, StreamingCurResult, StreamingCurSketches,
 };
-use crate::error::{FgError, Result};
+use crate::error::{panic_message, FgError, Result};
+use crate::faults::RetryPolicy;
 use crate::linalg::Mat;
 use crate::metrics::Metrics;
 use crate::parallel::{self, Pool};
@@ -56,11 +57,17 @@ pub struct PipelineConfig {
     /// accumulated plus the prefetched one) — still tighter than the old
     /// channel's per-block queue for typical depths.
     pub queue_depth: usize,
+    /// Retry policy for transient stream-read errors. The reader
+    /// retries *within the current block* with capped exponential
+    /// backoff — sketch/reservoir state is untouched by a retry, so
+    /// the single-pass contract holds (see
+    /// [`ColumnStream::next_block`]).
+    pub retry: RetryPolicy,
 }
 
 impl Default for PipelineConfig {
     fn default() -> Self {
-        Self { workers: 0, queue_depth: 4 }
+        Self { workers: 0, queue_depth: 4, retry: RetryPolicy::default() }
     }
 }
 
@@ -134,7 +141,7 @@ impl StreamPipeline {
         let mut stream_span = crate::obs::span("pipeline.stream", crate::obs::cat::STREAM);
         let mut sent = 0usize;
         let mut max_inflight = 0usize;
-        let mut batch = read_batch(stream, slots);
+        let mut batch = read_batch(stream, slots, &self.cfg.retry, &self.metrics)?;
         while !batch.is_empty() {
             sent += batch.len();
             max_inflight = max_inflight.max(batch.len());
@@ -189,15 +196,19 @@ impl StreamPipeline {
                             state.blocks += 1;
                         });
                     });
-                    let next = read_batch(stream, slots);
+                    let next = read_batch(stream, slots, &self.cfg.retry, &self.metrics);
                     (compute.join(), next)
                 })
             });
-            update_res
-                .map_err(|_| FgError::Coordinator("worker panicked during block update".into()))?;
+            update_res.map_err(|p| {
+                FgError::Coordinator(format!(
+                    "worker panicked during block update: {}",
+                    panic_message(p)
+                ))
+            })?;
             self.metrics.add("pipeline.blocks", batch_len);
             self.metrics.add("pipeline.cols", batch_cols);
-            batch = next;
+            batch = next?;
         }
         stream_span.meta("blocks", sent);
         drop(stream_span);
@@ -264,7 +275,7 @@ impl StreamPipeline {
         // recorded structure is identical at every knob setting.
         let mut stream_span = crate::obs::span("pipeline.stream", crate::obs::cat::STREAM);
         let mut sent = 0usize;
-        let mut batch = read_batch(stream, slots);
+        let mut batch = read_batch(stream, slots, &self.cfg.retry, &self.metrics)?;
         while !batch.is_empty() {
             sent += batch.len();
             let batch_cols: u64 = batch.iter().map(|(_, b)| b.cols() as u64).sum();
@@ -292,18 +303,22 @@ impl StreamPipeline {
                         });
                         work
                     });
-                    let next = read_batch(stream, slots);
+                    let next = read_batch(stream, slots, &self.cfg.retry, &self.metrics);
                     (compute.join(), next)
                 })
             });
-            let sketched = sketched
-                .map_err(|_| FgError::Coordinator("worker panicked during block sketch".into()))?;
+            let sketched = sketched.map_err(|p| {
+                FgError::Coordinator(format!(
+                    "worker panicked during block sketch: {}",
+                    panic_message(p)
+                ))
+            })?;
             for (bs, _) in sketched {
                 state.fold(bs.expect("every batch entry is sketched"), rng);
             }
             self.metrics.add("pipeline.cur_blocks", batch_len);
             self.metrics.add("pipeline.cur_cols", batch_cols);
-            batch = next;
+            batch = next?;
         }
         stream_span.meta("blocks", sent);
         drop(stream_span);
@@ -321,13 +336,37 @@ impl StreamPipeline {
 /// Pull the next batch (≤ `slots` blocks) off the stream. Batch
 /// composition depends only on stream order and the slot count — the
 /// double-buffered prefetch cannot reorder it.
-fn read_batch(stream: &mut dyn ColumnStream, slots: usize) -> Vec<(usize, Mat)> {
+///
+/// Transient read errors are retried *within the current block* under
+/// `retry` (capped exponential backoff): a failing `next_block` has not
+/// advanced the stream, so the retry re-reads the block the failed call
+/// would have yielded, and no downstream sketch or reservoir state is
+/// touched in between. Permanent errors (and transient ones that
+/// exhaust the attempt budget) propagate.
+fn read_batch(
+    stream: &mut dyn ColumnStream,
+    slots: usize,
+    retry: &RetryPolicy,
+    metrics: &Metrics,
+) -> Result<Vec<(usize, Mat)>> {
     let mut batch = Vec::with_capacity(slots);
     while batch.len() < slots {
-        match stream.next_block() {
+        let mut attempt = 1u32;
+        let block = loop {
+            match stream.next_block() {
+                Ok(b) => break b,
+                Err(e) if e.is_transient() && attempt < retry.max_attempts => {
+                    metrics.add("pipeline.read_retries", 1);
+                    std::thread::sleep(retry.backoff(attempt));
+                    attempt += 1;
+                }
+                Err(e) => return Err(e),
+            }
+        };
+        match block {
             Some(block) => batch.push((block.col_start, block.data)),
             None => break,
         }
     }
-    batch
+    Ok(batch)
 }

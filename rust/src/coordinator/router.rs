@@ -43,13 +43,16 @@
 use super::batcher::{Admission, Batcher};
 use super::cache::{job_key, ArtifactCache, CacheKey};
 use super::jobs::{ApproxJob, JobResult, MatrixPayload};
-use crate::error::{FgError, Result};
+use crate::error::{panic_message, FgError, Result};
+use crate::faults::{self, site, CircuitBreaker, FaultPlan, FaultyStream, RetryPolicy, RetryStream};
+use crate::linalg::Mat;
 use crate::metrics::Metrics;
 use crate::obs::{self, TraceCollector};
 use crate::rng::rng;
 use crate::spsd::{CountingOracle, RbfOracle};
-use crate::svdstream::source::{CsrColumnStream, DenseColumnStream};
+use crate::svdstream::source::{ColumnStream, CsrColumnStream, DenseColumnStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -101,6 +104,33 @@ pub struct ServeConfig {
     /// Trace collector installed on every executor thread; `None`
     /// (the default) disables tracing at zero cost on the span path.
     pub trace: Option<Arc<TraceCollector>>,
+    /// Retry policy for transient failures: stream-read errors inside
+    /// streaming executors and panicking executor bodies (job-level
+    /// re-execution). [`RetryPolicy::none`] (the [`ServeConfig::service`]
+    /// default) fails on the first error, preserving plain-router
+    /// semantics.
+    pub retry: RetryPolicy,
+    /// Graceful degradation: when admission would shed a job
+    /// ([`FgError::Overloaded`]), re-plan it at a smaller sketch-size
+    /// tier instead and tag the result [`JobResult::Degraded`] with its
+    /// sketched relative residual. Jobs that cannot degrade (the exact
+    /// baseline, or already at minimum) are still shed.
+    pub degrade: bool,
+    /// On-disk artifact-cache inventory: warm-started from this path at
+    /// construction and persisted (crash-safely, temp file + rename) on
+    /// shutdown/drop. `None` keeps the cache memory-only.
+    pub cache_path: Option<PathBuf>,
+    /// Consecutive job-level failures (post-retry panics) of one kind
+    /// that open that kind's circuit breaker; `0` disables breakers.
+    pub breaker_threshold: u32,
+    /// How long an open breaker rejects before admitting a half-open
+    /// probe.
+    pub breaker_cooldown: Duration,
+    /// Deterministic fault-injection plan (chaos testing): installed on
+    /// every executor thread via [`faults::install`] and consulted at the
+    /// admission/persistence sites. `None` (the default) injects nothing
+    /// at zero cost.
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl Default for ServeConfig {
@@ -111,7 +141,8 @@ impl Default for ServeConfig {
 
 impl ServeConfig {
     /// Plain job-router behavior (what [`Router::new`] uses): no cache,
-    /// no batching, unbounded queue, no deadlines.
+    /// no batching, unbounded queue, no deadlines, no retries, no
+    /// degradation, no breakers, no fault injection.
     pub fn service(workers: usize) -> Self {
         Self {
             workers,
@@ -120,6 +151,12 @@ impl ServeConfig {
             batch_window: Duration::ZERO,
             default_deadline: None,
             trace: None,
+            retry: RetryPolicy::none(),
+            degrade: false,
+            cache_path: None,
+            breaker_threshold: 0,
+            breaker_cooldown: Duration::from_millis(100),
+            faults: None,
         }
     }
 }
@@ -140,6 +177,16 @@ struct ServeCounters {
     deadline_expired: Arc<AtomicU64>,
     queue_depth: Arc<AtomicU64>,
     queue_peak: Arc<AtomicU64>,
+    /// Retries performed: stream-level (transient read errors absorbed
+    /// by [`RetryStream`]) plus job-level (panicked executors re-run).
+    retries: Arc<AtomicU64>,
+    /// Jobs completed at a degraded sketch tier instead of being shed.
+    degraded: Arc<AtomicU64>,
+    /// Circuit-breaker open transitions (closed/half-open → open).
+    breaker_open: Arc<AtomicU64>,
+    /// Gauge mirroring [`FaultPlan::injected`] — total faults the
+    /// configured plan has injected, across every site.
+    faults_injected: Arc<AtomicU64>,
 }
 
 impl ServeCounters {
@@ -155,6 +202,10 @@ impl ServeCounters {
             deadline_expired: metrics.counter("serve.deadline_expired"),
             queue_depth: metrics.counter("serve.queue.depth"),
             queue_peak: metrics.counter("serve.queue.peak"),
+            retries: metrics.counter("serve.retries"),
+            degraded: metrics.counter("serve.degraded"),
+            breaker_open: metrics.counter("serve.breaker_open"),
+            faults_injected: metrics.counter("faults.injected"),
         }
     }
 }
@@ -183,9 +234,23 @@ struct Shared {
     serve: ServeCounters,
     kinds: Vec<KindCounters>,
     trace: Option<Arc<TraceCollector>>,
+    retry: RetryPolicy,
+    degrade: bool,
+    cache_path: Option<PathBuf>,
+    /// Per-kind breakers, aligned with `kinds` (`None` = disabled).
+    breakers: Option<Vec<CircuitBreaker>>,
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl Shared {
+    /// Mirror the plan's injected-fault total into the `faults.injected`
+    /// gauge (no-op without a plan).
+    fn sync_faults_gauge(&self) {
+        if let Some(plan) = &self.faults {
+            self.serve.faults_injected.store(plan.injected(), Ordering::Relaxed);
+        }
+    }
+
     /// Whether submissions need a [`CacheKey`] at all (fingerprinting
     /// costs a pass over the payload — skip it for the plain router).
     fn keyed(&self) -> bool {
@@ -213,6 +278,9 @@ struct QueueItem {
     key: Option<CacheKey>,
     /// Whether this submission leads a batch (must fan out on completion).
     lead: bool,
+    /// Whether admission re-planned this job at a degraded sketch tier
+    /// (the result must be verified, tagged, and never cached).
+    degraded: bool,
     reply: mpsc::Sender<Result<JobResult>>,
     submitted: Instant,
     deadline: Option<Instant>,
@@ -262,7 +330,18 @@ impl Router {
             serve: ServeCounters::new(&metrics),
             kinds,
             trace: cfg.trace.clone(),
+            retry: cfg.retry,
+            degrade: cfg.degrade,
+            cache_path: cfg.cache_path.clone(),
+            breakers: (cfg.breaker_threshold > 0).then(|| {
+                ApproxJob::KINDS
+                    .iter()
+                    .map(|_| CircuitBreaker::new(cfg.breaker_threshold, cfg.breaker_cooldown))
+                    .collect()
+            }),
+            faults: cfg.faults.clone(),
         });
+        warm_start(&shared);
         let mut handles = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers {
             let rx = rx.clone();
@@ -275,6 +354,7 @@ impl Router {
                 let budget = crate::parallel::share_budget(crate::parallel::threads(), workers, w);
                 crate::parallel::set_thread_budget(budget);
                 obs::install(shared.trace.clone());
+                faults::install(shared.faults.clone());
                 loop {
                     let item = rx.lock().unwrap().recv();
                     let Ok(item) = item else { break };
@@ -313,7 +393,7 @@ impl Router {
     /// dequeue, without occupying an executor.
     pub fn submit_with_deadline(
         &self,
-        job: ApproxJob,
+        mut job: ApproxJob,
         deadline: Option<Duration>,
     ) -> Result<JobHandle> {
         let shared = &self.shared;
@@ -350,15 +430,28 @@ impl Router {
             }
         }
 
-        // 3. Admission: bound the queue, shedding excess load.
+        // 3. Admission: bound the queue. Under pressure (a full queue, or
+        //    an injected `queue.admission` fault simulating one) either
+        //    shed the job, or — with degradation on — re-plan it at a
+        //    smaller sketch tier and admit the cheaper job instead.
         let depth = shared.queued.fetch_add(1, Ordering::SeqCst) + 1;
-        if shared.queue_depth > 0 && depth > shared.queue_depth {
-            shared.queued.fetch_sub(1, Ordering::SeqCst);
-            shared.serve.shed.fetch_add(1, Ordering::Relaxed);
-            if let (Some(key), true) = (&key, lead) {
-                shared.batcher.abort(key, shared.queue_depth);
+        let over = shared.queue_depth > 0 && depth > shared.queue_depth;
+        let injected = shared.faults.as_ref().is_some_and(|p| p.trip(site::QUEUE_ADMISSION));
+        if injected {
+            shared.sync_faults_gauge();
+        }
+        let mut degraded = false;
+        if over || injected {
+            if shared.degrade && job.degrade_in_place() {
+                degraded = true;
+            } else {
+                shared.queued.fetch_sub(1, Ordering::SeqCst);
+                shared.serve.shed.fetch_add(1, Ordering::Relaxed);
+                if let (Some(key), true) = (&key, lead) {
+                    shared.batcher.abort(key, shared.queue_depth);
+                }
+                return Err(FgError::Overloaded { depth: shared.queue_depth });
             }
-            return Err(FgError::Overloaded { depth: shared.queue_depth });
         }
         shared.peak.fetch_max(depth, Ordering::SeqCst);
         shared.serve.queue_depth.store(depth as u64, Ordering::Relaxed);
@@ -366,7 +459,7 @@ impl Router {
         kc.submitted.fetch_add(1, Ordering::Relaxed);
 
         let deadline = deadline.map(|d| submitted + d);
-        let item = QueueItem { job, key, lead, reply: reply_tx, submitted, deadline };
+        let item = QueueItem { job, key, lead, degraded, reply: reply_tx, submitted, deadline };
         self.tx.as_ref().expect("router already shut down").send(item).map_err(|_| {
             FgError::Coordinator("router workers exited before job could be queued".into())
         })?;
@@ -380,7 +473,9 @@ impl Router {
         self.shared.cache.as_ref().map(|c| c.lock().unwrap().manifest())
     }
 
-    /// Drain and join workers.
+    /// Drain and join workers; if a [`ServeConfig::cache_path`] is
+    /// configured, the artifact cache is persisted (crash-safely) when
+    /// the router is subsequently dropped.
     pub fn shutdown(mut self) {
         self.tx.take();
         for h in self.workers.drain(..) {
@@ -395,13 +490,71 @@ impl Drop for Router {
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
+        persist(&self.shared);
     }
 }
 
-/// Executor body for one dequeued item: deadline check, guarded
-/// execution, cache fill, batch fan-out, latency accounting.
+/// Warm-start the artifact cache from its on-disk inventory at router
+/// construction (no-op without both a cache and a path). An injected
+/// `cache.warm_start` fault degrades to a cold start — the daemon comes
+/// up empty rather than not at all. The constructing thread installs the
+/// configured trace collector first so the `cache.warm_start` span is
+/// captured alongside executor spans.
+fn warm_start(shared: &Shared) {
+    let (Some(cache), Some(path)) = (&shared.cache, &shared.cache_path) else { return };
+    if shared.trace.is_some() {
+        obs::install(shared.trace.clone());
+    }
+    if shared.faults.as_ref().is_some_and(|p| p.trip(site::CACHE_WARM_START)) {
+        shared.sync_faults_gauge();
+        eprintln!("cache.warm_start: injected fault — starting cold");
+        return;
+    }
+    let mut sp = obs::span("cache.warm_start", obs::cat::CACHE);
+    let mut guard = cache.lock().unwrap();
+    match guard.warm_start_from(path) {
+        Ok(stats) => {
+            if sp.active() {
+                sp.meta("loaded", stats.loaded as u64);
+                sp.meta("skipped_corrupt", stats.skipped_corrupt as u64);
+            }
+            shared.metrics.add("serve.warm_start.loaded", stats.loaded as u64);
+            shared.metrics.add("serve.warm_start.skipped_corrupt", stats.skipped_corrupt as u64);
+            shared.serve.cache_bytes.store(guard.bytes() as u64, Ordering::Relaxed);
+            shared.serve.cache_entries.store(guard.len() as u64, Ordering::Relaxed);
+        }
+        Err(e) => eprintln!("cache.warm_start: {e} — starting cold"),
+    }
+}
+
+/// Persist the artifact cache on router drop (no-op without both a cache
+/// and a path). An injected `cache.persist` fault skips the write — the
+/// simulated crash between compute and persist; the previous on-disk
+/// inventory, if any, stays intact thanks to the temp-file + rename
+/// protocol.
+fn persist(shared: &Shared) {
+    let (Some(cache), Some(path)) = (&shared.cache, &shared.cache_path) else { return };
+    if shared.faults.as_ref().is_some_and(|p| p.trip(site::CACHE_PERSIST)) {
+        shared.sync_faults_gauge();
+        eprintln!("cache.persist: injected fault — skipping persist (simulated crash)");
+        return;
+    }
+    let mut sp = obs::span("cache.persist", obs::cat::CACHE);
+    let guard = cache.lock().unwrap();
+    if sp.active() {
+        sp.meta("entries", guard.len() as u64);
+        sp.meta("bytes", guard.bytes() as u64);
+    }
+    if let Err(e) = guard.persist_to(path) {
+        eprintln!("cache.persist: {e}");
+    }
+}
+
+/// Executor body for one dequeued item: deadline check, circuit-breaker
+/// admission, guarded (retried) execution, degraded-tier verification,
+/// cache fill, batch fan-out, latency accounting.
 fn run_item(shared: &Shared, item: QueueItem) {
-    let QueueItem { job, key, lead, reply, submitted, deadline } = item;
+    let QueueItem { job, key, lead, degraded, reply, submitted, deadline } = item;
     let depth = shared.queued.fetch_sub(1, Ordering::SeqCst).saturating_sub(1);
     shared.serve.queue_depth.store(depth as u64, Ordering::Relaxed);
     let kind = job.kind();
@@ -431,22 +584,98 @@ fn run_item(shared: &Shared, item: QueueItem) {
     }
 
     // A panicking job must fail that job, not take down the executor:
-    // the daemon serves many independent requests.
-    let guarded = || catch_unwind(AssertUnwindSafe(|| execute(job)));
-    let result = shared
-        .metrics
-        .time(&kc.router_latency, guarded)
-        .unwrap_or_else(|_| Err(FgError::Runtime(format!("{kind} job panicked in executor"))));
+    // the daemon serves many independent requests. Panics are retried at
+    // the job level up to the policy (an injected or otherwise transient
+    // panic heals); a kind that keeps failing trips its circuit breaker
+    // so later jobs fail fast instead of burning executor time.
+    let breaker = shared
+        .breakers
+        .as_ref()
+        .and_then(|bs| shared.kinds.iter().position(|k| k.kind == kind).map(|i| &bs[i]));
+    let mut panicked = false;
+    let result = if breaker.is_some_and(|b| !b.admit()) {
+        Err(FgError::CircuitOpen { kind: kind.to_string() })
+    } else {
+        let mut attempt = 1u32;
+        loop {
+            let guarded = || {
+                catch_unwind(AssertUnwindSafe(|| {
+                    if let Some(plan) = faults::current() {
+                        if plan.trip(&site::executor(kind)) {
+                            panic!("injected executor fault (site executor.{kind})");
+                        }
+                    }
+                    execute(&job, &shared.retry, &shared.serve.retries)
+                }))
+            };
+            match shared.metrics.time(&kc.router_latency, guarded) {
+                Ok(res) => break res,
+                Err(payload) => {
+                    let msg = panic_message(payload);
+                    if attempt < shared.retry.max_attempts {
+                        shared.serve.retries.fetch_add(1, Ordering::Relaxed);
+                        let mut sp = obs::span("router.retry", obs::cat::DISPATCH);
+                        if sp.active() {
+                            sp.meta("kind", kind);
+                            sp.meta("attempt", attempt as u64);
+                        }
+                        std::thread::sleep(shared.retry.backoff(attempt));
+                        attempt += 1;
+                    } else {
+                        panicked = true;
+                        break Err(FgError::Runtime(format!(
+                            "{kind} job panicked in executor: {msg}"
+                        )));
+                    }
+                }
+            }
+        }
+    };
+    shared.sync_faults_gauge();
+    if let Some(b) = breaker {
+        match &result {
+            Ok(_) => b.on_success(),
+            Err(_) if panicked => {
+                if b.on_failure() {
+                    shared.serve.breaker_open.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Err(_) => {}
+        }
+    }
+    // Verify and tag a degraded-tier result: the client learns both that
+    // it got the cheaper answer and how far off the estimator thinks it
+    // is. Degraded results never enter the cache (the `is_degraded`
+    // guard below), so a later uncontended request recomputes at full
+    // fidelity.
+    let result = match (result, degraded) {
+        (Ok(res), true) => {
+            let mut sp = obs::span("router.degrade.verify", obs::cat::DISPATCH);
+            let est = degraded_residual(&job, &res);
+            if sp.active() {
+                sp.meta("kind", kind);
+                sp.meta("est_rel_residual", est);
+            }
+            drop(sp);
+            shared.serve.degraded.fetch_add(1, Ordering::Relaxed);
+            Ok(JobResult::Degraded { est_rel_residual: est, inner: Box::new(res) })
+        }
+        (result, _) => result,
+    };
     kc.completed.fetch_add(1, Ordering::Relaxed);
 
     if let (Some(key), Some(cache), Ok(res)) = (&key, &shared.cache, &result) {
-        let mut cache = cache.lock().unwrap();
-        let evicted = cache.insert(*key, res);
-        if evicted > 0 {
-            shared.serve.cache_evictions.fetch_add(evicted as u64, Ordering::Relaxed);
+        // A degraded artifact must not be cached under its full-fidelity
+        // key.
+        if !res.is_degraded() {
+            let mut cache = cache.lock().unwrap();
+            let evicted = cache.insert(*key, res);
+            if evicted > 0 {
+                shared.serve.cache_evictions.fetch_add(evicted as u64, Ordering::Relaxed);
+            }
+            shared.serve.cache_bytes.store(cache.bytes() as u64, Ordering::Relaxed);
+            shared.serve.cache_entries.store(cache.len() as u64, Ordering::Relaxed);
         }
-        shared.serve.cache_bytes.store(cache.bytes() as u64, Ordering::Relaxed);
-        shared.serve.cache_entries.store(cache.len() as u64, Ordering::Relaxed);
     }
     // Close the job's span tree before the reply is observable: a test
     // that waits on the handle must find the full tree recorded.
@@ -461,25 +690,53 @@ fn run_item(shared: &Shared, item: QueueItem) {
     let _ = reply.send(result);
 }
 
-/// Execute one job (the worker body).
-fn execute(job: ApproxJob) -> Result<JobResult> {
+/// Run a streaming-job body over its column stream, wired for fault
+/// tolerance: under an installed [`FaultPlan`] the raw stream is wrapped
+/// in a [`FaultyStream`] (so `stream.read` trips surface as transient
+/// errors), and either way in a [`RetryStream`] so transient read errors
+/// are retried in place up to the policy — the fault layer errors
+/// *before* its source advances, so each retry re-yields the same block
+/// and the single-pass reservoir/sketch state never sees a gap.
+fn with_stream<S: ColumnStream, T>(
+    stream: S,
+    retry: &RetryPolicy,
+    retries: &Arc<AtomicU64>,
+    f: impl FnOnce(&mut dyn ColumnStream) -> Result<T>,
+) -> Result<T> {
+    match faults::current() {
+        Some(plan) => {
+            let faulty = FaultyStream::new(stream, plan);
+            let mut retried = RetryStream::new(faulty, *retry).with_counter(retries.clone());
+            f(&mut retried)
+        }
+        None => {
+            let mut retried = RetryStream::new(stream, *retry).with_counter(retries.clone());
+            f(&mut retried)
+        }
+    }
+}
+
+/// Execute one job (the worker body). Borrows the job so the caller can
+/// retry a panicked execution and verify a degraded result against the
+/// original input.
+fn execute(job: &ApproxJob, retry: &RetryPolicy, retries: &Arc<AtomicU64>) -> Result<JobResult> {
     match job {
         ApproxJob::Gmr { a, c, r, cfg, seed } => {
-            let mut rr = rng(seed);
-            let sol = crate::gmr::solve_fast(a.as_input(), &c, &r, &cfg, &mut rr);
+            let mut rr = rng(*seed);
+            let sol = crate::gmr::solve_fast(a.as_input(), c, r, cfg, &mut rr);
             Ok(JobResult::Gmr { x: sol.x })
         }
         ApproxJob::GmrExact { a, c, r } => {
-            let sol = crate::gmr::solve_exact(a.as_input(), &c, &r);
+            let sol = crate::gmr::solve_exact(a.as_input(), c, r);
             Ok(JobResult::Gmr { x: sol.x })
         }
         ApproxJob::SpsdKernel { x, sigma, c, s, seed } => {
-            let mut rr = rng(seed);
-            let oracle = RbfOracle::new(&x, sigma);
+            let mut rr = rng(*seed);
+            let oracle = RbfOracle::new(x, *sigma);
             let counting = CountingOracle::new(&oracle);
             let sol = crate::spsd::faster_spsd(
                 &counting,
-                &crate::spsd::FasterSpsdConfig { c, s },
+                &crate::spsd::FasterSpsdConfig { c: *c, s: *s },
                 &mut rr,
             );
             Ok(JobResult::Spsd {
@@ -490,39 +747,77 @@ fn execute(job: ApproxJob) -> Result<JobResult> {
             })
         }
         ApproxJob::Cur { a, cfg, seed } => {
-            let mut rr = rng(seed);
-            let cur = crate::cur::decompose(a.as_input(), &cfg, &mut rr);
+            let mut rr = rng(*seed);
+            let cur = crate::cur::decompose(a.as_input(), cfg, &mut rr);
             Ok(JobResult::Cur { cur })
         }
         ApproxJob::StreamingCur { a, cfg, block, seed } => {
             // Single pass over the payload; the sketch applies inside
             // run on this executor's budgeted pool share.
-            let mut rr = rng(seed);
-            let res = match &a {
+            let mut rr = rng(*seed);
+            let res = match a {
                 MatrixPayload::Dense(m) => {
-                    let mut stream = DenseColumnStream::new(m, block);
-                    crate::cur::streaming_cur(&mut stream, &cfg, &mut rr)
+                    with_stream(DenseColumnStream::new(m, *block), retry, retries, |s| {
+                        crate::cur::streaming_cur(s, cfg, &mut rr)
+                    })?
                 }
                 MatrixPayload::Sparse(m) => {
-                    let mut stream = CsrColumnStream::new(m, block);
-                    crate::cur::streaming_cur(&mut stream, &cfg, &mut rr)
+                    with_stream(CsrColumnStream::new(m, *block), retry, retries, |s| {
+                        crate::cur::streaming_cur(s, cfg, &mut rr)
+                    })?
                 }
             };
             Ok(JobResult::Cur { cur: res.cur })
         }
         ApproxJob::StreamSvd { a, cfg, block, seed } => {
-            let mut rr = rng(seed);
-            let res = match &a {
+            let mut rr = rng(*seed);
+            let res = match a {
                 MatrixPayload::Dense(m) => {
-                    let mut stream = DenseColumnStream::new(m, block);
-                    crate::svdstream::fast_sp_svd(&mut stream, &cfg, &mut rr)
+                    with_stream(DenseColumnStream::new(m, *block), retry, retries, |s| {
+                        crate::svdstream::fast_sp_svd(s, cfg, &mut rr)
+                    })?
                 }
                 MatrixPayload::Sparse(m) => {
-                    let mut stream = CsrColumnStream::new(m, block);
-                    crate::svdstream::fast_sp_svd(&mut stream, &cfg, &mut rr)
+                    with_stream(CsrColumnStream::new(m, *block), retry, retries, |s| {
+                        crate::svdstream::fast_sp_svd(s, cfg, &mut rr)
+                    })?
                 }
             };
             Ok(JobResult::Svd { u: res.u, sigma: res.sigma, v: res.v })
         }
+    }
+}
+
+/// Sketched relative residual `‖A − C X R‖_F / ‖A‖_F` of a degraded
+/// result against its job's input, via the paper's §2 count-sketch
+/// estimators ([`crate::gmr::estimate_residual`] /
+/// [`crate::gmr::sketched_fro_norm`]). The sketch seeds derive from the
+/// job seed, so verification is deterministic. Kernel jobs have no
+/// materialized input matrix — they report `NaN` (tagged but unverified).
+fn degraded_residual(job: &ApproxJob, res: &JobResult) -> f64 {
+    const S: usize = 64;
+    let rel = |a: crate::gmr::Input<'_>, c: &Mat, x: &Mat, r: &Mat, seed: u64| {
+        let est = crate::gmr::estimate_residual(a, c, x, r, S, &mut rng(seed ^ 0x5eed_0001));
+        let norm = crate::gmr::sketched_fro_norm(a, S, &mut rng(seed ^ 0x5eed_0002));
+        if norm > 0.0 {
+            est / norm
+        } else {
+            0.0
+        }
+    };
+    match (job, res) {
+        (ApproxJob::Gmr { a, c, r, seed, .. }, JobResult::Gmr { x }) => {
+            rel(a.as_input(), c, x, r, *seed)
+        }
+        (ApproxJob::Cur { a, seed, .. }, JobResult::Cur { cur })
+        | (ApproxJob::StreamingCur { a, seed, .. }, JobResult::Cur { cur }) => {
+            rel(a.as_input(), &cur.c, &cur.u, &cur.r, *seed)
+        }
+        (ApproxJob::StreamSvd { a, seed, .. }, JobResult::Svd { u, sigma, v }) => {
+            let k = sigma.len();
+            let d = Mat::from_fn(k, k, |i, j| if i == j { sigma[i] } else { 0.0 });
+            rel(a.as_input(), u, &d, &v.transpose(), *seed)
+        }
+        _ => f64::NAN,
     }
 }

@@ -28,10 +28,14 @@ fn pipeline_matches_reference() {
     let sketches = FastSpSvdSketches::draw(&cfg, 120, 100, &mut r);
 
     let mut ref_stream = DenseColumnStream::new(&a, 16);
-    let reference = fast_sp_svd_with(&mut ref_stream, &cfg, &sketches);
+    let reference = fast_sp_svd_with(&mut ref_stream, &cfg, &sketches).unwrap();
 
     for workers in [1usize, 3] {
-        let pipeline = StreamPipeline::new(PipelineConfig { workers, queue_depth: 2 });
+        let pipeline = StreamPipeline::new(PipelineConfig {
+            workers,
+            queue_depth: 2,
+            ..PipelineConfig::default()
+        });
         // OnePassStream panics on any replay: the SVD pipeline must be
         // single-pass just like the CUR one.
         let mut stream = crate::svdstream::OnePassStream::new(DenseColumnStream::new(&a, 16));
@@ -62,7 +66,11 @@ fn pipeline_cur_matches_reference_bitwise() {
     let reference = crate::cur::streaming_cur_with(&mut ref_stream, &cfg, &sketches, &mut r1);
 
     for workers in [1usize, 3] {
-        let pipeline = StreamPipeline::new(PipelineConfig { workers, queue_depth: 4 });
+        let pipeline = StreamPipeline::new(PipelineConfig {
+            workers,
+            queue_depth: 4,
+            ..PipelineConfig::default()
+        });
         let mut stream = crate::svdstream::OnePassStream::new(DenseColumnStream::new(&a, 48));
         let mut r2 = rng(32);
         let result = pipeline.run_cur(&mut stream, &cfg, &sketches, &mut r2).unwrap();
@@ -100,7 +108,11 @@ fn pipeline_processes_each_block_once_with_bounded_queue() {
     let mut r = rng(4);
     let sketches = FastSpSvdSketches::draw(&cfg, 60, 90, &mut r);
     let depth = 3;
-    let pipeline = StreamPipeline::new(PipelineConfig { workers: 2, queue_depth: depth });
+    let pipeline = StreamPipeline::new(PipelineConfig {
+        workers: 2,
+        queue_depth: depth,
+        ..PipelineConfig::default()
+    });
     let mut stream = DenseColumnStream::new(&a, 8);
     let result = pipeline.run(&mut stream, &cfg, &sketches).unwrap();
     let expected_blocks = (90 + 7) / 8;
@@ -533,4 +545,309 @@ fn batch_window_coalesces_identical_inflight_jobs() {
         assert_eq!(lead.u.data(), got.u.data());
         assert_eq!(lead.r.data(), got.r.data());
     }
+}
+
+// ---- robustness: fault injection, retries, breakers, degradation,
+// ---- warm start ------------------------------------------------------
+
+use crate::faults::{site, FaultPlan, RetryPolicy};
+use std::sync::Arc;
+
+/// A GmrExact job whose C payload has the wrong row count, so the
+/// executor's solver asserts and the job panics deterministically.
+fn panicking_job(a: &Mat) -> ApproxJob {
+    ApproxJob::GmrExact {
+        a: MatrixPayload::Dense(a.clone()),
+        c: Mat::zeros(12, 4),
+        r: Mat::zeros(3, 30),
+    }
+}
+
+/// An injected executor panic is healed by job-level retry: the fault
+/// plan panics the first `cur` execution, the retry re-runs it clean,
+/// and the caller sees a normal result.
+#[test]
+fn injected_executor_panic_is_healed_by_retry() {
+    let plan = Arc::new(FaultPlan::new(0xC4A05).with_site(site::executor("cur"), 1.0, 1));
+    let router = Router::with_config(&ServeConfig {
+        workers: 1,
+        retry: RetryPolicy {
+            max_attempts: 3,
+            base_backoff: Duration::from_millis(1),
+            cap: Duration::from_millis(5),
+        },
+        faults: Some(plan.clone()),
+        ..ServeConfig::service(1)
+    });
+    let a = test_matrix(50, 40, 70);
+    let h = router.submit(quick_cur_job(&a, 3)).unwrap();
+    assert!(matches!(h.wait().unwrap(), JobResult::Cur { .. }), "retry must heal the panic");
+    assert_eq!(plan.injected_at("executor.cur"), 1, "the plan must have actually injected");
+    assert_eq!(router.metrics.get("serve.retries"), 1, "exactly one job-level retry");
+    assert_eq!(router.metrics.get("faults.injected"), 1, "gauge mirrors the plan total");
+    assert_eq!(router.metrics.get("router.cur.completed"), 1);
+}
+
+/// Breaker lifecycle: `threshold` consecutive post-retry panics open the
+/// kind's breaker (later submits fail fast with [`FgError::CircuitOpen`]
+/// and never execute), the cooldown admits a half-open probe, and a
+/// probe success closes it again. Other kinds are unaffected throughout.
+#[test]
+fn circuit_breaker_opens_fails_fast_and_recovers() {
+    let router = Router::with_config(&ServeConfig {
+        workers: 1,
+        breaker_threshold: 2,
+        breaker_cooldown: Duration::from_millis(50),
+        ..ServeConfig::service(1)
+    });
+    let a = test_matrix(40, 30, 71);
+    for _ in 0..2 {
+        match router.submit(panicking_job(&a)).unwrap().wait() {
+            Err(FgError::Runtime(msg)) => {
+                assert!(msg.contains("panicked in executor"), "unexpected message: {msg}")
+            }
+            Err(e) => panic!("expected a Runtime panic error, got: {e}"),
+            Ok(_) => panic!("expected a Runtime panic error, got a result"),
+        }
+    }
+    assert_eq!(router.metrics.get("serve.breaker_open"), 1, "threshold-th failure opens");
+    // Open: fail fast, no execution. A *good* job is rejected too — the
+    // breaker is per kind, not per payload.
+    let mut rg = rng(78);
+    let gc = Mat::randn(40, 4, &mut rg);
+    let gr = Mat::randn(3, 30, &mut rg);
+    let good = || ApproxJob::GmrExact {
+        a: MatrixPayload::Dense(a.clone()),
+        c: gc.clone(),
+        r: gr.clone(),
+    };
+    match router.submit(good()).unwrap().wait() {
+        Err(FgError::CircuitOpen { kind }) => assert_eq!(kind, "gmr_exact"),
+        Err(e) => panic!("expected CircuitOpen while open, got: {e}"),
+        Ok(_) => panic!("expected CircuitOpen while open, got a result"),
+    }
+    assert_eq!(
+        router.metrics.get("router.gmr_exact.completed"),
+        3,
+        "completed counts the fast-fail dispatch but nothing executed past the breaker"
+    );
+    // Other kinds keep flowing while gmr_exact is open.
+    assert!(matches!(
+        router.submit(quick_cur_job(&a, 4)).unwrap().wait().unwrap(),
+        JobResult::Cur { .. }
+    ));
+    // Cooldown elapses: the half-open probe executes, succeeds, closes.
+    std::thread::sleep(Duration::from_millis(60));
+    match router.submit(good()).unwrap().wait() {
+        Ok(JobResult::Gmr { x }) => assert_eq!(x.shape(), (4, 3)),
+        Err(e) => panic!("expected the half-open probe to succeed, got: {e}"),
+        Ok(_) => panic!("expected the half-open probe to return a GMR solve"),
+    }
+    // Closed again: the next job runs normally.
+    assert!(matches!(router.submit(good()).unwrap().wait().unwrap(), JobResult::Gmr { .. }));
+}
+
+/// Graceful degradation: admission pressure (an injected `queue.admission`
+/// fault) re-plans the job at a smaller sketch tier instead of shedding.
+/// The result is tagged [`JobResult::Degraded`] with a finite verified
+/// residual estimate, and is *not* cached — the next uncontended request
+/// recomputes at full fidelity and only then populates the cache.
+#[test]
+fn degraded_admission_verifies_and_never_caches() {
+    let plan = Arc::new(FaultPlan::new(0xDE64).with_site(site::QUEUE_ADMISSION, 1.0, 1));
+    let router = Router::with_config(&ServeConfig {
+        workers: 1,
+        cache_bytes: 64 << 20,
+        degrade: true,
+        faults: Some(plan),
+        ..ServeConfig::service(1)
+    });
+    let a = test_matrix(80, 60, 72);
+    let job = || quick_cur_job(&a, 5);
+    match router.submit(job()).unwrap().wait().unwrap() {
+        JobResult::Degraded { est_rel_residual, inner } => {
+            assert!(matches!(*inner, JobResult::Cur { .. }), "inner must be the real result");
+            assert!(
+                est_rel_residual.is_finite() && est_rel_residual >= 0.0,
+                "degraded CUR must carry a verified residual, got {est_rel_residual}"
+            );
+        }
+        _ => panic!("expected a Degraded result under admission pressure"),
+    }
+    assert_eq!(router.metrics.get("serve.degraded"), 1);
+    assert_eq!(router.metrics.get("serve.shed"), 0, "degradation replaces shedding");
+    // The degraded artifact was not cached: the same request misses and
+    // recomputes at full fidelity.
+    match router.submit(job()).unwrap().wait().unwrap() {
+        JobResult::Cur { .. } => {}
+        _ => panic!("uncontended recompute must be full fidelity, not degraded"),
+    }
+    assert_eq!(router.metrics.get("serve.cache.hits"), 0);
+    assert_eq!(router.metrics.get("serve.cache.misses"), 2);
+    assert_eq!(router.metrics.get("router.cur.completed"), 2);
+    // Third time is the cached full-fidelity artifact.
+    assert!(matches!(router.submit(job()).unwrap().wait().unwrap(), JobResult::Cur { .. }));
+    assert_eq!(router.metrics.get("serve.cache.hits"), 1);
+}
+
+/// A shed still happens when degradation is on but the job *cannot*
+/// degrade (the exact baseline has no accuracy knob).
+#[test]
+fn undegradable_jobs_are_still_shed_under_pressure() {
+    let plan = Arc::new(FaultPlan::new(0xDE65).with_site(site::QUEUE_ADMISSION, 1.0, 1));
+    let router = Router::with_config(&ServeConfig {
+        workers: 1,
+        degrade: true,
+        faults: Some(plan),
+        ..ServeConfig::service(1)
+    });
+    let a = test_matrix(40, 30, 73);
+    let good = ApproxJob::GmrExact {
+        a: MatrixPayload::Dense(a.clone()),
+        c: Mat::zeros(40, 4),
+        r: Mat::zeros(3, 30),
+    };
+    match router.submit(good) {
+        Err(FgError::Overloaded { .. }) => {}
+        Err(e) => panic!("expected the exact job to shed with Overloaded, got: {e}"),
+        Ok(_) => panic!("expected the exact job to shed, but it was admitted"),
+    }
+    assert_eq!(router.metrics.get("serve.shed"), 1);
+    assert_eq!(router.metrics.get("serve.degraded"), 0);
+}
+
+/// Crash-safe warm start end-to-end: a router persists its artifact
+/// cache on drop; a restarted router warm-starts from the file and
+/// serves *bitwise-identical* cache hits without executing; a router
+/// whose persist "crashes" (injected `cache.persist` fault) leaves the
+/// previous inventory intact. A stale `.tmp` from a torn write is
+/// ignored throughout.
+#[test]
+fn warm_start_survives_restart_with_bitwise_hits() {
+    let path = std::path::PathBuf::from("/tmp/fastgmr_router_warm_start_test.txt");
+    let tmp = path.with_extension("tmp");
+    let _ = std::fs::remove_file(&path);
+    let serve = |faults: Option<Arc<FaultPlan>>| ServeConfig {
+        workers: 1,
+        cache_bytes: 64 << 20,
+        cache_path: Some(path.clone()),
+        faults,
+        ..ServeConfig::service(1)
+    };
+    let a = test_matrix(80, 60, 74);
+    let job = |seed| ApproxJob::Cur {
+        a: MatrixPayload::Dense(a.clone()),
+        cfg: crate::cur::CurConfig::fast(8, 6, 3),
+        seed,
+    };
+
+    // Generation 1: compute cold, persist on drop.
+    let r1 = Router::with_config(&serve(None));
+    let JobResult::Cur { cur: cold } = r1.submit(job(5)).unwrap().wait().unwrap() else {
+        panic!("wrong result kind")
+    };
+    drop(r1);
+    assert!(path.exists(), "drop must persist the cache inventory");
+    assert!(!tmp.exists(), "the temp file must be renamed away");
+
+    // A torn write from a crashed persist must not confuse the restart.
+    std::fs::write(&tmp, "garbage from a torn write").unwrap();
+
+    // Generation 2: warm-start, serve the hit without executing.
+    let r2 = Router::with_config(&serve(None));
+    assert_eq!(r2.metrics.get("serve.warm_start.loaded"), 1);
+    assert_eq!(r2.metrics.get("serve.warm_start.skipped_corrupt"), 0);
+    let JobResult::Cur { cur: warm } = r2.submit(job(5)).unwrap().wait().unwrap() else {
+        panic!("wrong result kind")
+    };
+    assert_eq!(r2.metrics.get("serve.cache.hits"), 1);
+    assert_eq!(r2.metrics.get("router.cur.completed"), 0, "a warm hit never executes");
+    assert_eq!(cold.col_idx, warm.col_idx);
+    assert_eq!(cold.row_idx, warm.row_idx);
+    assert_eq!(cold.c.data(), warm.c.data());
+    assert_eq!(cold.u.data(), warm.u.data());
+    assert_eq!(cold.r.data(), warm.r.data());
+    drop(r2);
+
+    // Generation 3: compute a second artifact but crash during persist —
+    // the inventory on disk keeps generation 2's content.
+    let crash = Arc::new(FaultPlan::new(0xC4A54).with_site(site::CACHE_PERSIST, 1.0, 1));
+    let before = std::fs::read_to_string(&path).unwrap();
+    let r3 = Router::with_config(&serve(Some(crash)));
+    assert!(matches!(r3.submit(job(6)).unwrap().wait().unwrap(), JobResult::Cur { .. }));
+    drop(r3);
+    let after = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(before, after, "a crashed persist must leave the old inventory intact");
+
+    // Generation 4: the survivor still warm-starts job 5, recomputes 6.
+    let r4 = Router::with_config(&serve(None));
+    assert_eq!(r4.metrics.get("serve.warm_start.loaded"), 1);
+    assert!(matches!(r4.submit(job(6)).unwrap().wait().unwrap(), JobResult::Cur { .. }));
+    assert_eq!(r4.metrics.get("serve.cache.misses"), 1, "job 6 was lost with the crash");
+    drop(r4);
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&tmp);
+}
+
+/// An injected `cache.warm_start` fault degrades construction to a cold
+/// start instead of failing it: availability over the cache.
+#[test]
+fn injected_warm_start_fault_degrades_to_cold_start() {
+    let path = std::path::PathBuf::from("/tmp/fastgmr_router_warm_start_fault_test.txt");
+    let _ = std::fs::remove_file(&path);
+    let a = test_matrix(50, 40, 75);
+    let serve = |faults: Option<Arc<FaultPlan>>| ServeConfig {
+        workers: 1,
+        cache_bytes: 64 << 20,
+        cache_path: Some(path.clone()),
+        faults,
+        ..ServeConfig::service(1)
+    };
+    let r1 = Router::with_config(&serve(None));
+    let h = r1.submit(quick_cur_job(&a, 7)).unwrap();
+    assert!(matches!(h.wait().unwrap(), JobResult::Cur { .. }));
+    drop(r1);
+    let plan = Arc::new(FaultPlan::new(0x401D).with_site(site::CACHE_WARM_START, 1.0, 1));
+    let r2 = Router::with_config(&serve(Some(plan.clone())));
+    assert_eq!(plan.injected_at(site::CACHE_WARM_START), 1);
+    assert_eq!(r2.metrics.get("serve.warm_start.loaded"), 0, "faulted warm start is cold");
+    // Cold but alive: the job recomputes.
+    let h = r2.submit(quick_cur_job(&a, 7)).unwrap();
+    assert!(matches!(h.wait().unwrap(), JobResult::Cur { .. }));
+    assert_eq!(r2.metrics.get("serve.cache.misses"), 1);
+    drop(r2);
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Coalesced followers must observe the lead's *error* exactly as the
+/// lead does: a panicking lead fans its Runtime error out to every
+/// follower in the batch window.
+#[test]
+fn coalesced_followers_observe_the_leads_error() {
+    let router = Router::with_config(&ServeConfig {
+        workers: 1,
+        batch_window: Duration::from_secs(5),
+        ..ServeConfig::service(1)
+    });
+    let a = test_matrix(40, 30, 76);
+    // Pin the single worker so the panicking lead stays in-flight while
+    // the follower coalesces onto it.
+    let occupier = router.submit(slow_job(77)).unwrap();
+    let lead = router.submit(panicking_job(&a)).unwrap();
+    let follower = router.submit(panicking_job(&a)).unwrap();
+    assert_eq!(router.metrics.get("serve.batch.coalesced"), 1);
+    assert!(matches!(occupier.wait().unwrap(), JobResult::Svd { .. }));
+    let mut msgs = Vec::new();
+    for h in [lead, follower] {
+        match h.wait() {
+            Err(FgError::Runtime(msg)) => {
+                assert!(msg.contains("panicked in executor"), "unexpected variant: {msg}");
+                msgs.push(msg);
+            }
+            Err(e) => panic!("every waiter must see the Runtime panic error, got: {e}"),
+            Ok(_) => panic!("every waiter must see the Runtime panic error, got a result"),
+        }
+    }
+    assert_eq!(msgs[0], msgs[1], "follower must observe the lead's exact error");
+    assert_eq!(router.metrics.get("router.gmr_exact.completed"), 1, "one execution, two errors");
 }

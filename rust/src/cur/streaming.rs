@@ -43,6 +43,7 @@
 
 use super::select::weighted_indices_without_replacement;
 use super::CurDecomposition;
+use crate::error::Result;
 use crate::gmr;
 use crate::linalg::{matmul, pinv, Mat};
 use crate::parallel::Pool;
@@ -359,7 +360,7 @@ pub fn finalize(
 /// let a = Mat::randn(50, 64, &mut r);
 /// let cfg = StreamingCurConfig::fast(6, 6, 4, 2);
 /// let mut stream = DenseColumnStream::new(&a, 16);
-/// let res = streaming_cur(&mut stream, &cfg, &mut r);
+/// let res = streaming_cur(&mut stream, &cfg, &mut r).unwrap();
 /// assert_eq!(res.blocks, 4);
 /// assert_eq!(res.cur.c.shape(), (50, 6));
 /// assert_eq!(res.cur.r.shape(), (6, 64));
@@ -368,7 +369,7 @@ pub fn streaming_cur(
     stream: &mut dyn ColumnStream,
     cfg: &StreamingCurConfig,
     rng: &mut Pcg64,
-) -> StreamingCurResult {
+) -> Result<StreamingCurResult> {
     let (m, n) = (stream.rows(), stream.cols());
     let sk = {
         let mut sp = crate::obs::span("curstream.sketch.draw", crate::obs::cat::SKETCH);
@@ -386,16 +387,16 @@ pub fn streaming_cur_with(
     cfg: &StreamingCurConfig,
     sk: &StreamingCurSketches,
     rng: &mut Pcg64,
-) -> StreamingCurResult {
+) -> Result<StreamingCurResult> {
     let (m, n) = (stream.rows(), stream.cols());
     let mut state = StreamState::new(cfg, sk, m, n);
     let pool = Pool::current();
-    while let Some(block) = stream.next_block() {
+    while let Some(block) = stream.next_block()? {
         let mut sp = crate::obs::span("curstream.block", crate::obs::cat::STREAM);
         sp.meta("col_start", block.col_start);
         sp.meta("cols", block.data.cols());
         let bs = sketch_block(block.col_start, block.data, sk, &pool);
         state.fold(bs, rng);
     }
-    finalize(cfg, sk, state, rng)
+    Ok(finalize(cfg, sk, state, rng))
 }

@@ -312,7 +312,7 @@ fn streaming_full_sketches_match_in_memory_fast_core() {
     };
     let mut stream = DenseColumnStream::new(&a, 16);
     let mut r = rng(102);
-    let res = streaming_cur(&mut stream, &cfg, &mut r);
+    let res = streaming_cur(&mut stream, &cfg, &mut r).unwrap();
     assert_eq!(res.blocks, 4);
     assert_eq!(res.candidates, 50, "full-capacity reservoir must retain every column");
     assert_eq!(res.cur.col_idx.len(), 10);
@@ -339,7 +339,7 @@ fn streaming_cur_single_pass_close_to_best_rank_k() {
     let cfg = StreamingCurConfig::fast(4 * k, 4 * k, k, 3);
     let mut stream = OnePassStream::new(DenseColumnStream::new(&a, 40));
     let mut r = rng(56);
-    let res = streaming_cur(&mut stream, &cfg, &mut r);
+    let res = streaming_cur(&mut stream, &cfg, &mut r).unwrap();
     assert_eq!(res.blocks, stream.blocks());
     assert_eq!(res.blocks, 6);
     assert!(res.cur.col_idx.windows(2).all(|w| w[0] < w[1]), "column indices not sorted-unique");

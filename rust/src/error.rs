@@ -1,5 +1,17 @@
 //! Library-wide error type (hand-rolled `Display`/`Error` impls — the
 //! offline image vendors no `thiserror`).
+//!
+//! # Transient vs. permanent errors
+//!
+//! The serving layer's retry machinery classifies every error with
+//! [`FgError::is_transient`]. **Transient** errors describe conditions
+//! that may clear on their own — a dropped stream read
+//! ([`FgError::StreamRead`] with `transient: true`), or an I/O error of
+//! kind `Interrupted`/`TimedOut`/`WouldBlock` — and are safe to retry
+//! under a [`RetryPolicy`](crate::faults::RetryPolicy). Everything else
+//! is **permanent**: retrying a shape mismatch or a non-PD pivot burns
+//! executor time reproducing the same failure, so permanent errors
+//! surface on the first attempt.
 
 use std::fmt;
 
@@ -20,7 +32,79 @@ pub enum FgError {
     /// A job's deadline elapsed before an executor could complete it —
     /// either it expired while queued or the caller stopped waiting.
     DeadlineExceeded { waited_ms: u64 },
+    /// A column-block read failed. `transient: true` marks conditions
+    /// that may clear on retry (the reader retries these in place,
+    /// without disturbing single-pass sketch state); `false` marks a
+    /// dead source.
+    StreamRead { context: String, transient: bool },
+    /// The per-kind circuit breaker is open: this job kind panicked
+    /// repeatedly and the router is failing fast until the cooldown
+    /// elapses and a half-open probe succeeds.
+    CircuitOpen { kind: String },
     Io(std::io::Error),
+}
+
+impl FgError {
+    /// Whether retrying the failed operation could plausibly succeed.
+    /// See the [module docs](self) for the taxonomy.
+    pub fn is_transient(&self) -> bool {
+        match self {
+            FgError::StreamRead { transient, .. } => *transient,
+            FgError::Io(e) => matches!(
+                e.kind(),
+                std::io::ErrorKind::Interrupted
+                    | std::io::ErrorKind::TimedOut
+                    | std::io::ErrorKind::WouldBlock
+            ),
+            _ => false,
+        }
+    }
+
+    /// Variant-preserving duplicate, for fanning a single failure out to
+    /// several waiters (`FgError` is not `Clone` because `io::Error` is
+    /// not). Every variant round-trips exactly; `Io` keeps its
+    /// `ErrorKind` with the message re-wrapped.
+    pub fn echo(&self) -> FgError {
+        match self {
+            FgError::NotPositiveDefinite { pivot, value } => {
+                FgError::NotPositiveDefinite { pivot: *pivot, value: *value }
+            }
+            FgError::ShapeMismatch { context, expected, got } => FgError::ShapeMismatch {
+                context: context.clone(),
+                expected: expected.clone(),
+                got: got.clone(),
+            },
+            FgError::ArtifactMissing { name, dir } => {
+                FgError::ArtifactMissing { name: name.clone(), dir: dir.clone() }
+            }
+            FgError::Runtime(m) => FgError::Runtime(m.clone()),
+            FgError::Config(m) => FgError::Config(m.clone()),
+            FgError::Data(m) => FgError::Data(m.clone()),
+            FgError::Coordinator(m) => FgError::Coordinator(m.clone()),
+            FgError::Overloaded { depth } => FgError::Overloaded { depth: *depth },
+            FgError::DeadlineExceeded { waited_ms } => {
+                FgError::DeadlineExceeded { waited_ms: *waited_ms }
+            }
+            FgError::StreamRead { context, transient } => {
+                FgError::StreamRead { context: context.clone(), transient: *transient }
+            }
+            FgError::CircuitOpen { kind } => FgError::CircuitOpen { kind: kind.clone() },
+            FgError::Io(e) => FgError::Io(std::io::Error::new(e.kind(), e.to_string())),
+        }
+    }
+}
+
+/// Best-effort extraction of a panic payload's message (the payload of
+/// `catch_unwind`). `panic!("...")` yields `&'static str`; formatted
+/// panics yield `String`; anything else gets a placeholder.
+pub fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 impl fmt::Display for FgError {
@@ -44,6 +128,17 @@ impl fmt::Display for FgError {
             }
             FgError::DeadlineExceeded { waited_ms } => {
                 write!(f, "deadline exceeded: job waited {waited_ms} ms without completing")
+            }
+            FgError::StreamRead { context, transient } => {
+                let class = if *transient { "transient" } else { "permanent" };
+                write!(f, "{class} stream read error: {context}")
+            }
+            FgError::CircuitOpen { kind } => {
+                write!(
+                    f,
+                    "circuit breaker open for kind `{kind}`: failing fast after repeated \
+                     executor panics"
+                )
             }
             FgError::Io(e) => e.fmt(f),
         }

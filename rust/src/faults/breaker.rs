@@ -1,0 +1,93 @@
+//! Per-kind circuit breaker: fail fast after repeated executor panics.
+//!
+//! Classic three-state machine. **Closed** admits everything and counts
+//! consecutive failures; `threshold` consecutive failures trip it
+//! **Open**, which rejects immediately (no executor time burned on a
+//! kind that reliably panics). After `cooldown` the next admit goes
+//! through as a **Half-open** probe: success closes the breaker,
+//! failure re-opens it for another cooldown.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum State {
+    Closed { failures: u32 },
+    Open,
+    HalfOpen,
+}
+
+pub struct CircuitBreaker {
+    threshold: u32,
+    cooldown: Duration,
+    state: Mutex<(State, Instant)>,
+}
+
+impl CircuitBreaker {
+    /// `threshold` consecutive failures open the breaker; it stays open
+    /// for `cooldown` before allowing a half-open probe.
+    pub fn new(threshold: u32, cooldown: Duration) -> Self {
+        Self {
+            threshold: threshold.max(1),
+            cooldown,
+            state: Mutex::new((State::Closed { failures: 0 }, Instant::now())),
+        }
+    }
+
+    /// May a request proceed? Open breakers transition to half-open
+    /// (admitting exactly one probe) once the cooldown has elapsed.
+    pub fn admit(&self) -> bool {
+        let mut guard = self.state.lock().unwrap();
+        match guard.0 {
+            State::Closed { .. } => true,
+            State::HalfOpen => true,
+            State::Open => {
+                if guard.1.elapsed() >= self.cooldown {
+                    guard.0 = State::HalfOpen;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Record a success: any state closes.
+    pub fn on_success(&self) {
+        let mut guard = self.state.lock().unwrap();
+        guard.0 = State::Closed { failures: 0 };
+    }
+
+    /// Record a failure (an executor panic). Returns `true` when this
+    /// failure transitions the breaker to open.
+    pub fn on_failure(&self) -> bool {
+        let mut guard = self.state.lock().unwrap();
+        match guard.0 {
+            State::Closed { failures } => {
+                let failures = failures + 1;
+                if failures >= self.threshold {
+                    *guard = (State::Open, Instant::now());
+                    true
+                } else {
+                    guard.0 = State::Closed { failures };
+                    false
+                }
+            }
+            // A failed half-open probe re-opens for another cooldown.
+            State::HalfOpen => {
+                *guard = (State::Open, Instant::now());
+                true
+            }
+            State::Open => false,
+        }
+    }
+
+    /// Current state name, for tests and reporting.
+    pub fn state_name(&self) -> &'static str {
+        match self.state.lock().unwrap().0 {
+            State::Closed { .. } => "closed",
+            State::Open => "open",
+            State::HalfOpen => "half-open",
+        }
+    }
+}

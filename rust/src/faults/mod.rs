@@ -1,0 +1,241 @@
+//! Deterministic fault injection — chaos testing for the serving stack.
+//!
+//! A seeded [`FaultPlan`] decides, per named injection *site* and per
+//! occurrence number, whether to inject a fault. The decision is a pure
+//! function of `(seed, site, occurrence)`, so a chaos run is
+//! reproducible bit-for-bit from its seed alone: the same job stream
+//! against the same plan injects the same faults at the same points, no
+//! matter how the run is timed or scheduled (occurrence counters are the
+//! only shared state, and each site counts independently).
+//!
+//! The harness follows the `obs` model: a plan is installed per thread
+//! with [`install`] (the router installs its configured plan on every
+//! executor thread, exactly like its trace collector), and ambient
+//! checks via [`trip_ambient`] are **zero-cost when disabled** — no
+//! allocation, one thread-local read — which is pinned by an
+//! allocation-counting test like the tracing layer's.
+//!
+//! Injection sites:
+//!
+//! | site                  | effect when tripped                         |
+//! |-----------------------|---------------------------------------------|
+//! | `stream.read`         | a transient [`FgError::StreamRead`]          |
+//! | `executor.<kind>`     | a panic inside the executor body             |
+//! | `cache.persist`       | an I/O error while persisting the cache      |
+//! | `cache.warm_start`    | an I/O error while warm-starting the cache   |
+//! | `queue.admission`     | a simulated queue-full at admission          |
+//!
+//! [`FgError::StreamRead`]: crate::error::FgError::StreamRead
+
+pub mod breaker;
+pub mod retry;
+#[cfg(test)]
+mod tests;
+
+pub use breaker::CircuitBreaker;
+pub use retry::{RetryPolicy, RetryStream};
+
+use crate::error::{FgError, Result};
+use crate::svdstream::source::{ColumnBlock, ColumnStream};
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Canonical injection-site names.
+pub mod site {
+    /// A column-block read from a [`ColumnStream`](super::ColumnStream).
+    pub const STREAM_READ: &str = "stream.read";
+    /// Writing the artifact cache to disk.
+    pub const CACHE_PERSIST: &str = "cache.persist";
+    /// Reading the artifact cache back from disk.
+    pub const CACHE_WARM_START: &str = "cache.warm_start";
+    /// Submit-queue admission (a trip simulates queue-full pressure).
+    pub const QUEUE_ADMISSION: &str = "queue.admission";
+
+    /// Executor-body site for one job kind: `executor.<kind>`.
+    pub fn executor(kind: &str) -> String {
+        format!("executor.{kind}")
+    }
+}
+
+/// One site's injection schedule: inject with probability `rate` per
+/// occurrence, at most `max` times total.
+#[derive(Clone, Debug)]
+pub struct SiteSpec {
+    pub site: String,
+    pub rate: f64,
+    pub max: u64,
+}
+
+/// A seeded, process-shareable fault schedule. Immutable after
+/// construction apart from its occurrence counters; share via `Arc`.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    specs: Vec<SiteSpec>,
+    /// Per-spec `[occurrences_seen, faults_injected]`.
+    counters: Vec<[AtomicU64; 2]>,
+    injected_total: AtomicU64,
+}
+
+/// FNV-1a over the site name — stable site identity across runs.
+fn fnv64(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// splitmix64 finalizer — decorrelates `(seed, site, occurrence)`.
+fn mix(v: u64) -> u64 {
+    let mut z = v.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+impl FaultPlan {
+    /// An empty plan (no sites — never injects) with the given seed.
+    pub fn new(seed: u64) -> Self {
+        Self { seed, specs: Vec::new(), counters: Vec::new(), injected_total: AtomicU64::new(0) }
+    }
+
+    /// Builder: add an injection site with a per-occurrence probability
+    /// and a cap on total injections (`u64::MAX` for unlimited).
+    pub fn with_site(mut self, site: impl Into<String>, rate: f64, max: u64) -> Self {
+        self.specs.push(SiteSpec { site: site.into(), rate, max });
+        self.counters.push([AtomicU64::new(0), AtomicU64::new(0)]);
+        self
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    fn spec_index(&self, site: &str) -> Option<usize> {
+        self.specs.iter().position(|s| s.site == site)
+    }
+
+    /// Pure injection decision for occurrence `n` at `site` — no state
+    /// read or written, so the full schedule is enumerable in tests.
+    pub fn decide(&self, site: &str, occurrence: u64) -> bool {
+        let Some(idx) = self.spec_index(site) else { return false };
+        let rate = self.specs[idx].rate;
+        if rate <= 0.0 {
+            return false;
+        }
+        if rate >= 1.0 {
+            return true;
+        }
+        let h = mix(self.seed ^ fnv64(site) ^ occurrence.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        (h as f64) < rate * (u64::MAX as f64)
+    }
+
+    /// Count one occurrence at `site` and return whether to inject,
+    /// honoring the site's injection cap.
+    pub fn trip(&self, site: &str) -> bool {
+        let Some(idx) = self.spec_index(site) else { return false };
+        let n = self.counters[idx][0].fetch_add(1, Ordering::Relaxed);
+        if !self.decide(site, n) {
+            return false;
+        }
+        // Reserve an injection slot; back off if the cap is exhausted.
+        let prev = self.counters[idx][1].fetch_add(1, Ordering::Relaxed);
+        if prev >= self.specs[idx].max {
+            self.counters[idx][1].fetch_sub(1, Ordering::Relaxed);
+            return false;
+        }
+        self.injected_total.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Total faults injected so far across all sites.
+    pub fn injected(&self) -> u64 {
+        self.injected_total.load(Ordering::Relaxed)
+    }
+
+    /// Faults injected at one site.
+    pub fn injected_at(&self, site: &str) -> u64 {
+        self.spec_index(site).map_or(0, |i| self.counters[i][1].load(Ordering::Relaxed))
+    }
+
+    /// Occurrences counted at one site (injected or not).
+    pub fn occurrences(&self, site: &str) -> u64 {
+        self.spec_index(site).map_or(0, |i| self.counters[i][0].load(Ordering::Relaxed))
+    }
+}
+
+thread_local! {
+    static PLAN: RefCell<Option<Arc<FaultPlan>>> = const { RefCell::new(None) };
+}
+
+/// Install a fault plan on the current thread (like `obs::install`).
+/// Threads are installed independently; the router installs its
+/// configured plan on each executor thread so one plan covers the whole
+/// serving process.
+pub fn install(plan: Option<Arc<FaultPlan>>) {
+    PLAN.with(|p| *p.borrow_mut() = plan);
+}
+
+/// The plan installed on this thread, if any.
+pub fn current() -> Option<Arc<FaultPlan>> {
+    PLAN.with(|p| p.borrow().clone())
+}
+
+/// Whether a plan is installed on this thread.
+pub fn enabled() -> bool {
+    PLAN.with(|p| p.borrow().is_some())
+}
+
+/// Ambient trip: count an occurrence at `site` against the installed
+/// plan. Returns `false` (without allocating) when no plan is installed
+/// — the disabled path is pinned to zero allocations by test.
+pub fn trip_ambient(site: &str) -> bool {
+    PLAN.with(|p| match &*p.borrow() {
+        Some(plan) => plan.trip(site),
+        None => false,
+    })
+}
+
+/// Stream wrapper that injects transient read faults per the plan.
+///
+/// The trip is consulted **before** the inner stream advances, so a
+/// faulted read leaves the source untouched and a retry re-yields the
+/// exact block the failed attempt would have — the single-pass contract
+/// survives injection + retry.
+pub struct FaultyStream<S: ColumnStream> {
+    inner: S,
+    plan: Arc<FaultPlan>,
+}
+
+impl<S: ColumnStream> FaultyStream<S> {
+    pub fn new(inner: S, plan: Arc<FaultPlan>) -> Self {
+        Self { inner, plan }
+    }
+}
+
+impl<S: ColumnStream> ColumnStream for FaultyStream<S> {
+    fn rows(&self) -> usize {
+        self.inner.rows()
+    }
+
+    fn cols(&self) -> usize {
+        self.inner.cols()
+    }
+
+    fn next_block(&mut self) -> Result<Option<ColumnBlock>> {
+        if self.plan.trip(site::STREAM_READ) {
+            return Err(FgError::StreamRead {
+                context: format!("injected fault (seed {:#x})", self.plan.seed),
+                transient: true,
+            });
+        }
+        self.inner.next_block()
+    }
+
+    fn reset(&mut self) {
+        self.inner.reset();
+    }
+}

@@ -1,0 +1,105 @@
+//! Capped-exponential-backoff retry for transient failures.
+
+use crate::error::Result;
+use crate::svdstream::source::{ColumnBlock, ColumnStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// How many times to attempt an operation and how long to wait between
+/// attempts: attempt `k` (1-based) sleeps `min(base_backoff · 2^(k-1),
+/// cap)` before retrying. Only errors classified transient by
+/// [`FgError::is_transient`](crate::error::FgError::is_transient) are
+/// retried; permanent errors propagate on the first attempt.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Total attempts including the first (1 = no retries).
+    pub max_attempts: u32,
+    /// Sleep before the first retry.
+    pub base_backoff: Duration,
+    /// Upper bound on any single backoff sleep.
+    pub cap: Duration,
+}
+
+impl RetryPolicy {
+    /// No retries: fail on the first error.
+    pub fn none() -> Self {
+        Self { max_attempts: 1, base_backoff: Duration::ZERO, cap: Duration::ZERO }
+    }
+
+    /// Backoff before retry number `retry` (1-based): capped doubling.
+    pub fn backoff(&self, retry: u32) -> Duration {
+        let exp = retry.saturating_sub(1).min(20);
+        let d = self.base_backoff.saturating_mul(1u32 << exp);
+        d.min(self.cap)
+    }
+}
+
+impl Default for RetryPolicy {
+    /// 3 attempts, 1 ms → 50 ms capped doubling — small enough that a
+    /// persistent failure still surfaces promptly.
+    fn default() -> Self {
+        Self {
+            max_attempts: 3,
+            base_backoff: Duration::from_millis(1),
+            cap: Duration::from_millis(50),
+        }
+    }
+}
+
+/// Stream wrapper that retries transient `next_block` errors in place.
+///
+/// Because the failing layer (e.g. [`FaultyStream`](super::FaultyStream))
+/// errors *before* advancing its source, each retry re-reads the same
+/// block: downstream reservoir/sketch state never observes a duplicate
+/// or a gap, preserving the single-pass contract.
+pub struct RetryStream<S: ColumnStream> {
+    inner: S,
+    policy: RetryPolicy,
+    /// Optional shared retry counter (the router points this at its
+    /// `serve.retries` metric handle).
+    retries: Option<Arc<AtomicU64>>,
+}
+
+impl<S: ColumnStream> RetryStream<S> {
+    pub fn new(inner: S, policy: RetryPolicy) -> Self {
+        Self { inner, policy, retries: None }
+    }
+
+    /// Count retries into a shared counter.
+    pub fn with_counter(mut self, counter: Arc<AtomicU64>) -> Self {
+        self.retries = Some(counter);
+        self
+    }
+}
+
+impl<S: ColumnStream> ColumnStream for RetryStream<S> {
+    fn rows(&self) -> usize {
+        self.inner.rows()
+    }
+
+    fn cols(&self) -> usize {
+        self.inner.cols()
+    }
+
+    fn next_block(&mut self) -> Result<Option<ColumnBlock>> {
+        let mut attempt = 1u32;
+        loop {
+            match self.inner.next_block() {
+                Ok(b) => return Ok(b),
+                Err(e) if e.is_transient() && attempt < self.policy.max_attempts => {
+                    if let Some(c) = &self.retries {
+                        c.fetch_add(1, Ordering::Relaxed);
+                    }
+                    std::thread::sleep(self.policy.backoff(attempt));
+                    attempt += 1;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    fn reset(&mut self) {
+        self.inner.reset();
+    }
+}

@@ -1,0 +1,181 @@
+//! Fault-injection tests: schedule determinism, cap enforcement,
+//! breaker transitions, retry backoff, and the zero-allocation
+//! disabled path (counted by the same global allocator the `obs`
+//! tests use).
+
+use super::*;
+use crate::linalg::Mat;
+use crate::rng::rng;
+use crate::testing::alloc_count::allocs_now;
+use std::time::Duration;
+
+#[test]
+fn same_seed_yields_identical_injection_sequence() {
+    let a = FaultPlan::new(0xc4a0).with_site(site::STREAM_READ, 0.3, u64::MAX);
+    let b = FaultPlan::new(0xc4a0).with_site(site::STREAM_READ, 0.3, u64::MAX);
+    let c = FaultPlan::new(0xc4a1).with_site(site::STREAM_READ, 0.3, u64::MAX);
+    let seq_a: Vec<bool> = (0..2000).map(|n| a.decide(site::STREAM_READ, n)).collect();
+    let seq_b: Vec<bool> = (0..2000).map(|n| b.decide(site::STREAM_READ, n)).collect();
+    let seq_c: Vec<bool> = (0..2000).map(|n| c.decide(site::STREAM_READ, n)).collect();
+    assert_eq!(seq_a, seq_b, "same seed must give the identical schedule");
+    assert_ne!(seq_a, seq_c, "a different seed must perturb the schedule");
+    // The empirical rate tracks the configured one.
+    let hits = seq_a.iter().filter(|&&h| h).count() as f64 / 2000.0;
+    assert!((hits - 0.3).abs() < 0.05, "empirical rate {hits} far from 0.3");
+    // Sites are decorrelated: an unknown site never injects.
+    assert!(!a.decide("no.such.site", 0));
+}
+
+#[test]
+fn trip_counts_occurrences_and_matches_pure_decide() {
+    let plan = FaultPlan::new(77).with_site(site::STREAM_READ, 0.4, u64::MAX);
+    let tripped: Vec<bool> = (0..500).map(|_| plan.trip(site::STREAM_READ)).collect();
+    let decided: Vec<bool> = (0..500).map(|n| plan.decide(site::STREAM_READ, n)).collect();
+    assert_eq!(tripped, decided, "stateful trip must replay the pure schedule");
+    assert_eq!(plan.occurrences(site::STREAM_READ), 500);
+    assert_eq!(plan.injected(), tripped.iter().filter(|&&h| h).count() as u64);
+}
+
+#[test]
+fn trip_honors_injection_cap() {
+    // rate 1.0, max 1 — the "one executor panic per kind" shape.
+    let plan = FaultPlan::new(1).with_site("executor.cur", 1.0, 1);
+    assert!(plan.trip("executor.cur"));
+    for _ in 0..10 {
+        assert!(!plan.trip("executor.cur"), "cap of 1 must block further injections");
+    }
+    assert_eq!(plan.injected_at("executor.cur"), 1);
+    assert_eq!(plan.occurrences("executor.cur"), 11);
+}
+
+#[test]
+fn disabled_ambient_path_allocates_nothing() {
+    install(None);
+    // Warm the thread-local slot so lazy TLS setup is not charged to
+    // the measured region.
+    let _ = trip_ambient(site::STREAM_READ);
+    let before = allocs_now();
+    for _ in 0..1000 {
+        assert!(!trip_ambient(site::STREAM_READ));
+        assert!(!enabled());
+    }
+    let after = allocs_now();
+    assert_eq!(after - before, 0, "disabled fault path must not allocate");
+}
+
+#[test]
+fn install_is_per_thread_and_current_returns_the_plan() {
+    let plan =
+        std::sync::Arc::new(FaultPlan::new(9).with_site(site::QUEUE_ADMISSION, 1.0, u64::MAX));
+    install(Some(plan.clone()));
+    assert!(enabled());
+    assert!(trip_ambient(site::QUEUE_ADMISSION));
+    assert_eq!(current().unwrap().seed(), 9);
+    // A fresh thread sees no plan.
+    std::thread::spawn(|| assert!(!enabled())).join().unwrap();
+    install(None);
+    assert!(!enabled());
+}
+
+#[test]
+fn breaker_walks_closed_open_half_open_closed() {
+    let br = CircuitBreaker::new(3, Duration::from_millis(5));
+    assert_eq!(br.state_name(), "closed");
+    assert!(!br.on_failure());
+    assert!(!br.on_failure());
+    assert!(br.admit(), "closed breaker admits while under threshold");
+    // A success resets the consecutive-failure count.
+    br.on_success();
+    assert!(!br.on_failure());
+    assert!(!br.on_failure());
+    assert!(br.on_failure(), "third consecutive failure opens");
+    assert_eq!(br.state_name(), "open");
+    assert!(!br.admit(), "open breaker fails fast during cooldown");
+    std::thread::sleep(Duration::from_millis(8));
+    assert!(br.admit(), "cooldown elapsed: half-open probe admitted");
+    assert_eq!(br.state_name(), "half-open");
+    // A failed probe re-opens immediately...
+    assert!(br.on_failure());
+    assert_eq!(br.state_name(), "open");
+    std::thread::sleep(Duration::from_millis(8));
+    assert!(br.admit());
+    // ...and a successful probe closes.
+    br.on_success();
+    assert_eq!(br.state_name(), "closed");
+    assert!(br.admit());
+}
+
+#[test]
+fn retry_backoff_doubles_and_caps() {
+    let p = RetryPolicy {
+        max_attempts: 6,
+        base_backoff: Duration::from_millis(10),
+        cap: Duration::from_millis(35),
+    };
+    assert_eq!(p.backoff(1), Duration::from_millis(10));
+    assert_eq!(p.backoff(2), Duration::from_millis(20));
+    assert_eq!(p.backoff(3), Duration::from_millis(35), "third retry hits the cap");
+    assert_eq!(p.backoff(4), Duration::from_millis(35));
+    assert_eq!(RetryPolicy::none().max_attempts, 1);
+}
+
+/// A faulted-then-retried stream hands out exactly the blocks the clean
+/// stream would: same col_starts, bitwise-identical data — the property
+/// that lets retries hide under single-pass consumers.
+#[test]
+fn retried_faulty_stream_is_bitwise_identical_to_clean_stream() {
+    use crate::svdstream::source::DenseColumnStream;
+
+    let mut r = rng(42);
+    let a = Mat::randn(30, 57, &mut r);
+    let drain = |s: &mut dyn ColumnStream| {
+        let mut out = Vec::new();
+        while let Some(b) = s.next_block().unwrap() {
+            out.push((b.col_start, b.data));
+        }
+        out
+    };
+    let clean = drain(&mut DenseColumnStream::new(&a, 8));
+
+    let plan =
+        std::sync::Arc::new(FaultPlan::new(0xfa11).with_site(site::STREAM_READ, 0.5, u64::MAX));
+    let policy =
+        RetryPolicy { max_attempts: 64, base_backoff: Duration::ZERO, cap: Duration::ZERO };
+    let faulty = FaultyStream::new(DenseColumnStream::new(&a, 8), plan.clone());
+    let mut retried = RetryStream::new(faulty, policy);
+    let got = drain(&mut retried);
+
+    assert!(plan.injected() > 0, "rate 0.5 over 8 blocks should inject at least once");
+    assert_eq!(got.len(), clean.len());
+    for ((gs, gd), (cs, cd)) in got.iter().zip(clean.iter()) {
+        assert_eq!(gs, cs);
+        assert_eq!(gd.data(), cd.data(), "retried block must be bitwise identical");
+    }
+}
+
+/// A permanent error is not retried: it surfaces on the first attempt.
+#[test]
+fn retry_stream_propagates_permanent_errors_immediately() {
+    struct Broken;
+    impl ColumnStream for Broken {
+        fn rows(&self) -> usize {
+            1
+        }
+        fn cols(&self) -> usize {
+            1
+        }
+        fn next_block(&mut self) -> crate::error::Result<Option<ColumnBlock>> {
+            Err(crate::error::FgError::StreamRead {
+                context: "disk gone".into(),
+                transient: false,
+            })
+        }
+        fn reset(&mut self) {}
+    }
+    let mut s = RetryStream::new(Broken, RetryPolicy::default());
+    match s.next_block() {
+        Err(crate::error::FgError::StreamRead { transient: false, .. }) => {}
+        Err(e) => panic!("expected permanent StreamRead, got {e}"),
+        Ok(_) => panic!("expected an error"),
+    }
+}

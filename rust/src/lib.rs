@@ -27,6 +27,7 @@ pub mod coordinator;
 pub mod cur;
 pub mod data;
 pub mod error;
+pub mod faults;
 pub mod gmr;
 pub mod linalg;
 pub mod metrics;

@@ -66,6 +66,8 @@ pub mod cat {
     pub const GATHER: &str = "gather";
     /// Streaming block ingestion.
     pub const STREAM: &str = "stream";
+    /// Artifact-cache persistence and warm start.
+    pub const CACHE: &str = "cache";
 }
 
 /// A metadata value attached to a span. Only cheap, statically-named

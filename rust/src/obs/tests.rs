@@ -3,40 +3,7 @@
 //! pinned against the known phase structure of a CUR job.
 
 use super::*;
-use std::alloc::{GlobalAlloc, Layout, System};
-use std::cell::Cell;
-
-/// Counting wrapper around the system allocator. The count is
-/// per-thread so parallel test threads don't pollute each other;
-/// `try_with` keeps allocation during thread teardown safe.
-struct CountingAlloc;
-
-thread_local! {
-    static ALLOCS: Cell<u64> = const { Cell::new(0) };
-}
-
-unsafe impl GlobalAlloc for CountingAlloc {
-    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
-        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
-        System.alloc(layout)
-    }
-
-    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
-    }
-
-    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
-        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
-        System.realloc(ptr, layout, new_size)
-    }
-}
-
-#[global_allocator]
-static GLOBAL: CountingAlloc = CountingAlloc;
-
-fn allocs_now() -> u64 {
-    ALLOCS.with(|c| c.get())
-}
+use crate::testing::alloc_count::allocs_now;
 
 #[test]
 fn disabled_span_path_allocates_nothing() {

@@ -189,7 +189,40 @@ fn global_threads_knob_end_to_end() {
             &mut stream,
             &crate::cur::StreamingCurConfig::fast(10, 10, 6, 3),
             &mut rsc,
+        )
+        .unwrap();
+        // Retried stream contract: transient injected read faults plus
+        // retry must be *bitwise* invisible — the fault trips before the
+        // source advances, so each retry re-reads the block the failed
+        // attempt would have yielded.
+        let mut rsc_f = rng(9);
+        let plan = std::sync::Arc::new(
+            crate::faults::FaultPlan::new(0xFA17)
+                .with_site(crate::faults::site::STREAM_READ, 0.5, 64),
         );
+        let faulted = crate::faults::FaultyStream::new(
+            crate::svdstream::DenseColumnStream::new(&a, 64),
+            plan.clone(),
+        );
+        let mut retried = crate::faults::RetryStream::new(
+            faulted,
+            crate::faults::RetryPolicy {
+                max_attempts: 8,
+                base_backoff: std::time::Duration::from_micros(10),
+                cap: std::time::Duration::from_micros(50),
+            },
+        );
+        let scur_faulted = crate::cur::streaming_cur(
+            &mut retried,
+            &crate::cur::StreamingCurConfig::fast(10, 10, 6, 3),
+            &mut rsc_f,
+        )
+        .unwrap();
+        assert!(plan.injected() > 0, "the 50% stream-read plan must actually inject");
+        assert_eq!(scur.cur.col_idx, scur_faulted.cur.col_idx, "retried stream drifted");
+        assert_eq!(scur.cur.c.data(), scur_faulted.cur.c.data(), "retried stream drifted");
+        assert_eq!(scur.cur.u.data(), scur_faulted.cur.u.data(), "retried stream drifted");
+        assert_eq!(scur.cur.r.data(), scur_faulted.cur.r.data(), "retried stream drifted");
         // Sparse products above the nnz·n sharding floor (~10k nnz × 40
         // cols ≥ 2^18), so threads=4 actually shards the row panels.
         let mut rsp = rng(10);

@@ -82,7 +82,11 @@ impl Manifest {
         Ok(Self { dir, entries })
     }
 
-    fn parse_line(dir: &Path, line: &str) -> Option<ManifestEntry> {
+    /// Parse one `graph NAME file=… [inputs=…] [outputs=…] [golden=…]`
+    /// manifest line relative to `dir`. Public because the artifact
+    /// cache's on-disk inventory reuses this exact line grammar for its
+    /// warm-start header records.
+    pub fn parse_line(dir: &Path, line: &str) -> Option<ManifestEntry> {
         let mut parts = line.split_whitespace();
         if parts.next()? != "graph" {
             return None;

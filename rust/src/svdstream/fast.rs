@@ -1,6 +1,7 @@
 //! Fast SP-SVD — Algorithm 3 of the paper.
 
 use super::source::ColumnStream;
+use crate::error::Result;
 use crate::linalg::{matmul, pinv_apply_left, pinv_apply_right, qr_thin, svd_jacobi, Mat, Svd};
 use crate::rng::Pcg64;
 use crate::sketch::{Sketch, SketchKind};
@@ -95,7 +96,7 @@ pub fn fast_sp_svd(
     stream: &mut dyn ColumnStream,
     cfg: &FastSpSvdConfig,
     rng: &mut Pcg64,
-) -> SpSvdResult {
+) -> Result<SpSvdResult> {
     let (m, n) = (stream.rows(), stream.cols());
     let sketches = {
         let mut sp = crate::obs::span("svd.sketch.draw", crate::obs::cat::SKETCH);
@@ -111,7 +112,7 @@ pub fn fast_sp_svd_with(
     stream: &mut dyn ColumnStream,
     cfg: &FastSpSvdConfig,
     sk: &FastSpSvdSketches,
-) -> SpSvdResult {
+) -> Result<SpSvdResult> {
     let (m, n) = (stream.rows(), stream.cols());
     // Accumulators (steps 4–9).
     let mut c_acc = Mat::zeros(m, cfg.c); // C = A Ω̃
@@ -119,7 +120,7 @@ pub fn fast_sp_svd_with(
     let mut m_acc = Mat::zeros(cfg.s_c, cfg.s_r); // M = S_C A S_Rᵀ
     let mut blocks = 0usize;
 
-    while let Some(block) = stream.next_block() {
+    while let Some(block) = stream.next_block()? {
         let a_l = &block.data;
         let (c0, c1) = (block.col_start, block.col_start + a_l.cols());
         let mut sp = crate::obs::span("svd.block", crate::obs::cat::STREAM);
@@ -130,7 +131,7 @@ pub fn fast_sp_svd_with(
     }
 
     let (u, sigma, v) = finalize(cfg, sk, &c_acc, &r_acc, &m_acc);
-    SpSvdResult { u, sigma, v, blocks }
+    Ok(SpSvdResult { u, sigma, v, blocks })
 }
 
 /// One streaming update (steps 6–8). Factored out so the coordinator's

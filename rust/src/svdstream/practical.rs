@@ -8,6 +8,7 @@
 
 use super::fast::SpSvdResult;
 use super::source::ColumnStream;
+use crate::error::Result;
 use crate::linalg::{matmul, pinv_apply_left, qr_thin, svd_jacobi, Mat, Svd};
 use crate::rng::Pcg64;
 use crate::sketch::{Sketch, SketchKind};
@@ -40,7 +41,7 @@ pub fn practical_sp_svd(
     stream: &mut dyn ColumnStream,
     cfg: &PracticalSpSvdConfig,
     rng: &mut Pcg64,
-) -> SpSvdResult {
+) -> Result<SpSvdResult> {
     let (m, n) = (stream.rows(), stream.cols());
     let psi = Sketch::draw(cfg.kind, cfg.r, m, None, rng); // Ψ̃: r×m
     let omega = Sketch::draw(cfg.kind, cfg.c, n, None, rng); // Ω̃ᵀ: c×n
@@ -50,7 +51,7 @@ pub fn practical_sp_svd(
     let mut blocks = 0usize;
 
     // Steps 4–7: one pass.
-    while let Some(block) = stream.next_block() {
+    while let Some(block) = stream.next_block()? {
         let a_l = &block.data;
         let (c0, c1) = (block.col_start, block.col_start + a_l.cols());
         let r_blk = psi.apply_left(a_l); // r x L
@@ -70,5 +71,5 @@ pub fn practical_sp_svd(
     let Svd { u: u_n, s: sigma, v: v_n } = svd_jacobi(&n_core);
     let u = matmul(&u_c, &u_n);
     let v = matmul(&v_r, &v_n);
-    SpSvdResult { u, sigma, v, blocks }
+    Ok(SpSvdResult { u, sigma, v, blocks })
 }

@@ -5,6 +5,7 @@
 //! matrices (benches/tests) and the same trait is what the coordinator's
 //! reader thread drives in production.
 
+use crate::error::Result;
 use crate::linalg::Mat;
 use crate::sparse::Csr;
 
@@ -22,8 +23,12 @@ pub trait ColumnStream {
     fn rows(&self) -> usize;
     /// Total columns n.
     fn cols(&self) -> usize;
-    /// Next block, or `None` when the matrix has been fully read.
-    fn next_block(&mut self) -> Option<ColumnBlock>;
+    /// Next block, `Ok(None)` when the matrix has been fully read, or
+    /// `Err` when the read failed — transient errors (see
+    /// [`FgError::is_transient`](crate::error::FgError::is_transient))
+    /// may be retried in place: an erroring implementation must not
+    /// have advanced past the block the failed call would have yielded.
+    fn next_block(&mut self) -> Result<Option<ColumnBlock>>;
     /// Reset to the beginning (allowed only in tests/benches — a true
     /// stream cannot be replayed; the algorithms never call this).
     fn reset(&mut self);
@@ -52,14 +57,14 @@ impl<'a> ColumnStream for DenseColumnStream<'a> {
         self.a.cols()
     }
 
-    fn next_block(&mut self) -> Option<ColumnBlock> {
+    fn next_block(&mut self) -> Result<Option<ColumnBlock>> {
         if self.pos >= self.a.cols() {
-            return None;
+            return Ok(None);
         }
         let c0 = self.pos;
         let c1 = (c0 + self.block).min(self.a.cols());
         self.pos = c1;
-        Some(ColumnBlock { col_start: c0, data: self.a.slice(0, self.a.rows(), c0, c1) })
+        Ok(Some(ColumnBlock { col_start: c0, data: self.a.slice(0, self.a.rows(), c0, c1) }))
     }
 
     fn reset(&mut self) {
@@ -97,12 +102,12 @@ impl<S: ColumnStream> ColumnStream for OnePassStream<S> {
         self.inner.cols()
     }
 
-    fn next_block(&mut self) -> Option<ColumnBlock> {
-        let block = self.inner.next_block();
+    fn next_block(&mut self) -> Result<Option<ColumnBlock>> {
+        let block = self.inner.next_block()?;
         if block.is_some() {
             self.blocks += 1;
         }
-        block
+        Ok(block)
     }
 
     fn reset(&mut self) {
@@ -134,14 +139,14 @@ impl<'a> ColumnStream for CsrColumnStream<'a> {
         self.a.cols()
     }
 
-    fn next_block(&mut self) -> Option<ColumnBlock> {
+    fn next_block(&mut self) -> Result<Option<ColumnBlock>> {
         if self.pos >= self.a.cols() {
-            return None;
+            return Ok(None);
         }
         let c0 = self.pos;
         let c1 = (c0 + self.block).min(self.a.cols());
         self.pos = c1;
-        Some(ColumnBlock { col_start: c0, data: self.a.slice_cols(c0, c1).to_dense() })
+        Ok(Some(ColumnBlock { col_start: c0, data: self.a.slice_cols(c0, c1).to_dense() }))
     }
 
     fn reset(&mut self) {

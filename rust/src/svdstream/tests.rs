@@ -38,18 +38,18 @@ fn column_streams_cover_matrix_once() {
     let mut stream = DenseColumnStream::new(&a, 7);
     let mut rebuilt = Mat::zeros(13, 29);
     let mut count = 0;
-    while let Some(b) = stream.next_block() {
+    while let Some(b) = stream.next_block().unwrap() {
         rebuilt.set_block(0, b.col_start, &b.data);
         count += 1;
     }
     assert_eq!(count, 5); // ceil(29/7)
     assert_close(&rebuilt, &a, 1e-15, "dense stream coverage");
-    assert!(stream.next_block().is_none());
+    assert!(stream.next_block().unwrap().is_none());
 
     let a_sp = Csr::from_dense(&a, 0.0);
     let mut stream2 = CsrColumnStream::new(&a_sp, 10);
     let mut rebuilt2 = Mat::zeros(13, 29);
-    while let Some(b) = stream2.next_block() {
+    while let Some(b) = stream2.next_block().unwrap() {
         rebuilt2.set_block(0, b.col_start, &b.data);
     }
     assert_close(&rebuilt2, &a, 1e-15, "csr stream coverage");
@@ -63,7 +63,7 @@ fn fast_sp_svd_achieves_small_error() {
     let mut r = rng(4);
     let cfg = FastSpSvdConfig::paper(k, 6, SketchKind::Gaussian);
     let mut stream = DenseColumnStream::new(&a, 16);
-    let res = fast_sp_svd(&mut stream, &cfg, &mut r);
+    let res = fast_sp_svd(&mut stream, &cfg, &mut r).unwrap();
     assert_eq!(res.u.rows(), 120);
     assert_eq!(res.v.rows(), 90);
     assert_eq!(res.blocks, (90 + 15) / 16);
@@ -81,9 +81,9 @@ fn fast_sp_svd_block_size_invariance() {
     let mut r1 = rng(77);
     let sketches = FastSpSvdSketches::draw(&cfg, 60, 50, &mut r1);
     let mut s_small = DenseColumnStream::new(&a, 3);
-    let res_small = fast_sp_svd_with(&mut s_small, &cfg, &sketches);
+    let res_small = fast_sp_svd_with(&mut s_small, &cfg, &sketches).unwrap();
     let mut s_big = DenseColumnStream::new(&a, 50);
-    let res_big = fast_sp_svd_with(&mut s_big, &cfg, &sketches);
+    let res_big = fast_sp_svd_with(&mut s_big, &cfg, &sketches).unwrap();
     assert_close(&res_small.u, &res_big.u, 1e-8, "U invariant to blocking");
     assert_close(&res_small.v, &res_big.v, 1e-8, "V invariant to blocking");
     for (a_, b_) in res_small.sigma.iter().zip(&res_big.sigma) {
@@ -104,7 +104,7 @@ fn fast_sp_svd_improves_with_budget() {
             let mut r = rng(500 + mult as u64 * 10 + t);
             let cfg = FastSpSvdConfig::paper(k, mult, SketchKind::Gaussian);
             let mut stream = DenseColumnStream::new(&a, 32);
-            let res = fast_sp_svd(&mut stream, &cfg, &mut r);
+            let res = fast_sp_svd(&mut stream, &cfg, &mut r).unwrap();
             acc += error_ratio(&a, &res, ak);
         }
         let ratio = acc / trials as f64;
@@ -129,11 +129,11 @@ fn practical_sp_svd_runs_and_fast_beats_it_at_small_budget() {
         let mut r = rng(900 + t);
         let cfg_f = FastSpSvdConfig { k, c: budget / 2, r: budget / 2, s_c: 3 * budget, s_r: 3 * budget, osnap_mult: 4, core_kind: SketchKind::Gaussian };
         let mut stream = DenseColumnStream::new(&a, 32);
-        fast_acc += error_ratio(&a, &fast_sp_svd(&mut stream, &cfg_f, &mut r), ak);
+        fast_acc += error_ratio(&a, &fast_sp_svd(&mut stream, &cfg_f, &mut r).unwrap(), ak);
 
         let cfg_p = PracticalSpSvdConfig::from_budget(k, budget, SketchKind::Gaussian);
         let mut stream2 = DenseColumnStream::new(&a, 32);
-        prac_acc += error_ratio(&a, &practical_sp_svd(&mut stream2, &cfg_p, &mut r), ak);
+        prac_acc += error_ratio(&a, &practical_sp_svd(&mut stream2, &cfg_p, &mut r).unwrap(), ak);
     }
     let (fast_e, prac_e) = (fast_acc / trials as f64, prac_acc / trials as f64);
     assert!(
@@ -148,7 +148,7 @@ fn factors_are_orthonormal() {
     let mut r = rng(11);
     let cfg = FastSpSvdConfig::paper(4, 4, SketchKind::Gaussian);
     let mut stream = DenseColumnStream::new(&a, 16);
-    let res = fast_sp_svd(&mut stream, &cfg, &mut r);
+    let res = fast_sp_svd(&mut stream, &cfg, &mut r).unwrap();
     let utu = matmul_at_b(&res.u, &res.u);
     assert_close(&utu, &Mat::eye(res.u.cols()), 1e-8, "UᵀU = I");
     let vtv = matmul_at_b(&res.v, &res.v);
@@ -177,9 +177,9 @@ fn sparse_stream_matches_dense_stream() {
     let mut rr = rng(13);
     let sketches = FastSpSvdSketches::draw(&cfg, 100, 80, &mut rr);
     let mut s1 = CsrColumnStream::new(&a_sp, 16);
-    let res1 = fast_sp_svd_with(&mut s1, &cfg, &sketches);
+    let res1 = fast_sp_svd_with(&mut s1, &cfg, &sketches).unwrap();
     let mut s2 = DenseColumnStream::new(&a_d, 16);
-    let res2 = fast_sp_svd_with(&mut s2, &cfg, &sketches);
+    let res2 = fast_sp_svd_with(&mut s2, &cfg, &sketches).unwrap();
     assert_close(&res1.u, &res2.u, 1e-9, "sparse vs dense stream");
     let _ = matmul; // silence unused when optimized out
 }
@@ -190,7 +190,7 @@ fn reconstruction_error_matches_direct() {
     let mut r = rng(15);
     let cfg = FastSpSvdConfig::paper(3, 4, SketchKind::Gaussian);
     let mut stream = DenseColumnStream::new(&a, 8);
-    let res = fast_sp_svd(&mut stream, &cfg, &mut r);
+    let res = fast_sp_svd(&mut stream, &cfg, &mut r).unwrap();
     let blockwise = reconstruction_error(&a, &res);
     // Direct dense computation.
     let mut us = res.u.clone();
@@ -227,7 +227,7 @@ fn reconstruction_error_input_matches_dense_path() {
     let mut r = rng(23);
     let cfg = FastSpSvdConfig::paper(3, 4, SketchKind::Gaussian);
     let mut stream = DenseColumnStream::new(&a, 8);
-    let res = fast_sp_svd(&mut stream, &cfg, &mut r);
+    let res = fast_sp_svd(&mut stream, &cfg, &mut r).unwrap();
     let direct = reconstruction_error(&a, &res);
     let via_input = reconstruction_error_input(crate::gmr::Input::Dense(&a), &res);
     assert!((direct - via_input).abs() < 1e-8, "{direct} vs {via_input}");

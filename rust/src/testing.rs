@@ -10,6 +10,49 @@ use crate::rng::{rng, Pcg64};
 /// Default dimension cap for "small" property matrices.
 pub const MAT_DIM_SMALL: usize = 24;
 
+/// Allocation counter shared by every zero-overhead test in the crate
+/// (`obs` disabled spans, `faults` disabled trips). Rust allows exactly
+/// one `#[global_allocator]` per binary, so it lives here rather than in
+/// any single module's tests.
+#[cfg(test)]
+pub mod alloc_count {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::cell::Cell;
+
+    /// Counting wrapper around the system allocator. The count is
+    /// per-thread so parallel test threads don't pollute each other;
+    /// `try_with` keeps allocation during thread teardown safe.
+    struct CountingAlloc;
+
+    thread_local! {
+        static ALLOCS: Cell<u64> = const { Cell::new(0) };
+    }
+
+    unsafe impl GlobalAlloc for CountingAlloc {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+            System.alloc(layout)
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout)
+        }
+
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+            System.realloc(ptr, layout, new_size)
+        }
+    }
+
+    #[global_allocator]
+    static GLOBAL: CountingAlloc = CountingAlloc;
+
+    /// Allocations observed on the current thread so far.
+    pub fn allocs_now() -> u64 {
+        ALLOCS.with(|c| c.get())
+    }
+}
+
 /// Assert two matrices are elementwise close (absolute + relative blend).
 #[track_caller]
 pub fn assert_close(got: &Mat, want: &Mat, tol: f64, context: &str) {
