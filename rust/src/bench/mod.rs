@@ -20,6 +20,7 @@ pub mod fig2;
 pub mod fig3;
 pub mod fig_cur;
 pub mod fig_curstream;
+pub mod fig_epsilon;
 pub mod fig_gemm;
 pub mod fig_linalg;
 pub mod fig_serve;
@@ -44,6 +45,7 @@ pub fn targets() -> Vec<(&'static str, fn(&mut BenchCtx))> {
         ("fig3", fig3::run),
         ("fig_cur", fig_cur::run),
         ("fig_curstream", fig_curstream::run),
+        ("fig_epsilon", fig_epsilon::run),
         ("fig_gemm", fig_gemm::run),
         ("fig_linalg", fig_linalg::run),
         ("fig_serve", fig_serve::run),
@@ -53,13 +55,23 @@ pub fn targets() -> Vec<(&'static str, fn(&mut BenchCtx))> {
 
 /// Targets run by `--smoke` when none are named explicitly: one table,
 /// the figures that track per-PR perf (fig_cur for the CUR workload,
-/// fig_curstream for streaming-vs-in-memory CUR, fig_gemm for the packed
+/// fig_curstream for streaming-vs-in-memory CUR, fig_epsilon for the
+/// ε-planner's attainment/escalation guard, fig_gemm for the packed
 /// GEMM vs its frozen seed kernels, fig_linalg for the factorization
 /// kernels vs theirs, fig_serve for warm-cache serving latency), and the
 /// microbenchmarks — enough to catch a perf regression without
 /// paper-scale runtimes.
-const SMOKE_TARGETS: [&str; 8] =
-    ["table1", "fig1", "fig_cur", "fig_curstream", "fig_gemm", "fig_linalg", "fig_serve", "perf"];
+const SMOKE_TARGETS: [&str; 9] = [
+    "table1",
+    "fig1",
+    "fig_cur",
+    "fig_curstream",
+    "fig_epsilon",
+    "fig_gemm",
+    "fig_linalg",
+    "fig_serve",
+    "perf",
+];
 
 /// Entry point used by `rust/benches/bench_main.rs`.
 ///

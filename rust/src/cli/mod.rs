@@ -18,6 +18,11 @@
 //! reproduces single-threaded results bitwise. Config files can set the
 //! same knob as `[parallel] threads`.
 //!
+//! `--epsilon E` sets an accuracy target accepted by *every* subcommand:
+//! sketch sizes are planned from the paper's `O(ε^{-1/2})` bounds and
+//! escalated until the a-posteriori check certifies `(1+ε)` relative
+//! error (see [`crate::plan`]); `serve` enforces it as a per-job SLO.
+//!
 //! `serve`, `pipeline`, and `cur` additionally accept the observability
 //! flags `--trace-out FILE` (span trace: Chrome trace-event JSON, or
 //! JSONL when `FILE` ends in `.jsonl` — see [`crate::obs`]) and
@@ -83,6 +88,17 @@ USAGE:
                                      in-memory path
   fastgmr help                       this message
 
+  --epsilon E    accuracy target: plan sketch sizes from the paper's
+                 O(ε^{-1/2}) bounds and escalate (reusing each sketch as
+                 a bitwise prefix) until the a-posteriori check
+                 certifies (1+ε) relative error. Accepted by every
+                 subcommand: info prints the ε → size schedule, verify
+                 runs a planned self-check, bench restricts the
+                 fig_epsilon sweep to E, pipeline/cur/cur --stream run
+                 the ε-planned solvers and report attempts, serve
+                 enforces E as a per-job accuracy SLO (escalations in
+                 serve.plan.*; degraded jobs report their estimated ε
+                 instead)
   --selection S  one of: uniform | leverage (exact full-rank scores;
                  provably uniform on square full-rank inputs) |
                  subspace (rank-K restricted scores, a.k.a.
@@ -104,8 +120,9 @@ USAGE:
                  gauges, and latency histograms with cumulative buckets)
 
 Bench targets: table1..table7, fig1, fig2, fig3, fig_cur, fig_curstream,
-fig_gemm, fig_linalg, fig_serve, perf (see DESIGN.md §5). `bench --smoke`
-runs a reduced CI subset and writes results/bench_smoke.json.";
+fig_epsilon, fig_gemm, fig_linalg, fig_serve, perf (see DESIGN.md §5).
+`bench --smoke` runs a reduced CI subset and writes
+results/bench_smoke.json.";
 
 /// Main dispatch (called from `rust/src/main.rs`).
 pub fn main_entry() -> Result<()> {
@@ -114,10 +131,15 @@ pub fn main_entry() -> Result<()> {
     let tail = args.get(1..).unwrap_or(&[]);
     let (rest, threads) = take_flag_value(tail, "--threads");
     apply_threads(threads.as_deref())?;
+    let (rest, eps_spec) = take_flag_value(&rest, "--epsilon");
+    let epsilon = parse_epsilon(eps_spec.as_deref())?;
     match cmd {
-        "info" => info(),
-        "verify" => verify(),
+        "info" => info(epsilon),
+        "verify" => verify(epsilon),
         "bench" => {
+            if let Some(eps) = epsilon {
+                crate::bench::fig_epsilon::set_cli_epsilon(eps);
+            }
             let targets: Vec<String> = rest
                 .iter()
                 .map(|a| if a == "all" { String::new() } else { a.clone() })
@@ -126,9 +148,9 @@ pub fn main_entry() -> Result<()> {
             crate::bench::bench_main(&targets);
             Ok(())
         }
-        "pipeline" => pipeline(&rest, threads.is_some()),
-        "serve" => serve(&rest),
-        "cur" => cur_cmd(&rest),
+        "pipeline" => pipeline(&rest, threads.is_some(), epsilon),
+        "serve" => serve(&rest, epsilon),
+        "cur" => cur_cmd(&rest, epsilon),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
@@ -140,7 +162,7 @@ pub fn main_entry() -> Result<()> {
     }
 }
 
-fn info() -> Result<()> {
+fn info(epsilon: Option<f64>) -> Result<()> {
     match crate::runtime::Engine::new("artifacts") {
         Ok(engine) => {
             println!("platform: {}", engine.platform());
@@ -155,10 +177,21 @@ fn info() -> Result<()> {
         }
         Err(e) => println!("no artifacts: {e}"),
     }
+    if let Some(eps) = epsilon {
+        let plan = crate::plan::EpsilonPlan::new(eps);
+        println!("\nepsilon plan (ε = {eps}, max {} attempts):", plan.max_attempts);
+        println!("  check sketch: {} (saturates to an exact check at the matrix dims)", plan.check_size(1));
+        println!("  {:>6}  {:>7}  schedule at dim 4096", "width", "s_init");
+        for w in [4usize, 8, 16, 32, 64] {
+            let sched: Vec<String> =
+                plan.schedule(w, 4096).iter().map(usize::to_string).collect();
+            println!("  {:>6}  {:>7}  {}", w, plan.initial_size(w, 4096), sched.join(" -> "));
+        }
+    }
     Ok(())
 }
 
-fn verify() -> Result<()> {
+fn verify(epsilon: Option<f64>) -> Result<()> {
     let engine = crate::runtime::Engine::new("artifacts")?;
     let results = engine.verify_goldens()?;
     let mut worst = 0.0f64;
@@ -170,6 +203,39 @@ fn verify() -> Result<()> {
         return Err(FgError::Runtime(format!("golden verification failed (worst {worst:.2e})")));
     }
     println!("all {} artifacts verified", results.len());
+    if let Some(eps) = epsilon {
+        // Planned self-check: the ε-planner must certify its own target
+        // on a fixed synthetic problem (the check saturates to exact at
+        // this scale, so "attained" really means (1+ε)).
+        let mut r = rng(7);
+        let a = synth_dense(120, 90, 8, SpectrumKind::Exponential { base: 0.85 }, 0.02, &mut r);
+        let idx: Vec<usize> = (0..24).collect();
+        let c = a.select_cols(&idx);
+        let rm = a.select_rows(&idx);
+        let plan = crate::plan::EpsilonPlan::new(eps);
+        let (_, out) = crate::plan::solve_gmr_planned(
+            crate::gmr::Input::Dense(&a),
+            &c,
+            &rm,
+            SketchKind::Gaussian,
+            SketchKind::Gaussian,
+            &plan,
+        );
+        println!(
+            "epsilon self-check (ε = {eps}): attempts {}, s_c={} s_r={}, estimated ε̂ = {:.4}",
+            out.attempts,
+            out.s_c,
+            out.s_r,
+            out.estimated_epsilon()
+        );
+        if !out.attained {
+            return Err(FgError::Runtime(format!(
+                "epsilon self-check failed: ε = {eps} not attained in {} attempts (ε̂ = {:.4})",
+                out.attempts,
+                out.estimated_epsilon()
+            )));
+        }
+    }
     Ok(())
 }
 
@@ -255,6 +321,26 @@ impl ObsFlags {
     }
 }
 
+/// Parse a `--epsilon E` accuracy target; malformed or non-positive
+/// values are a hard error (a silently dropped accuracy target would be
+/// an SLO violation by the launcher itself).
+fn parse_epsilon(spec: Option<&str>) -> Result<Option<f64>> {
+    match spec {
+        None => Ok(None),
+        Some(s) => {
+            let eps: f64 = s.parse().map_err(|_| {
+                FgError::Config(format!("--epsilon: expected a number, got `{s}`"))
+            })?;
+            if !eps.is_finite() || eps <= 0.0 {
+                return Err(FgError::Config(format!(
+                    "--epsilon: expected a positive finite target, got `{s}`"
+                )));
+            }
+            Ok(Some(eps))
+        }
+    }
+}
+
 /// Apply a `--threads N` override to the process-wide pool knob.
 fn apply_threads(spec: Option<&str>) -> Result<()> {
     if let Some(s) = spec {
@@ -266,7 +352,7 @@ fn apply_threads(spec: Option<&str>) -> Result<()> {
     Ok(())
 }
 
-fn pipeline(args: &[String], cli_threads: bool) -> Result<()> {
+fn pipeline(args: &[String], cli_threads: bool, epsilon: Option<f64>) -> Result<()> {
     let (args, obs_flags) = take_obs_flags(args)?;
     let args = &args[..];
     let cfg = match flag_value(args, "--config") {
@@ -321,6 +407,32 @@ fn pipeline(args: &[String], cli_threads: bool) -> Result<()> {
     let ratio = crate::svdstream::error_ratio(&a, &res, ak);
     println!("blocks={} time={secs:.2}s throughput={:.1} cols/s", res.blocks, n as f64 / secs);
     println!("error ratio vs ‖A−A_k‖: {ratio:.4}");
+    if let Some(eps) = epsilon {
+        // ε-planned reference driver: re-streams the matrix per
+        // escalation attempt (honest single-pass cost model) until the
+        // a-posteriori check certifies the target for the SVD factors.
+        let plan = crate::plan::EpsilonPlan::new(eps).with_seed(seed);
+        let t0 = std::time::Instant::now();
+        let (pres, out) = crate::svdstream::fast_sp_svd_planned(
+            || {
+                Ok(Box::new(DenseColumnStream::new(&a, block))
+                    as Box<dyn crate::svdstream::ColumnStream + '_>)
+            },
+            &svd_cfg,
+            &plan,
+        )?;
+        let psecs = t0.elapsed().as_secs_f64();
+        let pratio = crate::svdstream::error_ratio(&a, &pres, ak);
+        println!(
+            "planned (ε={eps}): attempts {} (s_c={} s_r={}), attained {}, ε̂ {:.4}, \
+             error ratio {pratio:.4}, {psecs:.2}s",
+            out.attempts,
+            out.s_c,
+            out.s_r,
+            out.attained,
+            out.estimated_epsilon()
+        );
+    }
     println!("{}", pipeline.metrics.report());
     obs_flags.write_outputs(&pipeline.metrics)?;
     Ok(())
@@ -340,7 +452,7 @@ fn parse_flag<T: std::str::FromStr>(args: &[String], flag: &str, default: T) -> 
 
 /// `fastgmr cur` — decompose a synthetic rank-`k` + noise matrix and
 /// compare the three core solvers against `‖A − A_k‖_F`.
-fn cur_cmd(args: &[String]) -> Result<()> {
+fn cur_cmd(args: &[String], epsilon: Option<f64>) -> Result<()> {
     let (args, obs_flags) = take_obs_flags(args)?;
     let args = &args[..];
     let (m, n) = match flag_value(args, "--size").unwrap_or("1200x900").split_once('x') {
@@ -367,7 +479,7 @@ fn cur_cmd(args: &[String]) -> Result<()> {
         if flag_value(args, "--selection").is_some() {
             println!("note: --selection is ignored with --stream (always subspace leverage)");
         }
-        return cur_stream_cmd(args, &obs_flags, m, n, k, c, r, mult, seed, sketch);
+        return cur_stream_cmd(args, &obs_flags, m, n, k, c, r, mult, seed, sketch, epsilon);
     }
 
     println!(
@@ -414,6 +526,23 @@ fn cur_cmd(args: &[String]) -> Result<()> {
     let t0 = std::time::Instant::now();
     let u = cur::core_stabilized(input, &cmat, &rmat);
     report("stabilized-qr", u, t0.elapsed().as_secs_f64());
+    if let Some(eps) = epsilon {
+        // ε-planned core on the same factors: sizes come from the plan,
+        // escalating until the check certifies (1+ε) for this C/R pair.
+        let plan = crate::plan::EpsilonPlan::new(eps).with_seed(seed);
+        let t0 = std::time::Instant::now();
+        let (sol, out) =
+            crate::plan::solve_gmr_planned(input, &cmat, &rmat, sketch, sketch, &plan);
+        report("planned", sol.x, t0.elapsed().as_secs_f64());
+        println!(
+            "planned: ε={eps}, attempts {} (s_c={} s_r={}), attained {}, estimated ε̂ = {:.4}",
+            out.attempts,
+            out.s_c,
+            out.s_r,
+            out.attained,
+            out.estimated_epsilon()
+        );
+    }
     crate::obs::install(None);
     obs_flags.write_outputs(&metrics)?;
     Ok(())
@@ -433,6 +562,7 @@ fn cur_stream_cmd(
     mult: usize,
     seed: u64,
     sketch: SketchKind,
+    epsilon: Option<f64>,
 ) -> Result<()> {
     let block: usize = parse_flag(args, "--block", 256)?;
     let workers: usize = parse_flag(args, "--workers", 0)?;
@@ -497,6 +627,33 @@ fn cur_stream_cmd(
         res.candidates,
         n as f64 / t_stream
     );
+    if let Some(eps) = epsilon {
+        // ε-planned streaming CUR: one full pass per escalation attempt
+        // (the stream factory reopens the data), sketch randomness and
+        // the check products reused across attempts.
+        let plan = crate::plan::EpsilonPlan::new(eps).with_seed(seed);
+        let t0 = std::time::Instant::now();
+        let (pres, out) = cur::streaming_cur_planned(
+            || {
+                Ok(Box::new(DenseColumnStream::new(&a, block.max(1)))
+                    as Box<dyn crate::svdstream::ColumnStream + '_>)
+            },
+            &stream_cfg,
+            &plan,
+        )?;
+        let t_plan = t0.elapsed().as_secs_f64();
+        let res_plan = pres.cur.residual(input);
+        println!(
+            "planned:    {t_plan:.3}s  residual {res_plan:.5}  ratio {:.4}  (ε={eps}, \
+             attempts {}, s_c={} s_r={}, attained {}, ε̂ {:.4})",
+            res_plan / ak,
+            out.attempts,
+            out.s_c,
+            out.s_r,
+            out.attained,
+            out.estimated_epsilon()
+        );
+    }
     println!("\n{}", pipeline.metrics.report());
     obs_flags.write_outputs(&pipeline.metrics)?;
     Ok(())
@@ -507,7 +664,7 @@ fn cur_stream_cmd(
 /// beyond the first period repeats an earlier cache key and a warm
 /// artifact cache answers it without recomputing (the paper's
 /// one-sketch-many-queries amortization, served across requests).
-fn serve(args: &[String]) -> Result<()> {
+fn serve(args: &[String], epsilon: Option<f64>) -> Result<()> {
     let (args, obs_flags) = take_obs_flags(args)?;
     let args = &args[..];
     let jobs: usize = parse_flag(args, "--jobs", 24)?;
@@ -545,13 +702,15 @@ fn serve(args: &[String]) -> Result<()> {
         retry,
         degrade,
         cache_path,
+        epsilon,
         ..ServeConfig::service(workers)
     };
     let router = Router::with_config(&cfg);
     println!(
         "serve: {jobs} jobs, workers={workers}, queue-depth={queue_depth} (0=unbounded), \
          cache={cache_mb} MB, batch-window={batch_ms} ms, deadline={deadline_ms} ms (0=none), \
-         retry-max={retry_max}, degrade={degrade}, cache-dir={}, threads={}",
+         retry-max={retry_max}, degrade={degrade}, epsilon={}, cache-dir={}, threads={}",
+        epsilon.map(|e| e.to_string()).unwrap_or_else(|| "-".into()),
         cache_dir.as_deref().unwrap_or("-"),
         crate::parallel::threads()
     );

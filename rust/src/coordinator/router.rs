@@ -131,6 +131,18 @@ pub struct ServeConfig {
     /// admission/persistence sites. `None` (the default) injects nothing
     /// at zero cost.
     pub faults: Option<Arc<FaultPlan>>,
+    /// Accuracy SLO: target relative error ε enforced per job by the
+    /// ε-planner ([`crate::plan::EpsilonPlan`]). When set, every planned
+    /// job kind (fast GMR, CUR, streaming CUR, streaming SVD, SPSD
+    /// kernel) sizes its sketches from ε and escalates geometrically
+    /// until the a-posteriori check certifies `(1+ε)`; attempts show up
+    /// in `serve.plan.*` counters and as `plan.attempt` spans in the
+    /// trace. Degraded-tier jobs deliberately skip the planner —
+    /// degradation trades accuracy for admission, and the
+    /// [`JobResult::Degraded`] tag reports the estimated residual so the
+    /// SLO is missed loudly, not silently. `None` (the default) keeps
+    /// the config-sized execution paths.
+    pub epsilon: Option<f64>,
 }
 
 impl Default for ServeConfig {
@@ -157,6 +169,7 @@ impl ServeConfig {
             breaker_threshold: 0,
             breaker_cooldown: Duration::from_millis(100),
             faults: None,
+            epsilon: None,
         }
     }
 }
@@ -187,6 +200,14 @@ struct ServeCounters {
     /// Gauge mirroring [`FaultPlan::injected`] — total faults the
     /// configured plan has injected, across every site.
     faults_injected: Arc<AtomicU64>,
+    /// ε-planner attempts across all planned jobs (equals jobs executed
+    /// under the SLO when every first attempt attains).
+    plan_attempts: Arc<AtomicU64>,
+    /// Escalations — attempts beyond each job's first.
+    plan_escalations: Arc<AtomicU64>,
+    /// Jobs whose final attempt still missed the ε target (escalation
+    /// budget exhausted; the result ships with its achieved error).
+    plan_misses: Arc<AtomicU64>,
 }
 
 impl ServeCounters {
@@ -206,6 +227,9 @@ impl ServeCounters {
             degraded: metrics.counter("serve.degraded"),
             breaker_open: metrics.counter("serve.breaker_open"),
             faults_injected: metrics.counter("faults.injected"),
+            plan_attempts: metrics.counter("serve.plan.attempts"),
+            plan_escalations: metrics.counter("serve.plan.escalations"),
+            plan_misses: metrics.counter("serve.plan.misses"),
         }
     }
 }
@@ -240,6 +264,8 @@ struct Shared {
     /// Per-kind breakers, aligned with `kinds` (`None` = disabled).
     breakers: Option<Vec<CircuitBreaker>>,
     faults: Option<Arc<FaultPlan>>,
+    /// Accuracy SLO (see [`ServeConfig::epsilon`]).
+    epsilon: Option<f64>,
 }
 
 impl Shared {
@@ -340,6 +366,7 @@ impl Router {
                     .collect()
             }),
             faults: cfg.faults.clone(),
+            epsilon: cfg.epsilon,
         });
         warm_start(&shared);
         let mut handles = Vec::with_capacity(cfg.workers);
@@ -605,7 +632,7 @@ fn run_item(shared: &Shared, item: QueueItem) {
                             panic!("injected executor fault (site executor.{kind})");
                         }
                     }
-                    execute(&job, &shared.retry, &shared.serve.retries)
+                    execute(&job, shared, degraded)
                 }))
             };
             match shared.metrics.time(&kc.router_latency, guarded) {
@@ -716,12 +743,66 @@ fn with_stream<S: ColumnStream, T>(
     }
 }
 
+/// Wrap a raw column stream in the fault-tolerance layers (the same
+/// wiring as [`with_stream`]) and box it: the ε-planned streaming
+/// drivers take a stream *factory* — one fresh wrapped pass per
+/// escalation attempt.
+fn wrap_stream<'a, S: ColumnStream + 'a>(
+    stream: S,
+    retry: &RetryPolicy,
+    retries: &Arc<AtomicU64>,
+) -> Box<dyn ColumnStream + 'a> {
+    match faults::current() {
+        Some(plan) => Box::new(
+            RetryStream::new(FaultyStream::new(stream, plan), *retry)
+                .with_counter(retries.clone()),
+        ),
+        None => Box::new(RetryStream::new(stream, *retry).with_counter(retries.clone())),
+    }
+}
+
+/// Fold one planner outcome into the `serve.plan.*` counters.
+fn record_plan(shared: &Shared, outcome: &crate::plan::PlanOutcome) {
+    shared.serve.plan_attempts.fetch_add(outcome.attempts as u64, Ordering::Relaxed);
+    shared
+        .serve
+        .plan_escalations
+        .fetch_add(outcome.attempts.saturating_sub(1) as u64, Ordering::Relaxed);
+    if !outcome.attained {
+        shared.serve.plan_misses.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
 /// Execute one job (the worker body). Borrows the job so the caller can
 /// retry a panicked execution and verify a degraded result against the
 /// original input.
-fn execute(job: &ApproxJob, retry: &RetryPolicy, retries: &Arc<AtomicU64>) -> Result<JobResult> {
+///
+/// With [`ServeConfig::epsilon`] set, every plannable kind routes
+/// through its ε-planned variant — sketch sizes seeded from the paper's
+/// `O(ε^{-1/2})` bounds, escalated until the a-posteriori check
+/// certifies `(1+ε)` — except degraded-tier jobs, which deliberately
+/// trade accuracy for admission and run config-sized (their
+/// [`JobResult::Degraded`] tag reports the estimated residual, so an
+/// SLO miss is visible, never silent).
+fn execute(job: &ApproxJob, shared: &Shared, degraded: bool) -> Result<JobResult> {
+    let retry = &shared.retry;
+    let retries = &shared.serve.retries;
+    let plan_eps = if degraded { None } else { shared.epsilon };
     match job {
         ApproxJob::Gmr { a, c, r, cfg, seed } => {
+            if let Some(eps) = plan_eps {
+                let plan = crate::plan::EpsilonPlan::new(eps).with_seed(*seed);
+                let (sol, outcome) = crate::plan::solve_gmr_planned(
+                    a.as_input(),
+                    c,
+                    r,
+                    cfg.kind_c,
+                    cfg.kind_r,
+                    &plan,
+                );
+                record_plan(shared, &outcome);
+                return Ok(JobResult::Gmr { x: sol.x });
+            }
             let mut rr = rng(*seed);
             let sol = crate::gmr::solve_fast(a.as_input(), c, r, cfg, &mut rr);
             Ok(JobResult::Gmr { x: sol.x })
@@ -734,11 +815,16 @@ fn execute(job: &ApproxJob, retry: &RetryPolicy, retries: &Arc<AtomicU64>) -> Re
             let mut rr = rng(*seed);
             let oracle = RbfOracle::new(x, *sigma);
             let counting = CountingOracle::new(&oracle);
-            let sol = crate::spsd::faster_spsd(
-                &counting,
-                &crate::spsd::FasterSpsdConfig { c: *c, s: *s },
-                &mut rr,
-            );
+            let cfg = crate::spsd::FasterSpsdConfig { c: *c, s: *s };
+            let sol = if let Some(eps) = plan_eps {
+                let plan = crate::plan::EpsilonPlan::new(eps).with_seed(*seed);
+                let (sol, outcome) =
+                    crate::spsd::faster_spsd_planned(&counting, &cfg, &plan, &mut rr);
+                record_plan(shared, &outcome);
+                sol
+            } else {
+                crate::spsd::faster_spsd(&counting, &cfg, &mut rr)
+            };
             Ok(JobResult::Spsd {
                 idx: sol.idx,
                 c: sol.c,
@@ -748,12 +834,34 @@ fn execute(job: &ApproxJob, retry: &RetryPolicy, retries: &Arc<AtomicU64>) -> Re
         }
         ApproxJob::Cur { a, cfg, seed } => {
             let mut rr = rng(*seed);
+            if let Some(eps) = plan_eps {
+                let plan = crate::plan::EpsilonPlan::new(eps).with_seed(*seed);
+                let (cur, outcome) = crate::cur::decompose_planned(a.as_input(), cfg, &plan, &mut rr);
+                record_plan(shared, &outcome);
+                return Ok(JobResult::Cur { cur });
+            }
             let cur = crate::cur::decompose(a.as_input(), cfg, &mut rr);
             Ok(JobResult::Cur { cur })
         }
         ApproxJob::StreamingCur { a, cfg, block, seed } => {
             // Single pass over the payload; the sketch applies inside
             // run on this executor's budgeted pool share.
+            if let Some(eps) = plan_eps {
+                let plan = crate::plan::EpsilonPlan::new(eps).with_seed(*seed);
+                let open = || {
+                    Ok(match a {
+                        MatrixPayload::Dense(m) => {
+                            wrap_stream(DenseColumnStream::new(m, *block), retry, retries)
+                        }
+                        MatrixPayload::Sparse(m) => {
+                            wrap_stream(CsrColumnStream::new(m, *block), retry, retries)
+                        }
+                    })
+                };
+                let (res, outcome) = crate::cur::streaming_cur_planned(open, cfg, &plan)?;
+                record_plan(shared, &outcome);
+                return Ok(JobResult::Cur { cur: res.cur });
+            }
             let mut rr = rng(*seed);
             let res = match a {
                 MatrixPayload::Dense(m) => {
@@ -770,6 +878,22 @@ fn execute(job: &ApproxJob, retry: &RetryPolicy, retries: &Arc<AtomicU64>) -> Re
             Ok(JobResult::Cur { cur: res.cur })
         }
         ApproxJob::StreamSvd { a, cfg, block, seed } => {
+            if let Some(eps) = plan_eps {
+                let plan = crate::plan::EpsilonPlan::new(eps).with_seed(*seed);
+                let open = || {
+                    Ok(match a {
+                        MatrixPayload::Dense(m) => {
+                            wrap_stream(DenseColumnStream::new(m, *block), retry, retries)
+                        }
+                        MatrixPayload::Sparse(m) => {
+                            wrap_stream(CsrColumnStream::new(m, *block), retry, retries)
+                        }
+                    })
+                };
+                let (res, outcome) = crate::svdstream::fast_sp_svd_planned(open, cfg, &plan)?;
+                record_plan(shared, &outcome);
+                return Ok(JobResult::Svd { u: res.u, sigma: res.sigma, v: res.v });
+            }
             let mut rr = rng(*seed);
             let res = match a {
                 MatrixPayload::Dense(m) => {

@@ -690,6 +690,81 @@ fn degraded_admission_verifies_and_never_caches() {
     assert_eq!(router.metrics.get("serve.cache.hits"), 1);
 }
 
+/// Accuracy SLO: with `ServeConfig.epsilon` set every planner-capable
+/// job routes through the ε-planned solver — the `serve.plan.*`
+/// counters record the attempts, and the served artifact is bitwise the
+/// direct `decompose_planned` call with the job's seed (the SLO changes
+/// sizing, never the algorithm).
+#[test]
+fn epsilon_slo_routes_jobs_through_the_planner() {
+    let eps = 0.25;
+    let router = Router::with_config(&ServeConfig {
+        workers: 1,
+        epsilon: Some(eps),
+        ..ServeConfig::service(1)
+    });
+    let a = test_matrix(80, 60, 75);
+    let JobResult::Cur { cur } = router.submit(quick_cur_job(&a, 5)).unwrap().wait().unwrap()
+    else {
+        panic!("expected a CUR result")
+    };
+    let attempts = router.metrics.get("serve.plan.attempts");
+    assert!(attempts >= 1, "SLO jobs must run the planner (attempts {attempts})");
+    assert_eq!(
+        router.metrics.get("serve.plan.escalations"),
+        attempts - 1,
+        "escalations are attempts beyond the first"
+    );
+    assert_eq!(router.metrics.get("serve.plan.misses"), 0, "saturated check cannot miss");
+
+    let plan = crate::plan::EpsilonPlan::new(eps).with_seed(5);
+    let mut rr = rng(5);
+    let (direct, outcome) =
+        crate::cur::decompose_planned(
+            crate::gmr::Input::Dense(&a),
+            &crate::cur::CurConfig::fast(6, 5, 3),
+            &plan,
+            &mut rr,
+        );
+    assert!(outcome.attained, "planner must certify at this scale: {outcome:?}");
+    assert_eq!(outcome.attempts as u64, attempts, "served attempt count drifted from direct");
+    assert_eq!(cur.col_idx, direct.col_idx, "served selection drifted from direct planned run");
+    assert_eq!(cur.u.data(), direct.u.data(), "served core not bitwise vs direct planned run");
+}
+
+/// Degraded-tier jobs deliberately skip the ε-planner: degradation
+/// trades accuracy for admission, and re-planning would escalate right
+/// back up. The job still reports its estimated residual through the
+/// `Degraded` tag instead of silently violating the SLO.
+#[test]
+fn degraded_jobs_bypass_the_epsilon_planner() {
+    let plan = Arc::new(FaultPlan::new(0xDE66).with_site(site::QUEUE_ADMISSION, 1.0, 1));
+    let router = Router::with_config(&ServeConfig {
+        workers: 1,
+        degrade: true,
+        epsilon: Some(0.25),
+        faults: Some(plan),
+        ..ServeConfig::service(1)
+    });
+    let a = test_matrix(80, 60, 76);
+    match router.submit(quick_cur_job(&a, 6)).unwrap().wait().unwrap() {
+        JobResult::Degraded { est_rel_residual, inner } => {
+            assert!(matches!(*inner, JobResult::Cur { .. }));
+            assert!(est_rel_residual.is_finite() && est_rel_residual >= 0.0);
+        }
+        _ => panic!("expected a Degraded result under admission pressure"),
+    }
+    assert_eq!(router.metrics.get("serve.degraded"), 1);
+    assert_eq!(
+        router.metrics.get("serve.plan.attempts"),
+        0,
+        "degraded jobs must not run the planner"
+    );
+    // The next uncontended request is full fidelity again — and planned.
+    assert!(matches!(router.submit(quick_cur_job(&a, 6)).unwrap().wait().unwrap(), JobResult::Cur { .. }));
+    assert!(router.metrics.get("serve.plan.attempts") >= 1, "full-fidelity jobs honour the SLO");
+}
+
 /// A shed still happens when degradation is on but the job *cannot*
 /// degrade (the exact baseline has no accuracy knob).
 #[test]

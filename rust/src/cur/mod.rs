@@ -45,7 +45,10 @@ pub use select::{
     column_scores, gather_columns, gather_rows, row_scores, select_columns, select_rows,
     SelectionStrategy,
 };
-pub use streaming::{streaming_cur, streaming_cur_with, StreamingCurConfig, StreamingCurSketches};
+pub use streaming::{
+    streaming_cur, streaming_cur_planned, streaming_cur_with, StreamingCurConfig,
+    StreamingCurSketches,
+};
 
 use crate::gmr::{self, Input};
 use crate::linalg::Mat;
@@ -166,6 +169,38 @@ pub fn decompose(a: Input<'_>, cfg: &CurConfig, rng: &mut Pcg64) -> CurDecomposi
         }
     };
     CurDecomposition { col_idx, row_idx, c, u, r }
+}
+
+/// ε-planned CUR: the same column/row selection as [`decompose`]
+/// (consuming `rng` identically), but the core is solved by
+/// [`crate::plan::solve_gmr_planned`] — sketch sizes come from the
+/// plan's `O(ε^{-1/2})` seeding and escalate geometrically (reusing
+/// each sketch as a bitwise prefix) until the a-posteriori check
+/// certifies `(1+ε)` relative error *for the selected factors*.
+/// `cfg.s_c`/`cfg.s_r` are ignored; `cfg.core` is ignored (the planned
+/// core is always Fast GMR — an exact core needs no plan).
+pub fn decompose_planned(
+    a: Input<'_>,
+    cfg: &CurConfig,
+    plan: &crate::plan::EpsilonPlan,
+    rng: &mut Pcg64,
+) -> (CurDecomposition, crate::plan::PlanOutcome) {
+    let (col_idx, c) = {
+        let mut sp = crate::obs::span("cur.select.columns", crate::obs::cat::GATHER);
+        sp.meta("c", cfg.c);
+        select::select_columns(a, &cfg.selection, cfg.c, rng)
+    };
+    let (row_idx, r) = {
+        let mut sp = crate::obs::span("cur.select.rows", crate::obs::cat::GATHER);
+        sp.meta("r", cfg.r);
+        select::select_rows(a, &cfg.selection, cfg.r, rng)
+    };
+    let (sol, outcome) = {
+        let mut sp = crate::obs::span("cur.core", crate::obs::cat::SOLVE);
+        sp.meta("method", "planned");
+        crate::plan::solve_gmr_planned(a, &c, &r, cfg.sketch, cfg.sketch, plan)
+    };
+    (CurDecomposition { col_idx, row_idx, c, u: sol.x, r }, outcome)
 }
 
 /// Rank-`k` relative-error report for a CUR decomposition.

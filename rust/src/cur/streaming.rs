@@ -400,3 +400,135 @@ pub fn streaming_cur_with(
     }
     Ok(finalize(cfg, sk, state, rng))
 }
+
+/// ε-planned streaming CUR. A [`ColumnStream`] is single-pass, so the
+/// caller hands over a *factory*: each escalation attempt opens a fresh
+/// stream over the same data (one full pass per attempt — the honest
+/// cost model for out-of-core data; what *is* reused across attempts is
+/// the sketch randomness, via [`Sketch::draw_extension`] each attempt's
+/// sketches extend the previous attempt's bitwise, and the a-posteriori
+/// check products, accumulated once on the first pass).
+///
+/// Sizing keeps the driver's `s_c ≈ 2·s_r` stability ratio (see
+/// [`StreamingCurConfig::fast`]) by planning the co-range side at width
+/// `2·c`; `cfg.s_c`/`cfg.s_r` are ignored. The attainment check scores
+/// each attempt's *own* factors (reselection can change them), so the
+/// certified ε is relative to the best core for the returned `C`/`R̂`.
+pub fn streaming_cur_planned<'a, F>(
+    mut open_stream: F,
+    cfg: &StreamingCurConfig,
+    plan: &crate::plan::EpsilonPlan,
+) -> Result<(StreamingCurResult, crate::plan::PlanOutcome)>
+where
+    F: FnMut() -> Result<Box<dyn ColumnStream + 'a>>,
+{
+    use crate::plan::CheckOracle;
+    use crate::rng::rng;
+
+    let mut next_stream = Some(open_stream()?);
+    let (m, n) = {
+        let s = next_stream.as_ref().expect("stream");
+        (s.rows(), s.cols())
+    };
+    let sched_c = plan.schedule(2 * cfg.c.max(1), m);
+    let sched_r = plan.schedule(cfg.r.max(1), n);
+    let attempts = sched_c.len().max(sched_r.len());
+
+    let (chk1, chk2) =
+        CheckOracle::sketch_pair(m, n, plan.check_size(cfg.c.max(cfg.r)), plan.seed ^ 0x5cc5_c4ec);
+    let mut oracle: Option<CheckOracle> = None;
+
+    let mut result = None;
+    for attempt in 0..attempts {
+        let t_c = sched_c[attempt.min(sched_c.len() - 1)];
+        let t_r = sched_r[attempt.min(sched_r.len() - 1)];
+        let mut sp = crate::obs::span("plan.attempt", crate::obs::cat::DISPATCH);
+        sp.meta("attempt", attempt + 1);
+        sp.meta("s_c", t_c);
+        sp.meta("s_r", t_r);
+
+        // Each attempt's sketches replay the same seeded stream, so the
+        // previous attempt's sketch is a bitwise prefix of this one.
+        let sk = StreamingCurSketches {
+            s_c: if t_c >= m {
+                Sketch::identity(m)
+            } else {
+                Sketch::draw_extension(
+                    oblivious(cfg.kind),
+                    sched_c[0],
+                    t_c,
+                    m,
+                    None,
+                    &mut rng(plan.seed ^ 0x5cc5_00c0),
+                )
+            },
+            s_r: if t_r >= n {
+                Sketch::identity(n)
+            } else {
+                Sketch::draw_extension(
+                    sliceable(cfg.kind),
+                    sched_r[0],
+                    t_r,
+                    n,
+                    None,
+                    &mut rng(plan.seed ^ 0x5cc5_00f0),
+                )
+            },
+        };
+        let mut sel_rng = rng(plan.seed ^ 0x5cc5_5e1e);
+        let mut stream = match next_stream.take() {
+            Some(s) => s,
+            None => open_stream()?,
+        };
+        assert_eq!(
+            (stream.rows(), stream.cols()),
+            (m, n),
+            "streaming_cur_planned: reopened stream changed shape"
+        );
+        let mut state = StreamState::new(cfg, &sk, m, n);
+        let pool = Pool::current();
+        // The check's S₁A product is accumulated alongside the first
+        // pass (the data never resides in memory to sketch later).
+        let mut y1 = if oracle.is_none() {
+            Some(Mat::zeros(chk1.out_dim(), n))
+        } else {
+            None
+        };
+        while let Some(block) = stream.next_block()? {
+            let bs = sketch_block(block.col_start, block.data, &sk, &pool);
+            if let Some(y1m) = y1.as_mut() {
+                y1m.set_block(0, bs.col_start, &chk1.apply_left_with(&bs.data, &pool));
+            }
+            state.fold(bs, &mut sel_rng);
+        }
+        let res = finalize(cfg, &sk, state, &mut sel_rng);
+        if let Some(y1m) = y1.take() {
+            let sa = chk2.apply_right(&y1m);
+            oracle = Some(CheckOracle::from_sketched(chk1.clone(), chk2.clone(), sa));
+        }
+        let fc = oracle.as_ref().expect("oracle built on first attempt").for_factors(
+            &res.cur.c,
+            &res.cur.r,
+        );
+        let achieved = fc.residual_of(&res.cur.u);
+        let attained = fc.attained(plan.epsilon, achieved);
+        sp.meta("achieved", achieved);
+        sp.meta("attained", if attained { "yes" } else { "no" });
+        drop(sp);
+
+        if attained || attempt + 1 == attempts {
+            let outcome = crate::plan::PlanOutcome {
+                epsilon: plan.epsilon,
+                attempts: attempt + 1,
+                s_c: sk.s_c.out_dim(),
+                s_r: sk.s_r.out_dim(),
+                achieved,
+                optimum: fc.optimum(),
+                attained,
+            };
+            result = Some((res, outcome));
+            break;
+        }
+    }
+    Ok(result.expect("planner runs at least one attempt"))
+}

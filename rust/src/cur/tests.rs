@@ -352,6 +352,52 @@ fn streaming_cur_single_pass_close_to_best_rank_k() {
     assert!(report.ratio() <= 2.5, "streaming CUR ratio {} above the bar", report.ratio());
 }
 
+/// ISSUE 9 acceptance: ε-planned CUR achieves `(1+ε)` relative error
+/// against the exact core *for its own selected factors* in ≥90% of
+/// fixed-seed trials. At this scale the planner's check saturates to an
+/// exact certificate and the schedule's last entry reaches the
+/// dimension, so certified ⟹ true and the loop must terminate attained.
+#[test]
+fn planner_acceptance_cur() {
+    let eps = 0.25;
+    crate::testing::assert_attains_epsilon("cur planned", eps, 10, 9, |seed| {
+        let a = rank_k_matrix(100, 80, 6, 0.05, seed);
+        let input = Input::Dense(&a);
+        let cfg = CurConfig::fast(10, 10, 3);
+        let plan = crate::plan::EpsilonPlan::new(eps).with_seed(seed);
+        let mut r = rng(seed ^ 0x1);
+        let (d, out) = decompose_planned(input, &cfg, &plan, &mut r);
+        let achieved = d.residual(input);
+        let optimum = gmr::residual(input, &d.c, &core_exact(input, &d.c, &d.r), &d.r);
+        (achieved, optimum, out.attained)
+    });
+}
+
+/// ISSUE 9 acceptance, streaming flavour: the planned single-pass CUR
+/// re-opens the stream per attempt, escalates sketch sizes, and must
+/// land within `(1+ε)` of the best core for the factors it streamed out
+/// — again in ≥90% of fixed-seed trials (here: all, the check is
+/// saturated-exact at 120×100).
+#[test]
+fn planner_acceptance_streaming_cur() {
+    let eps = 0.5;
+    crate::testing::assert_attains_epsilon("streaming cur planned", eps, 10, 9, |seed| {
+        let a = rank_k_matrix(120, 100, 5, 0.05, seed);
+        let input = Input::Dense(&a);
+        let cfg = StreamingCurConfig::fast(5, 5, 4, 2);
+        let plan = crate::plan::EpsilonPlan::new(eps).with_seed(seed);
+        let open = || {
+            Ok(Box::new(DenseColumnStream::new(&a, 32))
+                as Box<dyn crate::svdstream::ColumnStream + '_>)
+        };
+        let (res, out) = streaming_cur_planned(open, &cfg, &plan).unwrap();
+        let achieved = res.cur.residual(input);
+        let optimum =
+            gmr::residual(input, &res.cur.c, &core_exact(input, &res.cur.c, &res.cur.r), &res.cur.r);
+        (achieved, optimum, out.attained)
+    });
+}
+
 /// Unknown strategy tokens must be a hard config error listing the
 /// accepted values — never a silent fallback.
 #[test]

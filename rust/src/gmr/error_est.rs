@@ -8,19 +8,55 @@ use crate::linalg::{matmul, Mat};
 use crate::rng::Pcg64;
 use crate::sketch::{Sketch, SketchKind};
 
+/// Draw the two-sided count-sketch pair used by every residual
+/// estimator in this module (and mirrored bitwise by
+/// [`crate::plan::CheckOracle`]).
+///
+/// `s` saturates per side: a count sketch with `s ≥ dim` buckets cannot
+/// beat computing the exact norm on that side (extra buckets beyond
+/// `dim` buy nothing, while collisions among `dim` coordinates in `dim`
+/// buckets still add noise), so the side degenerates to
+/// [`Sketch::identity`] — the estimate becomes exact there at the same
+/// `O(dim²)` downstream cost. The identity branch consumes no `rng`
+/// draws; callers relying on bitwise reproducibility must pass the same
+/// `(rows, cols, s)` triple.
+pub(crate) fn residual_sketch_pair(
+    rows: usize,
+    cols: usize,
+    s: usize,
+    rng: &mut Pcg64,
+) -> (Sketch, Sketch) {
+    let s1 = if s >= rows {
+        Sketch::identity(rows)
+    } else {
+        Sketch::draw(SketchKind::Count, s, rows, None, rng)
+    };
+    let s2 = if s >= cols {
+        Sketch::identity(cols)
+    } else {
+        Sketch::draw(SketchKind::Count, s, cols, None, rng)
+    };
+    (s1, s2)
+}
+
 /// `(1±ε)`-estimate of `‖A‖_F` via two count sketches of size `s`.
+///
+/// `s` saturates at the matching dimension of `A` on each side (the
+/// side degenerates to the identity — see [`residual_sketch_pair`]), so
+/// oversketching never inflates the work past the exact computation.
 pub fn sketched_fro_norm(a: Input<'_>, s: usize, rng: &mut Pcg64) -> f64 {
-    let s1 = Sketch::draw(SketchKind::Count, s, a.rows(), None, rng);
-    let s2 = Sketch::draw(SketchKind::Count, s, a.cols(), None, rng);
+    let (s1, s2) = residual_sketch_pair(a.rows(), a.cols(), s, rng);
     let left = a.sketch_left(&s1);
     s2.apply_right(&left).fro_norm()
 }
 
 /// `(1±ε)`-estimate of the GMR residual `‖A − C X R‖_F` using count
 /// sketches on both sides; never materializes `C X R` at full size.
+/// `s` saturates at `A`'s dimensions per side (see
+/// [`residual_sketch_pair`]) — at `s ≥ max(m, n)` the estimate is the
+/// exact residual.
 pub fn estimate_residual(a: Input<'_>, c: &Mat, x: &Mat, r: &Mat, s: usize, rng: &mut Pcg64) -> f64 {
-    let s1 = Sketch::draw(SketchKind::Count, s, a.rows(), None, rng);
-    let s2 = Sketch::draw(SketchKind::Count, s, a.cols(), None, rng);
+    let (s1, s2) = residual_sketch_pair(a.rows(), a.cols(), s, rng);
     // S1 A S2ᵀ   (s×s)
     let sa = s2.apply_right(&a.sketch_left(&s1));
     // S1 C X R S2ᵀ = (S1 C) X (R S2ᵀ)

@@ -9,6 +9,7 @@ mod fast;
 mod rho;
 mod sym;
 
+pub(crate) use error_est::residual_sketch_pair;
 pub use error_est::{estimate_residual, sketched_fro_norm};
 pub use exact::{solve_exact, solve_exact_robust, ExactGmrSolution};
 pub use fast::{approximate, solve_core, solve_fast, solve_fast_with, FastGmrConfig, FastGmrSolution};

@@ -208,6 +208,79 @@ fn rho_definition_matches_direct_computation() {
     assert!(parts.rho().is_finite() && parts.rho() > 0.0);
 }
 
+/// ISSUE 9 acceptance: the ε-planner must hit `(1+ε)` *true* relative
+/// error (vs the exactly-computed optimum) in ≥90% of fixed-seed trials.
+/// At this scale the a-posteriori check saturates to the identity, so a
+/// certificate is a proof — every certified trial must also pass the
+/// independent recomputation here.
+#[test]
+fn planner_acceptance_gmr() {
+    let eps = 0.25;
+    crate::testing::assert_attains_epsilon("gmr planned", eps, 10, 9, |seed| {
+        let (a, c, r) = test_problem(70, 55, 6, 5, seed);
+        let plan = crate::plan::EpsilonPlan::new(eps).with_seed(seed);
+        let (sol, out) = crate::plan::solve_gmr_planned(
+            Input::Dense(&a),
+            &c,
+            &r,
+            SketchKind::Gaussian,
+            SketchKind::Gaussian,
+            &plan,
+        );
+        let achieved = residual(Input::Dense(&a), &c, &sol.x, &r);
+        let optimum = residual(Input::Dense(&a), &c, &solve_exact(Input::Dense(&a), &c, &r).x, &r);
+        (achieved, optimum, out.attained)
+    });
+}
+
+/// The a-posteriori estimator concentrates: at the `s = 32/ε²` rate the
+/// plan uses for its check sketch, the estimate lands in the `(1±ε)`
+/// band in ≥90% of fixed-seed trials — on the dense path *and* the CSR
+/// path (which shares the sketch pair, not the arithmetic).
+#[test]
+fn error_estimator_concentrates_at_quadratic_size() {
+    let (a, c, rr) = test_problem(150, 120, 6, 5, 17);
+    let x = solve_exact(Input::Dense(&a), &c, &rr).x;
+    let truth = residual(Input::Dense(&a), &c, &x, &rr);
+    let a_sp = Csr::from_dense(&a, 0.0);
+    let eps = 0.5;
+    let s = (32.0 / (eps * eps)).ceil() as usize; // 128 — the plan's check rate
+    for (name, input) in [("dense", Input::Dense(&a)), ("csr", Input::Sparse(&a_sp))] {
+        let trials = 10;
+        let mut hits = 0;
+        for t in 0..trials {
+            let est = estimate_residual(input, &c, &x, &rr, s, &mut rng(0xc0c0 + t));
+            if (est / truth - 1.0).abs() <= eps {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 9, "{name}: only {hits}/{trials} estimates within (1±{eps})");
+    }
+}
+
+/// At `s ≥ max(m, n)` the estimator's sketch pair degenerates to the
+/// identity and the estimate *is* the exact residual / norm. Pins the
+/// historical bug where `s` was passed to the count-sketch draw
+/// unclamped (a 10⁴ sketch of a 40-row matrix allocated 10⁴ rows and
+/// destroyed the estimate's scale).
+#[test]
+fn error_estimator_saturates_to_exact() {
+    let (a, c, rr) = test_problem(40, 30, 5, 4, 18);
+    let x = solve_exact(Input::Dense(&a), &c, &rr).x;
+    let truth = residual(Input::Dense(&a), &c, &x, &rr);
+    let a_sp = Csr::from_dense(&a, 0.0);
+    for s in [40, 64, 10_000] {
+        let est = estimate_residual(Input::Dense(&a), &c, &x, &rr, s, &mut rng(19));
+        assert_scalar_close(est, truth, 1e-10, "saturated dense estimate");
+        let est_sp = estimate_residual(Input::Sparse(&a_sp), &c, &x, &rr, s, &mut rng(19));
+        assert_scalar_close(est_sp, truth, 1e-10, "saturated csr estimate");
+    }
+    let nrm = sketched_fro_norm(Input::Dense(&a), 10_000, &mut rng(20));
+    assert_scalar_close(nrm, a.fro_norm(), 1e-10, "saturated dense norm");
+    let nrm_sp = sketched_fro_norm(Input::Sparse(&a_sp), 10_000, &mut rng(20));
+    assert_scalar_close(nrm_sp, a.fro_norm(), 1e-10, "saturated csr norm");
+}
+
 #[test]
 fn sketched_norm_estimates() {
     let mut r = rng(15);

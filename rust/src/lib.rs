@@ -33,6 +33,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod obs;
 pub mod parallel;
+pub mod plan;
 pub mod rng;
 pub mod runtime;
 pub mod sketch;
@@ -48,6 +49,7 @@ pub mod prelude {
     pub use crate::error::{FgError, Result};
     pub use crate::linalg::Mat;
     pub use crate::parallel::{set_threads, Pool};
+    pub use crate::plan::EpsilonPlan;
     pub use crate::rng::Pcg64;
     pub use crate::sketch::{Sketch, SketchKind};
     pub use crate::sparse::Csr;

@@ -180,6 +180,21 @@ fn global_threads_knob_end_to_end() {
         let mut rs2 = rng(7);
         let sol_count =
             solve_fast(Input::Dense(&a), &c, &rr, &FastGmrConfig::count(60, 60), &mut rs2);
+        // ε-planner contract: escalation decisions compare sketched
+        // residuals, so the certified outcome (attempt count, final
+        // sizes, achieved residual) and the planned solution itself
+        // must be bitwise invariant to the thread count.
+        let eplan = crate::plan::EpsilonPlan::new(0.25).with_seed(0xE5);
+        let (psol, pout) = crate::plan::solve_gmr_planned(
+            Input::Dense(&a),
+            &c,
+            &rr,
+            crate::sketch::SketchKind::Gaussian,
+            crate::sketch::SketchKind::Gaussian,
+            &eplan,
+        );
+        let pout_path =
+            (pout.attempts, pout.s_c, pout.s_r, pout.attained, pout.achieved.to_bits());
         let mut rc = rng(8);
         let cur_cfg = crate::cur::CurConfig::fast(10, 10, 3);
         let cur = crate::cur::decompose(Input::Dense(&a), &cur_cfg, &mut rc);
@@ -270,13 +285,18 @@ fn global_threads_knob_end_to_end() {
         // at any worker/thread count.
         let ts = trace.root_structures().join(";");
         assert!(ts.contains("cur.core"), "served CUR trace missing the core-solve span: {ts}");
-        (m, k, two, qr, svd, eig, sol.x, sol_count.x, cur, scur, spmm, spmm_t, served, ts)
+        (
+            m, k, two, qr, svd, eig, sol.x, sol_count.x, cur, scur, spmm, spmm_t, served, ts,
+            psol.x, pout_path,
+        )
     };
 
     set_threads(1);
-    let (m1, k1, two1, qr1, svd1, eig1, x1, xc1, cur1, scur1, sp1, spt1, served1, ts1) = run_all();
+    let (m1, k1, two1, qr1, svd1, eig1, x1, xc1, cur1, scur1, sp1, spt1, served1, ts1, px1, pp1) =
+        run_all();
     set_threads(4);
-    let (m4, k4, two4, qr4, svd4, eig4, x4, xc4, cur4, scur4, sp4, spt4, served4, ts4) = run_all();
+    let (m4, k4, two4, qr4, svd4, eig4, x4, xc4, cur4, scur4, sp4, spt4, served4, ts4, px4, pp4) =
+        run_all();
     set_threads(0); // restore auto-detect
 
     assert_eq!(m1.data(), m4.data(), "matmul dispatch not bitwise across thread counts");
@@ -303,6 +323,12 @@ fn global_threads_knob_end_to_end() {
     );
     assert_close(&x4, &x1, 1e-12, "solve_fast (gaussian) threads=1 vs 4");
     assert_close(&xc4, &xc1, 1e-12, "solve_fast (count) threads=1 vs 4");
+    // Planner contract: the whole escalation path — attempts taken,
+    // final sketch sizes, certification, and the achieved residual down
+    // to its bits — plus the planned solution must not move with the
+    // thread count.
+    assert_eq!(pp1, pp4, "ε-planner escalation path not invariant across thread counts");
+    assert_eq!(px1.data(), px4.data(), "planned GMR solution not bitwise across thread counts");
     // CUR contract: selection indices bitwise, core ≤ 1e-12 across counts.
     assert_eq!(cur1.col_idx, cur4.col_idx, "CUR column selection not bitwise across thread counts");
     assert_eq!(cur1.row_idx, cur4.row_idx, "CUR row selection not bitwise across thread counts");

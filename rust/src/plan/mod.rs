@@ -1,0 +1,517 @@
+//! ε-targeted accuracy planning — invert the paper's sketch-size bounds.
+//!
+//! Every solver in this crate takes raw sketch sizes; the paper's
+//! guarantee runs the other way: given a target relative error `ε`,
+//! Theorem 1 (with the sharper constants of Ye–Ye–Zhang,
+//! arXiv:1609.02258) prescribes sketch sizes of order `O(ε^{-1/2})`
+//! times the factor width. [`EpsilonPlan`] packages that inversion:
+//!
+//! 1. **Seed** — [`EpsilonPlan::initial_size`] picks the first sketch
+//!    size `⌈w·(1 + 2/√ε)⌉` for a width-`w` factor (clamped to the
+//!    matrix dimension).
+//! 2. **Check** — after each solve the attainment test compares the
+//!    sketched residual `‖S₁(A − C X̃ R)S₂‖_F` against the sketched
+//!    *optimum* on the same count-sketch pair (size
+//!    [`EpsilonPlan::check_size`], the `O(ε^{-2})` a-posteriori
+//!    estimator of `gmr::estimate_residual`, after Tropp et al.
+//!    arXiv:1609.00048). Both norms live on one fixed sketch, so their
+//!    ratio concentrates far better than either norm alone.
+//! 3. **Escalate** — on a miss the sizes double
+//!    ([`EpsilonPlan::schedule`]) and the sketches are *extended*, not
+//!    redrawn: [`crate::sketch::Sketch::draw_extension`] replays the
+//!    same seeded stream, so the previous sketch is a bitwise prefix of
+//!    the larger one and every cached product (`S_C A`, `S_C C`,
+//!    `R S_Rᵀ`, `Ã`) grows by appending rows/columns instead of being
+//!    recomputed. A schedule entry that reaches the full dimension
+//!    degenerates to [`crate::sketch::Sketch::identity`], which makes
+//!    the final attempt exact and guarantees termination.
+//!
+//! The planner never discards completed work and never loops past
+//! [`EpsilonPlan::max_attempts`]. Outcomes are reported in
+//! [`PlanOutcome`] (and as `plan.attempt` spans when tracing is
+//! installed), including the *estimated* ε actually reached — callers
+//! that stop early (e.g. a degraded serving tier) report that estimate
+//! instead of silently violating the target.
+
+use crate::gmr::{self, FastGmrSolution, Input};
+use crate::linalg::{fro_norm_diff, matmul, Mat};
+use crate::obs::{self, cat};
+use crate::rng::{rng, Pcg64};
+use crate::sketch::{row_leverage_scores, Sketch, SketchKind};
+
+/// An ε target plus the escalation policy used to reach it.
+///
+/// ```
+/// use fastgmr::gmr::Input;
+/// use fastgmr::linalg::Mat;
+/// use fastgmr::plan::{solve_gmr_planned, EpsilonPlan};
+/// use fastgmr::rng::rng;
+/// use fastgmr::sketch::SketchKind;
+///
+/// let mut r = rng(7);
+/// let a = Mat::randn(60, 40, &mut r);
+/// let cols: Vec<usize> = (0..10).collect();
+/// let c = a.select_cols(&cols);
+/// let rmat = a.select_rows(&cols);
+/// let plan = EpsilonPlan::new(0.5);
+/// // Sizes come from the ε → O(ε^{-1/2}) inversion, not the caller.
+/// assert!(plan.initial_size(10, 60) > 10);
+/// let (sol, out) =
+///     solve_gmr_planned(Input::Dense(&a), &c, &rmat, SketchKind::Gaussian, SketchKind::Gaussian, &plan);
+/// assert_eq!(sol.x.shape(), (10, 10));
+/// assert!(out.attempts >= 1 && out.attempts <= 4);
+/// ```
+#[derive(Clone, Debug)]
+pub struct EpsilonPlan {
+    /// Target relative error: the planner aims for
+    /// `‖A − C X̃ R‖_F ≤ (1+ε)·‖A − C X* R‖_F`.
+    pub epsilon: f64,
+    /// Escalation budget (≥ 1); the last attempt's result is returned
+    /// even when the target was not certified.
+    pub max_attempts: usize,
+    /// Seed for the planner's own randomness (sketch draws and the
+    /// attainment check); two runs with the same plan are bitwise
+    /// identical.
+    pub seed: u64,
+}
+
+impl EpsilonPlan {
+    /// A plan targeting `epsilon` with the default escalation budget
+    /// (4 attempts) and a fixed default seed.
+    pub fn new(epsilon: f64) -> Self {
+        assert!(
+            epsilon.is_finite() && epsilon > 0.0,
+            "EpsilonPlan: epsilon must be a positive finite number, got {epsilon}"
+        );
+        EpsilonPlan { epsilon, max_attempts: 4, seed: 0x00e5_7a26 }
+    }
+
+    /// Same plan, different seed (jobs should pass their own seed so
+    /// repeated submissions stay reproducible *per job*).
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Same plan, different escalation budget (must be ≥ 1).
+    pub fn with_max_attempts(mut self, max_attempts: usize) -> Self {
+        assert!(max_attempts >= 1, "EpsilonPlan: max_attempts must be ≥ 1");
+        self.max_attempts = max_attempts;
+        self
+    }
+
+    /// First-attempt sketch size for a width-`width` factor along a
+    /// dimension of size `dim`: `⌈width·(1 + 2/√ε)⌉`, clamped to
+    /// `[width, dim]`. The `2/√ε` factor is the paper's `O(ε^{-1/2})`
+    /// oversampling with the 1609.02258 constants rounded up to the
+    /// next integer multiple.
+    pub fn initial_size(&self, width: usize, dim: usize) -> usize {
+        let w = width.max(1);
+        let s = (w as f64 * (1.0 + 2.0 / self.epsilon.sqrt())).ceil() as usize;
+        s.clamp(w, dim.max(1))
+    }
+
+    /// The geometric escalation schedule: `s₀, 2s₀, 4s₀, …` capped at
+    /// `dim` and truncated to [`EpsilonPlan::max_attempts`] entries.
+    /// Once an entry reaches `dim` the schedule stops — that attempt
+    /// runs with the identity sketch and is exact.
+    pub fn schedule(&self, width: usize, dim: usize) -> Vec<usize> {
+        let dim = dim.max(1);
+        let mut sizes = Vec::with_capacity(self.max_attempts);
+        let mut s = self.initial_size(width, dim);
+        for _ in 0..self.max_attempts {
+            sizes.push(s);
+            if s >= dim {
+                break;
+            }
+            s = (s * 2).min(dim);
+        }
+        sizes
+    }
+
+    /// Count-sketch size for the a-posteriori attainment check:
+    /// `max(⌈32/ε²⌉, 4·width)`. The `O(ε^{-2})` term is the §6.1
+    /// estimator rate; the `4·width` floor keeps the sketched optimum
+    /// (a rank-`width` solve on the check sketch) from overfitting.
+    /// Sides saturate at the matrix dimension inside the estimator
+    /// (degenerating to an exact check — see
+    /// `gmr::estimate_residual`), so small problems are always checked
+    /// exactly.
+    pub fn check_size(&self, width: usize) -> usize {
+        let rate = (32.0 / (self.epsilon * self.epsilon)).ceil() as usize;
+        rate.max(4 * width.max(1))
+    }
+}
+
+/// What the planner actually did and reached.
+#[derive(Clone, Debug)]
+pub struct PlanOutcome {
+    /// The ε the plan targeted.
+    pub epsilon: f64,
+    /// Attempts executed (1 = no escalation).
+    pub attempts: usize,
+    /// Final left / right sketch sizes.
+    pub s_c: usize,
+    /// Final right sketch size.
+    pub s_r: usize,
+    /// Check-sketch residual of the returned solution.
+    pub achieved: f64,
+    /// Check-sketch residual of the optimum on the same sketch.
+    pub optimum: f64,
+    /// Whether `achieved ≤ (1+ε)·optimum` was certified.
+    pub attained: bool,
+}
+
+impl PlanOutcome {
+    /// The relative error the check actually certified:
+    /// `achieved/optimum − 1` (0 when the residual is at the noise
+    /// floor). A degraded or budget-capped run reports this instead of
+    /// claiming the target ε.
+    pub fn estimated_epsilon(&self) -> f64 {
+        if self.optimum > 0.0 && self.achieved.is_finite() {
+            (self.achieved / self.optimum - 1.0).max(0.0)
+        } else {
+            0.0
+        }
+    }
+}
+
+// ---- attainment check ------------------------------------------------
+
+/// The fixed a-posteriori check sketch: `S₁ A S₂ᵀ` drawn once per
+/// planned job, mirroring `gmr::estimate_residual` bitwise (same
+/// count-sketch family, draw order, and dimension saturation).
+///
+/// Comparing a candidate's sketched residual against the sketched
+/// *optimum* computed on the same pair cancels most of the estimator's
+/// variance: both norms distort the same residual directions, so the
+/// ratio concentrates at rate `O(√ε/√s)` rather than `O(1/√s)`.
+pub struct CheckOracle {
+    s1: Sketch,
+    s2: Sketch,
+    sa: Mat,
+    floor: f64,
+}
+
+impl CheckOracle {
+    /// Draw the check pair (size `s`, saturating at `A`'s dimensions)
+    /// and sketch `A` once.
+    pub fn new(a: Input<'_>, s: usize, seed: u64) -> Self {
+        let mut r = rng(seed);
+        let (s1, s2) = gmr::residual_sketch_pair(a.rows(), a.cols(), s, &mut r);
+        let sa = s2.apply_right(&a.sketch_left(&s1));
+        // Absolute floor so exactly-representable inputs (residual 0)
+        // terminate instead of chasing 0 ≤ (1+ε)·0.
+        let floor = 1e-9 * (1.0 + sa.fro_norm());
+        CheckOracle { s1, s2, sa, floor }
+    }
+
+    /// The check pair alone (for streaming drivers that must accumulate
+    /// `S₁A` during their single pass) — bitwise the pair
+    /// [`CheckOracle::new`] would draw.
+    pub fn sketch_pair(rows: usize, cols: usize, s: usize, seed: u64) -> (Sketch, Sketch) {
+        let mut r = rng(seed);
+        gmr::residual_sketch_pair(rows, cols, s, &mut r)
+    }
+
+    /// Assemble from a pair drawn with [`CheckOracle::sketch_pair`] and
+    /// the already-sketched `S₁AS₂ᵀ` (streaming drivers apply `S₂` to
+    /// their accumulated `S₁A`).
+    pub fn from_sketched(s1: Sketch, s2: Sketch, sa: Mat) -> Self {
+        let floor = 1e-9 * (1.0 + sa.fro_norm());
+        CheckOracle { s1, s2, sa, floor }
+    }
+
+    /// Bind the check to a fixed factor pair `(C, R)`: sketches the
+    /// factors and solves for the check-sketch optimum once; candidate
+    /// cores are then scored with two small products each.
+    pub fn for_factors(&self, c: &Mat, r: &Mat) -> FactorCheck<'_> {
+        let s1c = self.s1.apply_left(c);
+        let rs2 = self.s2.apply_right(r);
+        let x_opt = gmr::solve_core(&s1c, &self.sa, &rs2);
+        let opt = fro_norm_diff(&self.sa, &matmul(&matmul(&s1c, &x_opt), &rs2));
+        FactorCheck { s1c, rs2, sa: &self.sa, opt, floor: self.floor }
+    }
+}
+
+/// A [`CheckOracle`] specialized to one factor pair; scores candidate
+/// core matrices against the check-sketch optimum.
+pub struct FactorCheck<'a> {
+    s1c: Mat,
+    rs2: Mat,
+    sa: &'a Mat,
+    opt: f64,
+    floor: f64,
+}
+
+impl FactorCheck<'_> {
+    /// Check-sketch residual `‖S₁AS₂ᵀ − (S₁C) X (RS₂ᵀ)‖_F` of a
+    /// candidate core (bitwise equal to `gmr::estimate_residual` on the
+    /// same seed and size).
+    pub fn residual_of(&self, x: &Mat) -> f64 {
+        fro_norm_diff(self.sa, &matmul(&matmul(&self.s1c, x), &self.rs2))
+    }
+
+    /// The check-sketch optimum residual for these factors.
+    pub fn optimum(&self) -> f64 {
+        self.opt
+    }
+
+    /// Attainment: `achieved ≤ (1+ε)·optimum + floor`.
+    pub fn attained(&self, epsilon: f64, achieved: f64) -> bool {
+        achieved <= (1.0 + epsilon) * self.opt + self.floor
+    }
+}
+
+// ---- prefix-growing sketch state ------------------------------------
+
+/// What [`SideState::grow`] did this attempt.
+#[derive(Clone, Copy)]
+enum Grown {
+    /// Nothing changed (target already reached, or already identity).
+    Unchanged,
+    /// `blocks[i..]` are newly drawn; caches append their applications.
+    NewFrom(usize),
+    /// The side saturated at its dimension: caches must be rebuilt from
+    /// the un-sketched operands (which is exact, so this is final).
+    Identity,
+}
+
+/// One side's escalating sketch. Drawing continues a single seeded rng
+/// across escalations, which reproduces exactly the block stream of
+/// [`Sketch::draw_extension`] — the attempt-`k` sketch is a bitwise
+/// prefix of the attempt-`k+1` sketch.
+struct SideState {
+    kind: SketchKind,
+    dim: usize,
+    scores: Option<Vec<f64>>,
+    rng: Pcg64,
+    size: usize,
+    blocks: Vec<Sketch>,
+    identity: bool,
+}
+
+impl SideState {
+    fn new(kind: SketchKind, dim: usize, scores: Option<Vec<f64>>, rng: Pcg64) -> Self {
+        SideState { kind, dim, scores, rng, size: 0, blocks: Vec::new(), identity: false }
+    }
+
+    fn grow(&mut self, target: usize) -> Grown {
+        if self.identity {
+            return Grown::Unchanged;
+        }
+        if target >= self.dim {
+            self.identity = true;
+            self.size = self.dim;
+            self.blocks.clear();
+            return Grown::Identity;
+        }
+        if self.size >= target {
+            return Grown::Unchanged;
+        }
+        let first_new = self.blocks.len();
+        if self.size == 0 {
+            self.blocks.push(Sketch::draw(
+                self.kind,
+                target,
+                self.dim,
+                self.scores.as_deref(),
+                &mut self.rng,
+            ));
+            self.size = target;
+        } else {
+            while self.size < target {
+                let b = self.size.min(target - self.size);
+                self.blocks.push(Sketch::draw(
+                    self.kind,
+                    b,
+                    self.dim,
+                    self.scores.as_deref(),
+                    &mut self.rng,
+                ));
+                self.size += b;
+            }
+        }
+        Grown::NewFrom(first_new)
+    }
+}
+
+fn vcat_into(acc: &mut Option<Mat>, part: Mat) {
+    *acc = Some(match acc.take() {
+        None => part,
+        Some(m) => m.vcat(&part),
+    });
+}
+
+fn hcat_into(acc: &mut Option<Mat>, part: Mat) {
+    *acc = Some(match acc.take() {
+        None => part,
+        Some(m) => m.hcat(&part),
+    });
+}
+
+/// `A · [S₀ᵀ | S₁ᵀ | …]` for a list of right-sketch blocks.
+fn apply_blocks_right(a: &Mat, blocks: &[Sketch]) -> Mat {
+    let mut out: Option<Mat> = None;
+    for blk in blocks {
+        hcat_into(&mut out, blk.apply_right(a));
+    }
+    out.expect("apply_blocks_right: no blocks")
+}
+
+// ---- the planned GMR solve -------------------------------------------
+
+/// ε-planned Fast GMR: solve `min_X ‖A − C X R‖_F` to a target
+/// relative error, escalating sketch sizes geometrically until the
+/// a-posteriori check certifies attainment (or the budget runs out —
+/// inspect [`PlanOutcome::attained`]).
+///
+/// All sketch products are cached and *extended* across attempts
+/// (`S_C A`, `S_C C`, `R S_Rᵀ`, and `Ã` grow by appended rows/columns),
+/// so an escalation costs only the marginal rows it adds. Determinism
+/// is governed entirely by `plan.seed` — the same plan on the same
+/// input is bitwise reproducible regardless of thread count.
+///
+/// Each attempt is recorded as a `plan.attempt` span (category
+/// `dispatch`) with `attempt`, `s_c`, `s_r`, and `achieved` metadata.
+pub fn solve_gmr_planned(
+    a: Input<'_>,
+    c: &Mat,
+    r: &Mat,
+    kind_c: SketchKind,
+    kind_r: SketchKind,
+    plan: &EpsilonPlan,
+) -> (FastGmrSolution, PlanOutcome) {
+    let (m, n) = (a.rows(), a.cols());
+    let (wc, wr) = (c.cols(), r.rows());
+    assert_eq!(c.rows(), m, "solve_gmr_planned: C must have A's row count");
+    assert_eq!(r.cols(), n, "solve_gmr_planned: R must have A's column count");
+
+    let check = CheckOracle::new(a, plan.check_size(wc.max(wr)), plan.seed ^ 0x00e5_c4ec);
+    let fc = check.for_factors(c, r);
+
+    let sched_c = plan.schedule(wc, m);
+    let sched_r = plan.schedule(wr, n);
+    let attempts = sched_c.len().max(sched_r.len());
+
+    // Leverage scores are a property of the factors, not the sketch
+    // size — compute once, reuse across every escalation.
+    let scores_c = (kind_c == SketchKind::Leverage).then(|| row_leverage_scores(c));
+    let scores_r = (kind_r == SketchKind::Leverage).then(|| row_leverage_scores(&r.transpose()));
+    let mut side_c = SideState::new(kind_c, m, scores_c, rng(plan.seed ^ 0x00e5_00c0));
+    let mut side_r = SideState::new(kind_r, n, scores_r, rng(plan.seed ^ 0x00e5_00f0));
+
+    // Growing caches. `a_tilde` is kept consistent with (sc_a, r-blocks)
+    // by appending the marginal rows/columns each escalation.
+    let mut sc_a: Option<Mat> = None; // S_C A      (s_c × n)
+    let mut sc_c: Option<Mat> = None; // S_C C      (s_c × wc)
+    let mut r_sr: Option<Mat> = None; // R S_Rᵀ     (wr × s_r)
+    let mut a_tilde: Option<Mat> = None; // S_C A S_Rᵀ (s_c × s_r)
+
+    let mut result: Option<(FastGmrSolution, PlanOutcome)> = None;
+    for attempt in 0..attempts {
+        let t_c = sched_c[attempt.min(sched_c.len() - 1)];
+        let t_r = sched_r[attempt.min(sched_r.len() - 1)];
+        let mut sp = obs::span("plan.attempt", cat::DISPATCH);
+        sp.meta("attempt", attempt + 1);
+        sp.meta("s_c", t_c);
+        sp.meta("s_r", t_r);
+
+        let old_rows = sc_a.as_ref().map_or(0, Mat::rows);
+        let old_rblocks = side_r.blocks.len();
+        let step_c = side_c.grow(t_c);
+        let step_r = side_r.grow(t_r);
+
+        match step_c {
+            Grown::Unchanged => {}
+            Grown::NewFrom(i) => {
+                for blk in &side_c.blocks[i..] {
+                    vcat_into(&mut sc_a, a.sketch_left(blk));
+                    vcat_into(&mut sc_c, blk.apply_left(c));
+                }
+            }
+            Grown::Identity => {
+                sc_a = Some(a.sketch_left(&Sketch::identity(m)));
+                sc_c = Some(c.clone());
+                a_tilde = None; // stale: rebuilt below
+            }
+        }
+        match step_r {
+            Grown::Unchanged => {}
+            Grown::NewFrom(i) => {
+                for blk in &side_r.blocks[i..] {
+                    hcat_into(&mut r_sr, blk.apply_right(r));
+                }
+            }
+            Grown::Identity => {
+                r_sr = Some(r.clone());
+                a_tilde = None;
+            }
+        }
+
+        let sca = sc_a.as_ref().expect("sc_a initialized on first attempt");
+        if side_r.identity {
+            // S_R = I ⇒ Ã = S_C A. Rebuilt whenever either side moved.
+            let fresh = match &a_tilde {
+                Some(t) => t.rows() != sca.rows(),
+                None => true,
+            };
+            if fresh {
+                a_tilde = Some(sca.clone());
+            }
+        } else {
+            a_tilde = Some(match a_tilde.take() {
+                // No valid cache (first attempt, or S_C just saturated
+                // and invalidated it): build against all current blocks.
+                None => apply_blocks_right(sca, &side_r.blocks),
+                Some(mut t) => {
+                    // New S_C rows against the blocks R already had.
+                    if sca.rows() > old_rows && old_rblocks > 0 {
+                        let new_rows = sca.slice(old_rows, sca.rows(), 0, sca.cols());
+                        t = t.vcat(&apply_blocks_right(&new_rows, &side_r.blocks[..old_rblocks]));
+                    }
+                    // New R blocks against the full (grown) S_C A.
+                    if side_r.blocks.len() > old_rblocks {
+                        t = t.hcat(&apply_blocks_right(sca, &side_r.blocks[old_rblocks..]));
+                    }
+                    t
+                }
+            });
+        }
+
+        let scc = sc_c.as_ref().expect("sc_c initialized");
+        let rsr = r_sr.as_ref().expect("r_sr initialized");
+        let atl = a_tilde.as_ref().expect("a_tilde initialized");
+        let x = gmr::solve_core(scc, atl, rsr);
+        let achieved = fc.residual_of(&x);
+        let attained = fc.attained(plan.epsilon, achieved);
+        sp.meta("achieved", achieved);
+        sp.meta("attained", if attained { "yes" } else { "no" });
+        drop(sp);
+
+        let last = attempt + 1 == attempts;
+        if attained || last {
+            let outcome = PlanOutcome {
+                epsilon: plan.epsilon,
+                attempts: attempt + 1,
+                s_c: side_c.size,
+                s_r: side_r.size,
+                achieved,
+                optimum: fc.optimum(),
+                attained,
+            };
+            let sol = FastGmrSolution {
+                x,
+                sc_c: sc_c.take().expect("sc_c"),
+                r_sr: r_sr.take().expect("r_sr"),
+                a_tilde: a_tilde.take().expect("a_tilde"),
+            };
+            result = Some((sol, outcome));
+            break;
+        }
+    }
+    result.expect("planner runs at least one attempt")
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,218 @@
+use super::*;
+use crate::gmr::{estimate_residual, residual, solve_exact, solve_fast_with};
+
+fn assert_mats_bitwise(a: &Mat, b: &Mat, what: &str) {
+    assert_eq!(a.shape(), b.shape(), "{what}: shape mismatch");
+    for i in 0..a.rows() {
+        for j in 0..a.cols() {
+            assert!(
+                a[(i, j)] == b[(i, j)],
+                "{what}: bitwise mismatch at ({i},{j}): {} vs {}",
+                a[(i, j)],
+                b[(i, j)]
+            );
+        }
+    }
+}
+
+/// Low-rank-plus-noise test input with width-`w` factors drawn from A's
+/// actual columns/rows (the CUR setting the planner serves).
+fn problem(m: usize, n: usize, w: usize, seed: u64) -> (Mat, Mat, Mat) {
+    let mut r = rng(seed);
+    let u = Mat::randn(m, w, &mut r);
+    let v = Mat::randn(w, n, &mut r);
+    let mut a = matmul(&u, &v);
+    let noise = Mat::randn(m, n, &mut r);
+    for i in 0..m {
+        for j in 0..n {
+            a[(i, j)] += 0.05 * noise[(i, j)];
+        }
+    }
+    let idx: Vec<usize> = (0..w).collect();
+    let c = a.select_cols(&idx);
+    let rm = a.select_rows(&idx);
+    (a, c, rm)
+}
+
+#[test]
+fn initial_size_inverts_the_epsilon_bound() {
+    // ε = 0.25 ⇒ 1 + 2/√ε = 5, so a width-10 factor seeds at 50.
+    let plan = EpsilonPlan::new(0.25);
+    assert_eq!(plan.initial_size(10, 1000), 50);
+    // Tighter ε ⇒ strictly larger seed size (the O(ε^{-1/2}) law).
+    let loose = EpsilonPlan::new(0.5).initial_size(10, 1000);
+    let tight = EpsilonPlan::new(0.05).initial_size(10, 1000);
+    assert!(tight > loose, "tighter ε must oversample more: {tight} vs {loose}");
+    // Clamped into [width, dim].
+    assert_eq!(plan.initial_size(10, 30), 30);
+    assert_eq!(EpsilonPlan::new(1e9).initial_size(10, 1000), 10);
+}
+
+#[test]
+fn schedule_doubles_caps_and_truncates() {
+    let plan = EpsilonPlan::new(0.25);
+    // 50, 100, 200, 400 — geometric, max_attempts entries.
+    assert_eq!(plan.schedule(10, 10_000), vec![50, 100, 200, 400]);
+    // Capped at dim, and stops once an entry reaches it (that attempt is
+    // exact — no point planning past it).
+    assert_eq!(plan.schedule(10, 150), vec![50, 100, 150]);
+    assert_eq!(plan.schedule(10, 40), vec![40]);
+    // Budget of one: a single attempt at the seeded size.
+    assert_eq!(plan.with_max_attempts(1).schedule(10, 10_000), vec![50]);
+}
+
+#[test]
+fn check_size_takes_the_estimator_rate_or_the_width_floor() {
+    // ⌈32/ε²⌉ dominates for small widths...
+    assert_eq!(EpsilonPlan::new(0.5).check_size(4), 128);
+    // ...and the 4·width floor for wide factors.
+    assert_eq!(EpsilonPlan::new(0.5).check_size(100), 400);
+}
+
+#[test]
+#[should_panic(expected = "epsilon must be a positive finite number")]
+fn rejects_nonpositive_epsilon() {
+    let _ = EpsilonPlan::new(0.0);
+}
+
+/// The attainment check must be *the* a-posteriori estimator of §6.1,
+/// bitwise: same seed and size ⇒ same sketched residual as
+/// [`gmr::estimate_residual`].
+#[test]
+fn check_oracle_mirrors_estimate_residual_bitwise() {
+    let (a, c, rm) = problem(45, 37, 6, 3);
+    let x = solve_exact(Input::Dense(&a), &c, &rm).x;
+    for s in [12, 30, 64] {
+        let oracle = CheckOracle::new(Input::Dense(&a), s, 0xC4EC);
+        let fc = oracle.for_factors(&c, &rm);
+        let direct = estimate_residual(Input::Dense(&a), &c, &x, &rm, s, &mut rng(0xC4EC));
+        let via_oracle = fc.residual_of(&x);
+        assert!(
+            via_oracle == direct,
+            "s={s}: CheckOracle {via_oracle} != estimate_residual {direct}"
+        );
+    }
+}
+
+/// At check sizes ≥ both dimensions the sketch pair degenerates to the
+/// identity and the check scores the *exact* residual.
+#[test]
+fn saturated_check_is_exact() {
+    let (a, c, rm) = problem(24, 18, 4, 5);
+    let x = solve_exact(Input::Dense(&a), &c, &rm).x;
+    let oracle = CheckOracle::new(Input::Dense(&a), 64, 0x5A7);
+    let fc = oracle.for_factors(&c, &rm);
+    let exact = residual(Input::Dense(&a), &c, &x, &rm);
+    let sketched = fc.residual_of(&x);
+    assert!(
+        (sketched - exact).abs() <= 1e-10 * (1.0 + exact),
+        "saturated check must equal the exact residual: {sketched} vs {exact}"
+    );
+}
+
+/// End-to-end: the planner certifies its target, and because the check
+/// saturates at this scale the certificate is about the *true* relative
+/// error, verified here against the exact optimum.
+#[test]
+fn planned_solve_attains_its_target() {
+    let (a, c, rm) = problem(60, 40, 6, 7);
+    let plan = EpsilonPlan::new(0.5);
+    let (sol, out) =
+        solve_gmr_planned(Input::Dense(&a), &c, &rm, SketchKind::Gaussian, SketchKind::Gaussian, &plan);
+    assert!(out.attained, "planner must certify ε=0.5 within budget: {out:?}");
+    assert!(out.attempts >= 1 && out.attempts <= plan.max_attempts);
+    let achieved = residual(Input::Dense(&a), &c, &sol.x, &rm);
+    let opt = residual(Input::Dense(&a), &c, &solve_exact(Input::Dense(&a), &c, &rm).x, &rm);
+    assert!(
+        achieved <= (1.0 + plan.epsilon) * opt + 1e-9 * (1.0 + opt),
+        "certified solution violates the target: {achieved} vs (1+ε)·{opt}"
+    );
+}
+
+/// A schedule entry that reaches the dimension runs with the identity
+/// sketch: one attempt, exact result, always attained.
+#[test]
+fn identity_cap_makes_the_final_attempt_exact() {
+    let (a, c, rm) = problem(20, 16, 5, 9);
+    // ε small enough that the seeded size exceeds both dimensions.
+    let plan = EpsilonPlan::new(0.005);
+    let (sol, out) =
+        solve_gmr_planned(Input::Dense(&a), &c, &rm, SketchKind::Gaussian, SketchKind::Gaussian, &plan);
+    assert_eq!((out.attempts, out.s_c, out.s_r), (1, 20, 16), "{out:?}");
+    assert!(out.attained, "the exact attempt always attains: {out:?}");
+    let x_exact = solve_exact(Input::Dense(&a), &c, &rm).x;
+    let d = fro_norm_diff(&sol.x, &x_exact);
+    assert!(d <= 1e-8 * (1.0 + x_exact.fro_norm()), "identity attempt must be exact, diff {d}");
+}
+
+/// The planner's escalating side state replays the exact block stream of
+/// [`Sketch::draw_extension`]: growing 12 → 24 in two steps consumes the
+/// same rng draws as one extension call, so the applied products match
+/// bitwise and the attempt-k sketch is a true prefix of attempt-k+1.
+#[test]
+fn side_state_growth_matches_draw_extension_bitwise() {
+    let mut r = rng(31);
+    let a = Mat::randn(50, 34, &mut r);
+    for kind in [SketchKind::Gaussian, SketchKind::Count, SketchKind::Srht, SketchKind::Uniform] {
+        let mut side = SideState::new(kind, 50, None, rng(0xABCD));
+        assert!(matches!(side.grow(12), Grown::NewFrom(0)));
+        let mut sc_a: Option<Mat> = None;
+        for blk in &side.blocks {
+            vcat_into(&mut sc_a, blk.apply_left(&a));
+        }
+        let first = sc_a.clone().unwrap();
+        assert!(matches!(side.grow(24), Grown::NewFrom(1)));
+        for blk in &side.blocks[1..] {
+            vcat_into(&mut sc_a, blk.apply_left(&a));
+        }
+        let grown = sc_a.unwrap();
+
+        let ext = Sketch::draw_extension(kind, 12, 24, 50, None, &mut rng(0xABCD));
+        let full = ext.apply_left(&a);
+        assert_mats_bitwise(&grown, &full, &format!("{kind:?} two-step growth vs extension"));
+        // Prefix property: the first 12 rows are the 12-row sketch.
+        let prefix = full.slice(0, 12, 0, full.cols());
+        assert_mats_bitwise(&first, &prefix, &format!("{kind:?} prefix"));
+    }
+}
+
+/// Whatever sizes the planner ends at (identity aside), its solution is
+/// bitwise the plain [`solve_fast_with`] run on extension-drawn sketches
+/// of those sizes — escalation reuses work but never changes the answer.
+#[test]
+fn planned_solution_matches_unplanned_at_final_sizes() {
+    let (a, c, rm) = problem(80, 70, 6, 13);
+    let plan = EpsilonPlan::new(0.5);
+    let (sol, out) =
+        solve_gmr_planned(Input::Dense(&a), &c, &rm, SketchKind::Gaussian, SketchKind::Gaussian, &plan);
+    assert!(out.s_c < 80 && out.s_r < 70, "test needs non-saturated sizes, got {out:?}");
+    let s0_c = plan.schedule(c.cols(), 80)[0];
+    let s0_r = plan.schedule(rm.rows(), 70)[0];
+    let s_c =
+        Sketch::draw_extension(SketchKind::Gaussian, s0_c, out.s_c, 80, None, &mut rng(plan.seed ^ 0x00e5_00c0));
+    let s_r =
+        Sketch::draw_extension(SketchKind::Gaussian, s0_r, out.s_r, 70, None, &mut rng(plan.seed ^ 0x00e5_00f0));
+    let direct = solve_fast_with(Input::Dense(&a), &c, &rm, &s_c, &s_r);
+    assert_mats_bitwise(&sol.x, &direct.x, "planned core vs direct solve at final sizes");
+    assert_mats_bitwise(&sol.a_tilde, &direct.a_tilde, "planned Ã vs direct");
+}
+
+#[test]
+fn estimated_epsilon_reports_the_certified_gap() {
+    let base = PlanOutcome {
+        epsilon: 0.1,
+        attempts: 2,
+        s_c: 10,
+        s_r: 10,
+        achieved: 1.2,
+        optimum: 1.0,
+        attained: false,
+    };
+    assert!((base.estimated_epsilon() - 0.2).abs() < 1e-12);
+    // Better than optimal on the sketch (fp luck) clamps to 0, as does a
+    // zero optimum (the floor regime).
+    let lucky = PlanOutcome { achieved: 0.99, ..base.clone() };
+    assert_eq!(lucky.estimated_epsilon(), 0.0);
+    let floor = PlanOutcome { optimum: 0.0, ..base };
+    assert_eq!(floor.estimated_epsilon(), 0.0);
+}

@@ -122,6 +122,14 @@ pub(crate) enum Op {
     Osnap { buckets: Vec<usize>, signs: Vec<f64>, p: usize },
     /// Composition second ∘ first (first applied to the data first).
     Composed { first: Box<Sketch>, second: Box<Sketch> },
+    /// Vertical stack of independently drawn blocks: row block `b` of `S`
+    /// is `blocks[b]` (all sharing the input dimension `m`). Produced by
+    /// [`Sketch::draw_extension`] so an escalating caller can grow `s`
+    /// while keeping the already-drawn rows bitwise intact. Each block is
+    /// normalized to `E[S_bᵀS_b] = I`, so the stack satisfies
+    /// `E[SᵀS] = (#blocks)·I` — a global scalar that every pseudo-inverse
+    /// solve in the crate is invariant to.
+    Stacked(Vec<Sketch>),
 }
 
 /// A realized sketching matrix `S ∈ R^{s×m}`.
@@ -151,6 +159,52 @@ impl Sketch {
             SketchKind::Count => count::draw(s, m, rng),
             SketchKind::Osnap => osnap::draw(s, m, 2, rng),
             SketchKind::OsnapGaussian => combined::draw_osnap_gaussian(s, m, rng),
+        }
+    }
+
+    /// Draw a sketch of `s_total` rows whose first `s_base` rows are
+    /// **bitwise identical** to `Sketch::draw(kind, s_base, m, …)` run on
+    /// the same freshly seeded `rng` — the escalation primitive of the
+    /// ε-planner ([`crate::plan`]).
+    ///
+    /// The extension replays a deterministic *block schedule* from the
+    /// original seed: the first block is exactly the base draw, and each
+    /// further block doubles the running total (`min(total, s_total −
+    /// total)` rows), consuming the rng in the same order every time. Two
+    /// calls with the same `(kind, s_base, m)` and totals on the same
+    /// doubling path therefore agree bitwise on their common prefix —
+    /// re-sketching larger never discards completed rows. `s_total ==
+    /// s_base` degenerates to a plain [`Sketch::draw`].
+    pub fn draw_extension(
+        kind: SketchKind,
+        s_base: usize,
+        s_total: usize,
+        m: usize,
+        scores: Option<&[f64]>,
+        rng: &mut Pcg64,
+    ) -> Self {
+        assert!(s_base > 0, "draw_extension: s_base must be positive");
+        assert!(s_total >= s_base, "draw_extension: s_total {s_total} < s_base {s_base}");
+        let mut blocks = vec![Self::draw(kind, s_base, m, scores, rng)];
+        let mut total = s_base;
+        while total < s_total {
+            let b = total.min(s_total - total);
+            blocks.push(Self::draw(kind, b, m, scores, rng));
+            total += b;
+        }
+        if blocks.len() == 1 {
+            return blocks.pop().expect("one block");
+        }
+        Self::from_op(total, m, Op::Stacked(blocks))
+    }
+
+    /// The row blocks if this sketch came from [`Sketch::draw_extension`]
+    /// (`None` for single-block sketches). Lets the planner apply only
+    /// the blocks beyond an already-computed prefix.
+    pub(crate) fn stacked_blocks(&self) -> Option<&[Sketch]> {
+        match &self.op {
+            Op::Stacked(blocks) => Some(blocks),
+            _ => None,
         }
     }
 
@@ -252,6 +306,9 @@ impl Sketch {
             Op::Composed { first, second } => {
                 second.apply_left_with(&first.apply_left_with(a, pool), pool)
             }
+            Op::Stacked(blocks) => {
+                stack_left(self.s, a.cols(), blocks, |b| b.apply_left_with(a, pool))
+            }
         }
     }
 
@@ -295,6 +352,7 @@ impl Sketch {
                 out
             }
             Op::Composed { first, second } => second.apply_left(&first.apply_left_csr(a)),
+            Op::Stacked(blocks) => stack_left(self.s, a.cols(), blocks, |b| b.apply_left_csr(a)),
         }
     }
 
@@ -369,6 +427,9 @@ impl Sketch {
             Op::Composed { first, second } => {
                 second.apply_right_with(&first.apply_right_with(a, pool), pool)
             }
+            Op::Stacked(blocks) => {
+                stack_right(a.rows(), self.s, blocks, |b| b.apply_right_with(a, pool))
+            }
         }
     }
 
@@ -437,6 +498,9 @@ impl Sketch {
                 out
             }
             Op::Composed { first, second } => second.apply_right(&first.apply_right_csr(a)),
+            Op::Stacked(blocks) => {
+                stack_right(a.rows(), self.s, blocks, |b| b.apply_right_csr(a))
+            }
         }
     }
 
@@ -495,10 +559,43 @@ impl Sketch {
                     },
                 );
             }
+            Op::Stacked(blocks) => {
+                Op::Stacked(blocks.iter().map(|b| b.slice_input(c0, c1)).collect())
+            }
             Op::Srht { .. } => panic!("SRHT sketches cannot be input-sliced (global mixing)"),
         };
         Sketch::from_op(self.s, w, op)
     }
+}
+
+/// Vertically stack per-block `apply_left` results into `s_total×n`:
+/// block `b`'s rows land at the offset of the blocks before it.
+fn stack_left(s_total: usize, n: usize, blocks: &[Sketch], apply: impl Fn(&Sketch) -> Mat) -> Mat {
+    let mut out = Mat::zeros(s_total, n);
+    let mut r0 = 0;
+    for blk in blocks {
+        let part = apply(blk);
+        for i in 0..part.rows() {
+            out.row_mut(r0 + i).copy_from_slice(part.row(i));
+        }
+        r0 += blk.out_dim();
+    }
+    out
+}
+
+/// Horizontally stack per-block `apply_right` results into `rows×s_total`.
+fn stack_right(rows: usize, s_total: usize, blocks: &[Sketch], apply: impl Fn(&Sketch) -> Mat) -> Mat {
+    let mut out = Mat::zeros(rows, s_total);
+    let mut c0 = 0;
+    for blk in blocks {
+        let part = apply(blk);
+        let w = blk.out_dim();
+        for i in 0..rows {
+            out.row_mut(i)[c0..c0 + w].copy_from_slice(part.row(i));
+        }
+        c0 += w;
+    }
+    out
 }
 
 /// Shard a row-scatter `out = Σ_i contribution(i)` over contiguous
@@ -559,6 +656,7 @@ fn clone_op(op: &Op) -> Op {
             first: Box::new(Sketch::from_op(first.s, first.m, clone_op(&first.op))),
             second: Box::new(Sketch::from_op(second.s, second.m, clone_op(&second.op))),
         },
+        Op::Stacked(blocks) => Op::Stacked(blocks.to_vec()),
     }
 }
 

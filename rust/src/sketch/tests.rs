@@ -287,6 +287,104 @@ fn dimension_mismatch_panics() {
     let _ = sk.apply_left(&a);
 }
 
+/// The ε-planner's escalation contract: for *every* family,
+/// `draw_extension(kind, s, t, …)` run on a fresh rng seeded like
+/// `draw(kind, s, …)` has its first `s` rows bitwise identical to that
+/// base draw — re-sketching larger never redraws the prefix. The
+/// degenerate `t == s` call must be bitwise the plain draw.
+#[test]
+fn extension_prefix_is_bitwise_the_base_draw() {
+    let m = 40;
+    let scores: Vec<f64> = (0..m).map(|i| 1.0 + (i % 7) as f64).collect();
+    for kind in SketchKind::all() {
+        let sc = if kind == SketchKind::Leverage { Some(&scores[..]) } else { None };
+        let base = Sketch::draw(kind, 8, m, sc, &mut rng(0x77));
+        let ext = Sketch::draw_extension(kind, 8, 20, m, sc, &mut rng(0x77));
+        assert_eq!((ext.out_dim(), ext.in_dim()), (20, m), "{}", kind.name());
+        let bd = base.to_dense();
+        let ed = ext.to_dense();
+        for i in 0..8 {
+            for j in 0..m {
+                assert!(
+                    bd[(i, j)] == ed[(i, j)],
+                    "{}: prefix row {i} col {j}: base {} vs extension {}",
+                    kind.name(),
+                    bd[(i, j)],
+                    ed[(i, j)]
+                );
+            }
+        }
+        let plain = Sketch::draw_extension(kind, 8, 8, m, sc, &mut rng(0x77)).to_dense();
+        for i in 0..8 {
+            for j in 0..m {
+                assert!(plain[(i, j)] == bd[(i, j)], "{}: t==s must be the plain draw", kind.name());
+            }
+        }
+    }
+}
+
+/// Two extensions of the same base along the doubling path agree
+/// bitwise on their common prefix — the multi-escalation invariant the
+/// planner relies on across attempts 1 → 2 → 3.
+#[test]
+fn extension_chain_shares_prefixes_bitwise() {
+    let m = 33;
+    let scores: Vec<f64> = (0..m).map(|i| 1.0 + (i % 4) as f64).collect();
+    for kind in SketchKind::all() {
+        let sc = if kind == SketchKind::Leverage { Some(&scores[..]) } else { None };
+        let mid = Sketch::draw_extension(kind, 7, 14, m, sc, &mut rng(0x99)).to_dense();
+        let big = Sketch::draw_extension(kind, 7, 28, m, sc, &mut rng(0x99)).to_dense();
+        for i in 0..14 {
+            for j in 0..m {
+                assert!(
+                    mid[(i, j)] == big[(i, j)],
+                    "{}: chained prefix diverged at ({i},{j})",
+                    kind.name()
+                );
+            }
+        }
+    }
+}
+
+/// A stacked (multi-block) extension sketch must behave like one flat
+/// operator on all four apply paths — left/right × dense/CSR — exactly
+/// like the single-block families do.
+#[test]
+fn stacked_apply_paths_consistent_with_dense_operator() {
+    let (m, n) = (37, 9);
+    for kind in SketchKind::all() {
+        let mut r = rng(400 + kind.name().len() as u64);
+        let scores: Vec<f64> = (0..m).map(|i| 1.0 + (i % 5) as f64).collect();
+        let sc = if kind == SketchKind::Leverage { Some(&scores[..]) } else { None };
+        let sk = Sketch::draw_extension(kind, 6, 21, m, sc, &mut r);
+        assert!(sk.stacked_blocks().is_some(), "{}: 6→21 must stack blocks", kind.name());
+        let sd = sk.to_dense();
+        assert_eq!(sd.shape(), (21, m));
+
+        let a = Mat::randn(m, n, &mut r);
+        let want = matmul(&sd, &a);
+        assert_close(&sk.apply_left(&a), &want, 1e-10, &format!("{} stacked apply_left", kind.name()));
+        let ac = Csr::from_dense(&a, 0.0);
+        assert_close(
+            &sk.apply_left_csr(&ac),
+            &want,
+            1e-10,
+            &format!("{} stacked apply_left_csr", kind.name()),
+        );
+
+        let b = Mat::randn(n, m, &mut r);
+        let want_r = matmul_a_bt(&b, &sd);
+        assert_close(&sk.apply_right(&b), &want_r, 1e-10, &format!("{} stacked apply_right", kind.name()));
+        let bc = Csr::from_dense(&b, 0.0);
+        assert_close(
+            &sk.apply_right_csr(&bc),
+            &want_r,
+            1e-10,
+            &format!("{} stacked apply_right_csr", kind.name()),
+        );
+    }
+}
+
 /// Every accepted token round-trips through `parse`, and unknown tokens
 /// are a hard `FgError::Config` that lists the accepted values (so the
 /// CLI error is self-documenting, same contract as `--selection`).

@@ -15,8 +15,9 @@
 
 use super::KernelOracle;
 use crate::gmr::solve_core;
-use crate::linalg::{project_psd, Mat};
-use crate::rng::Pcg64;
+use crate::linalg::{fro_norm_diff, matmul, project_psd, Mat};
+use crate::plan::{EpsilonPlan, PlanOutcome};
+use crate::rng::{rng, Pcg64};
 use crate::sketch::row_leverage_scores;
 
 /// Configuration for Algorithm 2.
@@ -87,6 +88,155 @@ pub fn faster_spsd_core<O: KernelOracle + ?Sized>(
     let x_raw = solve_core(&s1c, &s1ks2, &s2c.transpose());
     let _sp = crate::obs::span("spsd.psd_project", crate::obs::cat::FACTORIZE);
     project_psd(&x_raw)
+}
+
+/// ε-planned Algorithm 2 core: escalates the sketch size `s` until a
+/// fixed validation block certifies `(1+ε)` relative error against the
+/// optimal core *on that block*.
+///
+/// Reuse across escalations happens at the **kernel-observation**
+/// level, the expensive resource in the oracle model: the index lists
+/// grow prefix-stably (each attempt replays `sample_weighted_many`
+/// from the same seed — its draws are sequential, so a longer sample
+/// extends the shorter one bitwise), and only the two new strips of
+/// `S₁ K S₂ᵀ` are queried from the oracle; previously observed entries
+/// are kept (rescaling by the new `1/√(s·pᵢ)` factors is free — scale
+/// is separable from observation).
+///
+/// The validation block `K[V, V]` (|V| = `plan.check_size`, saturating
+/// at `n`, drawn once uniformly) is the a-posteriori check — its
+/// entries are additional observations, the price of certification. At
+/// |V| = n the check is exact.
+pub fn faster_spsd_core_planned<O: KernelOracle + ?Sized>(
+    oracle: &O,
+    c: &Mat,
+    plan: &EpsilonPlan,
+) -> (Mat, PlanOutcome) {
+    let n = oracle.n();
+    assert_eq!(c.rows(), n, "C must have n rows");
+    let w = c.cols().max(1);
+
+    // Fixed validation set + its optimum (drawn once, shared by every
+    // attempt so escalation decisions are monotone).
+    let v = plan.check_size(w).min(n);
+    let vidx = rng(plan.seed ^ 0x59d0_000f).sample_without_replacement(n, v);
+    let kv = oracle.block(&vidx, &vidx);
+    let cv = c.select_rows(&vidx);
+    let cvt = cv.transpose();
+    let x_opt = solve_core(&cv, &kv, &cvt);
+    let opt = fro_norm_diff(&kv, &matmul(&matmul(&cv, &x_opt), &cvt));
+    let floor = 1e-9 * (1.0 + kv.fro_norm());
+
+    let scores = row_leverage_scores(c);
+    let total: f64 = scores.iter().sum();
+    let probs: Vec<f64> = scores.iter().map(|&s| (s + 1e-12) / (total + 1e-12 * n as f64)).collect();
+
+    let sched = plan.schedule(w, n);
+    // Separate seeded streams per side keep each index list
+    // prefix-stable under growth (the shared-rng draw order of the
+    // unplanned path would interleave them).
+    let seed1 = plan.seed ^ 0x59d0_0001;
+    let seed2 = plan.seed ^ 0x59d0_0002;
+
+    let mut idx1: Vec<usize> = Vec::new();
+    let mut idx2: Vec<usize> = Vec::new();
+    let mut kb = Mat::zeros(0, 0); // unscaled S₁KS₂ᵀ entries observed so far
+
+    let mut result: Option<(Mat, PlanOutcome)> = None;
+    for (attempt, &s) in sched.iter().enumerate() {
+        let mut sp = crate::obs::span("plan.attempt", crate::obs::cat::DISPATCH);
+        sp.meta("attempt", attempt + 1);
+        sp.meta("s_c", s);
+        sp.meta("s_r", s);
+
+        let p = idx1.len();
+        idx1 = rng(seed1).sample_weighted_many(&probs, s);
+        idx2 = rng(seed2).sample_weighted_many(&probs, s);
+        // Observe only the marginal strips of the intersection block.
+        if p == 0 {
+            kb = oracle.block(&idx1, &idx2);
+        } else {
+            let rows = oracle.block(&idx1[p..], &idx2[..p]);
+            let cols = oracle.block(&idx1, &idx2[p..]);
+            let mut grown = Mat::zeros(s, s);
+            grown.set_block(0, 0, &kb);
+            grown.set_block(p, 0, &rows);
+            grown.set_block(0, p, &cols);
+            kb = grown;
+        }
+
+        // Scale factors depend on the current s — reapplied per
+        // attempt, never re-observed.
+        let scale1: Vec<f64> =
+            idx1.iter().map(|&i| 1.0 / ((s as f64) * probs[i]).sqrt()).collect();
+        let scale2: Vec<f64> =
+            idx2.iter().map(|&i| 1.0 / ((s as f64) * probs[i]).sqrt()).collect();
+        let mut s1c = c.select_rows(&idx1);
+        for (t, &sv) in scale1.iter().enumerate() {
+            for val in s1c.row_mut(t) {
+                *val *= sv;
+            }
+        }
+        let mut s2c = c.select_rows(&idx2);
+        for (t, &sv) in scale2.iter().enumerate() {
+            for val in s2c.row_mut(t) {
+                *val *= sv;
+            }
+        }
+        let mut s1ks2 = kb.clone();
+        for i in 0..s {
+            for j in 0..s {
+                s1ks2[(i, j)] *= scale1[i] * scale2[j];
+            }
+        }
+
+        let x_raw = solve_core(&s1c, &s1ks2, &s2c.transpose());
+        let x = {
+            let _psp = crate::obs::span("spsd.psd_project", crate::obs::cat::FACTORIZE);
+            project_psd(&x_raw)
+        };
+        let achieved = fro_norm_diff(&kv, &matmul(&matmul(&cv, &x), &cvt));
+        let attained = achieved <= (1.0 + plan.epsilon) * opt + floor;
+        sp.meta("achieved", achieved);
+        sp.meta("attained", if attained { "yes" } else { "no" });
+        drop(sp);
+
+        if attained || attempt + 1 == sched.len() {
+            let outcome = PlanOutcome {
+                epsilon: plan.epsilon,
+                attempts: attempt + 1,
+                s_c: s,
+                s_r: s,
+                achieved,
+                optimum: opt,
+                attained,
+            };
+            result = Some((x, outcome));
+            break;
+        }
+    }
+    result.expect("planner runs at least one attempt")
+}
+
+/// ε-planned full Algorithm 2: uniform column sampling (identical rng
+/// consumption to [`faster_spsd`]), then the planned core. `cfg.s` is
+/// ignored — the plan sizes the sketch.
+pub fn faster_spsd_planned<O: KernelOracle + ?Sized>(
+    oracle: &O,
+    cfg: &FasterSpsdConfig,
+    plan: &EpsilonPlan,
+    rng: &mut Pcg64,
+) -> (SpsdApproximation, PlanOutcome) {
+    let n = oracle.n();
+    let (idx, c) = {
+        let mut sp = crate::obs::span("spsd.sample_columns", crate::obs::cat::GATHER);
+        sp.meta("c", cfg.c);
+        let idx = rng.sample_without_replacement(n, cfg.c);
+        let c = oracle.columns(&idx);
+        (idx, c)
+    };
+    let (x, outcome) = faster_spsd_core_planned(oracle, &c, plan);
+    (SpsdApproximation { idx, c, x }, outcome)
 }
 
 /// Full Algorithm 2 (steps 1–7): uniform column sampling included.

@@ -22,7 +22,10 @@ mod nystrom;
 mod oracle;
 
 pub use fast_spsd::fast_spsd_core;
-pub use faster::{faster_spsd, faster_spsd_core, FasterSpsdConfig, SpsdApproximation};
+pub use faster::{
+    faster_spsd, faster_spsd_core, faster_spsd_core_planned, faster_spsd_planned,
+    FasterSpsdConfig, SpsdApproximation,
+};
 pub use nystrom::{nystrom_core, optimal_core, reconstruct};
 pub use oracle::{CountingOracle, DenseKernelOracle, KernelOracle, RbfOracle};
 

@@ -177,6 +177,174 @@ pub fn accumulate_block_with(
     *m_acc += &m_blk;
 }
 
+/// ε-planned Algorithm 3. The stream is single-pass, so the caller
+/// provides a factory; each escalation attempt re-streams the data.
+///
+/// What escalation does and does not redo: the range sketches Ψ̃/Ω̃ and
+/// their accumulators `C = AΩ̃`, `R = Ψ̃A` — and therefore the
+/// orthonormal bases `U_C`, `V_R` and the a-posteriori check products —
+/// are computed on the **first pass only** and reused verbatim (they do
+/// not depend on the core sketch sizes). Only the core product
+/// `M = S_C A S_Rᵀ` is re-accumulated per attempt, with `S_C`/`S_R`
+/// grown as bitwise prefix extensions ([`Sketch::draw_extension`]); a
+/// schedule entry at the full dimension degenerates to the identity,
+/// making the final core solve exact for the fixed bases. The certified
+/// ε is therefore relative to the best core for `U_C`/`V_R` — the
+/// factor-range error is governed by `cfg.c`/`cfg.r`, which the plan
+/// does not change.
+pub fn fast_sp_svd_planned<'a, F>(
+    mut open_stream: F,
+    cfg: &FastSpSvdConfig,
+    plan: &crate::plan::EpsilonPlan,
+) -> Result<(SpSvdResult, crate::plan::PlanOutcome)>
+where
+    F: FnMut() -> Result<Box<dyn ColumnStream + 'a>>,
+{
+    use crate::plan::CheckOracle;
+    use crate::rng::rng;
+
+    let mut next_stream = Some(open_stream()?);
+    let (m, n) = {
+        let s = next_stream.as_ref().expect("stream");
+        (s.rows(), s.cols())
+    };
+    // Range sketches: drawn once from the plan seed, never escalated.
+    let mut range_rng = rng(plan.seed ^ 0x55d0_0a0e);
+    let r0 = (cfg.osnap_mult * cfg.r).min(m);
+    let c0 = (cfg.osnap_mult * cfg.c).min(n);
+    let psi = {
+        let osnap = Sketch::draw(SketchKind::Osnap, r0, m, None, &mut range_rng);
+        let g = Sketch::draw(SketchKind::Gaussian, cfg.r, r0, None, &mut range_rng);
+        crate::sketch::compose_sketches(osnap, g)
+    };
+    let omega = {
+        let osnap = Sketch::draw(SketchKind::Osnap, c0, n, None, &mut range_rng);
+        let g = Sketch::draw(SketchKind::Gaussian, cfg.c, c0, None, &mut range_rng);
+        crate::sketch::compose_sketches(osnap, g)
+    };
+
+    let sched_c = plan.schedule(cfg.c.max(1), m);
+    let sched_r = plan.schedule(cfg.r.max(1), n);
+    let attempts = sched_c.len().max(sched_r.len());
+    let (chk1, chk2) =
+        CheckOracle::sketch_pair(m, n, plan.check_size(cfg.c.max(cfg.r)), plan.seed ^ 0x55d0_c4ec);
+
+    // First-pass products, reused by every later attempt.
+    let mut bases: Option<(Mat, Mat)> = None; // (U_C m×c, V_Rᵀ r×n)
+    let mut oracle: Option<CheckOracle> = None;
+    let mut blocks = 0usize;
+
+    let mut result = None;
+    for attempt in 0..attempts {
+        let t_c = sched_c[attempt.min(sched_c.len() - 1)];
+        let t_r = sched_r[attempt.min(sched_r.len() - 1)];
+        let mut sp = crate::obs::span("plan.attempt", crate::obs::cat::DISPATCH);
+        sp.meta("attempt", attempt + 1);
+        sp.meta("s_c", t_c);
+        sp.meta("s_r", t_r);
+
+        let s_c = if t_c >= m {
+            Sketch::identity(m)
+        } else {
+            Sketch::draw_extension(
+                cfg.core_kind,
+                sched_c[0],
+                t_c,
+                m,
+                None,
+                &mut rng(plan.seed ^ 0x55d0_00c0),
+            )
+        };
+        let s_r = if t_r >= n {
+            Sketch::identity(n)
+        } else {
+            Sketch::draw_extension(
+                cfg.core_kind,
+                sched_r[0],
+                t_r,
+                n,
+                None,
+                &mut rng(plan.seed ^ 0x55d0_00f0),
+            )
+        };
+
+        let mut stream = match next_stream.take() {
+            Some(s) => s,
+            None => open_stream()?,
+        };
+        assert_eq!(
+            (stream.rows(), stream.cols()),
+            (m, n),
+            "fast_sp_svd_planned: reopened stream changed shape"
+        );
+        let pool = crate::parallel::Pool::current();
+        let first_pass = bases.is_none();
+        let mut m_acc = Mat::zeros(s_c.out_dim(), s_r.out_dim());
+        let mut c_acc = first_pass.then(|| Mat::zeros(m, cfg.c));
+        let mut r_acc = first_pass.then(|| Mat::zeros(cfg.r, n));
+        let mut y1 = first_pass.then(|| Mat::zeros(chk1.out_dim(), n));
+        while let Some(block) = stream.next_block()? {
+            let a_l = &block.data;
+            let (b0, b1) = (block.col_start, block.col_start + a_l.cols());
+            let sc_al = s_c.apply_left_with(a_l, &pool);
+            m_acc += &s_r.slice_input(b0, b1).apply_right_with(&sc_al, &pool);
+            if first_pass {
+                let r_blk = psi.apply_left_with(a_l, &pool);
+                r_acc.as_mut().expect("first pass").set_block(0, b0, &r_blk);
+                *c_acc.as_mut().expect("first pass") +=
+                    &omega.slice_input(b0, b1).apply_right_with(a_l, &pool);
+                y1.as_mut().expect("first pass").set_block(
+                    0,
+                    b0,
+                    &chk1.apply_left_with(a_l, &pool),
+                );
+                blocks += 1;
+            }
+        }
+        if first_pass {
+            let _qsp = crate::obs::span("svd.finalize.qr", crate::obs::cat::FACTORIZE);
+            let u_c = qr_thin(&c_acc.take().expect("first pass")).q;
+            let v_r = qr_thin(&r_acc.take().expect("first pass").transpose()).q;
+            bases = Some((u_c, v_r.transpose()));
+            let sa = chk2.apply_right(&y1.take().expect("first pass"));
+            oracle = Some(CheckOracle::from_sketched(chk1.clone(), chk2.clone(), sa));
+        }
+        let (u_c, v_rt) = bases.as_ref().expect("bases built on first pass");
+        let n_core = {
+            let _csp = crate::obs::span("svd.finalize.core", crate::obs::cat::SOLVE);
+            let sc_uc = s_c.apply_left(u_c);
+            let vr_sr = s_r.apply_right(v_rt);
+            let left = pinv_apply_left(&sc_uc, &m_acc);
+            pinv_apply_right(&left, &vr_sr)
+        };
+        let fc = oracle.as_ref().expect("oracle built on first pass").for_factors(u_c, v_rt);
+        let achieved = fc.residual_of(&n_core);
+        let attained = fc.attained(plan.epsilon, achieved);
+        sp.meta("achieved", achieved);
+        sp.meta("attained", if attained { "yes" } else { "no" });
+        drop(sp);
+
+        if attained || attempt + 1 == attempts {
+            let _ssp = crate::obs::span("svd.finalize.svd", crate::obs::cat::FACTORIZE);
+            let Svd { u: u_n, s: sigma, v: v_n } = svd_jacobi(&n_core);
+            let u = matmul(u_c, &u_n);
+            let v = matmul(&v_rt.transpose(), &v_n);
+            let outcome = crate::plan::PlanOutcome {
+                epsilon: plan.epsilon,
+                attempts: attempt + 1,
+                s_c: s_c.out_dim(),
+                s_r: s_r.out_dim(),
+                achieved,
+                optimum: fc.optimum(),
+                attained,
+            };
+            result = Some((SpSvdResult { u, sigma, v, blocks }, outcome));
+            break;
+        }
+    }
+    Ok(result.expect("planner runs at least one attempt"))
+}
+
 /// Steps 10–13: orthonormal bases, Fast-GMR core solve, small SVD. The
 /// two tall QRs are the blocked compact-WY kernel and the core SVD is
 /// the round-robin parallel Jacobi, so finalize shards over the pool

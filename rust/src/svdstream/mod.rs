@@ -18,7 +18,10 @@ pub mod fast;
 pub mod practical;
 pub mod source;
 
-pub use fast::{fast_sp_svd, fast_sp_svd_with, FastSpSvdConfig, FastSpSvdSketches, SpSvdResult};
+pub use fast::{
+    fast_sp_svd, fast_sp_svd_planned, fast_sp_svd_with, FastSpSvdConfig, FastSpSvdSketches,
+    SpSvdResult,
+};
 pub use practical::{practical_sp_svd, PracticalSpSvdConfig};
 pub use source::{ColumnStream, CsrColumnStream, DenseColumnStream, OnePassStream};
 

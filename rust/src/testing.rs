@@ -80,6 +80,45 @@ pub fn assert_scalar_close(got: f64, want: f64, tol: f64, context: &str) {
     assert!(d <= tol * scale, "{context}: got {got} want {want} (|d|={d})");
 }
 
+/// Statistical acceptance harness for the ε-planner: run `trials`
+/// fixed-seed instances of a planned job and require that at least
+/// `min_pass` of them (≥90% in the crate's acceptance tests) both
+/// *certify* attainment and *actually* achieve
+/// `achieved ≤ (1+eps)·optimum` against an exactly-computed optimum.
+///
+/// The closure receives the per-trial seed and returns
+/// `(achieved, optimum, attained)` — the true residual of the planned
+/// solution, the true optimal residual for the same factors, and the
+/// planner's own certificate. Failing seeds are listed in the panic
+/// message so any regression is reproducible by construction.
+#[track_caller]
+pub fn assert_attains_epsilon(
+    job: &str,
+    eps: f64,
+    trials: usize,
+    min_pass: usize,
+    mut trial: impl FnMut(u64) -> (f64, f64, bool),
+) {
+    assert!(min_pass <= trials, "{job}: min_pass {min_pass} > trials {trials}");
+    let mut failed: Vec<String> = Vec::new();
+    for t in 0..trials {
+        let seed = 0xacce_0000 + t as u64;
+        let (achieved, optimum, attained) = trial(seed);
+        let within = achieved <= (1.0 + eps) * optimum + 1e-9 * (1.0 + optimum);
+        if !(attained && within) {
+            failed.push(format!(
+                "seed {seed:#x}: achieved {achieved:.6} vs (1+{eps})·{optimum:.6}, certified={attained}"
+            ));
+        }
+    }
+    let passed = trials - failed.len();
+    assert!(
+        passed >= min_pass,
+        "{job}: ε={eps} attained in {passed}/{trials} trials (need {min_pass}):\n  {}",
+        failed.join("\n  ")
+    );
+}
+
 /// Run `cases` random property checks over a random matrix with dims in
 /// `1..=max_dim`. The closure receives the matrix and a per-case rng.
 /// Panics (from the closure's asserts) are annotated with the case seed.
