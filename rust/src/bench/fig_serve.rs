@@ -26,18 +26,34 @@
 //! executor panic per kind, admission pressure). Every chaos job must
 //! complete via retry or a verified degraded tier.
 //!
-//! Emits `results/BENCH_serve.json` and `results/BENCH_chaos.json` (CI
-//! artifacts) and `PERF`-prefixed stdout lines; the CI bench step fails
-//! if the warm phase records no cache hits, its p50 is not under the
-//! cold p50, the traced p50 regresses more than 10% over the cold p50,
-//! any chaos job hard-fails, or the fault-off p50 regresses more than 5%
-//! over cold. EXPERIMENTS.md §Serving and §Robustness track the numbers.
+//! Three **wire** phases measure the hardened TCP front-end
+//! ([`crate::net`]): `inproc` is a sequential in-process baseline that
+//! also records every result's `to_words` encoding; `socket` replays the
+//! identical stream through a loopback [`crate::net::Client`] — every
+//! response must decode **bitwise identical** to the baseline — then
+//! drains gracefully (post-drain connects refused, cache persisted and
+//! warm-started bitwise by a fresh router); `socket_chaos` repeats the
+//! replay under seeded `net.read`/`net.write`/`net.accept` faults, where
+//! the in-place socket retries must heal every injection (zero hard
+//! failures, still bitwise).
+//!
+//! Emits `results/BENCH_serve.json`, `results/BENCH_chaos.json`, and
+//! `results/BENCH_net.json` (CI artifacts) and `PERF`-prefixed stdout
+//! lines; the CI bench step fails if the warm phase records no cache
+//! hits, its p50 is not under the cold p50, the traced p50 regresses
+//! more than 10% over the cold p50, any chaos job hard-fails, the
+//! fault-off p50 regresses more than 5% over cold, the socket p50
+//! exceeds 1.5x the in-process p50, or the net-chaos replay records any
+//! hard failure or bitwise mismatch. EXPERIMENTS.md §Serving,
+//! §Robustness, and §Networking track the numbers.
 
 use super::harness::{f4, secs, BenchCtx, Profile};
 use crate::coordinator::{ApproxJob, MatrixPayload, Router, ServeConfig};
 use crate::cur::CurConfig;
 use crate::data::{synth_dense, SpectrumKind};
 use crate::linalg::Mat;
+use crate::metrics::Histogram;
+use crate::net::{Client, NetConfig, Server};
 use crate::obs::TraceCollector;
 use crate::rng::rng;
 use crate::sketch::SketchKind;
@@ -53,6 +69,38 @@ struct Phase {
     p95: f64,
     p99: f64,
     cache_hits: u64,
+}
+
+/// A [`Phase`] from client-side per-request latencies (the wire phases
+/// measure at the submitter, so the socket and in-process numbers are
+/// apples-to-apples).
+fn client_phase(
+    name: &'static str,
+    jobs: usize,
+    seconds: f64,
+    hist: &Histogram,
+    hits: u64,
+) -> Phase {
+    Phase {
+        name,
+        seconds,
+        jobs_per_s: jobs as f64 / seconds,
+        p50: hist.quantile(0.5),
+        p95: hist.quantile(0.95),
+        p99: hist.quantile(0.99),
+        cache_hits: hits,
+    }
+}
+
+/// Wire front-end outcomes for `results/BENCH_net.json` (CI net guard).
+struct NetStats {
+    bitwise_mismatches: u64,
+    chaos_hard_failures: u64,
+    chaos_injected: u64,
+    busy_sheds: u64,
+    drain_refused_clean: bool,
+    drain_warm_hits: u64,
+    drain_warm_bitwise_ok: bool,
 }
 
 pub fn run(ctx: &mut BenchCtx) {
@@ -242,6 +290,167 @@ pub fn run(ctx: &mut BenchCtx) {
     let (hard_failures, degraded, chaos_retries, injected) = chaos_stats;
     assert_eq!(hard_failures, 0, "chaos replay must complete every job via retry/degradation");
 
+    // ---- Wire front-end phases (hardened TCP serving) -----------------
+    // A dedicated sequential baseline keeps the comparison fair (the
+    // loopback client is sequential too) and records the bitwise
+    // `to_words` reference every socket response is checked against. The
+    // job mix carries more compute per payload byte than the cold
+    // workload so the CI-guarded socket/in-process p50 ratio measures
+    // wire overhead against real work, not a codec microbenchmark.
+    const NET_SEED: u64 = 0x5EED_4E74;
+    let net_job = |j: usize| -> ApproxJob {
+        let d = j % ndata;
+        let seed = 0x4E54 + j as u64;
+        match j % 3 {
+            0 => ApproxJob::Cur {
+                a: MatrixPayload::Dense(datasets[d].clone()),
+                cfg: CurConfig::fast(24, 24, 4),
+                seed,
+            },
+            1 => ApproxJob::SpsdKernel { x: points[d].clone(), sigma: 0.5, c: 24, s: 120, seed },
+            _ => ApproxJob::StreamSvd {
+                a: MatrixPayload::Dense(datasets[d].clone()),
+                cfg: FastSpSvdConfig::paper(8, 4, SketchKind::Gaussian),
+                block: 64,
+                seed,
+            },
+        }
+    };
+    let fresh = |cache_path: Option<std::path::PathBuf>| {
+        Router::with_config(&ServeConfig {
+            workers: 2,
+            cache_bytes: 256 << 20,
+            cache_path,
+            ..ServeConfig::service(2)
+        })
+    };
+    let _ = std::fs::create_dir_all("results");
+
+    let mut baseline: Vec<Vec<u64>> = Vec::with_capacity(jobs);
+    let mut hist = Histogram::default();
+    let router = fresh(None);
+    let t0 = std::time::Instant::now();
+    for j in 0..jobs {
+        let q0 = std::time::Instant::now();
+        let res = router
+            .submit(net_job(j))
+            .expect("unbounded queue must not shed")
+            .wait()
+            .expect("net baseline job failed");
+        hist.record(q0.elapsed().as_secs_f64());
+        baseline.push(res.to_words());
+    }
+    let seconds = t0.elapsed().as_secs_f64();
+    let hits = router.metrics.get("serve.cache.hits");
+    phases.push(client_phase("inproc", jobs, seconds, &hist, hits));
+    router.shutdown();
+
+    // Fault-off socket replay, then a graceful drain: post-drain
+    // connects must be refused and the persisted cache must warm-start
+    // a fresh router to an all-hit, bitwise-identical replay.
+    let cache_file = std::path::PathBuf::from("results/BENCH_net_cache.txt");
+    let _ = std::fs::remove_file(&cache_file);
+    let ncfg = NetConfig::default();
+    let router = Arc::new(fresh(Some(cache_file.clone())));
+    let server =
+        Server::bind("127.0.0.1:0", Arc::clone(&router), ncfg.clone()).expect("bind loopback");
+    let addr = server.addr();
+    let mut client = Client::connect(addr, &ncfg).expect("loopback connect");
+    let mut bitwise_mismatches = 0u64;
+    let mut hist = Histogram::default();
+    let t0 = std::time::Instant::now();
+    for (j, words) in baseline.iter().enumerate() {
+        let q0 = std::time::Instant::now();
+        let (res, _trace) = client.submit(&net_job(j)).expect("socket job failed");
+        hist.record(q0.elapsed().as_secs_f64());
+        if &res.to_words() != words {
+            bitwise_mismatches += 1;
+        }
+    }
+    let seconds = t0.elapsed().as_secs_f64();
+    let hits = router.metrics.get("serve.cache.hits");
+    phases.push(client_phase("socket", jobs, seconds, &hist, hits));
+    client.quit().expect("clean QUIT");
+    server.drain();
+    let drain_refused_clean = Client::connect(addr, &ncfg).is_err();
+
+    let router = fresh(Some(cache_file.clone()));
+    let mut warm_ok = true;
+    for (j, words) in baseline.iter().enumerate() {
+        let res = router
+            .submit(net_job(j))
+            .expect("unbounded queue must not shed")
+            .wait()
+            .expect("warm-start job failed");
+        warm_ok &= &res.to_words() == words;
+    }
+    let drain_warm_hits = router.metrics.get("serve.cache.hits");
+    let drain_warm_bitwise_ok = warm_ok && drain_warm_hits == jobs as u64;
+    router.shutdown();
+    let _ = std::fs::remove_file(&cache_file);
+
+    // Net-chaos replay: every read/write/accept can trip, the in-place
+    // socket retries must heal every injection, and every response must
+    // still be bitwise identical. Retry budget 16 clears the seed's
+    // worst consecutive-injection run (12, self-checked in net::tests).
+    let plan = Arc::new(
+        crate::faults::FaultPlan::new(NET_SEED)
+            .with_site(crate::faults::site::NET_READ, 0.5, u64::MAX)
+            .with_site(crate::faults::site::NET_WRITE, 0.25, u64::MAX)
+            .with_site(crate::faults::site::NET_ACCEPT, 0.25, u64::MAX),
+    );
+    let ncfg = NetConfig {
+        retry: crate::faults::RetryPolicy {
+            max_attempts: 16,
+            base_backoff: std::time::Duration::from_micros(200),
+            cap: std::time::Duration::from_millis(2),
+        },
+        faults: Some(Arc::clone(&plan)),
+        ..NetConfig::default()
+    };
+    let router = Arc::new(fresh(None));
+    let server = Server::bind("127.0.0.1:0", Arc::clone(&router), ncfg.clone())
+        .expect("bind chaos loopback");
+    let mut client = Client::connect_retry(server.addr(), &ncfg, 8).expect("chaos connect");
+    let mut chaos_hard_failures = 0u64;
+    let mut hist = Histogram::default();
+    let t0 = std::time::Instant::now();
+    for (j, words) in baseline.iter().enumerate() {
+        let q0 = std::time::Instant::now();
+        match client.submit(&net_job(j)) {
+            Ok((res, _)) if &res.to_words() == words => {}
+            Ok(_) => bitwise_mismatches += 1,
+            Err(_) => chaos_hard_failures += 1,
+        }
+        hist.record(q0.elapsed().as_secs_f64());
+    }
+    let seconds = t0.elapsed().as_secs_f64();
+    let busy_sheds = router.metrics.get("net.busy");
+    phases.push(client_phase(
+        "socket_chaos",
+        jobs,
+        seconds,
+        &hist,
+        router.metrics.get("serve.cache.hits"),
+    ));
+    drop(client);
+    server.drain();
+    let chaos_injected = plan.injected();
+    assert!(chaos_injected > 0, "the net chaos plan must inject");
+    assert_eq!(chaos_hard_failures, 0, "net chaos must heal every request via socket retries");
+    assert_eq!(bitwise_mismatches, 0, "socket results must be bitwise identical to in-process");
+    assert!(drain_refused_clean, "post-drain connects must be refused");
+    assert!(drain_warm_bitwise_ok, "the drained cache must warm-start bitwise");
+    let net = NetStats {
+        bitwise_mismatches,
+        chaos_hard_failures,
+        chaos_injected,
+        busy_sheds,
+        drain_refused_clean,
+        drain_warm_hits,
+        drain_warm_bitwise_ok,
+    };
+
     let by_cat = trace.seconds_by_category();
     let total_self: f64 = by_cat.values().sum();
     let attribution: Vec<(String, f64)> = by_cat
@@ -290,6 +499,26 @@ pub fn run(ctx: &mut BenchCtx) {
         "PERF serve chaos: {hard_failures} hard failures, {degraded} degraded, \
          {chaos_retries} retries, {injected} injected (seed {FAULT_SEED:#x})"
     ));
+    let by_name = |name: &str| phases.iter().find(|p| p.name == name).expect("phase recorded");
+    let (inproc, socket, socket_chaos) =
+        (by_name("inproc"), by_name("socket"), by_name("socket_chaos"));
+    ctx.line(&format!(
+        "PERF serve socket/inproc p50 ratio: {} (CI guard <= 1.5)",
+        f4(socket.p50 / inproc.p50.max(1e-9))
+    ));
+    ctx.line(&format!(
+        "PERF serve net chaos: {} hard failures, {} bitwise mismatches, {} injected, \
+         {} busy sheds, chaos/inproc p50 ratio {} (seed {NET_SEED:#x})",
+        net.chaos_hard_failures,
+        net.bitwise_mismatches,
+        net.chaos_injected,
+        net.busy_sheds,
+        f4(socket_chaos.p50 / inproc.p50.max(1e-9))
+    ));
+    ctx.line(&format!(
+        "PERF serve net drain: refused_clean={}, warm hits {}/{jobs}, warm bitwise ok={}",
+        net.drain_refused_clean, net.drain_warm_hits, net.drain_warm_bitwise_ok
+    ));
     let shares: Vec<String> =
         attribution.iter().map(|(cat, f)| format!("{cat} {:.1}%", 100.0 * f)).collect();
     ctx.line(&format!(
@@ -299,6 +528,7 @@ pub fn run(ctx: &mut BenchCtx) {
     ));
     write_json(jobs, &phases, &attribution);
     write_chaos_json(jobs, FAULT_SEED, &phases, hard_failures, degraded, chaos_retries, injected);
+    write_net_json(jobs, NET_SEED, &phases, &net);
     write_artifact("results/TRACE_serve.json", &trace.to_chrome_json());
     write_artifact("results/METRICS_serve.prom", &prom);
     ctx.line("\nshape check: warm hits == jobs, warm p50 far below cold p50, chaos completes \
@@ -365,6 +595,37 @@ fn write_chaos_json(
     out.push_str(&format!("  \"chaos_p50\": {:.9}\n", chaos.p50));
     out.push_str("}\n");
     let path = "results/BENCH_chaos.json";
+    match std::fs::write(path, &out) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+/// Wire front-end artifact for the CI net guard: the socket p50 must
+/// stay within 1.5x the sequential in-process p50, the chaos replay
+/// must record zero hard failures and zero bitwise mismatches (with a
+/// non-zero injection count proving the plan fired), and the graceful
+/// drain must refuse late connects and warm-start bitwise.
+fn write_net_json(jobs: usize, fault_seed: u64, phases: &[Phase], net: &NetStats) {
+    let p = |name: &str| phases.iter().find(|p| p.name == name).expect("phase recorded");
+    let (inproc, socket, chaos) = (p("inproc"), p("socket"), p("socket_chaos"));
+    let mut out = String::from("{\n");
+    out.push_str("  \"bench\": \"fig_serve_net\",\n");
+    out.push_str(&format!("  \"threads\": {},\n", crate::parallel::threads()));
+    out.push_str(&format!("  \"jobs\": {jobs},\n"));
+    out.push_str(&format!("  \"fault_seed\": {fault_seed},\n"));
+    out.push_str(&format!("  \"inproc_p50\": {:.9},\n", inproc.p50));
+    out.push_str(&format!("  \"socket_p50\": {:.9},\n", socket.p50));
+    out.push_str(&format!("  \"socket_chaos_p50\": {:.9},\n", chaos.p50));
+    out.push_str(&format!("  \"bitwise_mismatches\": {},\n", net.bitwise_mismatches));
+    out.push_str(&format!("  \"chaos_hard_failures\": {},\n", net.chaos_hard_failures));
+    out.push_str(&format!("  \"chaos_injected\": {},\n", net.chaos_injected));
+    out.push_str(&format!("  \"busy_sheds\": {},\n", net.busy_sheds));
+    out.push_str(&format!("  \"drain_refused_clean\": {},\n", net.drain_refused_clean));
+    out.push_str(&format!("  \"drain_warm_hits\": {},\n", net.drain_warm_hits));
+    out.push_str(&format!("  \"drain_warm_bitwise_ok\": {}\n", net.drain_warm_bitwise_ok));
+    out.push_str("}\n");
+    let path = "results/BENCH_net.json";
     match std::fs::write(path, &out) {
         Ok(()) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write {path}: {e}"),

@@ -59,6 +59,8 @@ USAGE:
   fastgmr serve [--jobs N] [--workers W] [--queue-depth D] [--cache-mb M]
                 [--batch-window MS] [--deadline MS] [--threads N]
                 [--retry-max R] [--degrade] [--cache-dir DIR]
+                [--cache-ttl T] [--listen ADDR] [--max-conns C]
+                [--net-timeout MS]
                                      demo the serving daemon: mixed jobs
                                      through admission control (D=0
                                      unbounded), the coalescing batcher
@@ -74,7 +76,25 @@ USAGE:
                                      pressure instead of shedding;
                                      --cache-dir DIR persists the
                                      artifact cache crash-safely on
-                                     shutdown and warm-starts from it
+                                     shutdown and warm-starts from it;
+                                     --cache-ttl T expires cached
+                                     artifacts older than T cache
+                                     operations (logical ticks; 0 =
+                                     never expire);
+                                     --listen ADDR serves the v1 line
+                                     protocol over TCP at ADDR (e.g.
+                                     127.0.0.1:7463) and round-trips
+                                     the demo stream through a loopback
+                                     wire client; with --jobs 0 it
+                                     serves until stdin closes (daemon
+                                     mode), then drains gracefully
+                                     (finishes in-flight requests and
+                                     persists the cache).
+                                     --max-conns C sheds connects
+                                     beyond C with BUSY (0=unlimited);
+                                     --net-timeout MS sets the per-
+                                     connection socket read/write
+                                     deadlines (default 5000, 0=none)
   fastgmr cur [--size MxN] [--rank K] [--c C] [--r R] [--selection S]
               [--sketch KIND] [--mult A] [--seed N] [--threads N]
                                      CUR decomposition demo: compare the
@@ -117,7 +137,10 @@ USAGE:
                  .jsonl; tracing is off (zero cost) without this flag
   --metrics-out F  (serve | pipeline | cur) write the run's metrics
                  registry to F as Prometheus text exposition (counters,
-                 gauges, and latency histograms with cumulative buckets)
+                 gauges, and latency histograms with cumulative buckets).
+                 For serve, both exports are flushed by the router
+                 itself during graceful drain (before shutdown returns),
+                 so daemon and netted runs persist them too
 
 Bench targets: table1..table7, fig1, fig2, fig3, fig_cur, fig_curstream,
 fig_epsilon, fig_gemm, fig_linalg, fig_serve, perf (see DESIGN.md §5).
@@ -318,6 +341,20 @@ impl ObsFlags {
             println!("wrote {path}");
         }
         Ok(())
+    }
+
+    /// Confirm the export files the router flushed during its drain.
+    /// `serve` hands the paths to `ServeConfig` so the flush happens
+    /// *inside* `Router::drain()` — before shutdown returns, on every
+    /// exit path (demo, loopback, daemon) — rather than here.
+    fn announce_router_outputs(&self) {
+        for path in [&self.trace_out, &self.metrics_out].into_iter().flatten() {
+            if std::path::Path::new(path).exists() {
+                println!("wrote {path} (flushed at router drain)");
+            } else {
+                eprintln!("warning: {path} was not written (see drain errors above)");
+            }
+        }
     }
 }
 
@@ -664,6 +701,11 @@ fn cur_stream_cmd(
 /// beyond the first period repeats an earlier cache key and a warm
 /// artifact cache answers it without recomputing (the paper's
 /// one-sketch-many-queries amortization, served across requests).
+///
+/// With `--listen ADDR` the router is fronted by the TCP wire server
+/// (`net::Server`) and the same demo stream round-trips through a
+/// loopback `net::Client`; `--jobs 0 --listen ADDR` instead serves
+/// external clients until stdin closes, then drains gracefully.
 fn serve(args: &[String], epsilon: Option<f64>) -> Result<()> {
     let (args, obs_flags) = take_obs_flags(args)?;
     let args = &args[..];
@@ -674,6 +716,10 @@ fn serve(args: &[String], epsilon: Option<f64>) -> Result<()> {
     let batch_ms: u64 = parse_flag(args, "--batch-window", 0)?;
     let deadline_ms: u64 = parse_flag(args, "--deadline", 0)?;
     let retry_max: u32 = parse_flag(args, "--retry-max", 1)?;
+    let cache_ttl: u64 = parse_flag(args, "--cache-ttl", 0)?;
+    let max_conns: usize = parse_flag(args, "--max-conns", 64)?;
+    let net_timeout_ms: u64 = parse_flag(args, "--net-timeout", 5000)?;
+    let listen = flag_value(args, "--listen").map(str::to_string);
     let degrade = args.iter().any(|a| a == "--degrade");
     let cache_dir = flag_value(args, "--cache-dir").map(str::to_string);
     if let Some(d) = &cache_dir {
@@ -696,54 +742,38 @@ fn serve(args: &[String], epsilon: Option<f64>) -> Result<()> {
         workers,
         queue_depth,
         cache_bytes: cache_mb << 20,
+        cache_ttl,
         batch_window: std::time::Duration::from_millis(batch_ms),
         default_deadline: (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms)),
         trace: obs_flags.collector(),
         retry,
         degrade,
         cache_path,
+        // The router flushes these exports during its own drain, so
+        // every exit path (demo, loopback, daemon EOF) persists them.
+        trace_path: obs_flags.trace_out.clone().map(std::path::PathBuf::from),
+        metrics_path: obs_flags.metrics_out.clone().map(std::path::PathBuf::from),
         epsilon,
         ..ServeConfig::service(workers)
     };
     let router = Router::with_config(&cfg);
     println!(
         "serve: {jobs} jobs, workers={workers}, queue-depth={queue_depth} (0=unbounded), \
-         cache={cache_mb} MB, batch-window={batch_ms} ms, deadline={deadline_ms} ms (0=none), \
-         retry-max={retry_max}, degrade={degrade}, epsilon={}, cache-dir={}, threads={}",
+         cache={cache_mb} MB, cache-ttl={cache_ttl} (0=never), batch-window={batch_ms} ms, \
+         deadline={deadline_ms} ms (0=none), retry-max={retry_max}, degrade={degrade}, \
+         epsilon={}, cache-dir={}, threads={}",
         epsilon.map(|e| e.to_string()).unwrap_or_else(|| "-".into()),
         cache_dir.as_deref().unwrap_or("-"),
         crate::parallel::threads()
     );
 
-    let mut r = rng(42);
-    let datasets: Vec<Mat> = (0..2)
-        .map(|_| synth_dense(300, 240, 20, SpectrumKind::Exponential { base: 0.9 }, 0.02, &mut r))
-        .collect();
-    let points: Vec<Mat> = (0..2).map(|_| Mat::randn(400, 8, &mut r)).collect();
+    if let Some(addr) = listen {
+        return serve_net(router, &addr, jobs, max_conns, net_timeout_ms, &obs_flags);
+    }
 
     let mut handles = Vec::new();
     let mut shed = 0usize;
-    for j in 0..jobs {
-        let dataset = (j / 3) % 2;
-        let a = &datasets[dataset];
-        let seed = (j / 6) as u64 % 2;
-        let job = match j % 3 {
-            0 => {
-                let x = points[dataset].clone();
-                ApproxJob::SpsdKernel { x, sigma: 0.4, c: 12, s: 60, seed }
-            }
-            1 => ApproxJob::StreamSvd {
-                a: MatrixPayload::Dense(a.clone()),
-                cfg: FastSpSvdConfig::paper(5, 4, SketchKind::Gaussian),
-                block: 64,
-                seed,
-            },
-            _ => ApproxJob::Cur {
-                a: MatrixPayload::Dense(a.clone()),
-                cfg: CurConfig::fast(12, 12, 3),
-                seed,
-            },
-        };
+    for (j, job) in demo_job_stream(jobs).into_iter().enumerate() {
         match router.submit(job) {
             Ok(h) => handles.push((j, h)),
             // Shedding at a bounded queue is the design working, not a
@@ -768,10 +798,108 @@ fn serve(args: &[String], epsilon: Option<f64>) -> Result<()> {
     if let Some(manifest) = router.cache_manifest() {
         println!("{manifest}");
     }
-    let metrics = router.metrics.clone();
-    // Join the executors first so every job's span tree is recorded
-    // before the trace file is written.
+    // shutdown() joins the executors, persists the cache, and flushes
+    // the trace/metrics exports before returning.
     router.shutdown();
-    obs_flags.write_outputs(&metrics)?;
+    obs_flags.announce_router_outputs();
+    Ok(())
+}
+
+/// The demo request stream shared by the in-process and wire paths: a
+/// repeating (kind, dataset, seed) period of 12 over two synthetic
+/// datasets, so requests beyond the first period hit the artifact cache.
+fn demo_job_stream(jobs: usize) -> Vec<ApproxJob> {
+    let mut r = rng(42);
+    let datasets: Vec<Mat> = (0..2)
+        .map(|_| synth_dense(300, 240, 20, SpectrumKind::Exponential { base: 0.9 }, 0.02, &mut r))
+        .collect();
+    let points: Vec<Mat> = (0..2).map(|_| Mat::randn(400, 8, &mut r)).collect();
+    (0..jobs)
+        .map(|j| {
+            let dataset = (j / 3) % 2;
+            let a = &datasets[dataset];
+            let seed = (j / 6) as u64 % 2;
+            match j % 3 {
+                0 => ApproxJob::SpsdKernel {
+                    x: points[dataset].clone(),
+                    sigma: 0.4,
+                    c: 12,
+                    s: 60,
+                    seed,
+                },
+                1 => ApproxJob::StreamSvd {
+                    a: MatrixPayload::Dense(a.clone()),
+                    cfg: FastSpSvdConfig::paper(5, 4, SketchKind::Gaussian),
+                    block: 64,
+                    seed,
+                },
+                _ => ApproxJob::Cur {
+                    a: MatrixPayload::Dense(a.clone()),
+                    cfg: CurConfig::fast(12, 12, 3),
+                    seed,
+                },
+            }
+        })
+        .collect()
+}
+
+/// `serve --listen`: front the router with the TCP wire server. With
+/// `jobs > 0` the demo stream round-trips through a loopback wire
+/// client (every result decoded from the v1 line protocol); with
+/// `--jobs 0` the process serves external clients until stdin closes.
+/// Either way the exit path is a graceful drain: stop accepting, finish
+/// in-flight requests, persist the cache, flush the exports.
+fn serve_net(
+    router: Router,
+    addr: &str,
+    jobs: usize,
+    max_conns: usize,
+    net_timeout_ms: u64,
+    obs_flags: &ObsFlags,
+) -> Result<()> {
+    use crate::net::{Client, NetConfig, Server};
+    let timeout = (net_timeout_ms > 0).then(|| std::time::Duration::from_millis(net_timeout_ms));
+    let ncfg = NetConfig {
+        max_conns,
+        read_timeout: timeout,
+        write_timeout: timeout,
+        ..NetConfig::default()
+    };
+    let router = Arc::new(router);
+    let server = Server::bind(addr, Arc::clone(&router), ncfg.clone())?;
+    let bound = server.addr();
+    println!(
+        "serve: listening on {bound} (max-conns={max_conns}, net-timeout={net_timeout_ms} ms)"
+    );
+
+    if jobs == 0 {
+        println!("daemon mode: serving until stdin closes (send EOF to drain)");
+        let mut sink = Vec::new();
+        let _ = std::io::Read::read_to_end(&mut std::io::stdin().lock(), &mut sink);
+    } else {
+        let mut client = Client::connect(bound, &ncfg)?;
+        for (j, job) in demo_job_stream(jobs).into_iter().enumerate() {
+            match client.submit(&job) {
+                Ok((res, trace)) if res.is_degraded() => println!(
+                    "job {j}: {} done over the wire (degraded tier, trace {trace:016x})",
+                    res.kind()
+                ),
+                Ok((res, trace)) => {
+                    println!("job {j}: {} done over the wire (trace {trace:016x})", res.kind())
+                }
+                Err(e) => println!("job {j}: failed ({e})"),
+            }
+        }
+        client.quit()?;
+    }
+
+    println!("\n{}", router.metrics.report());
+    if let Some(manifest) = router.cache_manifest() {
+        println!("{manifest}");
+    }
+    // Graceful drain: stop accepting, finish in-flight requests, then
+    // the router persists the cache and flushes the exports.
+    server.drain();
+    obs_flags.announce_router_outputs();
     Ok(())
 }

@@ -245,7 +245,27 @@ struct Entry {
     bytes: usize,
     /// Last-touched logical time (monotone per cache op) — the LRU order.
     tick: u64,
+    /// Logical time of insertion — the TTL clock. Never refreshed by
+    /// hits: TTL bounds an artifact's *age*, not its idleness (idleness
+    /// is LRU's job).
+    inserted: u64,
     kind: &'static str,
+}
+
+/// Outcome of a TTL-aware [`ArtifactCache::lookup`].
+///
+/// `Expired` is distinct from `Miss` so the router can count staleness
+/// separately (`serve.cache.expired`) while still treating both as "go
+/// compute" — an expired artifact was bitwise-correct but older than
+/// the configured freshness bound, so it is dropped, not returned.
+#[derive(Debug)]
+pub enum Lookup {
+    /// Resident and fresh — a clone of the stored artifact.
+    Hit(JobResult),
+    /// Resident but older than the TTL; the entry has been dropped.
+    Expired,
+    /// Not resident.
+    Miss,
 }
 
 /// First line of the on-disk cache inventory (format version gate).
@@ -260,6 +280,10 @@ pub struct WarmStartStats {
     /// not match their payload, or their payload disagreed with the
     /// recorded shapes — logged to stderr, never fatal.
     pub skipped_corrupt: usize,
+    /// Valid records not restored because their persisted age already
+    /// exceeded this cache's TTL — a restart must not resurrect
+    /// artifacts the running daemon would have refused to serve.
+    pub expired: usize,
 }
 
 /// Split a persisted entry name (`{kind}_{dataset:016x}_{config:016x}`)
@@ -277,36 +301,65 @@ fn parse_cache_name(name: &str) -> Option<(&str, CacheKey)> {
     Some((kind, CacheKey::new(dataset, config)))
 }
 
-/// LRU artifact store with a byte budget.
+/// LRU artifact store with a byte budget and an optional logical TTL.
 ///
 /// Holds completed [`JobResult`]s keyed by [`CacheKey`]; `get` refreshes
 /// recency, `insert` evicts least-recently-used entries until the new
 /// artifact fits. A result larger than the whole budget is not admitted
 /// (churning every resident artifact for one oversized one is never a
-/// win). Purely a data structure — the [`crate::coordinator::Router`]
-/// owns the locking and translates hits/misses/evictions into `serve.*`
+/// win). The TTL is measured in *logical ticks* (one per cache
+/// operation), not wall time, so expiry is deterministic and replayable
+/// — the same operation sequence expires the same entries. Purely a
+/// data structure — the [`crate::coordinator::Router`] owns the locking
+/// and translates hits/misses/expiries/evictions into `serve.*`
 /// metrics.
 pub struct ArtifactCache {
     budget: usize,
     bytes: usize,
     tick: u64,
+    /// Maximum entry age in ticks (`0` = never expires).
+    ttl: u64,
     map: HashMap<CacheKey, Entry>,
 }
 
 impl ArtifactCache {
-    /// An empty cache with the given byte budget.
+    /// An empty cache with the given byte budget (and no TTL).
     pub fn new(budget_bytes: usize) -> Self {
-        Self { budget: budget_bytes, bytes: 0, tick: 0, map: HashMap::new() }
+        Self { budget: budget_bytes, bytes: 0, tick: 0, ttl: 0, map: HashMap::new() }
     }
 
-    /// Look up an artifact, refreshing its recency on hit.
+    /// Builder: expire entries older than `ttl` cache operations
+    /// (`0` = never).
+    pub fn with_ttl(mut self, ttl: u64) -> Self {
+        self.ttl = ttl;
+        self
+    }
+
+    /// Look up an artifact, refreshing its recency on hit. TTL-expired
+    /// entries read as `None` (see [`ArtifactCache::lookup`]).
     pub fn get(&mut self, key: &CacheKey) -> Option<JobResult> {
+        match self.lookup(key) {
+            Lookup::Hit(r) => Some(r),
+            Lookup::Expired | Lookup::Miss => None,
+        }
+    }
+
+    /// TTL-aware lookup distinguishing a fresh hit from an expired
+    /// resident and a plain miss. An expired entry is removed on
+    /// observation (lazy expiry — no background sweeper to schedule),
+    /// so its bytes are immediately available to the next insert.
+    pub fn lookup(&mut self, key: &CacheKey) -> Lookup {
         self.tick += 1;
         let tick = self.tick;
-        self.map.get_mut(key).map(|e| {
-            e.tick = tick;
-            e.result.clone()
-        })
+        let ttl = self.ttl;
+        let Some(e) = self.map.get_mut(key) else { return Lookup::Miss };
+        if ttl > 0 && tick.saturating_sub(e.inserted) > ttl {
+            let gone = self.map.remove(key).expect("entry just observed");
+            self.bytes -= gone.bytes;
+            return Lookup::Expired;
+        }
+        e.tick = tick;
+        Lookup::Hit(e.result.clone())
     }
 
     /// Store an artifact, evicting LRU entries until it fits; returns
@@ -329,7 +382,13 @@ impl ArtifactCache {
         }
         self.tick += 1;
         self.bytes += bytes;
-        let entry = Entry { result: result.clone(), bytes, tick: self.tick, kind: result.kind() };
+        let entry = Entry {
+            result: result.clone(),
+            bytes,
+            tick: self.tick,
+            inserted: self.tick,
+            kind: result.kind(),
+        };
         self.map.insert(key, entry);
         evicted
     }
@@ -380,8 +439,13 @@ impl ArtifactCache {
     ///
     /// Each record is three lines: the [`ManifestEntry::to_line`] header
     /// (name `{kind}_{dataset}_{config}`, outputs = factor shapes), a
-    /// `words <count> <fnv64>` checksum line, and the
-    /// [`JobResult::to_words`] payload as one line of hex words. Records
+    /// `words <count> <fnv64> <inserted-tick>` checksum line, and the
+    /// [`JobResult::to_words`] payload as one line of hex words. A
+    /// `tick <now>` line after the format header records the logical
+    /// clock at persist time, so a warm start can reconstruct each
+    /// entry's *age* and honor the TTL across restarts (both additions
+    /// are ignored by pre-TTL readers: the resync loop skips unknown
+    /// lines and the checksum parser ignores trailing tokens). Records
     /// are written LRU first so a warm start replays them in recency
     /// order and reproduces the eviction order. Degraded results are
     /// never resident (the router does not cache them), so every record
@@ -393,6 +457,7 @@ impl ArtifactCache {
         let mut out = String::with_capacity(64 + self.bytes * 3);
         out.push_str(PERSIST_HEADER);
         out.push('\n');
+        out.push_str(&format!("tick {}\n", self.tick));
         for (_, key, e) in rows {
             let words = e.result.to_words();
             let mut h = Fnv64::new();
@@ -401,7 +466,7 @@ impl ArtifactCache {
             }
             out.push_str(&manifest_entry(key, e).to_line());
             out.push('\n');
-            out.push_str(&format!("words {} {:016x}\n", words.len(), h.finish()));
+            out.push_str(&format!("words {} {:016x} {}\n", words.len(), h.finish(), e.inserted));
             for (i, w) in words.iter().enumerate() {
                 if i > 0 {
                     out.push(' ');
@@ -441,16 +506,36 @@ impl ArtifactCache {
         }
         let mut stats = WarmStartStats::default();
         let mut lines = lines.peekable();
+        // Logical clock at persist time (absent in pre-TTL inventories:
+        // every record then reads as age 0, i.e. fresh).
+        let mut persist_tick = 0u64;
+        if let Some(line) = lines.peek() {
+            if let Some(t) = line.strip_prefix("tick ").and_then(|t| t.trim().parse().ok()) {
+                persist_tick = t;
+                lines.next();
+            }
+        }
         while let Some(line) = lines.next() {
             if !line.starts_with("graph ") {
                 continue; // resync: records always open with a manifest line
             }
             match Self::parse_record(line, &mut lines) {
-                Some((key, result)) => {
+                Some((key, result, inserted)) => {
+                    let age = persist_tick.saturating_sub(inserted);
+                    if self.ttl > 0 && age > self.ttl {
+                        // Already stale on disk — restoring it would
+                        // serve an artifact the daemon that persisted it
+                        // had committed to expiring.
+                        stats.expired += 1;
+                        continue;
+                    }
                     self.insert(key, &result);
                     // A record oversized for this budget is valid but not
                     // admitted — neither loaded nor corrupt.
-                    if self.map.contains_key(&key) {
+                    if let Some(e) = self.map.get_mut(&key) {
+                        // Back-date the entry so its remaining TTL
+                        // matches what it had at persist time.
+                        e.inserted = self.tick.saturating_sub(age);
                         stats.loaded += 1;
                     }
                 }
@@ -469,11 +554,12 @@ impl ArtifactCache {
     /// Parse one persisted record (manifest line + checksum line + hex
     /// payload line). Consumes the two follow-up lines only when they
     /// are structurally plausible, so a truncated record cannot swallow
-    /// the next record's header.
+    /// the next record's header. The third value is the entry's
+    /// insertion tick (0 for pre-TTL inventories without the token).
     fn parse_record(
         header: &str,
         lines: &mut std::iter::Peekable<std::str::Lines<'_>>,
-    ) -> Option<(CacheKey, JobResult)> {
+    ) -> Option<(CacheKey, JobResult, u64)> {
         let entry = Manifest::parse_line(Path::new(""), header)?;
         let (kind, key) = parse_cache_name(&entry.name)?;
         let meta = lines.peek().copied()?;
@@ -484,6 +570,7 @@ impl ArtifactCache {
         let mut parts = meta.split_whitespace().skip(1);
         let count: usize = parts.next()?.parse().ok()?;
         let checksum = u64::from_str_radix(parts.next()?, 16).ok()?;
+        let inserted: u64 = parts.next().and_then(|t| t.parse().ok()).unwrap_or(0);
         let data = lines.peek().copied()?;
         if data.starts_with("graph ") {
             return None;
@@ -503,7 +590,7 @@ impl ArtifactCache {
         if h.finish() != checksum {
             return None;
         }
-        JobResult::from_words(kind, &entry.output_shapes, &words).map(|r| (key, r))
+        JobResult::from_words(kind, &entry.output_shapes, &words).map(|r| (key, r, inserted))
     }
 }
 
@@ -663,7 +750,7 @@ mod tests {
         cache.persist_to(path).unwrap();
         let mut warmed = ArtifactCache::new(1 << 20);
         let stats = warmed.warm_start_from(path).unwrap();
-        assert_eq!(stats, WarmStartStats { loaded: 4, skipped_corrupt: 0 });
+        assert_eq!(stats, WarmStartStats { loaded: 4, skipped_corrupt: 0, expired: 0 });
         for (key, expected) in &one_of_each() {
             let got = warmed.get(key).expect("entry survives the round trip");
             assert_eq!(got.kind(), expected.kind());
@@ -722,6 +809,84 @@ mod tests {
         fs::write(path, "not a cache inventory\n").unwrap();
         let err = ArtifactCache::new(1000).warm_start_from(path).unwrap_err();
         assert!(err.to_string().contains("artifact cache"), "{err}");
+        let _ = fs::remove_file(path);
+    }
+
+    #[test]
+    fn ttl_expires_entries_by_logical_age() {
+        let mut cache = ArtifactCache::new(10_000).with_ttl(2);
+        let (k1, k2) = (CacheKey::new(1, 1), CacheKey::new(2, 2));
+        cache.insert(k1, &result_of(4, 3)); // tick 1
+        assert!(matches!(cache.lookup(&k1), Lookup::Hit(_)), "age 1 is within ttl 2"); // tick 2
+        assert!(matches!(cache.lookup(&k2), Lookup::Miss)); // tick 3
+        // Tick 4: age 3 > ttl 2 — the entry expires and frees its bytes.
+        assert!(matches!(cache.lookup(&k1), Lookup::Expired));
+        assert_eq!(cache.bytes(), 0);
+        assert_eq!(cache.len(), 0);
+        assert!(matches!(cache.lookup(&k1), Lookup::Miss), "expired entries are gone, not stale");
+    }
+
+    #[test]
+    fn hits_do_not_extend_ttl() {
+        // LRU recency refresh must not reset the age clock: an entry hit
+        // on every tick still expires once it outlives the TTL.
+        let mut cache = ArtifactCache::new(10_000).with_ttl(3);
+        let k = CacheKey::new(5, 5);
+        cache.insert(k, &result_of(4, 3)); // tick 1
+        for _ in 0..3 {
+            assert!(matches!(cache.lookup(&k), Lookup::Hit(_))); // ticks 2..=4
+        }
+        assert!(matches!(cache.lookup(&k), Lookup::Expired)); // tick 5: age 4 > 3
+    }
+
+    #[test]
+    fn zero_ttl_never_expires() {
+        let mut cache = ArtifactCache::new(10_000);
+        let k = CacheKey::new(6, 6);
+        cache.insert(k, &result_of(4, 3));
+        for _ in 0..100 {
+            assert!(cache.get(&k).is_some());
+        }
+    }
+
+    #[test]
+    fn warm_start_honors_ttl_from_persisted_insertion_ticks() {
+        let path = Path::new("/tmp/fastgmr_cache_ttl_warm_test.txt");
+        let mut cache = ArtifactCache::new(1 << 20).with_ttl(4);
+        let (old, fresh) = (CacheKey::new(0xAA, 1), CacheKey::new(0xBB, 2));
+        cache.insert(old, &result_of(4, 3)); // tick 1
+        for _ in 0..5 {
+            let _ = cache.lookup(&CacheKey::new(0xFF, 0xFF)); // burn ticks 2..=6
+        }
+        cache.insert(fresh, &result_of(5, 3)); // tick 7
+        cache.persist_to(path).unwrap(); // persist tick 7: old is age 6, fresh age 0
+        let mut warmed = ArtifactCache::new(1 << 20).with_ttl(4);
+        let stats = warmed.warm_start_from(path).unwrap();
+        assert_eq!(stats.loaded, 1, "only the fresh entry is restored");
+        assert_eq!(stats.expired, 1, "the stale entry is dropped at load, not resurrected");
+        assert!(warmed.get(&fresh).is_some());
+        assert!(warmed.get(&old).is_none());
+        let _ = fs::remove_file(path);
+    }
+
+    #[test]
+    fn warm_start_restores_remaining_ttl_not_a_fresh_one() {
+        let path = Path::new("/tmp/fastgmr_cache_ttl_age_test.txt");
+        let mut cache = ArtifactCache::new(1 << 20).with_ttl(4);
+        let k = CacheKey::new(0xCC, 3);
+        cache.insert(k, &result_of(4, 3)); // tick 1
+        let _ = cache.lookup(&CacheKey::new(0xFF, 0xFF)); // tick 2
+        let _ = cache.lookup(&CacheKey::new(0xFF, 0xFF)); // tick 3
+        cache.persist_to(path).unwrap(); // persisted at age 2 of ttl 4
+        let mut warmed = ArtifactCache::new(1 << 20).with_ttl(4);
+        assert_eq!(warmed.warm_start_from(path).unwrap().loaded, 1);
+        assert!(matches!(warmed.lookup(&k), Lookup::Hit(_)), "remaining ttl still serves"); // tick 2
+        let _ = warmed.lookup(&CacheKey::new(0xFF, 0xFF)); // tick 3
+        let _ = warmed.lookup(&CacheKey::new(0xFF, 0xFF)); // tick 4
+        // Tick 5: a freshly-inserted entry would still be alive (age 4),
+        // but the restored age bounds the total lifetime across the
+        // restart.
+        assert!(matches!(warmed.lookup(&k), Lookup::Expired));
         let _ = fs::remove_file(path);
     }
 

@@ -28,7 +28,7 @@ pub mod pipeline;
 pub mod router;
 
 pub use batcher::{Batcher, TiledKernelOracle};
-pub use cache::{job_key, ArtifactCache, CacheKey, WarmStartStats};
+pub use cache::{job_key, ArtifactCache, CacheKey, Lookup, WarmStartStats};
 pub use jobs::{ApproxJob, JobResult, MatrixPayload};
 pub use pipeline::{PipelineConfig, StreamPipeline};
 pub use router::{JobHandle, Router, ServeConfig};

@@ -41,7 +41,7 @@
 //! oversubscribe the machine N×.
 
 use super::batcher::{Admission, Batcher};
-use super::cache::{job_key, ArtifactCache, CacheKey};
+use super::cache::{job_key, ArtifactCache, CacheKey, Lookup};
 use super::jobs::{ApproxJob, JobResult, MatrixPayload};
 use crate::error::{panic_message, FgError, Result};
 use crate::faults::{self, site, CircuitBreaker, FaultPlan, FaultyStream, RetryPolicy, RetryStream};
@@ -53,7 +53,7 @@ use crate::spsd::{CountingOracle, RbfOracle};
 use crate::svdstream::source::{ColumnStream, CsrColumnStream, DenseColumnStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -95,6 +95,13 @@ pub struct ServeConfig {
     pub queue_depth: usize,
     /// Artifact-cache byte budget; `0` disables the cache.
     pub cache_bytes: usize,
+    /// Artifact time-to-live in *logical cache ticks* (one per cache
+    /// operation — deterministic, no wall clock); `0` = entries never
+    /// expire. An expired entry counts as a miss, bumps
+    /// `serve.cache.expired`, and is recomputed; the persisted
+    /// inventory records insertion ticks so a warm start honors the
+    /// TTL across restarts.
+    pub cache_ttl: u64,
     /// Coalescing window for identical in-flight jobs;
     /// `Duration::ZERO` disables batching.
     pub batch_window: Duration,
@@ -120,6 +127,16 @@ pub struct ServeConfig {
     /// construction and persisted (crash-safely, temp file + rename) on
     /// shutdown/drop. `None` keeps the cache memory-only.
     pub cache_path: Option<PathBuf>,
+    /// Write the configured trace collector's spans here when the
+    /// router drains (Chrome trace-event JSON, or JSONL when the path
+    /// ends in `.jsonl`). Flushed *before* [`Router::shutdown`]
+    /// returns, so a caller that shuts down and aborts still has the
+    /// trace.
+    pub trace_path: Option<PathBuf>,
+    /// Write the metrics registry here (Prometheus text exposition)
+    /// when the router drains — same before-return guarantee as
+    /// [`ServeConfig::trace_path`].
+    pub metrics_path: Option<PathBuf>,
     /// Consecutive job-level failures (post-retry panics) of one kind
     /// that open that kind's circuit breaker; `0` disables breakers.
     pub breaker_threshold: u32,
@@ -160,12 +177,15 @@ impl ServeConfig {
             workers,
             queue_depth: 0,
             cache_bytes: 0,
+            cache_ttl: 0,
             batch_window: Duration::ZERO,
             default_deadline: None,
             trace: None,
             retry: RetryPolicy::none(),
             degrade: false,
             cache_path: None,
+            trace_path: None,
+            metrics_path: None,
             breaker_threshold: 0,
             breaker_cooldown: Duration::from_millis(100),
             faults: None,
@@ -182,6 +202,9 @@ impl ServeConfig {
 struct ServeCounters {
     cache_hits: Arc<AtomicU64>,
     cache_misses: Arc<AtomicU64>,
+    /// Lookups that found a resident entry older than the TTL (also
+    /// counted as misses — the request goes on to recompute).
+    cache_expired: Arc<AtomicU64>,
     cache_evictions: Arc<AtomicU64>,
     cache_bytes: Arc<AtomicU64>,
     cache_entries: Arc<AtomicU64>,
@@ -215,6 +238,7 @@ impl ServeCounters {
         Self {
             cache_hits: metrics.counter("serve.cache.hits"),
             cache_misses: metrics.counter("serve.cache.misses"),
+            cache_expired: metrics.counter("serve.cache.expired"),
             cache_evictions: metrics.counter("serve.cache.evictions"),
             cache_bytes: metrics.counter("serve.cache.bytes"),
             cache_entries: metrics.counter("serve.cache.entries"),
@@ -261,6 +285,8 @@ struct Shared {
     retry: RetryPolicy,
     degrade: bool,
     cache_path: Option<PathBuf>,
+    trace_path: Option<PathBuf>,
+    metrics_path: Option<PathBuf>,
     /// Per-kind breakers, aligned with `kinds` (`None` = disabled).
     breakers: Option<Vec<CircuitBreaker>>,
     faults: Option<Arc<FaultPlan>>,
@@ -307,15 +333,27 @@ struct QueueItem {
     /// Whether admission re-planned this job at a degraded sketch tier
     /// (the result must be verified, tagged, and never cached).
     degraded: bool,
+    /// Caller-supplied request trace id (the wire front-end's per-request
+    /// id), attached to the job's `router.dispatch` root span.
+    trace_id: Option<u64>,
     reply: mpsc::Sender<Result<JobResult>>,
     submitted: Instant,
     deadline: Option<Instant>,
 }
 
 /// The router service.
+///
+/// Shareable across threads behind an `Arc`: submission takes `&self`,
+/// and [`Router::drain`] shuts the service down by shared reference —
+/// which is how the wire front-end (`crate::net`) drains the daemon
+/// while connection handlers still hold their clone.
 pub struct Router {
-    tx: Option<mpsc::Sender<QueueItem>>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    tx: Mutex<Option<mpsc::Sender<QueueItem>>>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Set by the first drain to run its side effects (cache persist +
+    /// export flush) exactly once, no matter how many of
+    /// `drain`/`shutdown`/`Drop` execute.
+    finalized: AtomicBool,
     shared: Arc<Shared>,
     pub metrics: Arc<Metrics>,
 }
@@ -346,7 +384,8 @@ impl Router {
             .collect();
         let shared = Arc::new(Shared {
             metrics: metrics.clone(),
-            cache: (cfg.cache_bytes > 0).then(|| Mutex::new(ArtifactCache::new(cfg.cache_bytes))),
+            cache: (cfg.cache_bytes > 0)
+                .then(|| Mutex::new(ArtifactCache::new(cfg.cache_bytes).with_ttl(cfg.cache_ttl))),
             batcher: Batcher::new(cfg.batch_window),
             batching: cfg.batch_window > Duration::ZERO,
             queue_depth: cfg.queue_depth,
@@ -359,6 +398,8 @@ impl Router {
             retry: cfg.retry,
             degrade: cfg.degrade,
             cache_path: cfg.cache_path.clone(),
+            trace_path: cfg.trace_path.clone(),
+            metrics_path: cfg.metrics_path.clone(),
             breakers: (cfg.breaker_threshold > 0).then(|| {
                 ApproxJob::KINDS
                     .iter()
@@ -389,7 +430,13 @@ impl Router {
                 }
             }));
         }
-        Self { tx: Some(tx), workers: handles, shared, metrics }
+        Self {
+            tx: Mutex::new(Some(tx)),
+            workers: Mutex::new(handles),
+            finalized: AtomicBool::new(false),
+            shared,
+            metrics,
+        }
     }
 
     /// Submit a job through the serving path (cache → batcher →
@@ -420,8 +467,21 @@ impl Router {
     /// dequeue, without occupying an executor.
     pub fn submit_with_deadline(
         &self,
+        job: ApproxJob,
+        deadline: Option<Duration>,
+    ) -> Result<JobHandle> {
+        self.submit_traced(job, deadline, None)
+    }
+
+    /// [`Router::submit_with_deadline`] with a caller-supplied request
+    /// trace id: the wire front-end (`crate::net`) tags every request it
+    /// parses, and the id rides to the job's `router.dispatch` root span
+    /// so one request is traceable from socket to executor.
+    pub fn submit_traced(
+        &self,
         mut job: ApproxJob,
         deadline: Option<Duration>,
+        trace_id: Option<u64>,
     ) -> Result<JobHandle> {
         let shared = &self.shared;
         let submitted = Instant::now();
@@ -431,16 +491,35 @@ impl Router {
 
         let key = shared.keyed().then(|| job_key(&job));
 
-        // 1. Artifact cache: a hit is the whole request.
+        // 1. Artifact cache: a fresh hit is the whole request. A
+        //    TTL-expired resident is dropped and recomputed — counted
+        //    both as `expired` (staleness visibility) and as a miss
+        //    (hit-rate accounting stays truthful).
         if let (Some(key), Some(cache)) = (&key, &shared.cache) {
-            let hit = cache.lock().unwrap().get(key);
-            if let Some(result) = hit {
-                shared.serve.cache_hits.fetch_add(1, Ordering::Relaxed);
-                shared.observe_latency(kc, submitted);
-                let _ = reply_tx.send(Ok(result));
-                return Ok(handle);
+            let looked = {
+                let mut guard = cache.lock().unwrap();
+                let looked = guard.lookup(key);
+                if matches!(looked, Lookup::Expired) {
+                    shared.serve.cache_bytes.store(guard.bytes() as u64, Ordering::Relaxed);
+                    shared.serve.cache_entries.store(guard.len() as u64, Ordering::Relaxed);
+                }
+                looked
+            };
+            match looked {
+                Lookup::Hit(result) => {
+                    shared.serve.cache_hits.fetch_add(1, Ordering::Relaxed);
+                    shared.observe_latency(kc, submitted);
+                    let _ = reply_tx.send(Ok(result));
+                    return Ok(handle);
+                }
+                Lookup::Expired => {
+                    shared.serve.cache_expired.fetch_add(1, Ordering::Relaxed);
+                    shared.serve.cache_misses.fetch_add(1, Ordering::Relaxed);
+                }
+                Lookup::Miss => {
+                    shared.serve.cache_misses.fetch_add(1, Ordering::Relaxed);
+                }
             }
-            shared.serve.cache_misses.fetch_add(1, Ordering::Relaxed);
         }
 
         // 2. Batcher: attach to an identical in-flight job if one opened
@@ -486,10 +565,21 @@ impl Router {
         kc.submitted.fetch_add(1, Ordering::Relaxed);
 
         let deadline = deadline.map(|d| submitted + d);
-        let item = QueueItem { job, key, lead, degraded, reply: reply_tx, submitted, deadline };
-        self.tx.as_ref().expect("router already shut down").send(item).map_err(|_| {
-            FgError::Coordinator("router workers exited before job could be queued".into())
-        })?;
+        let item =
+            QueueItem { job, key, lead, degraded, trace_id, reply: reply_tx, submitted, deadline };
+        let sent = match self.tx.lock().unwrap().as_ref() {
+            // A drained router refuses new work with a typed error
+            // instead of panicking — the wire front-end keeps accepting
+            // (and cleanly refusing) requests while the drain completes.
+            None => Err(FgError::Coordinator("router already shut down".into())),
+            Some(tx) => tx.send(item).map_err(|_| {
+                FgError::Coordinator("router workers exited before job could be queued".into())
+            }),
+        };
+        if let Err(e) = sent {
+            self.shared.queued.fetch_sub(1, Ordering::SeqCst);
+            return Err(e);
+        }
         Ok(handle)
     }
 
@@ -500,24 +590,71 @@ impl Router {
         self.shared.cache.as_ref().map(|c| c.lock().unwrap().manifest())
     }
 
-    /// Drain and join workers; if a [`ServeConfig::cache_path`] is
-    /// configured, the artifact cache is persisted (crash-safely) when
-    /// the router is subsequently dropped.
-    pub fn shutdown(mut self) {
-        self.tx.take();
-        for h in self.workers.drain(..) {
+    /// The trace collector configured via [`ServeConfig::trace`], shared
+    /// with the wire front-end so connection threads record their
+    /// `net.request` spans into the same trace as the executors.
+    pub(crate) fn trace_collector(&self) -> Option<Arc<TraceCollector>> {
+        self.shared.trace.clone()
+    }
+
+    /// The default per-job deadline configured via
+    /// [`ServeConfig::default_deadline`].
+    pub fn default_deadline(&self) -> Option<Duration> {
+        self.shared.default_deadline
+    }
+
+    /// Graceful drain by shared reference: stop admitting new work
+    /// (subsequent submits fail with a typed
+    /// [`FgError::Coordinator`]), let in-flight jobs finish, join the
+    /// executors, then — exactly once across any combination of
+    /// `drain`/[`Router::shutdown`]/`Drop` — persist the artifact cache
+    /// and flush the configured trace/metrics exports. All side effects
+    /// complete **before this returns**: a caller that drains and then
+    /// aborts the process still has the inventory and the exports on
+    /// disk.
+    pub fn drain(&self) {
+        drop(self.tx.lock().unwrap().take());
+        let workers: Vec<_> = std::mem::take(&mut *self.workers.lock().unwrap());
+        for h in workers {
             let _ = h.join();
         }
+        if !self.finalized.swap(true, Ordering::SeqCst) {
+            persist(&self.shared);
+            flush_exports(&self.shared);
+        }
+    }
+
+    /// Consuming [`Router::drain`]: drain, join, persist, and flush
+    /// before returning.
+    pub fn shutdown(self) {
+        self.drain();
     }
 }
 
 impl Drop for Router {
     fn drop(&mut self) {
-        self.tx.take();
-        for h in self.workers.drain(..) {
-            let _ = h.join();
+        self.drain();
+    }
+}
+
+/// Flush the configured observability exports (trace + metrics files)
+/// as the final step of a drain. Errors are reported, not fatal — a
+/// full disk must not turn a clean shutdown into a crash.
+fn flush_exports(shared: &Shared) {
+    if let (Some(path), Some(c)) = (&shared.trace_path, &shared.trace) {
+        let data = if path.extension().is_some_and(|e| e == "jsonl") {
+            c.to_jsonl()
+        } else {
+            c.to_chrome_json()
+        };
+        if let Err(e) = std::fs::write(path, data) {
+            eprintln!("trace export {}: {e}", path.display());
         }
-        persist(&self.shared);
+    }
+    if let Some(path) = &shared.metrics_path {
+        if let Err(e) = std::fs::write(path, shared.metrics.prometheus()) {
+            eprintln!("metrics export {}: {e}", path.display());
+        }
     }
 }
 
@@ -581,7 +718,7 @@ fn persist(shared: &Shared) {
 /// admission, guarded (retried) execution, degraded-tier verification,
 /// cache fill, batch fan-out, latency accounting.
 fn run_item(shared: &Shared, item: QueueItem) {
-    let QueueItem { job, key, lead, degraded, reply, submitted, deadline } = item;
+    let QueueItem { job, key, lead, degraded, trace_id, reply, submitted, deadline } = item;
     let depth = shared.queued.fetch_sub(1, Ordering::SeqCst).saturating_sub(1);
     shared.serve.queue_depth.store(depth as u64, Ordering::Relaxed);
     let kind = job.kind();
@@ -608,6 +745,9 @@ fn run_item(shared: &Shared, item: QueueItem) {
         root.meta("rows", rows);
         root.meta("cols", cols);
         root.meta("weight", job.weight());
+        if let Some(id) = trace_id {
+            root.meta("trace_id", id);
+        }
     }
 
     // A panicking job must fail that job, not take down the executor:

@@ -926,3 +926,90 @@ fn coalesced_followers_observe_the_leads_error() {
     assert_eq!(msgs[0], msgs[1], "follower must observe the lead's exact error");
     assert_eq!(router.metrics.get("router.gmr_exact.completed"), 1, "one execution, two errors");
 }
+
+/// Cache TTL through the serving path: with `cache_ttl` set, a resident
+/// artifact older than the TTL (in logical cache ticks) is recomputed —
+/// counted both as `serve.cache.expired` and as a miss — while a
+/// generous TTL still serves hits.
+#[test]
+fn cache_ttl_expires_through_the_router() {
+    let serve = |ttl| ServeConfig {
+        workers: 1,
+        cache_bytes: 64 << 20,
+        cache_ttl: ttl,
+        ..ServeConfig::service(1)
+    };
+    let a = test_matrix(40, 30, 81);
+    let b = test_matrix(40, 30, 82);
+
+    // ttl=1: A inserts at tick 2; B's lookup+insert burn ticks 3-4; A's
+    // re-lookup at tick 5 sees age 3 > 1 → expired, recomputed.
+    let tight = Router::with_config(&serve(1));
+    tight.submit(quick_cur_job(&a, 1)).unwrap().wait().unwrap();
+    tight.submit(quick_cur_job(&b, 2)).unwrap().wait().unwrap();
+    tight.submit(quick_cur_job(&a, 1)).unwrap().wait().unwrap();
+    assert_eq!(tight.metrics.get("serve.cache.expired"), 1);
+    assert_eq!(tight.metrics.get("serve.cache.misses"), 3);
+    assert_eq!(tight.metrics.get("serve.cache.hits"), 0);
+
+    // The same sequence under a generous TTL is a plain hit.
+    let loose = Router::with_config(&serve(100));
+    loose.submit(quick_cur_job(&a, 1)).unwrap().wait().unwrap();
+    loose.submit(quick_cur_job(&b, 2)).unwrap().wait().unwrap();
+    loose.submit(quick_cur_job(&a, 1)).unwrap().wait().unwrap();
+    assert_eq!(loose.metrics.get("serve.cache.expired"), 0);
+    assert_eq!(loose.metrics.get("serve.cache.hits"), 1);
+}
+
+/// Shutdown ordering: `Router::drain` must persist the cache and flush
+/// the configured trace/metrics exports *before it returns* — not defer
+/// them to `Drop` — and the finalization must run exactly once.
+#[test]
+fn drain_persists_and_flushes_exports_before_returning() {
+    let dir = std::path::PathBuf::from(format!(
+        "/tmp/fastgmr_drain_exports_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let cache_path = dir.join("inventory.txt");
+    let trace_path = dir.join("trace.json");
+    let metrics_path = dir.join("metrics.prom");
+
+    let router = Router::with_config(&ServeConfig {
+        workers: 1,
+        cache_bytes: 64 << 20,
+        cache_path: Some(cache_path.clone()),
+        trace: Some(Arc::new(crate::obs::TraceCollector::new())),
+        trace_path: Some(trace_path.clone()),
+        metrics_path: Some(metrics_path.clone()),
+        ..ServeConfig::service(1)
+    });
+    let a = test_matrix(40, 30, 83);
+    router.submit(quick_cur_job(&a, 9)).unwrap().wait().unwrap();
+
+    // By shared reference — the router is still alive afterwards.
+    router.drain();
+    assert!(cache_path.exists(), "drain must persist the cache before returning");
+    assert!(trace_path.exists(), "drain must flush the trace export before returning");
+    assert!(metrics_path.exists(), "drain must flush the metrics export before returning");
+    let prom = std::fs::read_to_string(&metrics_path).unwrap();
+    assert!(prom.contains("serve_cache_misses"), "metrics export must be prometheus text");
+    let trace = std::fs::read_to_string(&trace_path).unwrap();
+    assert!(trace.contains("router.dispatch"), "trace export must hold the dispatch spans");
+
+    // A drained router refuses new work with a typed error...
+    let err = router.submit(quick_cur_job(&a, 10)).unwrap_err();
+    assert!(matches!(&err, FgError::Coordinator(m) if m.contains("shut down")), "got {err}");
+
+    // ...and Drop must not re-run the finalization (once-guard): delete
+    // the outputs, drop the router, nothing reappears.
+    std::fs::remove_file(&cache_path).unwrap();
+    std::fs::remove_file(&trace_path).unwrap();
+    std::fs::remove_file(&metrics_path).unwrap();
+    drop(router);
+    assert!(!cache_path.exists(), "Drop after drain must not persist again");
+    assert!(!trace_path.exists(), "Drop after drain must not flush traces again");
+    assert!(!metrics_path.exists(), "Drop after drain must not flush metrics again");
+    let _ = std::fs::remove_dir_all(&dir);
+}

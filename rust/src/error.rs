@@ -41,6 +41,11 @@ pub enum FgError {
     /// repeatedly and the router is failing fast until the cooldown
     /// elapses and a half-open probe succeeds.
     CircuitOpen { kind: String },
+    /// A malformed or over-limit wire request (bad frame grammar,
+    /// oversized payload, checksum mismatch, truncated frame). Always
+    /// permanent: the peer must fix the request, retrying replays the
+    /// same bytes.
+    Protocol(String),
     Io(std::io::Error),
 }
 
@@ -89,6 +94,7 @@ impl FgError {
                 FgError::StreamRead { context: context.clone(), transient: *transient }
             }
             FgError::CircuitOpen { kind } => FgError::CircuitOpen { kind: kind.clone() },
+            FgError::Protocol(m) => FgError::Protocol(m.clone()),
             FgError::Io(e) => FgError::Io(std::io::Error::new(e.kind(), e.to_string())),
         }
     }
@@ -140,6 +146,7 @@ impl fmt::Display for FgError {
                      executor panics"
                 )
             }
+            FgError::Protocol(msg) => write!(f, "protocol error: {msg}"),
             FgError::Io(e) => e.fmt(f),
         }
     }

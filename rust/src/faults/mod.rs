@@ -24,6 +24,9 @@
 //! | `cache.persist`       | an I/O error while persisting the cache      |
 //! | `cache.warm_start`    | an I/O error while warm-starting the cache   |
 //! | `queue.admission`     | a simulated queue-full at admission          |
+//! | `net.accept`          | the listener sheds the accept with `BUSY`    |
+//! | `net.read`            | a transient I/O error on a socket read       |
+//! | `net.write`           | a transient I/O error on a socket write      |
 //!
 //! [`FgError::StreamRead`]: crate::error::FgError::StreamRead
 
@@ -51,6 +54,12 @@ pub mod site {
     pub const CACHE_WARM_START: &str = "cache.warm_start";
     /// Submit-queue admission (a trip simulates queue-full pressure).
     pub const QUEUE_ADMISSION: &str = "queue.admission";
+    /// Accepting a TCP connection (a trip sheds the accept with `BUSY`).
+    pub const NET_ACCEPT: &str = "net.accept";
+    /// Reading a line from a wire connection (transient, retried).
+    pub const NET_READ: &str = "net.read";
+    /// Writing a response to a wire connection (transient, retried).
+    pub const NET_WRITE: &str = "net.write";
 
     /// Executor-body site for one job kind: `executor.<kind>`.
     pub fn executor(kind: &str) -> String {

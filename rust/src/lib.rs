@@ -31,6 +31,7 @@ pub mod faults;
 pub mod gmr;
 pub mod linalg;
 pub mod metrics;
+pub mod net;
 pub mod obs;
 pub mod parallel;
 pub mod plan;

@@ -1,0 +1,123 @@
+//! Loopback/remote wire client: a thin, synchronous speaker of the v1
+//! line grammar.
+//!
+//! The client is the round-trip witness for the whole front-end: a job
+//! submitted through [`Client::submit`] must come back **bitwise
+//! identical** (same [`JobResult::to_words`] encoding) to the same job
+//! submitted in-process through `Router::submit` — under fault-free
+//! runs *and* under seeded net-chaos, where injected socket faults are
+//! retried transparently on both ends.
+//!
+//! [`JobResult::to_words`]: crate::coordinator::JobResult::to_words
+
+use super::server::NetConfig;
+use super::wire::{self, LineReader, GREETING};
+use crate::coordinator::{ApproxJob, JobResult};
+use crate::error::{FgError, Result};
+use std::net::{TcpStream, ToSocketAddrs};
+
+/// A connected wire-protocol client (one persistent connection).
+pub struct Client {
+    reader: LineReader<TcpStream>,
+    writer: TcpStream,
+    cfg: NetConfig,
+}
+
+impl Client {
+    /// Connect and validate the greeting. A `BUSY` greeting maps to
+    /// [`FgError::Overloaded`] (shed — try again later), `DRAINING` to
+    /// [`FgError::Coordinator`] (going away), anything else to
+    /// [`FgError::Protocol`].
+    pub fn connect(addr: impl ToSocketAddrs, cfg: &NetConfig) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        stream.set_read_timeout(cfg.read_timeout)?;
+        stream.set_write_timeout(cfg.write_timeout)?;
+        let mut writer = stream.try_clone()?;
+        let mut reader = LineReader::new(stream, cfg.retry.clone());
+        wire::write_retried(&mut writer, b"HELLO v1\n", &cfg.retry)?;
+        let greeting = reader
+            .read_line(cfg.limits.max_line_bytes)?
+            .ok_or_else(|| FgError::Coordinator("server closed before greeting".into()))?;
+        match greeting.as_str() {
+            GREETING => Ok(Client { reader, writer, cfg: cfg.clone() }),
+            "BUSY" => Err(FgError::Overloaded { depth: 0 }),
+            "DRAINING" => Err(FgError::Coordinator("server draining".into())),
+            other => Err(FgError::Protocol(format!("unexpected greeting `{other}`"))),
+        }
+    }
+
+    /// [`Client::connect`] with up to `attempts` tries, backing off per
+    /// the config's retry policy on shed (`BUSY`) or transport errors —
+    /// the client-side answer to accept-shedding backpressure and
+    /// injected `net.accept` faults.
+    pub fn connect_retry(
+        addr: impl ToSocketAddrs + Copy,
+        cfg: &NetConfig,
+        attempts: u32,
+    ) -> Result<Client> {
+        let mut last = FgError::Coordinator("no connect attempts made".into());
+        for attempt in 1..=attempts.max(1) {
+            match Client::connect(addr, cfg) {
+                Ok(c) => return Ok(c),
+                Err(e @ (FgError::Overloaded { .. } | FgError::Io(_))) => {
+                    last = e;
+                    std::thread::sleep(cfg.retry.backoff(attempt));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Err(last)
+    }
+
+    /// Submit one job and wait for its result. Returns the decoded
+    /// result plus the server-assigned request trace id (the same id
+    /// tagged on the job's `router.dispatch` span server-side).
+    pub fn submit(&mut self, job: &ApproxJob) -> Result<(JobResult, u64)> {
+        let frame = wire::encode_job(job);
+        wire::write_retried(&mut self.writer, frame.as_bytes(), &self.cfg.retry)?;
+        wire::decode_response(&mut self.reader, &self.cfg.limits)
+    }
+
+    /// Liveness probe: `PING` → `PONG`.
+    pub fn ping(&mut self) -> Result<()> {
+        match self.roundtrip("PING\n")?.as_str() {
+            "PONG" => Ok(()),
+            other => Err(FgError::Protocol(format!("expected PONG, got `{other}`"))),
+        }
+    }
+
+    /// Health probe: returns the server's `HEALTH` status line.
+    pub fn health(&mut self) -> Result<String> {
+        self.roundtrip("HEALTH\n")
+    }
+
+    /// Readiness probe: `true` until the server starts draining.
+    pub fn ready(&mut self) -> Result<bool> {
+        Ok(self.roundtrip("READY\n")?.starts_with("OK"))
+    }
+
+    /// Fetch the server's Prometheus metrics exposition.
+    pub fn metrics(&mut self) -> Result<String> {
+        let head = self.roundtrip("METRICS\n")?;
+        let n: usize = head
+            .strip_prefix("METRICS ")
+            .and_then(|t| t.parse().ok())
+            .ok_or_else(|| FgError::Protocol(format!("bad METRICS header `{head}`")))?;
+        let body = self.reader.read_exact_bytes(n)?;
+        String::from_utf8(body).map_err(|_| FgError::Protocol("non-UTF-8 metrics body".into()))
+    }
+
+    /// Close the connection cleanly (`QUIT` → `BYE`).
+    pub fn quit(mut self) -> Result<()> {
+        let _ = self.roundtrip("QUIT\n")?;
+        Ok(())
+    }
+
+    fn roundtrip(&mut self, line: &str) -> Result<String> {
+        wire::write_retried(&mut self.writer, line.as_bytes(), &self.cfg.retry)?;
+        self.reader
+            .read_line(self.cfg.limits.max_line_bytes)?
+            .ok_or_else(|| FgError::Coordinator("server closed connection".into()))
+    }
+}

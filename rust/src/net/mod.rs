@@ -1,0 +1,41 @@
+//! Hardened wire front-end: line-protocol serving over TCP.
+//!
+//! The serving daemon grows past one process here: a std-only
+//! (`std::net`) TCP listener speaks a line-based grammar ([`wire`]),
+//! decodes requests into the existing [`ApproxJob`] grammar, submits
+//! them through the shared [`Router`] with per-request trace ids, and
+//! streams [`JobResult`] payloads back as checksummed word frames — the
+//! exact `to_words`/`from_words` + FNV-64 encoding the persisted
+//! artifact cache already trusts, so wire results are bitwise identical
+//! to in-process ones.
+//!
+//! * [`wire`] — grammar v1: frames, caps, checksums, typed
+//!   [`FgError::Protocol`] rejection, fault-injected retried I/O.
+//! * [`Server`] — accept loop with connection-limit shedding (`BUSY`),
+//!   socket deadlines, `/metrics`–`/health`–`/ready` scrape endpoints,
+//!   and graceful drain (finish in-flight, persist cache, flush
+//!   exports, join).
+//! * [`Client`] — the loopback round-trip witness used by tests,
+//!   `bench fig_serve`, and the CLI demo stream.
+//!
+//! Chaos sites `net.accept` / `net.read` / `net.write` plug into the
+//! seeded [`FaultPlan`](crate::faults::FaultPlan) machinery; with a
+//! retry budget above the plan's worst consecutive-injection run, a
+//! chaos run is provably free of hard failures (tested, and guarded in
+//! CI via `BENCH_net.json`).
+//!
+//! [`ApproxJob`]: crate::coordinator::ApproxJob
+//! [`JobResult`]: crate::coordinator::JobResult
+//! [`Router`]: crate::coordinator::Router
+//! [`FgError::Protocol`]: crate::error::FgError::Protocol
+
+pub mod client;
+pub mod server;
+pub mod wire;
+
+pub use client::Client;
+pub use server::{NetConfig, Server};
+pub use wire::{LineReader, WireLimits};
+
+#[cfg(test)]
+mod tests;

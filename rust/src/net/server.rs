@@ -1,0 +1,453 @@
+//! The hardened TCP front-end: accept loop, per-connection handlers,
+//! and graceful drain.
+//!
+//! One thread accepts; each accepted connection gets its own handler
+//! thread with the router's fault plan and trace collector installed
+//! (so `net.*` chaos sites and `net.request` spans behave exactly like
+//! their executor-side counterparts). Robustness posture:
+//!
+//! * **Deadlines** — every connection gets `SO_RCVTIMEO`/`SO_SNDTIMEO`
+//!   from [`NetConfig`]; a peer that stalls mid-frame (slow loris) times
+//!   the read out and the connection is closed, never parking a handler
+//!   thread forever.
+//! * **Backpressure** — at most [`NetConfig::max_conns`] concurrent
+//!   connections; excess accepts (and injected [`site::NET_ACCEPT`]
+//!   faults) are shed with an explicit `BUSY` greeting so clients
+//!   distinguish "try later" from "gone".
+//! * **Typed rejection** — malformed or over-limit requests get an
+//!   `ERR protocol ...` line and a close; the handler never panics on
+//!   wire input.
+//! * **Graceful drain** — [`Server::drain`] stops accepting (new
+//!   connects are refused at the OS level once the listener drops),
+//!   lets in-flight requests finish, joins every handler, then drains
+//!   the router — which persists the artifact cache and flushes trace/
+//!   metrics exports *before* returning.
+
+use super::wire::{self, LineReader, WireLimits, GREETING};
+use crate::coordinator::Router;
+use crate::error::{FgError, Result};
+use crate::faults::{self, site, FaultPlan, RetryPolicy};
+use crate::obs;
+use std::io::Write as _;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Wire front-end configuration for [`Server::bind`].
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Concurrent-connection limit; accepts beyond it are shed with
+    /// `BUSY`. `0` means unlimited.
+    pub max_conns: usize,
+    /// Per-connection socket read deadline (slow-loris protection and
+    /// idle-connection reaping); `None` = block forever.
+    pub read_timeout: Option<Duration>,
+    /// Per-connection socket write deadline; `None` = block forever.
+    pub write_timeout: Option<Duration>,
+    /// Frame size caps (header lines and payload words).
+    pub limits: WireLimits,
+    /// Retry policy for *injected* transient socket faults
+    /// (`net.read`/`net.write`); sized above the fault plan's worst
+    /// consecutive-injection run, it makes chaos runs provably
+    /// hard-failure-free.
+    pub retry: RetryPolicy,
+    /// Fault plan installed on the accept and handler threads; `None`
+    /// disables net-level chaos.
+    pub faults: Option<Arc<FaultPlan>>,
+}
+
+impl Default for NetConfig {
+    /// 64 connections, 5 s deadlines, default frame caps, default retry.
+    fn default() -> Self {
+        Self {
+            max_conns: 64,
+            read_timeout: Some(Duration::from_secs(5)),
+            write_timeout: Some(Duration::from_secs(5)),
+            limits: WireLimits::default(),
+            retry: RetryPolicy::default(),
+            faults: None,
+        }
+    }
+}
+
+/// Pre-fetched counter handles — the per-request path never touches the
+/// metrics registry lock (the router's `ServeCounters` pattern).
+struct NetCounters {
+    accepted: Arc<AtomicU64>,
+    busy: Arc<AtomicU64>,
+    requests: Arc<AtomicU64>,
+    ok: Arc<AtomicU64>,
+    err: Arc<AtomicU64>,
+    protocol_errors: Arc<AtomicU64>,
+    disconnects: Arc<AtomicU64>,
+}
+
+impl NetCounters {
+    fn new(router: &Router) -> Self {
+        let m = &router.metrics;
+        Self {
+            accepted: m.counter("net.accepted"),
+            busy: m.counter("net.busy"),
+            requests: m.counter("net.requests"),
+            ok: m.counter("net.ok"),
+            err: m.counter("net.err"),
+            protocol_errors: m.counter("net.protocol_errors"),
+            disconnects: m.counter("net.disconnects"),
+        }
+    }
+}
+
+struct ServerState {
+    router: Arc<Router>,
+    cfg: NetConfig,
+    draining: AtomicBool,
+    active: AtomicUsize,
+    next_trace: AtomicU64,
+    nc: NetCounters,
+}
+
+/// The wire front-end: a bound listener plus its accept thread. Submits
+/// decoded jobs through the shared [`Router`] with per-request trace
+/// ids, and owns the drain sequencing.
+pub struct Server {
+    addr: SocketAddr,
+    state: Arc<ServerState>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    drained: bool,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start accepting. The router is shared — in-process submitters
+    /// keep working alongside the wire front-end.
+    pub fn bind(addr: &str, router: Arc<Router>, cfg: NetConfig) -> Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let nc = NetCounters::new(&router);
+        let state = Arc::new(ServerState {
+            router,
+            cfg,
+            draining: AtomicBool::new(false),
+            active: AtomicUsize::new(0),
+            next_trace: AtomicU64::new(0),
+            nc,
+        });
+        let conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let state = Arc::clone(&state);
+            let conns = Arc::clone(&conns);
+            std::thread::Builder::new()
+                .name("fastgmr-accept".into())
+                .spawn(move || accept_loop(listener, &state, &conns))
+                .map_err(FgError::Io)?
+        };
+        Ok(Server { addr: local, state, accept: Some(accept), conns, drained: false })
+    }
+
+    /// The bound address (resolves ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Whether the server has begun draining.
+    pub fn draining(&self) -> bool {
+        self.state.draining.load(Ordering::SeqCst)
+    }
+
+    fn do_drain(&mut self) {
+        if self.drained {
+            return;
+        }
+        self.drained = true;
+        self.state.draining.store(true, Ordering::SeqCst);
+        // Poke the (blocking) accept call so it observes the flag; the
+        // listener drops with the accept thread, so post-drain connects
+        // are refused by the OS, not silently queued.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let handlers: Vec<_> = std::mem::take(&mut *self.conns.lock().unwrap());
+        for h in handlers {
+            let _ = h.join();
+        }
+        // Last: the router finishes queued work, persists the artifact
+        // cache, and flushes trace/metrics exports before this returns.
+        self.state.router.drain();
+    }
+
+    /// Graceful shutdown: stop accepting, finish in-flight requests,
+    /// join every handler thread, then drain the router (cache persist
+    /// + observability export flush). Idle keep-alive connections are
+    /// closed at their next read deadline, so the drain completes
+    /// within roughly one [`NetConfig::read_timeout`].
+    pub fn drain(mut self) {
+        self.do_drain();
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.do_drain();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    state: &Arc<ServerState>,
+    conns: &Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+) {
+    faults::install(state.cfg.faults.clone());
+    loop {
+        let Ok((stream, _)) = listener.accept() else {
+            if state.draining.load(Ordering::SeqCst) {
+                return;
+            }
+            continue;
+        };
+        if state.draining.load(Ordering::SeqCst) {
+            // Includes the drain's own wake-up poke. Tell a real client
+            // why before closing (best effort — it may be the poke).
+            let mut s = stream;
+            let _ = s.write_all(b"DRAINING\n");
+            return;
+        }
+        let at_cap =
+            state.cfg.max_conns > 0 && state.active.load(Ordering::SeqCst) >= state.cfg.max_conns;
+        if at_cap || faults::trip_ambient(site::NET_ACCEPT) {
+            state.nc.busy.fetch_add(1, Ordering::Relaxed);
+            let mut s = stream;
+            let _ = s.write_all(b"BUSY\n");
+            continue; // dropped: shed, not served
+        }
+        state.nc.accepted.fetch_add(1, Ordering::Relaxed);
+        state.active.fetch_add(1, Ordering::SeqCst);
+        let st = Arc::clone(state);
+        let handle = std::thread::Builder::new()
+            .name("fastgmr-conn".into())
+            .spawn(move || {
+                handle_conn(&st, stream);
+                st.active.fetch_sub(1, Ordering::SeqCst);
+            });
+        let mut guard = conns.lock().unwrap();
+        match handle {
+            Ok(h) => guard.push(h),
+            Err(_) => {
+                state.active.fetch_sub(1, Ordering::SeqCst);
+                continue;
+            }
+        }
+        // Reap finished handlers so a long-lived server doesn't
+        // accumulate join handles without bound.
+        let (done, live): (Vec<_>, Vec<_>) = guard.drain(..).partition(|h| h.is_finished());
+        *guard = live;
+        drop(guard);
+        for h in done {
+            let _ = h.join();
+        }
+    }
+}
+
+/// What a request handler decided about the connection's future.
+enum Flow {
+    /// Keep serving requests on this connection.
+    Continue,
+    /// Close cleanly (QUIT, HTTP response sent, drain, EOF, deadline).
+    Close,
+}
+
+fn handle_conn(state: &ServerState, stream: TcpStream) {
+    faults::install(state.cfg.faults.clone());
+    obs::install(state.router.trace_collector());
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(state.cfg.read_timeout);
+    let _ = stream.set_write_timeout(state.cfg.write_timeout);
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = LineReader::new(read_half, state.cfg.retry.clone());
+    let mut writer = stream;
+    let retry = state.cfg.retry.clone();
+
+    // The client speaks first, and its first line picks the dialect:
+    // `HELLO v1` opens a line-protocol session (answered with the
+    // greeting), an HTTP request line gets a clean scrape response with
+    // no greeting in front of it. Anything else is a typed rejection.
+    match reader.read_line(state.cfg.limits.max_line_bytes) {
+        Ok(Some(first)) if first.starts_with("GET ") => {
+            let _ = handle_http(state, &first, &mut reader, &mut writer);
+            return;
+        }
+        Ok(Some(first)) if first == "HELLO v1" => {
+            if wire::write_retried(&mut writer, format!("{GREETING}\n").as_bytes(), &retry)
+                .is_err()
+            {
+                state.nc.disconnects.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        }
+        Ok(Some(first)) => {
+            state.nc.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            let e = FgError::Protocol(format!("expected HELLO v1 or an HTTP GET, got `{first}`"));
+            let _ = wire::write_retried(&mut writer, wire::encode_err(&e).as_bytes(), &retry);
+            return;
+        }
+        Ok(None) => return,
+        Err(_) => {
+            state.nc.disconnects.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+    }
+    loop {
+        let line = match reader.read_line(state.cfg.limits.max_line_bytes) {
+            Ok(Some(line)) => line,
+            Ok(None) => return, // clean close at a request boundary
+            Err(e) => {
+                // Read deadline, mid-line disconnect, oversized header:
+                // best-effort typed rejection, then close.
+                if matches!(e, FgError::Protocol(_)) {
+                    state.nc.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    let reject = wire::encode_err(&e);
+                    let _ = wire::write_retried(&mut writer, reject.as_bytes(), &retry);
+                } else {
+                    state.nc.disconnects.fetch_add(1, Ordering::Relaxed);
+                }
+                return;
+            }
+        };
+        let verb = line.split_whitespace().next().unwrap_or("");
+        let flow = match verb {
+            "" => Ok(Flow::Continue),
+            "JOB" => handle_job(state, &line, &mut reader, &mut writer),
+            "PING" => wire::write_retried(&mut writer, b"PONG\n", &retry).map(|()| Flow::Continue),
+            "HEALTH" => {
+                wire::write_retried(&mut writer, b"OK healthy\n", &retry).map(|()| Flow::Continue)
+            }
+            "READY" => {
+                let body: &[u8] = if state.draining.load(Ordering::SeqCst) {
+                    b"ERR coordinator draining\n"
+                } else {
+                    b"OK ready\n"
+                };
+                wire::write_retried(&mut writer, body, &retry).map(|()| Flow::Continue)
+            }
+            "METRICS" => {
+                let body = state.router.metrics.prometheus();
+                let head = format!("METRICS {}\n", body.len());
+                wire::write_retried(&mut writer, head.as_bytes(), &retry)
+                    .and_then(|()| wire::write_retried(&mut writer, body.as_bytes(), &retry))
+                    .map(|()| Flow::Continue)
+            }
+            "QUIT" => {
+                let _ = wire::write_retried(&mut writer, b"BYE\n", &retry);
+                Ok(Flow::Close)
+            }
+            "GET" => handle_http(state, &line, &mut reader, &mut writer),
+            _ => {
+                let e = FgError::Protocol(format!("unknown request `{verb}`"));
+                state.nc.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                let _ = wire::write_retried(&mut writer, wire::encode_err(&e).as_bytes(), &retry);
+                Ok(Flow::Close)
+            }
+        };
+        match flow {
+            Ok(Flow::Continue) => {
+                if state.draining.load(Ordering::SeqCst) {
+                    return; // in-flight request finished; drain wins now
+                }
+            }
+            Ok(Flow::Close) => return,
+            Err(_) => {
+                state.nc.disconnects.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        }
+    }
+}
+
+/// One `JOB` request: decode frames, submit through the router with a
+/// fresh trace id, wait, and stream the result (or typed error) back.
+/// `Err` means the *socket* failed; request-level failures are `Ok`
+/// responses carrying `ERR` frames.
+fn handle_job(
+    state: &ServerState,
+    header: &str,
+    reader: &mut LineReader<TcpStream>,
+    writer: &mut TcpStream,
+) -> Result<Flow> {
+    let trace_id = state.next_trace.fetch_add(1, Ordering::Relaxed) + 1;
+    let started = Instant::now();
+    state.nc.requests.fetch_add(1, Ordering::Relaxed);
+    let mut span = obs::span("net.request", obs::cat::NET);
+    if span.active() {
+        span.meta("trace_id", trace_id);
+    }
+    let retry = state.cfg.retry.clone();
+    let job = match wire::decode_job(header, reader, &state.cfg.limits) {
+        Ok(job) => job,
+        Err(e) => {
+            // The stream may be mid-frame — unknowable state, so reject
+            // and close rather than resynchronize heuristically.
+            state.nc.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            state.nc.err.fetch_add(1, Ordering::Relaxed);
+            let _ = wire::write_retried(writer, wire::encode_err(&e).as_bytes(), &retry);
+            return Ok(Flow::Close);
+        }
+    };
+    if span.active() {
+        span.meta("kind", job.kind());
+    }
+    let outcome = state
+        .router
+        .submit_traced(job, state.router.default_deadline(), Some(trace_id))
+        .and_then(|h| h.wait());
+    let frame = match &outcome {
+        Ok(result) => {
+            state.nc.ok.fetch_add(1, Ordering::Relaxed);
+            wire::encode_result(result, trace_id)
+        }
+        Err(e) => {
+            state.nc.err.fetch_add(1, Ordering::Relaxed);
+            wire::encode_err(e)
+        }
+    };
+    wire::write_retried(writer, frame.as_bytes(), &retry)?;
+    state.router.metrics.observe("net.request.latency", started.elapsed().as_secs_f64());
+    Ok(Flow::Continue)
+}
+
+/// Minimal HTTP/1.0 responder for scrape probes: `GET /metrics`,
+/// `GET /health`, `GET /ready`. Reads (and discards) request headers up
+/// to the blank line, answers with `Connection: close`, and closes.
+fn handle_http(
+    state: &ServerState,
+    request_line: &str,
+    reader: &mut LineReader<TcpStream>,
+    writer: &mut TcpStream,
+) -> Result<Flow> {
+    let path = request_line.split_whitespace().nth(1).unwrap_or("/");
+    // Drain request headers; a peer streaming unbounded headers hits
+    // the per-line cap or the read deadline, both of which close.
+    for _ in 0..128 {
+        match reader.read_line(state.cfg.limits.max_line_bytes)? {
+            Some(l) if l.is_empty() => break,
+            Some(_) => continue,
+            None => break,
+        }
+    }
+    let draining = state.draining.load(Ordering::SeqCst);
+    let (status, body) = match path {
+        "/metrics" => ("200 OK", state.router.metrics.prometheus()),
+        "/health" => ("200 OK", "OK healthy\n".to_string()),
+        "/ready" if !draining => ("200 OK", "OK ready\n".to_string()),
+        "/ready" => ("503 Service Unavailable", "DRAINING\n".to_string()),
+        _ => ("404 Not Found", "not found\n".to_string()),
+    };
+    let response = format!(
+        "HTTP/1.0 {status}\r\nContent-Type: text/plain; version=0.0.4\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    wire::write_retried(writer, response.as_bytes(), &state.cfg.retry)?;
+    Ok(Flow::Close)
+}

@@ -1,0 +1,448 @@
+//! Wire front-end tests: grammar round-trips, loopback bitwise
+//! equality, rejection paths, shedding, graceful drain, and seeded
+//! net-chaos with provably zero hard failures.
+
+use super::client::Client;
+use super::server::{NetConfig, Server};
+use super::wire::{self, LineReader, WireLimits};
+use crate::coordinator::{job_key, ApproxJob, JobResult, MatrixPayload, Router, ServeConfig};
+use crate::cur::{CoreMethod, CurConfig, SelectionStrategy, StreamingCurConfig};
+use crate::error::FgError;
+use crate::faults::{site, FaultPlan, RetryPolicy};
+use crate::gmr::FastGmrConfig;
+use crate::linalg::Mat;
+use crate::rng::rng;
+use crate::sketch::SketchKind;
+use crate::sparse::Csr;
+use crate::svdstream::FastSpSvdConfig;
+use std::io::Write as _;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn test_matrix(m: usize, n: usize, seed: u64) -> Mat {
+    let mut r = rng(seed);
+    let spectrum = crate::data::SpectrumKind::Exponential { base: 0.8 };
+    crate::data::synth_dense(m, n, 8, spectrum, 0.05, &mut r)
+}
+
+fn quick_cur_job(seed: u64) -> ApproxJob {
+    ApproxJob::Cur {
+        a: MatrixPayload::Dense(test_matrix(40, 30, seed)),
+        cfg: CurConfig::fast(5, 5, 2),
+        seed,
+    }
+}
+
+/// A job spanning every grammar feature, per kind.
+fn grammar_jobs() -> Vec<ApproxJob> {
+    let dense = test_matrix(30, 24, 3);
+    let sparse = Csr::from_dense(&test_matrix(26, 22, 4), 0.4);
+    let c = test_matrix(30, 6, 5);
+    let r = test_matrix(6, 24, 6);
+    vec![
+        ApproxJob::Gmr {
+            a: MatrixPayload::Sparse(sparse.clone()),
+            c: test_matrix(26, 5, 7),
+            r: test_matrix(5, 22, 8),
+            cfg: FastGmrConfig::count(12, 12),
+            seed: 11,
+        },
+        ApproxJob::GmrExact { a: MatrixPayload::Dense(dense.clone()), c, r },
+        ApproxJob::SpsdKernel { x: test_matrix(28, 4, 9), sigma: 0.75, c: 6, s: 18, seed: 12 },
+        ApproxJob::StreamSvd {
+            a: MatrixPayload::Dense(dense.clone()),
+            cfg: FastSpSvdConfig::paper(3, 2, SketchKind::Osnap),
+            block: 8,
+            seed: 13,
+        },
+        ApproxJob::Cur {
+            a: MatrixPayload::Dense(dense.clone()),
+            cfg: CurConfig {
+                c: 5,
+                r: 5,
+                selection: SelectionStrategy::SketchedLeverage {
+                    kind: SketchKind::Count,
+                    size: 14,
+                },
+                core: CoreMethod::StabilizedQr,
+                sketch: SketchKind::Gaussian,
+                s_c: 10,
+                s_r: 10,
+            },
+            seed: 14,
+        },
+        ApproxJob::Cur {
+            a: MatrixPayload::Sparse(sparse),
+            cfg: CurConfig {
+                c: 4,
+                r: 4,
+                selection: SelectionStrategy::SubspaceLeverage { k: 3 },
+                core: CoreMethod::Exact,
+                sketch: SketchKind::Count,
+                s_c: 0,
+                s_r: 0,
+            },
+            seed: 15,
+        },
+        ApproxJob::Cur {
+            a: MatrixPayload::Dense(dense.clone()),
+            cfg: CurConfig {
+                c: 4,
+                r: 4,
+                selection: SelectionStrategy::Uniform,
+                core: CoreMethod::FastGmr,
+                sketch: SketchKind::Srht,
+                s_c: 9,
+                s_r: 9,
+            },
+            seed: 16,
+        },
+        ApproxJob::StreamingCur {
+            a: MatrixPayload::Dense(dense),
+            cfg: StreamingCurConfig {
+                c: 4,
+                r: 4,
+                k: 3,
+                kind: SketchKind::Srht,
+                s_c: 16,
+                s_r: 8,
+                oversample: 3,
+            },
+            block: 8,
+            seed: 17,
+        },
+    ]
+}
+
+fn decode_frame(frame: &str) -> ApproxJob {
+    let limits = WireLimits::default();
+    let mut reader = LineReader::new(frame.as_bytes(), RetryPolicy::none());
+    let header = reader.read_line(limits.max_line_bytes).unwrap().unwrap();
+    wire::decode_job(&header, &mut reader, &limits).unwrap()
+}
+
+/// Grammar round-trip: every job kind — including sparse payloads and
+/// every selection/core/sketch token family — must decode to a job the
+/// cache fingerprints identically (the key digests payload bits and
+/// every config knob, so key equality is bitwise job equality).
+#[test]
+fn wire_grammar_round_trips_every_job_kind() {
+    for job in grammar_jobs() {
+        let decoded = decode_frame(&wire::encode_job(&job));
+        assert_eq!(job.kind(), decoded.kind());
+        assert_eq!(job.dims(), decoded.dims());
+        assert_eq!(job_key(&job), job_key(&decoded), "key drift for kind {}", job.kind());
+    }
+}
+
+/// Result frames round-trip bitwise, including the SPSD trailing word
+/// and the degraded marker.
+#[test]
+fn wire_result_frames_round_trip_bitwise() {
+    let results = vec![
+        JobResult::Spsd {
+            idx: vec![3, 1, 4],
+            c: test_matrix(6, 3, 21),
+            x: test_matrix(3, 3, 22),
+            entries_observed: 1234,
+        },
+        JobResult::Degraded {
+            est_rel_residual: 0.125,
+            inner: Box::new(JobResult::Gmr { x: test_matrix(4, 5, 23) }),
+        },
+    ];
+    for r in results {
+        let frame = wire::encode_result(&r, 0xabcd);
+        let mut reader = LineReader::new(frame.as_bytes(), RetryPolicy::none());
+        let (back, trace) = wire::decode_response(&mut reader, &WireLimits::default()).unwrap();
+        assert_eq!(trace, 0xabcd);
+        assert_eq!(back.kind(), r.kind());
+        assert_eq!(back.is_degraded(), r.is_degraded());
+        assert_eq!(back.output_shapes(), r.output_shapes());
+        assert_eq!(back.to_words(), r.to_words());
+    }
+}
+
+/// A corrupted payload word must fail the checksum, not decode quietly.
+#[test]
+fn wire_checksum_rejects_flipped_bits() {
+    let frame = wire::encode_result(&JobResult::Gmr { x: test_matrix(3, 3, 24) }, 1);
+    let mut tampered: Vec<String> = frame.lines().map(str::to_string).collect();
+    let last = tampered.last_mut().unwrap();
+    // Flip one hex digit of the first payload word.
+    let flipped = if last.as_bytes()[0] == b'0' { "1" } else { "0" };
+    last.replace_range(0..1, flipped);
+    let text = tampered.join("\n") + "\n";
+    let mut reader = LineReader::new(text.as_bytes(), RetryPolicy::none());
+    let err = wire::decode_response(&mut reader, &WireLimits::default()).unwrap_err();
+    assert!(matches!(err, FgError::Protocol(m) if m.contains("checksum")));
+}
+
+fn tight_cfg() -> NetConfig {
+    NetConfig {
+        read_timeout: Some(Duration::from_secs(2)),
+        write_timeout: Some(Duration::from_secs(2)),
+        ..NetConfig::default()
+    }
+}
+
+/// Loopback round-trip of a mixed job stream: every result that comes
+/// back over the socket must be bitwise identical to the same job
+/// executed by an identically-configured in-process router.
+#[test]
+fn loopback_round_trip_is_bitwise_identical_to_in_process() {
+    let wire_router = Arc::new(Router::with_config(&ServeConfig::service(2)));
+    let inproc = Router::with_config(&ServeConfig::service(2));
+    let server = Server::bind("127.0.0.1:0", Arc::clone(&wire_router), tight_cfg()).unwrap();
+    let mut client = Client::connect(server.addr(), &tight_cfg()).unwrap();
+
+    let jobs: Vec<(ApproxJob, ApproxJob)> =
+        grammar_jobs().into_iter().zip(grammar_jobs()).collect();
+    for (over_wire, in_process) in jobs {
+        let kind = over_wire.kind();
+        let (wire_res, trace) = client.submit(&over_wire).unwrap();
+        assert!(trace > 0);
+        let local = inproc.submit(in_process).unwrap().wait().unwrap();
+        assert_eq!(wire_res.kind(), local.kind(), "kind mismatch for {kind}");
+        assert_eq!(
+            wire_res.output_shapes(),
+            local.output_shapes(),
+            "shape mismatch for {kind}"
+        );
+        assert_eq!(wire_res.to_words(), local.to_words(), "bitwise mismatch for {kind}");
+    }
+    client.quit().unwrap();
+    server.drain();
+}
+
+/// An over-cap payload is rejected with a typed protocol error before
+/// the server buffers it, and the listener keeps serving new clients.
+#[test]
+fn oversized_request_rejected_and_server_stays_healthy() {
+    let router = Arc::new(Router::new(1));
+    let mut cfg = tight_cfg();
+    cfg.limits.max_payload_words = 64;
+    let server = Server::bind("127.0.0.1:0", router, cfg.clone()).unwrap();
+
+    let mut client = Client::connect(server.addr(), &cfg).unwrap();
+    let err = client.submit(&quick_cur_job(1)).unwrap_err();
+    assert!(matches!(&err, FgError::Protocol(m) if m.contains("cap")), "got {err}");
+
+    // The offending connection is closed; a fresh one works.
+    let mut fresh = Client::connect(server.addr(), &cfg).unwrap();
+    fresh.ping().unwrap();
+    assert!(fresh.ready().unwrap());
+    server.drain();
+}
+
+/// Disconnecting mid-frame must register as a protocol error server
+/// side (typed, counted) without disturbing later connections.
+#[test]
+fn mid_frame_disconnect_is_rejected_and_survivable() {
+    let router = Arc::new(Router::new(1));
+    let cfg = tight_cfg();
+    let server = Server::bind("127.0.0.1:0", Arc::clone(&router), cfg.clone()).unwrap();
+
+    {
+        let mut raw = std::net::TcpStream::connect(server.addr()).unwrap();
+        raw.write_all(b"HELLO v1\n").unwrap();
+        let mut reader = LineReader::new(raw.try_clone().unwrap(), RetryPolicy::none());
+        assert_eq!(reader.read_line(256).unwrap().unwrap(), wire::GREETING);
+        // A JOB header, a MAT header, a words header — then vanish
+        // mid-payload.
+        raw.write_all(b"JOB gmr_exact\nMAT dense 4 4\nwords 16 0123456789abcdef\nffff")
+            .unwrap();
+    } // dropped: RST/EOF mid-line
+
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while router.metrics.get("net.protocol_errors") == 0 {
+        assert!(Instant::now() < deadline, "protocol error never counted");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    let mut fresh = Client::connect(server.addr(), &cfg).unwrap();
+    let (res, _) = fresh.submit(&quick_cur_job(2)).unwrap();
+    assert_eq!(res.kind(), "cur");
+    server.drain();
+}
+
+/// At the connection cap, excess connects are shed with an explicit
+/// `BUSY` (mapped to [`FgError::Overloaded`] client-side), not queued
+/// or silently dropped.
+#[test]
+fn connection_cap_sheds_with_busy() {
+    let router = Arc::new(Router::new(1));
+    let cfg = NetConfig { max_conns: 1, ..tight_cfg() };
+    let server = Server::bind("127.0.0.1:0", Arc::clone(&router), cfg.clone()).unwrap();
+
+    let held = Client::connect(server.addr(), &cfg).unwrap();
+    let err = Client::connect(server.addr(), &cfg).unwrap_err();
+    assert!(matches!(&err, FgError::Overloaded { .. }), "got {err}");
+    assert!(router.metrics.get("net.busy") >= 1);
+    drop(held);
+    server.drain();
+}
+
+/// Graceful drain: the in-flight request completes with a full
+/// response, post-drain connects are refused at the OS level, and the
+/// persisted cache warm-starts a fresh router to a bitwise-equal hit.
+#[test]
+fn graceful_drain_finishes_in_flight_persists_and_refuses_after() {
+    let dir = std::env::temp_dir().join(format!("fgmr_net_drain_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let cache_path = dir.join("inventory.txt");
+
+    let cfg = ServeConfig {
+        cache_bytes: 8 << 20,
+        cache_path: Some(cache_path.clone()),
+        ..ServeConfig::service(2)
+    };
+    let router = Arc::new(Router::with_config(&cfg));
+    let net = tight_cfg();
+    let server = Server::bind("127.0.0.1:0", Arc::clone(&router), net.clone()).unwrap();
+    let addr = server.addr();
+
+    let worker = {
+        let net = net.clone();
+        std::thread::spawn(move || {
+            let mut client = Client::connect(addr, &net).unwrap();
+            client.submit(&quick_cur_job(3)).unwrap()
+        })
+    };
+    // Wait until the request is in flight, then drain under it.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while router.metrics.get("net.requests") == 0 {
+        assert!(Instant::now() < deadline, "request never arrived");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    server.drain();
+
+    let (result, _) = worker.join().expect("in-flight request must complete through a drain");
+    assert_eq!(result.kind(), "cur");
+    assert!(
+        std::net::TcpStream::connect(addr).is_err(),
+        "post-drain connect must be refused"
+    );
+    assert!(cache_path.exists(), "drain must persist the cache inventory");
+
+    // Warm start: the same job served from the persisted artifact,
+    // bitwise equal to the wire result.
+    let warm = Router::with_config(&cfg);
+    let hit = warm.submit(quick_cur_job(3)).unwrap().wait().unwrap();
+    assert_eq!(warm.metrics.get("serve.cache.hits"), 1);
+    assert_eq!(hit.to_words(), result.to_words(), "warm-start result drifted");
+    drop(warm);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The chaos seed's worst consecutive-injection run bounds the retry
+/// budget: enumerate the pure decision schedule and check the server's
+/// 16-attempt policy clears it with room, making
+/// [`net_chaos_read_faults_cause_zero_hard_failures`] deterministic
+/// rather than lucky.
+#[test]
+fn chaos_seed_worst_run_is_within_retry_budget() {
+    let plan = FaultPlan::new(0x5EED_4E74)
+        .with_site(site::NET_READ, 0.5, u64::MAX)
+        .with_site(site::NET_WRITE, 0.25, u64::MAX);
+    for (s, budget) in [(site::NET_READ, 16u32), (site::NET_WRITE, 16)] {
+        let mut worst = 0u32;
+        let mut run = 0u32;
+        for occ in 0..20_000u64 {
+            if plan.decide(s, occ) {
+                run += 1;
+                worst = worst.max(run);
+            } else {
+                run = 0;
+            }
+        }
+        assert!(
+            worst + 1 < budget,
+            "{s}: worst run {worst} leaves no retry headroom under {budget} attempts"
+        );
+    }
+}
+
+/// Net-level chaos: 50% seeded `net.read` faults (plus write/accept
+/// faults) on the server threads. Every request must still succeed —
+/// zero hard failures — with bitwise-correct results, because injected
+/// faults trip before any byte moves and the retry budget exceeds the
+/// seed's worst run.
+#[test]
+fn net_chaos_read_faults_cause_zero_hard_failures() {
+    let plan = Arc::new(
+        FaultPlan::new(0x5EED_4E74)
+            .with_site(site::NET_READ, 0.5, u64::MAX)
+            .with_site(site::NET_WRITE, 0.25, u64::MAX)
+            .with_site(site::NET_ACCEPT, 0.25, u64::MAX),
+    );
+    let cfg = NetConfig {
+        faults: Some(Arc::clone(&plan)),
+        retry: RetryPolicy {
+            max_attempts: 16,
+            base_backoff: Duration::from_micros(50),
+            cap: Duration::from_millis(1),
+        },
+        ..tight_cfg()
+    };
+    let router = Arc::new(Router::with_config(&ServeConfig::service(2)));
+    let baseline = Router::with_config(&ServeConfig::service(2));
+    let server = Server::bind("127.0.0.1:0", Arc::clone(&router), cfg.clone()).unwrap();
+    let mut client = Client::connect_retry(server.addr(), &cfg, 8).unwrap();
+
+    for i in 0..12u64 {
+        let (res, _) = client.submit(&quick_cur_job(100 + i)).unwrap();
+        let reference = baseline.submit(quick_cur_job(100 + i)).unwrap().wait().unwrap();
+        assert_eq!(res.to_words(), reference.to_words(), "chaos corrupted job {i}");
+    }
+    assert!(plan.injected() > 0, "chaos run injected nothing — seed or sites broken");
+    client.quit().unwrap();
+    server.drain();
+}
+
+/// Probe lines and the HTTP scrape endpoints answer correctly on both
+/// dialects of the same port.
+#[test]
+fn probes_and_http_scrape_work() {
+    let router = Arc::new(Router::new(1));
+    let cfg = tight_cfg();
+    let server = Server::bind("127.0.0.1:0", Arc::clone(&router), cfg.clone()).unwrap();
+
+    let mut client = Client::connect(server.addr(), &cfg).unwrap();
+    client.ping().unwrap();
+    assert_eq!(client.health().unwrap(), "OK healthy");
+    assert!(client.ready().unwrap());
+    let body = client.metrics().unwrap();
+    assert!(body.contains("net_accepted"), "prometheus body missing net counters:\n{body}");
+    client.quit().unwrap();
+
+    // HTTP dialect: a plain GET with headers, no HELLO.
+    let mut raw = std::net::TcpStream::connect(server.addr()).unwrap();
+    raw.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\nAccept: */*\r\n\r\n").unwrap();
+    let mut response = String::new();
+    std::io::Read::read_to_string(&mut raw, &mut response).unwrap();
+    assert!(response.starts_with("HTTP/1.0 200 OK"), "bad scrape response:\n{response}");
+    assert!(response.contains("net_accepted"));
+
+    let mut raw = std::net::TcpStream::connect(server.addr()).unwrap();
+    raw.write_all(b"GET /ready HTTP/1.1\r\n\r\n").unwrap();
+    let mut response = String::new();
+    std::io::Read::read_to_string(&mut raw, &mut response).unwrap();
+    assert!(response.contains("200 OK") && response.contains("OK ready"));
+    server.drain();
+}
+
+/// A first line that is neither `HELLO v1` nor HTTP is rejected with a
+/// typed protocol error, never served.
+#[test]
+fn bad_opener_is_rejected() {
+    let router = Arc::new(Router::new(1));
+    let server = Server::bind("127.0.0.1:0", router, tight_cfg()).unwrap();
+    let mut raw = std::net::TcpStream::connect(server.addr()).unwrap();
+    raw.write_all(b"FROB x\n").unwrap();
+    let mut reader = LineReader::new(raw, RetryPolicy::none());
+    let line = reader.read_line(4096).unwrap().unwrap();
+    assert!(line.starts_with("ERR protocol"), "got `{line}`");
+    server.drain();
+}

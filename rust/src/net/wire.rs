@@ -1,0 +1,767 @@
+//! Wire grammar v1: the line protocol spoken between [`super::Server`]
+//! and [`super::Client`].
+//!
+//! Every frame is a `\n`-terminated ASCII line; matrix/result payloads
+//! ride as one line of space-separated 16-hex-digit words guarded by a
+//! word-folded FNV-1a checksum (the artifact cache's
+//! [`Fnv64`] — the same digest that already guards the persisted
+//! inventory). Floats travel as IEEE-754 bit patterns, so a decoded job
+//! is *bitwise* the job that was encoded and the serving results are
+//! bitwise identical to an in-process [`Router::submit`]
+//! (`Router`: crate::coordinator::Router).
+//!
+//! ```text
+//! JOB cur c=4 r=4 sel=leverage core=fast-gmr sketch=gaussian s_c=12 s_r=12 seed=7
+//! MAT dense 24 18
+//! words 432 <fnv64>
+//! <432 hex words>
+//! ```
+//!
+//! responded to with
+//!
+//! ```text
+//! OK cur trace=0000000000000001 shapes=4x1,4x1,24x4,4x4,4x18
+//! words 448 <fnv64>
+//! <448 hex words>
+//! ```
+//!
+//! or `ERR <code> <message>`. See README §Serving for the full grammar
+//! table. Malformed input is always a typed [`FgError::Protocol`] —
+//! never a panic, never a partial decode: counts are bounded *before*
+//! any allocation sized by them, CSR structure is validated before
+//! [`Csr::from_raw`] (whose assertions are for trusted callers), and a
+//! checksum mismatch rejects the frame.
+//!
+//! Reads and writes honor the deterministic chaos sites
+//! [`site::NET_READ`] / [`site::NET_WRITE`]: a [`LineReader`] trips the
+//! plan **before** touching the socket, so an injected fault is
+//! retried in place (per [`RetryPolicy`]) without consuming bytes —
+//! replay-safe by construction, exactly like the stream-read fault
+//! contract in [`crate::faults`].
+
+use crate::coordinator::cache::Fnv64;
+use crate::coordinator::{ApproxJob, JobResult, MatrixPayload};
+use crate::cur::{CoreMethod, CurConfig, SelectionStrategy, StreamingCurConfig};
+use crate::error::{FgError, Result};
+use crate::faults::{self, site, RetryPolicy};
+use crate::gmr::FastGmrConfig;
+use crate::linalg::Mat;
+use crate::sketch::SketchKind;
+use crate::sparse::Csr;
+use crate::svdstream::FastSpSvdConfig;
+use std::io::{Read, Write};
+
+/// Protocol identifier sent in reply to a client's `HELLO v1` opener
+/// (the accept path may answer `BUSY` or `DRAINING` instead).
+pub const GREETING: &str = "FASTGMR v1";
+
+/// Size caps enforced while decoding frames. Both caps reject with
+/// [`FgError::Protocol`] *before* any cap-sized allocation happens, so
+/// a hostile peer cannot balloon server memory with a forged header.
+#[derive(Clone, Copy, Debug)]
+pub struct WireLimits {
+    /// Longest accepted header/control line, in bytes.
+    pub max_line_bytes: usize,
+    /// Largest accepted payload, in 64-bit words (dense: `rows·cols`;
+    /// CSR: `rows+1 + 2·nnz`).
+    pub max_payload_words: usize,
+}
+
+impl Default for WireLimits {
+    /// 4 KiB header lines, 4 Mi payload words (32 MiB of matrix).
+    fn default() -> Self {
+        Self { max_line_bytes: 4096, max_payload_words: 4 << 20 }
+    }
+}
+
+/// Word-folded FNV-1a digest of a payload word slice — the checksum
+/// carried on every `words` line.
+pub fn checksum(words: &[u64]) -> u64 {
+    let mut h = Fnv64::new();
+    for &w in words {
+        h.write_u64(w);
+    }
+    h.finish()
+}
+
+fn protocol(msg: impl Into<String>) -> FgError {
+    FgError::Protocol(msg.into())
+}
+
+/// Buffered, cap-enforcing line reader with deterministic fault
+/// injection and in-place retry.
+///
+/// Each buffer fill trips [`site::NET_READ`] **before** the socket is
+/// touched; injected faults surface as `ErrorKind::Interrupted` and are
+/// retried per the policy without consuming any bytes, so a retried
+/// read observes exactly the bytes the failed attempt would have. Line
+/// caps, mid-line EOF, and non-UTF-8 input are typed
+/// [`FgError::Protocol`] rejections.
+pub struct LineReader<R: Read> {
+    inner: R,
+    buf: Vec<u8>,
+    retry: RetryPolicy,
+}
+
+impl<R: Read> LineReader<R> {
+    pub fn new(inner: R, retry: RetryPolicy) -> Self {
+        Self { inner, buf: Vec::new(), retry }
+    }
+
+    /// One buffer fill with fault injection + retry. Returns the byte
+    /// count appended (0 = EOF).
+    fn fill(&mut self) -> Result<usize> {
+        let mut attempt = 0u32;
+        loop {
+            attempt += 1;
+            let res = if faults::trip_ambient(site::NET_READ) {
+                Err(std::io::Error::new(std::io::ErrorKind::Interrupted, "injected net.read fault"))
+            } else {
+                let mut chunk = [0u8; 65536];
+                self.inner.read(&mut chunk).map(|n| {
+                    self.buf.extend_from_slice(&chunk[..n]);
+                    n
+                })
+            };
+            match res {
+                Ok(n) => return Ok(n),
+                // Interrupted (real or injected) is the one transient
+                // read error: nothing was consumed, replay is safe.
+                // Timeouts are *not* retried here — they are the
+                // connection deadline doing its job.
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {
+                    if attempt >= self.retry.max_attempts {
+                        return Err(FgError::Io(e));
+                    }
+                    std::thread::sleep(self.retry.backoff(attempt));
+                }
+                Err(e) => return Err(FgError::Io(e)),
+            }
+        }
+    }
+
+    /// Read one `\n`-terminated line of at most `cap` bytes (terminator
+    /// excluded). `Ok(None)` is a clean EOF at a line boundary; EOF
+    /// mid-line is a [`FgError::Protocol`] truncation.
+    pub fn read_line(&mut self, cap: usize) -> Result<Option<String>> {
+        loop {
+            if let Some(pos) = self.buf.iter().position(|&b| b == b'\n') {
+                if pos > cap {
+                    return Err(protocol(format!("line exceeds {cap} byte cap")));
+                }
+                let rest = self.buf.split_off(pos + 1);
+                let mut line = std::mem::replace(&mut self.buf, rest);
+                line.pop(); // '\n'
+                if line.last() == Some(&b'\r') {
+                    line.pop();
+                }
+                let s = String::from_utf8(line).map_err(|_| protocol("non-UTF-8 line"))?;
+                return Ok(Some(s));
+            }
+            if self.buf.len() > cap {
+                return Err(protocol(format!("line exceeds {cap} byte cap")));
+            }
+            if self.fill()? == 0 {
+                if self.buf.is_empty() {
+                    return Ok(None);
+                }
+                return Err(protocol("connection closed mid-line"));
+            }
+        }
+    }
+
+    /// Read exactly `n` raw bytes (used for the `METRICS <n>` body).
+    pub fn read_exact_bytes(&mut self, n: usize) -> Result<Vec<u8>> {
+        while self.buf.len() < n {
+            if self.fill()? == 0 {
+                return Err(protocol("connection closed mid-body"));
+            }
+        }
+        let rest = self.buf.split_off(n);
+        Ok(std::mem::replace(&mut self.buf, rest))
+    }
+}
+
+/// Write `buf` with deterministic fault injection and in-place retry:
+/// [`site::NET_WRITE`] trips **before** the first byte leaves, so an
+/// injected fault replays the whole buffer (nothing was sent) and a
+/// response frame is never interleaved with a retry of itself.
+pub fn write_retried<W: Write>(w: &mut W, buf: &[u8], retry: &RetryPolicy) -> Result<()> {
+    let mut attempt = 0u32;
+    loop {
+        attempt += 1;
+        if faults::trip_ambient(site::NET_WRITE) {
+            if attempt >= retry.max_attempts {
+                return Err(FgError::Io(std::io::Error::new(
+                    std::io::ErrorKind::Interrupted,
+                    "injected net.write fault",
+                )));
+            }
+            std::thread::sleep(retry.backoff(attempt));
+            continue;
+        }
+        // `write_all` retries real `Interrupted` internally; any other
+        // error (incl. the write deadline) fails the connection.
+        w.write_all(buf)?;
+        w.flush()?;
+        return Ok(());
+    }
+}
+
+// ---------------------------------------------------------------------
+// Word-line payloads
+// ---------------------------------------------------------------------
+
+/// Render a `words <n> <fnv64>` guard line plus the payload line.
+///
+/// The payload line is built with a nibble-table encoder instead of a
+/// per-word `format!`: a dense bench payload is ~10^5 words, and this
+/// is the hot half of the socket latency the CI guard compares against
+/// in-process serving.
+fn push_words(out: &mut String, words: &[u64]) {
+    use std::fmt::Write as _;
+    let _ = writeln!(out, "words {} {:016x}", words.len(), checksum(words));
+    const HEX: &[u8; 16] = b"0123456789abcdef";
+    let mut bytes = Vec::with_capacity(words.len() * 17 + 1);
+    for (i, &w) in words.iter().enumerate() {
+        if i > 0 {
+            bytes.push(b' ');
+        }
+        let mut chunk = [0u8; 16];
+        for (k, c) in chunk.iter_mut().enumerate() {
+            *c = HEX[((w >> (60 - 4 * k)) & 0xf) as usize];
+        }
+        bytes.extend_from_slice(&chunk);
+    }
+    bytes.push(b'\n');
+    out.push_str(std::str::from_utf8(&bytes).expect("hex payload is pure ASCII"));
+}
+
+/// Read a `words` guard line plus payload line, enforcing the declared
+/// count against `expect` and the checksum against the decoded words.
+fn read_words<R: Read>(
+    r: &mut LineReader<R>,
+    limits: &WireLimits,
+    expect: usize,
+) -> Result<Vec<u64>> {
+    let line = r
+        .read_line(limits.max_line_bytes)?
+        .ok_or_else(|| protocol("connection closed before words header"))?;
+    let mut parts = line.split_whitespace();
+    if parts.next() != Some("words") {
+        return Err(protocol("expected `words <n> <fnv64>` header"));
+    }
+    let n: usize =
+        parts.next().and_then(|t| t.parse().ok()).ok_or_else(|| protocol("bad words count"))?;
+    let declared = parts
+        .next()
+        .and_then(|t| u64::from_str_radix(t, 16).ok())
+        .ok_or_else(|| protocol("bad words checksum"))?;
+    if n != expect {
+        return Err(protocol(format!("words count {n} disagrees with frame header ({expect})")));
+    }
+    // 16 hex digits + separator per word, plus slack for the newline.
+    let cap = n.saturating_mul(17) + 64;
+    let payload = r
+        .read_line(cap)?
+        .ok_or_else(|| protocol("connection closed before payload line"))?;
+    let mut words = Vec::with_capacity(n);
+    for tok in payload.split_ascii_whitespace() {
+        if words.len() == n {
+            return Err(protocol("payload has more words than declared"));
+        }
+        words.push(
+            u64::from_str_radix(tok, 16).map_err(|_| protocol("non-hex payload word"))?,
+        );
+    }
+    if words.len() != n {
+        return Err(protocol(format!("payload has {} words, declared {n}", words.len())));
+    }
+    if checksum(&words) != declared {
+        return Err(protocol("payload checksum mismatch"));
+    }
+    Ok(words)
+}
+
+// ---------------------------------------------------------------------
+// Matrix frames
+// ---------------------------------------------------------------------
+
+fn push_dense(out: &mut String, m: &Mat) {
+    use std::fmt::Write as _;
+    let _ = writeln!(out, "MAT dense {} {}", m.rows(), m.cols());
+    let words: Vec<u64> = m.data().iter().map(|v| v.to_bits()).collect();
+    push_words(out, &words);
+}
+
+fn push_payload(out: &mut String, p: &MatrixPayload) {
+    use std::fmt::Write as _;
+    match p {
+        MatrixPayload::Dense(m) => push_dense(out, m),
+        MatrixPayload::Sparse(a) => {
+            let _ = writeln!(out, "MAT csr {} {} {}", a.rows(), a.cols(), a.nnz());
+            let mut words = Vec::with_capacity(a.rows() + 1 + 2 * a.nnz());
+            // indptr (rows+1), then indices (nnz), then value bits (nnz).
+            let mut running = 0u64;
+            words.push(0);
+            for i in 0..a.rows() {
+                running += a.row(i).0.len() as u64;
+                words.push(running);
+            }
+            for i in 0..a.rows() {
+                words.extend(a.row(i).0.iter().map(|&j| j as u64));
+            }
+            for i in 0..a.rows() {
+                words.extend(a.row(i).1.iter().map(|&v| v.to_bits()));
+            }
+            push_words(out, &words);
+        }
+    }
+}
+
+fn read_mat_header<R: Read>(r: &mut LineReader<R>, limits: &WireLimits) -> Result<String> {
+    r.read_line(limits.max_line_bytes)?
+        .ok_or_else(|| protocol("connection closed before MAT header"))
+}
+
+/// Decode one matrix frame (dense or CSR) with full structural
+/// validation — the CSR path re-checks everything
+/// [`Csr::from_raw`] asserts, as a typed rejection instead of a panic.
+fn read_payload<R: Read>(r: &mut LineReader<R>, limits: &WireLimits) -> Result<MatrixPayload> {
+    let header = read_mat_header(r, limits)?;
+    let mut parts = header.split_whitespace();
+    if parts.next() != Some("MAT") {
+        return Err(protocol("expected MAT frame"));
+    }
+    let form = parts.next().ok_or_else(|| protocol("MAT frame missing form"))?;
+    let dim = |p: Option<&str>| -> Result<usize> {
+        p.and_then(|t| t.parse().ok()).ok_or_else(|| protocol("bad MAT dimension"))
+    };
+    match form {
+        "dense" => {
+            let rows = dim(parts.next())?;
+            let cols = dim(parts.next())?;
+            let n = rows
+                .checked_mul(cols)
+                .filter(|&n| n <= limits.max_payload_words)
+                .ok_or_else(|| {
+                    protocol(format!(
+                        "dense payload {rows}x{cols} exceeds {} word cap",
+                        limits.max_payload_words
+                    ))
+                })?;
+            let words = read_words(r, limits, n)?;
+            let data: Vec<f64> = words.iter().map(|&w| f64::from_bits(w)).collect();
+            Ok(MatrixPayload::Dense(Mat::from_vec(rows, cols, data)))
+        }
+        "csr" => {
+            let rows = dim(parts.next())?;
+            let cols = dim(parts.next())?;
+            let nnz = dim(parts.next())?;
+            let n = nnz
+                .checked_mul(2)
+                .and_then(|t| t.checked_add(rows))
+                .and_then(|t| t.checked_add(1))
+                .filter(|&n| n <= limits.max_payload_words)
+                .ok_or_else(|| {
+                    protocol(format!(
+                        "csr payload ({rows} rows, {nnz} nnz) exceeds {} word cap",
+                        limits.max_payload_words
+                    ))
+                })?;
+            let words = read_words(r, limits, n)?;
+            let indptr: Vec<usize> = words[..rows + 1].iter().map(|&w| w as usize).collect();
+            if indptr[0] != 0 || indptr[rows] != nnz || indptr.windows(2).any(|w| w[0] > w[1]) {
+                return Err(protocol("csr indptr is not a monotone 0..nnz partition"));
+            }
+            let indices: Vec<usize> =
+                words[rows + 1..rows + 1 + nnz].iter().map(|&w| w as usize).collect();
+            if indices.iter().any(|&j| j >= cols) {
+                return Err(protocol("csr column index out of bounds"));
+            }
+            let values: Vec<f64> =
+                words[rows + 1 + nnz..].iter().map(|&w| f64::from_bits(w)).collect();
+            Ok(MatrixPayload::Sparse(Csr::from_raw(rows, cols, indptr, indices, values)))
+        }
+        other => Err(protocol(format!("unknown MAT form `{other}`"))),
+    }
+}
+
+/// Like [`read_payload`] but for frames where the grammar requires a
+/// dense matrix (the supplied `C`/`R` factors of GMR jobs).
+fn read_dense<R: Read>(r: &mut LineReader<R>, limits: &WireLimits) -> Result<Mat> {
+    match read_payload(r, limits)? {
+        MatrixPayload::Dense(m) => Ok(m),
+        MatrixPayload::Sparse(_) => Err(protocol("this frame requires a dense matrix")),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Job frames
+// ---------------------------------------------------------------------
+
+fn sel_token(s: &SelectionStrategy) -> String {
+    match s {
+        SelectionStrategy::Uniform => "uniform".into(),
+        SelectionStrategy::Leverage => "leverage".into(),
+        SelectionStrategy::SubspaceLeverage { k } => format!("subspace:{k}"),
+        SelectionStrategy::SketchedLeverage { kind, size } => {
+            format!("sketched:{}:{}", kind.name(), size)
+        }
+    }
+}
+
+fn parse_sel(tok: &str) -> Result<SelectionStrategy> {
+    let mut parts = tok.split(':');
+    let head = parts.next().unwrap_or("");
+    let sel = match head {
+        "uniform" => SelectionStrategy::Uniform,
+        "leverage" => SelectionStrategy::Leverage,
+        "subspace" => {
+            let k = parts
+                .next()
+                .and_then(|t| t.parse().ok())
+                .ok_or_else(|| protocol("subspace selection needs `subspace:<k>`"))?;
+            SelectionStrategy::SubspaceLeverage { k }
+        }
+        "sketched" => {
+            let kind = parts
+                .next()
+                .and_then(|t| SketchKind::parse(t).ok())
+                .ok_or_else(|| protocol("sketched selection needs `sketched:<kind>:<size>`"))?;
+            let size = parts
+                .next()
+                .and_then(|t| t.parse().ok())
+                .ok_or_else(|| protocol("sketched selection needs `sketched:<kind>:<size>`"))?;
+            SelectionStrategy::SketchedLeverage { kind, size }
+        }
+        other => return Err(protocol(format!("unknown selection `{other}`"))),
+    };
+    if parts.next().is_some() {
+        return Err(protocol(format!("trailing tokens in selection `{tok}`")));
+    }
+    Ok(sel)
+}
+
+/// `key=value` fields of a `JOB` header line.
+struct Fields<'a> {
+    pairs: Vec<(&'a str, &'a str)>,
+}
+
+impl<'a> Fields<'a> {
+    fn parse(tokens: impl Iterator<Item = &'a str>) -> Result<Self> {
+        let mut pairs = Vec::new();
+        for tok in tokens {
+            let (k, v) =
+                tok.split_once('=').ok_or_else(|| protocol(format!("bad field `{tok}`")))?;
+            pairs.push((k, v));
+        }
+        Ok(Self { pairs })
+    }
+
+    fn raw(&self, key: &str) -> Result<&'a str> {
+        self.pairs
+            .iter()
+            .find(|(k, _)| *k == key)
+            .map(|(_, v)| *v)
+            .ok_or_else(|| protocol(format!("missing field `{key}`")))
+    }
+
+    fn num<T: std::str::FromStr>(&self, key: &str) -> Result<T> {
+        self.raw(key)?.parse().map_err(|_| protocol(format!("bad numeric field `{key}`")))
+    }
+
+    fn f64_bits(&self, key: &str) -> Result<f64> {
+        u64::from_str_radix(self.raw(key)?, 16)
+            .map(f64::from_bits)
+            .map_err(|_| protocol(format!("field `{key}` must be 16 hex digits (f64 bits)")))
+    }
+
+    fn sketch(&self, key: &str) -> Result<SketchKind> {
+        SketchKind::parse(self.raw(key)?).map_err(|e| protocol(e.to_string()))
+    }
+}
+
+/// Encode a job as its full wire frame set (header + matrix frames).
+pub fn encode_job(job: &ApproxJob) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    match job {
+        ApproxJob::Gmr { a, c, r, cfg, seed } => {
+            let _ = writeln!(
+                out,
+                "JOB gmr kind_c={} kind_r={} s_c={} s_r={} seed={}",
+                cfg.kind_c.name(),
+                cfg.kind_r.name(),
+                cfg.s_c,
+                cfg.s_r,
+                seed
+            );
+            push_payload(&mut out, a);
+            push_dense(&mut out, c);
+            push_dense(&mut out, r);
+        }
+        ApproxJob::GmrExact { a, c, r } => {
+            out.push_str("JOB gmr_exact\n");
+            push_payload(&mut out, a);
+            push_dense(&mut out, c);
+            push_dense(&mut out, r);
+        }
+        ApproxJob::SpsdKernel { x, sigma, c, s, seed } => {
+            let _ = writeln!(
+                out,
+                "JOB spsd sigma={:016x} c={c} s={s} seed={seed}",
+                sigma.to_bits()
+            );
+            push_dense(&mut out, x);
+        }
+        ApproxJob::StreamSvd { a, cfg, block, seed } => {
+            let _ = writeln!(
+                out,
+                "JOB svd k={} c={} r={} s_c={} s_r={} osnap_mult={} core={} block={block} seed={seed}",
+                cfg.k, cfg.c, cfg.r, cfg.s_c, cfg.s_r, cfg.osnap_mult, cfg.core_kind.name()
+            );
+            push_payload(&mut out, a);
+        }
+        ApproxJob::Cur { a, cfg, seed } => {
+            let _ = writeln!(
+                out,
+                "JOB cur c={} r={} sel={} core={} sketch={} s_c={} s_r={} seed={seed}",
+                cfg.c,
+                cfg.r,
+                sel_token(&cfg.selection),
+                cfg.core.name(),
+                cfg.sketch.name(),
+                cfg.s_c,
+                cfg.s_r
+            );
+            push_payload(&mut out, a);
+        }
+        ApproxJob::StreamingCur { a, cfg, block, seed } => {
+            let _ = writeln!(
+                out,
+                "JOB cur_stream c={} r={} k={} sketch={} s_c={} s_r={} oversample={} block={block} seed={seed}",
+                cfg.c, cfg.r, cfg.k, cfg.kind.name(), cfg.s_c, cfg.s_r, cfg.oversample
+            );
+            push_payload(&mut out, a);
+        }
+    }
+    out
+}
+
+/// Decode the frames following an already-read `JOB ...` header line.
+pub fn decode_job<R: Read>(
+    header: &str,
+    r: &mut LineReader<R>,
+    limits: &WireLimits,
+) -> Result<ApproxJob> {
+    let mut toks = header.split_whitespace();
+    if toks.next() != Some("JOB") {
+        return Err(protocol("expected JOB header"));
+    }
+    let kind = toks.next().ok_or_else(|| protocol("JOB header missing kind"))?;
+    let f = Fields::parse(toks)?;
+    match kind {
+        "gmr" => {
+            let cfg = FastGmrConfig {
+                kind_c: f.sketch("kind_c")?,
+                kind_r: f.sketch("kind_r")?,
+                s_c: f.num("s_c")?,
+                s_r: f.num("s_r")?,
+            };
+            let seed = f.num("seed")?;
+            let a = read_payload(r, limits)?;
+            let c = read_dense(r, limits)?;
+            let rr = read_dense(r, limits)?;
+            Ok(ApproxJob::Gmr { a, c, r: rr, cfg, seed })
+        }
+        "gmr_exact" => {
+            let a = read_payload(r, limits)?;
+            let c = read_dense(r, limits)?;
+            let rr = read_dense(r, limits)?;
+            Ok(ApproxJob::GmrExact { a, c, r: rr })
+        }
+        "spsd" => {
+            let sigma = f.f64_bits("sigma")?;
+            let c = f.num("c")?;
+            let s = f.num("s")?;
+            let seed = f.num("seed")?;
+            let x = read_dense(r, limits)?;
+            Ok(ApproxJob::SpsdKernel { x, sigma, c, s, seed })
+        }
+        "svd" => {
+            let cfg = FastSpSvdConfig {
+                k: f.num("k")?,
+                c: f.num("c")?,
+                r: f.num("r")?,
+                s_c: f.num("s_c")?,
+                s_r: f.num("s_r")?,
+                osnap_mult: f.num("osnap_mult")?,
+                core_kind: f.sketch("core")?,
+            };
+            let block = f.num("block")?;
+            let seed = f.num("seed")?;
+            let a = read_payload(r, limits)?;
+            Ok(ApproxJob::StreamSvd { a, cfg, block, seed })
+        }
+        "cur" => {
+            let cfg = CurConfig {
+                c: f.num("c")?,
+                r: f.num("r")?,
+                selection: parse_sel(f.raw("sel")?)?,
+                core: CoreMethod::parse(f.raw("core")?)
+                    .ok_or_else(|| protocol("unknown core method"))?,
+                sketch: f.sketch("sketch")?,
+                s_c: f.num("s_c")?,
+                s_r: f.num("s_r")?,
+            };
+            let seed = f.num("seed")?;
+            let a = read_payload(r, limits)?;
+            Ok(ApproxJob::Cur { a, cfg, seed })
+        }
+        "cur_stream" => {
+            let cfg = StreamingCurConfig {
+                c: f.num("c")?,
+                r: f.num("r")?,
+                k: f.num("k")?,
+                kind: f.sketch("sketch")?,
+                s_c: f.num("s_c")?,
+                s_r: f.num("s_r")?,
+                oversample: f.num("oversample")?,
+            };
+            let block = f.num("block")?;
+            let seed = f.num("seed")?;
+            let a = read_payload(r, limits)?;
+            Ok(ApproxJob::StreamingCur { a, cfg, block, seed })
+        }
+        other => Err(protocol(format!("unknown job kind `{other}`"))),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Result frames
+// ---------------------------------------------------------------------
+
+/// Encode a completed result: `OK` header (kind, request trace id,
+/// per-factor shapes, degraded marker) plus the word payload.
+pub fn encode_result(result: &JobResult, trace_id: u64) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let shapes = result.output_shapes();
+    let _ = write!(out, "OK {} trace={trace_id:016x} shapes=", result.kind());
+    for (i, (r, c)) in shapes.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{r}x{c}");
+    }
+    if let JobResult::Degraded { est_rel_residual, .. } = result {
+        let _ = write!(out, " degraded={:016x}", est_rel_residual.to_bits());
+    }
+    out.push('\n');
+    push_words(&mut out, &result.to_words());
+    out
+}
+
+/// Encode a failure as a one-line `ERR <code> <message>` frame.
+pub fn encode_err(e: &FgError) -> String {
+    let code = match e {
+        FgError::Protocol(_) => "protocol",
+        FgError::Overloaded { .. } => "overloaded",
+        FgError::DeadlineExceeded { .. } => "deadline",
+        FgError::CircuitOpen { .. } => "circuit_open",
+        FgError::Coordinator(_) => "coordinator",
+        FgError::Config(_) => "config",
+        FgError::Data(_) => "data",
+        FgError::ShapeMismatch { .. } => "shape",
+        FgError::Io(_) => "io",
+        _ => "runtime",
+    };
+    // The message must stay one line — the grammar is line-framed.
+    let msg = e.to_string().replace('\n', " ");
+    format!("ERR {code} {msg}\n")
+}
+
+/// Decode the response to a job frame: `Ok((result, trace_id))` on an
+/// `OK` header, the transported error on an `ERR` header.
+pub fn decode_response<R: Read>(
+    r: &mut LineReader<R>,
+    limits: &WireLimits,
+) -> Result<(JobResult, u64)> {
+    let header = r
+        .read_line(limits.max_line_bytes)?
+        .ok_or_else(|| protocol("connection closed before response"))?;
+    let mut toks = header.split_whitespace();
+    match toks.next() {
+        Some("OK") => {}
+        Some("ERR") => {
+            let code = toks.next().unwrap_or("runtime");
+            let msg: String = toks.collect::<Vec<_>>().join(" ");
+            return Err(match code {
+                "protocol" => FgError::Protocol(msg),
+                "overloaded" => FgError::Overloaded { depth: 0 },
+                "deadline" => FgError::DeadlineExceeded { waited_ms: 0 },
+                "circuit_open" => FgError::CircuitOpen { kind: msg },
+                "coordinator" => FgError::Coordinator(msg),
+                "config" => FgError::Config(msg),
+                "data" => FgError::Data(msg),
+                _ => FgError::Runtime(msg),
+            });
+        }
+        _ => return Err(protocol("expected OK or ERR response")),
+    }
+    let kind = toks.next().ok_or_else(|| protocol("OK response missing kind"))?.to_string();
+    let mut trace_id = 0u64;
+    let mut shapes: Vec<(usize, usize)> = Vec::new();
+    let mut degraded: Option<f64> = None;
+    for tok in toks {
+        let (k, v) = tok.split_once('=').ok_or_else(|| protocol("bad OK field"))?;
+        match k {
+            "trace" => {
+                trace_id =
+                    u64::from_str_radix(v, 16).map_err(|_| protocol("bad trace id"))?;
+            }
+            "shapes" => {
+                for s in v.split(',') {
+                    let (rr, cc) =
+                        s.split_once('x').ok_or_else(|| protocol("bad shape token"))?;
+                    let rr: usize =
+                        rr.parse().map_err(|_| protocol("bad shape rows"))?;
+                    let cc: usize =
+                        cc.parse().map_err(|_| protocol("bad shape cols"))?;
+                    shapes.push((rr, cc));
+                }
+            }
+            "degraded" => {
+                degraded = Some(
+                    u64::from_str_radix(v, 16)
+                        .map(f64::from_bits)
+                        .map_err(|_| protocol("bad degraded residual"))?,
+                );
+            }
+            other => return Err(protocol(format!("unknown OK field `{other}`"))),
+        }
+    }
+    let mut total: usize = 0;
+    for (rr, cc) in &shapes {
+        let n = rr.checked_mul(*cc).ok_or_else(|| protocol("shape overflow"))?;
+        total = total.checked_add(n).ok_or_else(|| protocol("shape overflow"))?;
+    }
+    if kind == "spsd" {
+        total += 1; // trailing entries_observed word
+    }
+    if total > limits.max_payload_words {
+        return Err(protocol(format!(
+            "result payload {total} exceeds {} word cap",
+            limits.max_payload_words
+        )));
+    }
+    let words = read_words(r, limits, total)?;
+    let inner = JobResult::from_words(&kind, &shapes, &words)
+        .ok_or_else(|| protocol("result words disagree with kind/shapes"))?;
+    let result = match degraded {
+        Some(est_rel_residual) => JobResult::Degraded { est_rel_residual, inner: Box::new(inner) },
+        None => inner,
+    };
+    Ok((result, trace_id))
+}

@@ -68,6 +68,8 @@ pub mod cat {
     pub const STREAM: &str = "stream";
     /// Artifact-cache persistence and warm start.
     pub const CACHE: &str = "cache";
+    /// Wire front-end request handling.
+    pub const NET: &str = "net";
 }
 
 /// A metadata value attached to a span. Only cheap, statically-named
